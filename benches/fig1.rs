@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 1 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig1_breakdown();
+    rep.print();
+    rep.save();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 10 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig10_granularity();
+    rep.print();
+    rep.save();
+}

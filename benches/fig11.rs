@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 11 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig11_division_overhead();
+    rep.print();
+    rep.save();
+}

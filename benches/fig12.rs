@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 12 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig12_gpus();
+    rep.print();
+    rep.save();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 13 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig13_models();
+    rep.print();
+    rep.save();
+}

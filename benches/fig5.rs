@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 5 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig5_exec_time();
+    rep.print();
+    rep.save();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 6 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig6_mem_access();
+    rep.print();
+    rep.save();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 7 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig7_tpot();
+    rep.print();
+    rep.save();
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 8 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig8_loogle();
+    rep.print();
+    rep.save();
+}

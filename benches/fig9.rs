@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 9 (see DESIGN.md §5). Part of `cargo bench`.
+fn main() {
+    let rep = codec::bench::figures::fig9_ablation();
+    rep.print();
+    rep.save();
+}

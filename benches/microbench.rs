@@ -1,0 +1,96 @@
+//! Micro-benchmarks of the L3 hot paths (criterion-style, hand-rolled):
+//! native PAC throughput, POR merge, divider latency, LPT scheduling,
+//! forest insertion, JSON parsing. These back the §Perf iteration log in
+//! EXPERIMENTS.md.
+
+use codec::attention::pac::{pac_streamed, por_merge};
+use codec::bench::harness::time_it;
+use codec::cost::Estimator;
+use codec::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig};
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+use codec::workload::two_level_tree;
+
+fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    let mut m = Mat::zeros(r, c);
+    rng.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+
+    // Native PAC: the CPU executor's inner loop. Report GFLOP/s.
+    for (nq, n, d) in [(4usize, 4096usize, 128usize), (16, 4096, 128), (64, 16384, 128)] {
+        let q = randm(&mut rng, nq, d);
+        let k = randm(&mut rng, n, d);
+        let v = randm(&mut rng, n, d);
+        let s = time_it(2, 8, || {
+            std::hint::black_box(pac_streamed(&q, &k, &v, n, 256));
+        });
+        let flops = 4.0 * nq as f64 * n as f64 * d as f64;
+        println!(
+            "pac_native nq={nq:<3} n={n:<6} d={d}: {:8.3} ms  ({:6.2} GFLOP/s)",
+            s.mean,
+            flops / (s.mean * 1e-3) / 1e9
+        );
+    }
+
+    // POR merge.
+    let q = randm(&mut rng, 64, 128);
+    let k = randm(&mut rng, 256, 128);
+    let v = randm(&mut rng, 256, 128);
+    let p1 = pac_streamed(&q, &k, &v, 256, 256);
+    let p2 = pac_streamed(&q, &v, &k, 256, 256);
+    let s = time_it(3, 20, || {
+        std::hint::black_box(por_merge(&p1, &p2));
+    });
+    println!("por_merge nq=64 d=128:       {:8.4} ms", s.mean);
+
+    // Divider end-to-end (Fig. 11's subject).
+    let est = Estimator::table2();
+    for bs in [8usize, 64] {
+        let f = two_level_tree(bs, 120_000, 1024);
+        let tasks = tasks_from_forest(&f, 8, 4);
+        let cfg = DividerConfig {
+            num_blocks: 108,
+            ..Default::default()
+        };
+        let s = time_it(1, 10, || {
+            std::hint::black_box(divide_and_schedule(tasks.clone(), &est, &cfg));
+        });
+        println!(
+            "divider bs={bs:<3} ({:4} tasks):  {:8.3} ms",
+            tasks.len(),
+            s.mean
+        );
+    }
+
+    // Raw LPT scheduling of 10k subtasks.
+    let costs: Vec<f64> = (0..10_000).map(|i| ((i * 37) % 101) as f64 * 0.01 + 0.01).collect();
+    let s = time_it(2, 20, || {
+        std::hint::black_box(lpt_schedule(&costs, 108));
+    });
+    println!("lpt 10k subtasks on 108:     {:8.3} ms", s.mean);
+
+    // Forest radix insertion of 256 prompts sharing a 4k-token document.
+    let doc: Vec<u32> = (0..4096).collect();
+    let s = time_it(1, 10, || {
+        let mut f = codec::kvforest::Forest::new();
+        for r in 0..256u64 {
+            let mut p = doc.clone();
+            p.extend([r as u32 + 70_000, r as u32 + 80_000]);
+            f.insert_request(r, &p);
+        }
+        std::hint::black_box(f.total_tokens());
+    });
+    println!("forest insert 256x4k:        {:8.3} ms", s.mean);
+
+    // JSON: parse the artifact manifest if present.
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let s = time_it(2, 20, || {
+            std::hint::black_box(codec::util::json::parse(&text).unwrap());
+        });
+        println!("json parse manifest ({}B): {:8.3} ms", text.len(), s.mean);
+    }
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table 2 (the cost-profile grid). If a calibrated
+//! profile exists (written by `codec calibrate`), prints it alongside the
+//! paper's A100 grid.
+fn main() {
+    let rep = codec::bench::figures::table2_profile(&codec::cost::Profile::table2_a100());
+    rep.print();
+    rep.save();
+    if let Ok(p) = codec::cost::Profile::load("target/profile_cpu.json") {
+        codec::bench::figures::table2_profile(&p).print();
+    }
+}

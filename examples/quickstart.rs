@@ -1,0 +1,121 @@
+//! Quickstart: the CoDec pipeline in ~60 lines.
+//!
+//! Builds a prefix forest for three document-QA requests, plans the
+//! decode-step attention with the §5 divider, executes it with the
+//! native PAC/POR executor, checks it against exact attention, and — if
+//! `make artifacts` has been run — repeats the PAC/POR execution through
+//! the AOT Pallas kernels on the PJRT CPU client.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use codec::attention::codec_exec::{run_codec_attention, QueryBatch};
+use codec::attention::oracle::request_attention_exact;
+use codec::cost::Estimator;
+use codec::kvforest::forest::StorageEvent;
+use codec::kvforest::{Forest, KvStore};
+use codec::sched::{divide_and_schedule, tasks_from_forest, DividerConfig};
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let (n_kv_heads, n_q_heads, d) = (2usize, 8usize, 64usize);
+
+    // 1. Three requests asking different questions about one document.
+    let mut forest = Forest::new();
+    let mut store = KvStore::new(1, 16, n_kv_heads, d);
+    let document: Vec<u32> = (0..500).collect();
+    for r in 0..3u64 {
+        let mut prompt = document.clone();
+        prompt.extend(9000 + 100 * r as u32..9000 + 100 * r as u32 + 30);
+        let out = forest.insert_request(r, &prompt);
+        for ev in &out.events {
+            store.apply(ev);
+            if let StorageEvent::NeedFill { node, len } = ev {
+                // Stand-in KV rows (a real engine computes them in prefill).
+                for _ in 0..*len {
+                    let mut k = vec![0.0; n_kv_heads * d];
+                    let mut v = vec![0.0; n_kv_heads * d];
+                    rng.fill_normal(&mut k, 1.0);
+                    rng.fill_normal(&mut v, 1.0);
+                    store.append(0, *node, &k, &v);
+                }
+            }
+        }
+    }
+    println!(
+        "forest: {} tokens stored once instead of {} (n̄_q = {:.1})",
+        forest.total_tokens(),
+        forest.logical_tokens(),
+        forest.mean_sharing_degree()
+    );
+
+    // 2. One decode step's queries (one new token per request).
+    let q: Vec<Mat> = (0..3)
+        .map(|_| {
+            let mut m = Mat::zeros(n_q_heads, d);
+            rng.fill_normal(&mut m.data, 1.0);
+            m
+        })
+        .collect();
+    let batch = QueryBatch {
+        rids: vec![0, 1, 2],
+        q,
+        n_q_heads,
+        n_kv_heads,
+        d_head: d,
+    };
+
+    // 3. Divide + schedule (§5), then execute (§4).
+    let est = Estimator::table2();
+    let plan = divide_and_schedule(
+        tasks_from_forest(&forest, n_kv_heads, n_q_heads / n_kv_heads),
+        &est,
+        &DividerConfig {
+            num_blocks: 8,
+            min_chunk: 128,
+            ..Default::default()
+        },
+    );
+    println!(
+        "plan: {} tasks → {} subtasks, predicted makespan {:.3} ms",
+        plan.tasks.len(),
+        plan.num_subtasks(),
+        plan.makespan_ms
+    );
+    let outs = run_codec_attention(&forest, &store, 0, &batch, &plan, 4);
+
+    // 4. Verify against the exact-attention oracle.
+    let g = n_q_heads / n_kv_heads;
+    let mut max_err = 0f32;
+    for (ri, &rid) in batch.rids.iter().enumerate() {
+        for kvh in 0..n_kv_heads {
+            let want =
+                request_attention_exact(&forest, &store, 0, rid, kvh, &batch.group_rows(ri, kvh));
+            for j in 0..g {
+                for c in 0..d {
+                    max_err = max_err.max((outs[ri].at(kvh * g + j, c) - want.at(j, c)).abs());
+                }
+            }
+        }
+    }
+    println!("native CoDec vs oracle: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-4);
+
+    // 5. Same attention through the AOT Pallas kernels (if built).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = codec::runtime::Runtime::new("artifacts")?;
+        let outs_pjrt =
+            codec::runtime::exec::run_codec_attention_pjrt(&rt, &forest, &store, 0, &batch, &plan)?;
+        let mut diff = 0f32;
+        for (a, b) in outs.iter().zip(&outs_pjrt) {
+            diff = diff.max(codec::tensor::max_abs_diff(a, b));
+        }
+        println!("PJRT (Pallas AOT) vs native: max |err| = {diff:.2e}");
+        assert!(diff < 1e-4);
+    } else {
+        println!("artifacts/ not built — skipping the PJRT path (run `make artifacts`)");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

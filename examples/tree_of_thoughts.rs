@@ -1,0 +1,82 @@
+//! Tree-of-thoughts style branching decode (§2.5).
+//!
+//! Starts from one root prompt, then repeatedly *branches*: each round
+//! submits several continuations that extend a previously generated
+//! answer with a distinct "thought" suffix. Because every branch's prompt
+//! literally begins with its parent's tokens, the radix forest deepens
+//! round by round — exercising node splits, multi-level paths and the
+//! tree reduction, not just the two-level doc-QA shape.
+//!
+//! Requires artifacts: `make artifacts`, then
+//! `cargo run --release --example tree_of_thoughts`
+
+use codec::engine::{EngineConfig, Server};
+use codec::model::Sampler;
+
+fn main() -> anyhow::Result<()> {
+    codec::util::logging::init();
+    let server = Server::start(
+        "artifacts",
+        EngineConfig {
+            max_batch: 9,
+            sampler: Sampler::Temperature(0.9),
+            seed: 3,
+            ..Default::default()
+        },
+    )?;
+
+    // Root problem statement.
+    let root: Vec<u32> = (1000..1096).collect();
+    let branch_factor = 3;
+    let rounds = 3;
+    let gen_per_round = 12;
+
+    let mut frontier: Vec<Vec<u32>> = vec![root];
+    let t0 = std::time::Instant::now();
+    for round in 0..rounds {
+        // Each frontier prompt spawns `branch_factor` children with
+        // distinct thought-separator suffixes; all children of a parent
+        // share the parent's whole token sequence as a prefix.
+        let mut prompts = Vec::new();
+        for (pi, parent) in frontier.iter().enumerate() {
+            for b in 0..branch_factor {
+                let mut p = parent.clone();
+                p.push(2000 + (round * 100 + pi * 10 + b) as u32); // thought marker
+                prompts.push(p);
+            }
+        }
+        // Keep the batch bounded: expand only the first few parents.
+        prompts.truncate(9);
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| server.submit(p.clone(), gen_per_round))
+            .collect();
+        let mut next = Vec::new();
+        for (h, p) in handles.into_iter().zip(prompts) {
+            let generated = h.wait()?;
+            let mut full = p;
+            full.extend(&generated);
+            next.push(full);
+        }
+        println!(
+            "round {round}: expanded {} branches (frontier prompts now {} tokens)",
+            next.len(),
+            next[0].len()
+        );
+        frontier = next;
+    }
+    let m = server.shutdown();
+    println!("\ntree-of-thoughts stats:");
+    println!(
+        "  prefill: {} novel tokens vs {} reused from ancestors ({:.0}% shared)",
+        m.prefill_tokens,
+        m.prefill_tokens_shared,
+        m.prefill_share_rate() * 100.0
+    );
+    if let Some(tpot) = m.mean_tpot_ms() {
+        println!("  mean TPOT: {tpot:.1} ms/token");
+    }
+    println!("  tokens generated: {}", m.tokens_generated);
+    println!("  wall: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT compiler: lower every Layer-2 function to HLO **text** artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the text
+with `HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes from the hot path. Python never runs at serving time.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Because PJRT executables are fixed-shape while CoDec's tasks are irregular,
+we emit a *bucket grid* of PAC/POR kernels (pad + `n_valid` masking on the
+Rust side) plus batch-bucketed transformer pieces for the end-to-end
+engine. The bucket grid doubles as the kernel-variant sweep the paper's
+task divider chooses tile configs from.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only pac] [--force]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.pac import pac
+from .kernels.por import por
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Bucket grids (see DESIGN.md §2 "Fixed-shape bucketing").
+NQ_BUCKETS = [1, 4, 16, 64]
+N_BUCKETS = [64, 256, 1024, 4096, 16384]
+D_BUCKETS = [64, 128]
+BATCH_BUCKETS = [1, 4, 8]
+ENGINE_CONFIG = M.TINY
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _ty(s):
+    kind = "i32" if s.dtype == jnp.int32 else "f32"
+    return [kind, list(s.shape)]
+
+
+def lower_entry(fn, in_specs):
+    """Lower `fn` at `in_specs` and return the HLO text."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    return to_hlo_text(lowered)
+
+
+def pac_entries():
+    for d in D_BUCKETS:
+        for nq in NQ_BUCKETS:
+            for n in N_BUCKETS:
+                name = f"pac_d{d}_nq{nq}_n{n}"
+
+                def fn(nv, q, k, v):
+                    return pac(q, k, v, nv)
+
+                yield name, fn, [spec((1,), I32), spec((nq, d)),
+                                 spec((n, d)), spec((n, d))], "pac", \
+                    {"d": d, "nq": nq, "n": n}
+
+
+def por_entries():
+    for d in D_BUCKETS:
+        for nq in NQ_BUCKETS:
+            name = f"por_d{d}_nq{nq}"
+            yield name, por, [spec((nq, d)), spec((nq,)), spec((nq,)),
+                              spec((nq, d)), spec((nq,)), spec((nq,))], \
+                "por", {"d": d, "nq": nq}
+
+
+def engine_entries():
+    cfg = ENGINE_CONFIG
+    dm, dh, dff = cfg.d_model, cfg.d_head, cfg.d_ff
+    hq, hkv, v = cfg.n_q_heads, cfg.n_kv_heads, cfg.vocab
+    for b in BATCH_BUCKETS:
+        entries = [
+            (f"embed_b{b}",
+             lambda tokens, emb: M.embed(tokens, emb),
+             [spec((b,), I32), spec((v, dm))]),
+            (f"attn_pre_b{b}",
+             lambda x, ln1, wq, wk, wv, pos: M.attn_pre(
+                 cfg, x, ln1, wq, wk, wv, pos),
+             [spec((b, dm)), spec((dm,)), spec((dm, hq * dh)),
+              spec((dm, hkv * dh)), spec((dm, hkv * dh)), spec((b,), I32)]),
+            (f"attn_post_b{b}",
+             lambda x, ao, ln2, wo, wg, wu, wd: M.attn_post(
+                 cfg, x, ao, ln2, wo, wg, wu, wd),
+             [spec((b, dm)), spec((b, hq * dh)), spec((dm,)),
+              spec((hq * dh, dm)), spec((dm, dff)), spec((dm, dff)),
+              spec((dff, dm))]),
+            (f"lm_head_b{b}",
+             lambda x, lnf, emb: M.lm_head(x, lnf, emb),
+             [spec((b, dm)), spec((dm,)), spec((v, dm))]),
+        ]
+        for name, fn, specs in entries:
+            yield name, fn, specs, "engine", {"batch": b, "model": cfg.name}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter or one of pac|por|engine")
+    ap.add_argument("--force", action="store_true",
+                    help="re-emit even if the file already exists")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "buckets": {"nq": NQ_BUCKETS, "n": N_BUCKETS, "d": D_BUCKETS,
+                    "batch": BATCH_BUCKETS},
+        "model": {
+            "name": ENGINE_CONFIG.name,
+            "vocab": ENGINE_CONFIG.vocab,
+            "n_layers": ENGINE_CONFIG.n_layers,
+            "n_q_heads": ENGINE_CONFIG.n_q_heads,
+            "n_kv_heads": ENGINE_CONFIG.n_kv_heads,
+            "d_head": ENGINE_CONFIG.d_head,
+            "d_ff": ENGINE_CONFIG.d_ff,
+            "rope_theta": ENGINE_CONFIG.rope_theta,
+        },
+        "artifacts": [],
+    }
+
+    def selected(name, kind):
+        return args.only is None or args.only in name or args.only == kind
+
+    gens = [pac_entries(), por_entries(), engine_entries()]
+    n_written = n_skipped = 0
+    for gen in gens:
+        for name, fn, specs, kind, meta in gen:
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            if os.path.exists(path) and not (args.force and selected(name, kind)):
+                # Still record in the manifest, but skip re-lowering.
+                text = None
+            else:
+                text = lower_entry(fn, specs)
+            # Manifest entry needs output shapes; recompute cheaply via
+            # eval_shape instead of re-lowering when the file exists.
+            outs = jax.eval_shape(fn, *specs)
+            entry = {
+                "name": name, "file": f"{name}.hlo.txt", "kind": kind,
+                "inputs": [_ty(s) for s in specs],
+                "outputs": [_ty(s) for s in jax.tree_util.tree_leaves(outs)],
+            }
+            entry.update(meta)
+            manifest["artifacts"].append(entry)
+            if text is not None:
+                with open(path, "w") as f:
+                    f.write(text)
+                n_written += 1
+                print(f"  wrote {name} ({len(text)} chars)")
+            else:
+                n_skipped += 1
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"aot: {n_written} written, {n_skipped} up-to-date, "
+          f"manifest has {len(manifest['artifacts'])} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Layer-1 Pallas kernel: Partial Attention Computation (PAC, Algorithm 2).
+
+PAC is the block-level primitive of CoDec: attention between a per-node
+query-set tensor Q ∈ R^{nq×d} (queries of all requests whose prefix path
+contains the node, stacked — §4.1 "formal per-node assembly") and that
+node's KV chunk K, V ∈ R^{n×d}. It returns the *normalized* partial output
+plus softmax stats (m, s) for the downstream POR tree reduction.
+
+TPU adaptation of the paper's CUDA/CUTLASS kernel (DESIGN.md
+§Hardware-Adaptation):
+  * the CUDA thread block per KV tile becomes a Pallas grid step over KV
+    chunks of BLOCK_K rows, with K/V tiles staged through VMEM by BlockSpec
+    (the scratchpad analogue of shared memory);
+  * the running-softmax accumulators (m_i, s_i, acc) live in VMEM scratch,
+    exactly the registers/SMEM accumulators of FlashDecoding;
+  * the Q tile is small (nq ≤ 64 after GQA stacking) and is kept resident
+    for the whole grid — the paper's "load KV once, reuse for multiple
+    queries" optimization is structural here: each K/V tile is read from
+    HBM once for *all* nq rows;
+  * the score matmul (nq×d @ d×BLOCK_K) and the value matmul are MXU-shaped
+    (d = 128 lanes).
+
+The kernel is compiled with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and all performance conclusions are drawn from the
+analytic model in rust/src/gpusim (see DESIGN.md).
+
+The `n_valid` scalar makes one compiled shape serve any padded workload:
+rows j >= n_valid are masked to -inf (the paper's visibility mask), so the
+Rust runtime buckets irregular node sizes into a few compiled shapes.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+# Default KV tile height. 256 rows × 128 lanes × 4 B = 128 KiB per K tile
+# (same for V), comfortably inside a ~16 MiB VMEM budget together with the
+# resident Q tile and accumulators; see DESIGN.md §Perf for the footprint
+# table.
+DEFAULT_BLOCK_K = 256
+
+
+def _pac_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, s_ref,
+                acc_ref, mi_ref, si_ref, *, block_k: int, scale: float):
+    """One grid step: fold KV tile j into the running softmax state."""
+    j = pl.program_id(0)
+    nk = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        mi_ref[...] = jnp.full_like(mi_ref, NEG_INF)
+        si_ref[...] = jnp.zeros_like(si_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                    # [nq, d]  resident across the grid
+    k = k_ref[...]                    # [block_k, d] VMEM tile
+    v = v_ref[...]                    # [block_k, d] VMEM tile
+
+    # Scores for this tile, visibility-masked against n_valid.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # [nq, block_k]
+    offs = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(offs < nvalid_ref[0], s, NEG_INF)
+
+    # Streaming-softmax update (§4.1 "streaming softmax across nodes",
+    # here across tiles within the node).
+    m_prev = mi_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # n_valid >= 1 guarantees tile 0 contains a visible column, so m_new is
+    # finite from the first step onward; exp(-inf - finite) = 0 handles the
+    # initial m_prev = -inf and fully-masked trailing tiles.
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                         # [nq, block_k]
+    si_ref[...] = si_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    mi_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / si_ref[...][:, None]
+        m_ref[...] = mi_ref[...]
+        s_ref[...] = si_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def pac(q, k, v, n_valid, block_k: int = DEFAULT_BLOCK_K):
+    """Partial attention computation.
+
+    Args:
+      q: [nq, d] float32 — stacked query rows of the node's query set.
+      k, v: [n, d] float32 — the node's KV chunk (padded; n % block_k == 0
+        after internal padding).
+      n_valid: [1] int32 — number of visible KV rows (1 <= n_valid <= n).
+      block_k: KV tile height.
+
+    Returns:
+      (o [nq, d], m [nq], s [nq]) — normalized partial output and softmax
+      stats, exactly `ref.pac_ref`.
+    """
+    nq, d = q.shape
+    n = k.shape[0]
+    block_k = min(block_k, n)
+    if n % block_k:
+        pad = block_k - n % block_k
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        n += pad
+    grid = (n // block_k,)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_pac_kernel, block_k=block_k, scale=scale)
+    o, m, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),              # n_valid
+            pl.BlockSpec((nq, d), lambda j: (0, 0)),         # q resident
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),    # k tile
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),    # v tile
+        ],
+        out_specs=[
+            pl.BlockSpec((nq, d), lambda j: (0, 0)),
+            pl.BlockSpec((nq,), lambda j: (0,)),
+            pl.BlockSpec((nq,), lambda j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nq, d), jnp.float32),   # acc — running numerator
+            pltpu.VMEM((nq,), jnp.float32),     # running max
+            pltpu.VMEM((nq,), jnp.float32),     # running denom
+        ],
+        interpret=True,
+    )(n_valid, q, k, v)
+    return o, m, s

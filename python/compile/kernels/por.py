@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: Partial Output Reduction (POR, Algorithm 3).
+
+POR is the binary merge primitive of CoDec's tree reduction: it combines
+two *normalized* partial outputs of the same query set — each with its
+softmax stats (m, s) — into a common log-sum-exp frame:
+
+    m = max(m1, m2)
+    s = s1·e^{m1-m} + s2·e^{m2-m}
+    O = (O1·s1·e^{m1-m} + O2·s2·e^{m2-m}) / s
+
+The operation is associative and commutative (§4.3), which is what lets the
+Rust reduction planner reorder the per-query node series into parallel
+rounds. An identity element (s = 0, m = -inf, O = 0) is supported so the
+planner can pad odd reduction rounds.
+
+The whole working set is nq×d ≤ 64×128 floats — it trivially fits VMEM, so
+the kernel runs as a single grid step (the paper runs POR entirely in
+shared memory for the same reason).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _por_kernel(o1_ref, m1_ref, s1_ref, o2_ref, m2_ref, s2_ref,
+                o_ref, m_ref, s_ref):
+    m1, m2 = m1_ref[...], m2_ref[...]
+    s1, s2 = s1_ref[...], s2_ref[...]
+    m = jnp.maximum(m1, m2)
+    # Guard the (-inf) - (-inf) = nan case: a side with m_i = -inf holds no
+    # probability mass and must contribute exactly 0.
+    e1 = jnp.where(m1 > NEG_INF, jnp.exp(m1 - m), 0.0)
+    e2 = jnp.where(m2 > NEG_INF, jnp.exp(m2 - m), 0.0)
+    w1 = s1 * e1
+    w2 = s2 * e2
+    s = w1 + w2
+    num = o1_ref[...] * w1[:, None] + o2_ref[...] * w2[:, None]
+    safe = jnp.where(s > 0, s, 1.0)
+    o_ref[...] = jnp.where((s > 0)[:, None], num / safe[:, None], 0.0)
+    m_ref[...] = m
+    s_ref[...] = s
+
+
+@jax.jit
+def por(o1, m1, s1, o2, m2, s2):
+    """Merge two partial attention outputs (see module docstring).
+
+    All of o1/o2: [nq, d]; m1/s1/m2/s2: [nq]. Returns (o, m, s) with the
+    same shapes, exactly `ref.por_ref`.
+    """
+    nq, d = o1.shape
+    spec2d = pl.BlockSpec((nq, d), lambda: (0, 0))
+    spec1d = pl.BlockSpec((nq,), lambda: (0,))
+    return pl.pallas_call(
+        _por_kernel,
+        in_specs=[spec2d, spec1d, spec1d, spec2d, spec1d, spec1d],
+        out_specs=[spec2d, spec1d, spec1d],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+        ],
+        interpret=True,
+    )(o1, m1, s1, o2, m2, s2)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the CoDec kernels.
+
+These are the correctness references the Pallas kernels (and, transitively,
+the Rust-native executors) are validated against. Everything here is plain
+jax.numpy with no Pallas, no tiling, no streaming — the "obviously correct"
+formulation of §2.2 / Algorithms 2-3 of the paper.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def attention_ref(q, k, v, n_valid=None):
+    """Exact masked attention: softmax(q k^T / sqrt(d)) v.
+
+    q: [nq, d], k/v: [n, d]. Positions j >= n_valid are invisible
+    (mask to -inf before softmax), matching the paper's visibility mask.
+    """
+    n, d = k.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if n_valid is not None:
+        mask = jnp.arange(n) < n_valid
+        s = jnp.where(mask[None, :], s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    return (p / denom) @ v
+
+
+def pac_ref(q, k, v, n_valid=None):
+    """Reference PAC (Algorithm 2 + softmax stats).
+
+    Returns the *normalized* partial output plus the per-row softmax stats
+    the POR merge needs: (o [nq, d], m [nq], s [nq]) where m is the row max
+    of the scaled scores and s the sum of exp(score - m) over visible
+    positions.
+    """
+    n, d = k.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if n_valid is not None:
+        mask = jnp.arange(n) < n_valid
+        scores = jnp.where(mask[None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=1)
+    p = jnp.exp(scores - m[:, None])
+    s = jnp.sum(p, axis=1)
+    o = (p @ v) / s[:, None]
+    return o, m, s
+
+
+def por_ref(o1, m1, s1, o2, m2, s2):
+    """Reference POR (Algorithm 3): merge two partial outputs of the same
+    query set into a common log-sum-exp frame.
+
+    Safe against identity elements (s = 0, m = -inf): a side with m = -inf
+    contributes exactly zero.
+    """
+    m = jnp.maximum(m1, m2)
+    # exp(m_i - m) with the (-inf) - (-inf) = nan case guarded to 0.
+    e1 = jnp.where(jnp.isfinite(m1), jnp.exp(m1 - m), 0.0)
+    e2 = jnp.where(jnp.isfinite(m2), jnp.exp(m2 - m), 0.0)
+    s = s1 * e1 + s2 * e2
+    num = o1 * (s1 * e1)[:, None] + o2 * (s2 * e2)[:, None]
+    safe = jnp.where(s[:, None] > 0, s[:, None], 1.0)
+    o = jnp.where(s[:, None] > 0, num / safe, 0.0)
+    return o, m, s
+
+
+def flash_decoding_ref(q, k, v, n_valid, num_splits):
+    """FlashDecoding-style split-KV decode attention, used to check that
+    chained PAC + POR over KV chunks reproduces exact attention.
+    """
+    n = k.shape[0]
+    chunk = max(1, (n + num_splits - 1) // num_splits)
+    o = jnp.zeros_like(q)
+    m = jnp.full((q.shape[0],), NEG_INF, dtype=jnp.float32)
+    s = jnp.zeros((q.shape[0],), dtype=jnp.float32)
+    for i in range(0, n, chunk):
+        hi = min(i + chunk, n)
+        valid_here = max(0, min(n_valid, hi) - i)
+        if valid_here == 0:
+            continue
+        oo, mm, ss = pac_ref(q, k[i:hi], v[i:hi], valid_here)
+        o, m, s = por_ref(o, m, s, oo, mm, ss)
+    return o, m, s

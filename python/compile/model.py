@@ -1,0 +1,216 @@
+"""Layer-2: JAX compute graphs for the CoDec stack.
+
+Everything here is a *pure function of its inputs* (weights are arguments,
+never closed over), so each function AOT-lowers to a self-contained HLO
+module that the Rust runtime feeds with weight literals it generated or
+loaded itself. Python never runs at serving time.
+
+Two groups of functions:
+
+1. Attention-core compositions over the L1 Pallas kernels (`kernels.pac`,
+   `kernels.por`): `flash_decode` is the FlashDecoding baseline expressed
+   as chained PAC+POR over KV splits — it exists so pytest can prove the
+   streaming-softmax algebra is exact, and so the Rust baseline executor
+   has a bit-accurate oracle.
+
+2. The transformer decode step, split around the attention core exactly
+   where a serving engine splits it (vLLM's "attention backend" seam):
+
+       attn_pre : x --RMSNorm,QKV-proj,RoPE--> (q, k_new, v_new)
+       [Rust: append k/v to the KV forest; CoDec PAC/POR tree attention]
+       attn_post: (x, attn_out) --O-proj,residual,RMSNorm,SwiGLU--> x'
+
+   plus `embed` and `lm_head`. The Rust engine loops layers, owning the KV
+   cache between the two halves — that is precisely what lets CoDec manage
+   the KV cache as a prefix forest instead of a 4D tensor.
+
+Geometry follows Qwen3-4B's head layout (32 query heads, 8 KV heads,
+d_head = 128 — the paper's default model), with layer count / widths
+scaled per config for the CPU testbed.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pac import pac
+from .kernels.por import por
+
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer geometry. `name` keys the artifact manifest."""
+    name: str
+    vocab: int = 8192
+    n_layers: int = 4
+    n_q_heads: int = 8
+    n_kv_heads: int = 2
+    d_head: int = 64
+    d_ff: int = 2816
+    rope_theta: float = 10000.0
+
+    @property
+    def d_model(self) -> int:
+        return self.n_q_heads * self.d_head
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_q_heads % self.n_kv_heads == 0
+        return self.n_q_heads // self.n_kv_heads
+
+
+# The end-to-end example config: ~50M params, GQA 4:1 — small enough for
+# the CPU PJRT client, same head *structure* as the paper's Qwen3-4B.
+TINY = ModelConfig(name="tiny", vocab=8192, n_layers=8, n_q_heads=8,
+                   n_kv_heads=2, d_head=64, d_ff=2816)
+# A Qwen3-4B-geometry config (32/8 heads, d_head 128) used for shape tests
+# and the gpusim cost model; not AOT-compiled by default.
+QWEN3_4B = ModelConfig(name="qwen3-4b", vocab=151936, n_layers=36,
+                       n_q_heads=32, n_kv_heads=8, d_head=128, d_ff=9728)
+
+CONFIGS = {c.name: c for c in (TINY, QWEN3_4B)}
+
+
+# --------------------------------------------------------------------------
+# Attention-core compositions (PAC / POR algebra).
+# --------------------------------------------------------------------------
+
+def flash_decode(q, k, v, n_valid, num_splits: int = 4):
+    """FlashDecoding as chained PAC + POR over `num_splits` KV splits.
+
+    Proves (and tests) the invariant CoDec relies on: splitting the KV
+    sequence and POR-merging the partial outputs is exact attention.
+    """
+    n = k.shape[0]
+    split = max(1, math.ceil(n / num_splits))
+    nv_all = jnp.reshape(jnp.asarray(n_valid, jnp.int32), (1,))
+    o = jnp.zeros_like(q)
+    m = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+    s = jnp.zeros((q.shape[0],), jnp.float32)
+    for lo in range(0, n, split):
+        hi = min(lo + split, n)
+        nv = jnp.clip(nv_all - lo, 0, hi - lo)
+        # Fully masked splits carry no mass; PAC requires >= 1 visible row,
+        # so clamp and zero the result through POR's identity handling.
+        oo, mm, ss = pac(q, k[lo:hi], v[lo:hi], jnp.maximum(nv, 1))
+        dead = nv[0] < 1
+        mm = jnp.where(dead, NEG_INF, mm)
+        ss = jnp.where(dead, 0.0, ss)
+        o, m, s = por(o, m, s, oo, mm, ss)
+    return o, m, s
+
+
+# --------------------------------------------------------------------------
+# Transformer decode step (single new token per request).
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta: float):
+    """Rotary position embedding. x: [B, H, Dh], pos: [B] int32."""
+    _, _, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]     # [B, half]
+    cos = jnp.cos(ang)[:, None, :]                              # [B, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def attn_pre(cfg: ModelConfig, x, ln1_w, wq, wk, wv, pos):
+    """First half of a decode-step layer: norm + QKV projections + RoPE.
+
+    x: [B, d_model]; pos: [B] i32 (absolute position of the new token).
+    Returns q [B, Hq, Dh], k_new [B, Hkv, Dh], v_new [B, Hkv, Dh]; k_new is
+    post-RoPE — the KV forest stores keys rotation-applied, as vLLM does.
+    """
+    b = x.shape[0]
+    h = rms_norm(x, ln1_w)
+    q = (h @ wq).reshape(b, cfg.n_q_heads, cfg.d_head)
+    k = (h @ wk).reshape(b, cfg.n_kv_heads, cfg.d_head)
+    v = (h @ wv).reshape(b, cfg.n_kv_heads, cfg.d_head)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    # q is *not* pre-scaled here: PAC owns the 1/sqrt(d) scale so the same
+    # kernel serves both the engine and the standalone benches.
+    return q, k, v
+
+
+def attn_post(cfg: ModelConfig, x, attn_out, ln2_w, wo, w_gate, w_up, w_down):
+    """Second half: O-projection + residual + RMSNorm + SwiGLU + residual.
+
+    x: [B, d_model] (the layer input), attn_out: [B, Hq*Dh].
+    """
+    x = x + attn_out @ wo
+    h = rms_norm(x, ln2_w)
+    ff = (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+    return x + ff
+
+
+def embed(tokens, emb):
+    """Token embedding lookup. tokens: [B] i32, emb: [V, d_model]."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def lm_head(x, ln_f_w, emb):
+    """Final norm + tied-embedding logits. Returns [B, V]."""
+    return rms_norm(x, ln_f_w) @ emb.T
+
+
+def dense_decode_attention(cfg: ModelConfig, q, k_cache, v_cache, n_valid):
+    """Reference *dense* decode attention over a padded 4D KV cache — the
+    vLLM-baseline semantics (no prefix sharing in decode). Used by pytest
+    to validate that forest-based CoDec attention matches a monolithic
+    cache bit-for-bit (up to fp error).
+
+    q: [B, Hq, Dh]; k_cache/v_cache: [B, N, Hkv, Dh]; n_valid: [B] i32.
+    Returns [B, Hq*Dh].
+    """
+    b, n = k_cache.shape[0], k_cache.shape[1]
+    g = cfg.group_size
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    kc = jnp.repeat(k_cache, g, axis=2)      # [B, N, Hq, Dh]
+    vc = jnp.repeat(v_cache, g, axis=2)
+    s = jnp.einsum("bhd,bnhd->bhn", q, kc) * scale
+    mask = jnp.arange(n)[None, None, :] < n_valid[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhn,bnhd->bhd", p, vc)
+    return o.reshape(b, cfg.n_q_heads * cfg.d_head)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic random weights (for tests; the Rust engine generates
+    its own with the same layer shapes — see rust/src/model)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 16)
+    dm, dff, dh = cfg.d_model, cfg.d_ff, cfg.d_head
+
+    def mat(k, shp):
+        return jax.random.normal(k, shp, jnp.float32) / math.sqrt(shp[0])
+
+    layer = dict(
+        ln1_w=jnp.ones((dm,), jnp.float32),
+        wq=mat(ks[0], (dm, cfg.n_q_heads * dh)),
+        wk=mat(ks[1], (dm, cfg.n_kv_heads * dh)),
+        wv=mat(ks[2], (dm, cfg.n_kv_heads * dh)),
+        wo=mat(ks[3], (cfg.n_q_heads * dh, dm)),
+        ln2_w=jnp.ones((dm,), jnp.float32),
+        w_gate=mat(ks[4], (dm, dff)),
+        w_up=mat(ks[5], (dm, dff)),
+        w_down=mat(ks[6], (dff, dm)),
+    )
+    return dict(
+        emb=jax.random.normal(ks[7], (cfg.vocab, dm), jnp.float32) * 0.02,
+        ln_f_w=jnp.ones((dm,), jnp.float32),
+        layers=[layer for _ in range(cfg.n_layers)],
+    )

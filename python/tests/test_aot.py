@@ -1,0 +1,79 @@
+"""AOT pipeline checks: the emitted HLO text is loadable (no Mosaic
+custom-calls, parseable header, declared shapes match the manifest)."""
+
+import json
+import os
+import re
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files():
+    m = manifest()
+    assert len(m["artifacts"]) >= 40
+    for e in m["artifacts"]:
+        assert os.path.exists(os.path.join(ART, e["file"])), e["name"]
+
+
+def test_bucket_grid_complete():
+    m = manifest()
+    names = {e["name"] for e in m["artifacts"]}
+    for d in m["buckets"]["d"]:
+        for nq in m["buckets"]["nq"]:
+            for n in m["buckets"]["n"]:
+                assert f"pac_d{d}_nq{nq}_n{n}" in names
+            assert f"por_d{d}_nq{nq}" in names
+    for b in m["buckets"]["batch"]:
+        for piece in ("embed", "attn_pre", "attn_post", "lm_head"):
+            assert f"{piece}_b{b}" in names
+
+
+def test_no_mosaic_custom_calls():
+    # interpret=True must fully lower Pallas; a tpu_custom_call would be
+    # unloadable on the CPU PJRT plugin.
+    for e in manifest()["artifacts"]:
+        text = open(os.path.join(ART, e["file"])).read()
+        assert "tpu_custom_call" not in text, e["name"]
+        assert "mosaic" not in text.lower(), e["name"]
+
+
+def test_entry_layout_matches_manifest():
+    # The HLO entry computation layout must declare the manifest's input
+    # shapes in order — this is what the Rust loader relies on.
+    ty_re = {"f32": "f32", "i32": "s32"}
+    for e in manifest()["artifacts"][:12]:
+        text = open(os.path.join(ART, e["file"])).read()
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text)
+        assert m, e["name"]
+        declared = m.group(1)
+        for kind, shape in e["inputs"]:
+            dims = ",".join(str(x) for x in shape)
+            assert f"{ty_re[kind]}[{dims}]" in declared, (e["name"], shape)
+
+
+def test_pac_artifact_outputs():
+    for e in manifest()["artifacts"]:
+        if e["kind"] != "pac":
+            continue
+        (o, m, s) = e["outputs"]
+        assert o == ["f32", [e["nq"], e["d"]]]
+        assert m == ["f32", [e["nq"]]]
+        assert s == ["f32", [e["nq"]]]
+
+
+def test_hlo_is_text_not_proto():
+    for e in manifest()["artifacts"][:5]:
+        head = open(os.path.join(ART, e["file"]), "rb").read(16)
+        assert head.startswith(b"HloModule"), e["name"]

@@ -1,0 +1,107 @@
+"""L1 correctness: the Pallas PAC kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, valid lengths, tile sizes and input scales; every
+case asserts allclose against `ref.pac_ref`. This is the core correctness
+signal for the whole stack — the Rust executors are validated against the
+same oracle semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pac import pac
+from compile.kernels.ref import attention_ref, pac_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+def run_pac(nq, n, d, n_valid, block_k=256, scale=1.0):
+    q, k, v = rand((nq, d), scale), rand((n, d), scale), rand((n, d), scale)
+    o, m, s = pac(q, k, v, jnp.asarray([n_valid], jnp.int32), block_k=block_k)
+    eo, em, es = pac_ref(q, k, v, n_valid)
+    np.testing.assert_allclose(o, eo, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(m, em, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(s, es, rtol=5e-4, atol=5e-4)
+    return q, k, v, o
+
+
+class TestPacBasic:
+    def test_single_query_full_valid(self):
+        run_pac(1, 256, 64, 256)
+
+    def test_multi_query(self):
+        run_pac(16, 512, 128, 512)
+
+    def test_partial_valid(self):
+        run_pac(4, 512, 64, 300)
+
+    def test_one_valid_row(self):
+        # n_valid = 1: the output must equal v[0] for every query row.
+        q, k, v = rand((3, 64)), rand((128, 64)), rand((128, 64))
+        o, _, _ = pac(q, k, v, jnp.asarray([1], jnp.int32))
+        np.testing.assert_allclose(o, jnp.broadcast_to(v[0], o.shape),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_uneven_kv_padding(self):
+        # n not a multiple of block_k exercises the internal pad path.
+        run_pac(2, 700, 64, 700)
+
+    def test_valid_crosses_tile_boundary(self):
+        run_pac(2, 1024, 64, 257, block_k=256)
+
+    def test_valid_exactly_tile_boundary(self):
+        run_pac(2, 1024, 64, 256, block_k=256)
+
+    def test_matches_exact_attention(self):
+        # Normalized PAC over the full valid range == exact attention.
+        q, k, v = rand((8, 64)), rand((512, 64)), rand((512, 64))
+        o, _, _ = pac(q, k, v, jnp.asarray([512], jnp.int32))
+        np.testing.assert_allclose(o, attention_ref(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_large_logits_stable(self):
+        # Streaming softmax must not overflow with large score magnitudes.
+        q, k, v = rand((4, 64), 8.0), rand((512, 64), 8.0), rand((512, 64))
+        o, m, s = pac(q, k, v, jnp.asarray([512], jnp.int32))
+        assert np.isfinite(np.asarray(o)).all()
+        assert np.isfinite(np.asarray(s)).all()
+        eo, _, _ = pac_ref(q, k, v, 512)
+        np.testing.assert_allclose(o, eo, rtol=1e-4, atol=1e-4)
+
+    def test_block_k_invariance(self):
+        # The result must not depend on the KV tile height.
+        q, k, v = rand((4, 64)), rand((1024, 64)), rand((1024, 64))
+        nv = jnp.asarray([777], jnp.int32)
+        o1, m1, s1 = pac(q, k, v, nv, block_k=128)
+        o2, m2, s2 = pac(q, k, v, nv, block_k=512)
+        np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(m1, m2, rtol=0, atol=0)
+        np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nq=st.sampled_from([1, 2, 4, 7, 16, 33, 64]),
+    n=st.integers(min_value=1, max_value=640),
+    d=st.sampled_from([64, 128]),
+    frac=st.floats(min_value=0.01, max_value=1.0),
+    scale=st.sampled_from([0.1, 1.0, 4.0]),
+)
+def test_pac_hypothesis(nq, n, d, frac, scale):
+    n_valid = max(1, int(n * frac))
+    run_pac(nq, n, d, n_valid, scale=scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=512),
+    block_k=st.sampled_from([32, 128, 256]),
+)
+def test_pac_tile_sweep(n, block_k):
+    run_pac(3, n, 64, max(1, n - 1), block_k=block_k)

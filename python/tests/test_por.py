@@ -1,0 +1,114 @@
+"""L1 correctness: the Pallas POR kernel vs the oracle, plus the algebraic
+properties (associativity, commutativity, identity) that CoDec's parallel
+tree reduction depends on (§4.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pac import pac
+from compile.kernels.por import por
+from compile.kernels.ref import attention_ref, pac_ref, por_ref
+
+RNG = np.random.default_rng(99)
+NEG_INF = float("-inf")
+
+
+def rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+def rand_partial(nq, d, scale=1.0):
+    """A random but *consistent* partial result (as PAC would emit)."""
+    q, k, v = rand((nq, d), scale), rand((64, d), scale), rand((64, d))
+    return pac_ref(q, k, v, 64)
+
+
+def assert_close(a, b, tol=2e-5):
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=tol, atol=tol)
+
+
+class TestPorBasic:
+    def test_matches_ref(self):
+        p1, p2 = rand_partial(4, 64), rand_partial(4, 64)
+        got = por(*p1, *p2)
+        want = por_ref(*p1, *p2)
+        assert_close(got, want)
+
+    def test_commutative(self):
+        p1, p2 = rand_partial(8, 64), rand_partial(8, 64)
+        assert_close(por(*p1, *p2), por(*p2, *p1))
+
+    def test_associative(self):
+        p1, p2, p3 = (rand_partial(4, 64) for _ in range(3))
+        left = por(*por(*p1, *p2), *p3)
+        right = por(*p1, *por(*p2, *p3))
+        assert_close(left, right, tol=1e-4)
+
+    def test_identity_element(self):
+        # (O=0, m=-inf, s=0) must be a two-sided identity.
+        p = rand_partial(4, 64)
+        zero = (jnp.zeros((4, 64), jnp.float32),
+                jnp.full((4,), NEG_INF, jnp.float32),
+                jnp.zeros((4,), jnp.float32))
+        assert_close(por(*p, *zero), p)
+        assert_close(por(*zero, *p), p)
+
+    def test_no_nan_with_double_identity(self):
+        zero = (jnp.zeros((2, 64), jnp.float32),
+                jnp.full((2,), NEG_INF, jnp.float32),
+                jnp.zeros((2,), jnp.float32))
+        o, m, s = por(*zero, *zero)
+        assert np.isfinite(np.asarray(o)).all()
+        assert (np.asarray(s) == 0).all()
+
+    def test_merge_reconstructs_full_attention(self):
+        # PAC on two KV halves + POR == exact attention on the whole KV.
+        q = rand((4, 64))
+        k, v = rand((256, 64)), rand((256, 64))
+        nv = jnp.asarray([128], jnp.int32)
+        p1 = pac(q, k[:128], v[:128], nv)
+        p2 = pac(q, k[128:], v[128:], nv)
+        o, _, _ = por(*p1, *p2)
+        np.testing.assert_allclose(o, attention_ref(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_skewed_magnitudes(self):
+        # One side with much larger logits: merge must stay stable.
+        p1 = rand_partial(4, 64, scale=10.0)
+        p2 = rand_partial(4, 64, scale=0.1)
+        o, m, s = por(*p1, *p2)
+        assert np.isfinite(np.asarray(o)).all()
+        assert_close((o, m, s), por_ref(*p1, *p2), tol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nq=st.sampled_from([1, 3, 4, 16, 64]),
+    d=st.sampled_from([64, 128]),
+    s1=st.sampled_from([0.1, 1.0, 6.0]),
+    s2=st.sampled_from([0.1, 1.0, 6.0]),
+)
+def test_por_hypothesis(nq, d, s1, s2):
+    p1, p2 = rand_partial(nq, d, s1), rand_partial(nq, d, s2)
+    assert_close(por(*p1, *p2), por_ref(*p1, *p2), tol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(splits=st.integers(min_value=2, max_value=8),
+       n=st.integers(min_value=16, max_value=400))
+def test_chained_por_equals_attention(splits, n):
+    """Left-fold of PAC partials over arbitrary split points == attention."""
+    q = rand((2, 64))
+    k, v = rand((n, 64)), rand((n, 64))
+    cuts = sorted({int(n * i / splits) for i in range(1, splits)} | {0, n})
+    o = jnp.zeros((2, 64), jnp.float32)
+    m = jnp.full((2,), NEG_INF, jnp.float32)
+    s = jnp.zeros((2,), jnp.float32)
+    for lo, hi in zip(cuts, cuts[1:]):
+        if hi - lo < 1:
+            continue
+        p = pac_ref(q, k[lo:hi], v[lo:hi], hi - lo)
+        o, m, s = por(o, m, s, *p)
+    np.testing.assert_allclose(o, attention_ref(q, k, v), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,375 @@
+//! The CoDec executor (§4.3, Algorithm 4): run a division plan's PAC
+//! subtasks in parallel, then tree-reduce partial outputs per
+//! (request, kv-head) series.
+//!
+//! This is the CPU-native execution path: numerics identical to the PJRT
+//! kernel path (same streaming-softmax algorithm), used by tests, the
+//! traffic model and the benches. The serving engine swaps the PAC/POR
+//! calls for the AOT PJRT executables (see `runtime::exec`).
+
+use crate::attention::pac::{pac_streamed, por_merge, Partial};
+use crate::kvforest::{Forest, KvStore, NodeId, RequestId};
+use crate::sched::Plan;
+use crate::tensor::Mat;
+use crate::util::threadpool::parallel_map_indexed;
+use std::collections::BTreeMap;
+
+/// KV tile height used by the native PAC (matches the Pallas kernel's
+/// DEFAULT_BLOCK_K).
+pub const BLOCK_K: usize = 256;
+
+/// The decode-step query tensor: one new token per request, all heads.
+#[derive(Debug, Clone)]
+pub struct QueryBatch {
+    /// Request order; row blocks of `q` follow this order.
+    pub rids: Vec<RequestId>,
+    /// Per request: (n_q_heads × d_head) query rows.
+    pub q: Vec<Mat>,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+}
+
+impl QueryBatch {
+    pub fn group_size(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// The GQA head-group query rows of request index `ri` for `kv_head`:
+    /// a (group_size × d_head) matrix.
+    pub fn group_rows(&self, ri: usize, kv_head: usize) -> Mat {
+        let g = self.group_size();
+        self.q[ri].rows_slice(kv_head * g, (kv_head + 1) * g)
+    }
+
+    pub fn index_of(&self, rid: RequestId) -> Option<usize> {
+        self.rids.iter().position(|&r| r == rid)
+    }
+}
+
+/// Assemble the stacked per-node query tensor Q^(n) for `(node, kv_head)`:
+/// for each request in I_n (sorted), its head-group rows. (§4.1 "formal
+/// per-node assembly" — on the GPU this gather happens in shared memory.)
+pub fn stack_node_queries(forest: &Forest, batch: &QueryBatch, node: NodeId, kv_head: usize) -> Mat {
+    let g = batch.group_size();
+    let reqs = &forest.node(node).requests;
+    let mut q = Mat::zeros(reqs.len() * g, batch.d_head);
+    for (i, &rid) in reqs.iter().enumerate() {
+        let ri = batch.index_of(rid).expect("request not in batch");
+        let rows = batch.group_rows(ri, kv_head);
+        for j in 0..g {
+            q.row_mut(i * g + j).copy_from_slice(rows.row(j));
+        }
+    }
+    q
+}
+
+/// Run the plan: PAC per subtask (parallel over subtasks — inter-block
+/// parallelism), then per-(request, kv-head) POR tree reduction (parallel
+/// over series). Returns per-request (n_q_heads × d_head) outputs in
+/// batch order.
+pub fn run_codec_attention(
+    forest: &Forest,
+    store: &KvStore,
+    layer: usize,
+    batch: &QueryBatch,
+    plan: &Plan,
+    workers: usize,
+) -> Vec<Mat> {
+    let g = batch.group_size();
+    let d = batch.d_head;
+
+    // Stage 1: stacked queries per (node, kv_head) task.
+    let task_queries: Vec<Mat> = plan
+        .tasks
+        .iter()
+        .map(|t| stack_node_queries(forest, batch, t.node, t.kv_head))
+        .collect();
+
+    // Stage 2: PAC per subtask, embarrassingly parallel (Alg. 4 line 4).
+    let partials: Vec<Partial> = parallel_map_indexed(plan.subtasks.len(), workers, |si| {
+        let s = &plan.subtasks[si];
+        let q = &task_queries[s.task];
+        let (k, v) = store.node_kv(layer, s.node, s.kv_head, s.lo, s.hi);
+        let n = k.rows;
+        pac_streamed(q, &k, &v, n, BLOCK_K)
+    });
+
+    // Stage 3: group subtask indices per task, in KV order.
+    let mut task_subs: Vec<Vec<usize>> = vec![Vec::new(); plan.tasks.len()];
+    for (si, s) in plan.subtasks.iter().enumerate() {
+        task_subs[s.task].push(si);
+    }
+    for subs in &mut task_subs {
+        subs.sort_by_key(|&si| plan.subtasks[si].lo);
+    }
+
+    // Map (node, kv_head) → task index for path walking.
+    let mut node_task: BTreeMap<(NodeId, usize), usize> = BTreeMap::new();
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        node_task.insert((t.node, t.kv_head), ti);
+    }
+
+    // Stage 4: per-(request, kv_head) series extraction + tree reduction
+    // (Alg. 4 lines 7-8). Each series is independent; parallelize across
+    // them. Within a series we reduce in balanced-tree order — the same
+    // association the round-parallel GPU reduction uses, proving order
+    // independence (§4.3).
+    let n_series = batch.rids.len() * batch.n_kv_heads;
+    let reduced: Vec<Partial> = parallel_map_indexed(n_series, workers, |idx| {
+        let ri = idx / batch.n_kv_heads;
+        let kvh = idx % batch.n_kv_heads;
+        let rid = batch.rids[ri];
+        let path = forest.path(rid).expect("request path");
+        let mut series: Vec<Partial> = Vec::new();
+        for &nid in path {
+            let Some(&ti) = node_task.get(&(nid, kvh)) else {
+                continue; // node without storage/queries (e.g. len 0)
+            };
+            // Position of rid inside I_n gives the row block.
+            let pos = forest.node(nid).requests.binary_search(&rid).unwrap();
+            for &si in &task_subs[ti] {
+                series.push(extract_rows(&partials[si], pos * g, g));
+            }
+        }
+        reduce_balanced(&series, g, d)
+    });
+
+    // Stage 5: assemble per-request outputs (n_q_heads × d_head).
+    (0..batch.rids.len())
+        .map(|ri| {
+            let mut out = Mat::zeros(batch.n_q_heads, d);
+            for kvh in 0..batch.n_kv_heads {
+                let part = &reduced[ri * batch.n_kv_heads + kvh];
+                for j in 0..g {
+                    out.row_mut(kvh * g + j).copy_from_slice(part.o.row(j));
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Extract `count` consecutive rows starting at `row0` as a new Partial.
+fn extract_rows(p: &Partial, row0: usize, count: usize) -> Partial {
+    Partial {
+        o: p.o.rows_slice(row0, row0 + count),
+        m: p.m[row0..row0 + count].to_vec(),
+        s: p.s[row0..row0 + count].to_vec(),
+    }
+}
+
+/// Balanced-tree POR reduction of a series (identity for empty input).
+fn reduce_balanced(series: &[Partial], nq: usize, d: usize) -> Partial {
+    match series.len() {
+        0 => Partial::identity(nq, d),
+        1 => series[0].clone(),
+        _ => {
+            let mid = series.len() / 2;
+            let l = reduce_balanced(&series[..mid], nq, d);
+            let r = reduce_balanced(&series[mid..], nq, d);
+            por_merge(&l, &r)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle::request_attention_exact;
+    use crate::cost::Estimator;
+    use crate::kvforest::forest::StorageEvent;
+    use crate::sched::{divide_and_schedule, tasks_from_forest, DividerConfig};
+    use crate::util::prng::Rng;
+
+    /// Build a forest + store with random KV, returning (forest, store).
+    /// Layout: one shared node of `shared` tokens + `bs` private leaves
+    /// of `private` tokens, 1 layer.
+    fn build_world(
+        rng: &mut Rng,
+        bs: usize,
+        shared: usize,
+        private: usize,
+        n_kv_heads: usize,
+        d: usize,
+    ) -> (Forest, KvStore) {
+        let mut f = Forest::new();
+        let mut store = KvStore::new(1, 16, n_kv_heads, d);
+        // Shared prompt tokens 0..shared; private suffix distinct per req.
+        let shared_toks: Vec<u32> = (0..shared as u32).collect();
+        for r in 0..bs {
+            let mut toks = shared_toks.clone();
+            toks.extend((0..private as u32).map(|t| 10_000 + r as u32 * 1000 + t));
+            let out = f.insert_request(r as u64, &toks);
+            for ev in &out.events {
+                store.apply(ev);
+                if let StorageEvent::NeedFill { node, len } = ev {
+                    for _ in 0..*len {
+                        let mut k = vec![0.0f32; n_kv_heads * d];
+                        let mut v = vec![0.0f32; n_kv_heads * d];
+                        rng.fill_normal(&mut k, 1.0);
+                        rng.fill_normal(&mut v, 1.0);
+                        store.append(0, *node, &k, &v);
+                    }
+                }
+            }
+        }
+        f.check_invariants().unwrap();
+        (f, store)
+    }
+
+    fn rand_batch(rng: &mut Rng, rids: Vec<RequestId>, hq: usize, hkv: usize, d: usize) -> QueryBatch {
+        let q = rids
+            .iter()
+            .map(|_| {
+                let mut m = Mat::zeros(hq, d);
+                rng.fill_normal(&mut m.data, 1.0);
+                m
+            })
+            .collect();
+        QueryBatch {
+            rids,
+            q,
+            n_q_heads: hq,
+            n_kv_heads: hkv,
+            d_head: d,
+        }
+    }
+
+    fn check_vs_oracle(f: &Forest, store: &KvStore, batch: &QueryBatch, outs: &[Mat]) {
+        let g = batch.group_size();
+        for (ri, &rid) in batch.rids.iter().enumerate() {
+            for kvh in 0..batch.n_kv_heads {
+                let qg = batch.group_rows(ri, kvh);
+                let want = request_attention_exact(f, store, 0, rid, kvh, &qg);
+                for j in 0..g {
+                    let got = outs[ri].row(kvh * g + j);
+                    for c in 0..batch.d_head {
+                        let diff = (got[c] - want.at(j, c)).abs();
+                        assert!(
+                            diff < 2e-4,
+                            "rid {rid} kvh {kvh} row {j} col {c}: {} vs {}",
+                            got[c],
+                            want.at(j, c)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_matches_oracle_two_level() {
+        let mut rng = Rng::new(42);
+        let (f, store) = build_world(&mut rng, 4, 300, 40, 2, 32);
+        let batch = rand_batch(&mut rng, (0..4).collect(), 8, 2, 32);
+        let tasks = tasks_from_forest(&f, 2, 4);
+        let est = Estimator::table2();
+        let plan = divide_and_schedule(
+            tasks,
+            &est,
+            &DividerConfig {
+                num_blocks: 8,
+                min_chunk: 64,
+                ..Default::default()
+            },
+        );
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 4);
+        check_vs_oracle(&f, &store, &batch, &outs);
+    }
+
+    #[test]
+    fn codec_matches_oracle_with_heavy_division() {
+        // Force many vertical splits: the series must still merge exactly.
+        let mut rng = Rng::new(43);
+        let (f, store) = build_world(&mut rng, 2, 900, 30, 1, 16);
+        let batch = rand_batch(&mut rng, (0..2).collect(), 4, 1, 16);
+        let tasks = tasks_from_forest(&f, 1, 4);
+        let est = Estimator::table2();
+        let plan = crate::sched::naive::naive_plan(tasks, &est, 16, 7);
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 4);
+        check_vs_oracle(&f, &store, &batch, &outs);
+    }
+
+    #[test]
+    fn codec_matches_oracle_deep_tree() {
+        // aaa / aab / ab / b prompts → multi-level radix structure.
+        let mut rng = Rng::new(44);
+        let mut f = Forest::new();
+        let mut store = KvStore::new(1, 8, 1, 16);
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..200).collect(),                                 // a…
+            (0..150).chain(900..950).collect(),                 // split at 150
+            (0..150).chain(900..930).chain(2000..2010).collect(), // deeper
+            (5000..5100).collect(),                             // distinct root
+        ];
+        for (r, toks) in prompts.iter().enumerate() {
+            let out = f.insert_request(r as u64, toks);
+            for ev in &out.events {
+                store.apply(ev);
+                if let StorageEvent::NeedFill { node, len } = ev {
+                    for _ in 0..*len {
+                        let mut k = vec![0.0f32; 16];
+                        let mut v = vec![0.0f32; 16];
+                        rng.fill_normal(&mut k, 1.0);
+                        rng.fill_normal(&mut v, 1.0);
+                        store.append(0, *node, &k, &v);
+                    }
+                }
+            }
+        }
+        f.check_invariants().unwrap();
+        let batch = rand_batch(&mut rng, (0..4).collect(), 2, 1, 16);
+        let tasks = tasks_from_forest(&f, 1, 2);
+        let est = Estimator::table2();
+        let plan = divide_and_schedule(
+            tasks,
+            &est,
+            &DividerConfig {
+                num_blocks: 4,
+                min_chunk: 32,
+                ..Default::default()
+            },
+        );
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 2);
+        check_vs_oracle(&f, &store, &batch, &outs);
+    }
+
+    #[test]
+    fn stack_node_queries_order_matches_query_sets() {
+        let mut rng = Rng::new(45);
+        let (f, _store) = build_world(&mut rng, 3, 50, 10, 1, 8);
+        let batch = rand_batch(&mut rng, vec![2, 0, 1], 2, 1, 8); // batch order ≠ rid order
+        let shared = f.path(0).unwrap()[0];
+        let q = stack_node_queries(&f, &batch, shared, 0);
+        assert_eq!(q.rows, 3 * 2);
+        // Node query set is sorted by rid; row block i must be rid i.
+        for (i, &rid) in f.node(shared).requests.iter().enumerate() {
+            let ri = batch.index_of(rid).unwrap();
+            let want = batch.group_rows(ri, 0);
+            assert_eq!(q.row(i * 2), want.row(0));
+        }
+    }
+
+    #[test]
+    fn single_request_no_sharing_still_exact() {
+        // The virtual root makes non-shared batches a degenerate forest;
+        // the kernel must still be exact (§4.1).
+        let mut rng = Rng::new(46);
+        let (f, store) = build_world(&mut rng, 1, 64, 16, 1, 8);
+        let batch = rand_batch(&mut rng, vec![0], 2, 1, 8);
+        let tasks = tasks_from_forest(&f, 1, 2);
+        let est = Estimator::table2();
+        let plan = divide_and_schedule(
+            tasks,
+            &est,
+            &DividerConfig {
+                num_blocks: 2,
+                min_chunk: 16,
+                ..Default::default()
+            },
+        );
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 1);
+        check_vs_oracle(&f, &store, &batch, &outs);
+    }
+}

@@ -1,0 +1,159 @@
+//! The FlashDecoding baseline (§2.4): per-request split-KV decode
+//! attention with *no cross-request sharing* — every request reads its
+//! whole logical KV (shared prefix included) from global memory.
+//!
+//! Numerically this is exact attention; the point of the baseline is its
+//! *memory traffic and scheduling shape*, which `gpusim::memtraffic`
+//! accounts for. The split heuristic mirrors the real kernel: enough KV
+//! splits to saturate the GPU when batch × heads alone cannot.
+
+use crate::attention::pac::{pac_streamed, por_fold, Partial};
+use crate::attention::codec_exec::{QueryBatch, BLOCK_K};
+use crate::kvforest::{Forest, KvStore};
+use crate::tensor::Mat;
+use crate::util::threadpool::parallel_map_indexed;
+
+/// FlashDecoding's split-count heuristic: split each request's KV so that
+/// `batch · kv_heads · splits` roughly fills `num_blocks` thread blocks,
+/// with a minimum chunk length to keep blocks busy.
+pub fn flash_splits(n: usize, batch: usize, kv_heads: usize, num_blocks: usize) -> usize {
+    let waves = batch * kv_heads;
+    if waves == 0 {
+        return 1;
+    }
+    let want = num_blocks.div_ceil(waves);
+    let max_by_len = n.div_ceil(BLOCK_K).max(1);
+    want.clamp(1, max_by_len)
+}
+
+/// Run per-request FlashDecoding over the forest storage. Returns
+/// per-request (n_q_heads × d_head) outputs in batch order.
+pub fn run_flash_decoding(
+    forest: &Forest,
+    store: &KvStore,
+    layer: usize,
+    batch: &QueryBatch,
+    num_blocks: usize,
+    workers: usize,
+) -> Vec<Mat> {
+    let g = batch.group_size();
+    let d = batch.d_head;
+    let n_series = batch.rids.len() * batch.n_kv_heads;
+
+    let reduced: Vec<Partial> = parallel_map_indexed(n_series, workers, |idx| {
+        let ri = idx / batch.n_kv_heads;
+        let kvh = idx % batch.n_kv_heads;
+        let rid = batch.rids[ri];
+        // Gather the WHOLE logical KV: this is the duplicated global
+        // memory access CoDec eliminates.
+        let path = forest.path(rid).expect("request path");
+        let mut k = Mat::zeros(0, d);
+        let mut v = Mat::zeros(0, d);
+        for &nid in path {
+            let len = store.len(layer, nid);
+            if len == 0 {
+                continue;
+            }
+            let (kn, vn) = store.node_kv(layer, nid, kvh, 0, len);
+            k.push_rows(&kn);
+            v.push_rows(&vn);
+        }
+        let n = k.rows;
+        let q = batch.group_rows(ri, kvh);
+        if n == 0 {
+            return Partial::identity(g, d);
+        }
+        let splits = flash_splits(n, batch.rids.len(), batch.n_kv_heads, num_blocks);
+        let chunk = n.div_ceil(splits);
+        let mut parts = Vec::with_capacity(splits);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            let ks = k.rows_slice(lo, hi);
+            let vs = v.rows_slice(lo, hi);
+            parts.push(pac_streamed(&q, &ks, &vs, hi - lo, BLOCK_K));
+            lo = hi;
+        }
+        por_fold(&parts)
+    });
+
+    (0..batch.rids.len())
+        .map(|ri| {
+            let mut out = Mat::zeros(batch.n_q_heads, d);
+            for kvh in 0..batch.n_kv_heads {
+                let part = &reduced[ri * batch.n_kv_heads + kvh];
+                for j in 0..g {
+                    out.row_mut(kvh * g + j).copy_from_slice(part.o.row(j));
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle::request_attention_exact;
+    use crate::kvforest::forest::StorageEvent;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn split_heuristic_bounds() {
+        assert_eq!(flash_splits(10_000, 64, 8, 108), 1); // batch fills GPU
+        assert!(flash_splits(10_000, 1, 1, 108) > 16); // single request: split
+        assert_eq!(flash_splits(100, 1, 1, 108), 1); // too short to split
+    }
+
+    #[test]
+    fn flash_decoding_matches_oracle() {
+        let mut rng = Rng::new(7);
+        let mut f = Forest::new();
+        let mut store = KvStore::new(1, 16, 2, 16);
+        for r in 0..3u64 {
+            let toks: Vec<u32> = (0..100).chain(1000 * r as u32..1000 * r as u32 + 30).collect();
+            let out = f.insert_request(r, &toks);
+            for ev in &out.events {
+                store.apply(ev);
+                if let StorageEvent::NeedFill { node, len } = ev {
+                    for _ in 0..*len {
+                        let mut k = vec![0.0f32; 2 * 16];
+                        let mut v = vec![0.0f32; 2 * 16];
+                        rng.fill_normal(&mut k, 1.0);
+                        rng.fill_normal(&mut v, 1.0);
+                        store.append(0, *node, &k, &v);
+                    }
+                }
+            }
+        }
+        let q: Vec<Mat> = (0..3)
+            .map(|_| {
+                let mut m = Mat::zeros(4, 16);
+                rng.fill_normal(&mut m.data, 1.0);
+                m
+            })
+            .collect();
+        let batch = QueryBatch {
+            rids: vec![0, 1, 2],
+            q,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 16,
+        };
+        let outs = run_flash_decoding(&f, &store, 0, &batch, 32, 2);
+        for (ri, &rid) in batch.rids.iter().enumerate() {
+            for kvh in 0..2 {
+                let qg = batch.group_rows(ri, kvh);
+                let want = request_attention_exact(&f, &store, 0, rid, kvh, &qg);
+                for j in 0..2 {
+                    for c in 0..16 {
+                        assert!(
+                            (outs[ri].at(kvh * 2 + j, c) - want.at(j, c)).abs() < 1e-4,
+                            "mismatch rid={rid}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

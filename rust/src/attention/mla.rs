@@ -1,0 +1,189 @@
+//! Multi-head latent attention (MLA) support (§6, §8).
+//!
+//! MLA (DeepSeek-V2/V3) caches a single low-rank *latent* vector per
+//! token instead of per-head K/V; per-head keys/values are reconstructed
+//! on the fly as `K_h = C · W_k^h`, `V_h = C · W_v^h` where
+//! `C ∈ R^{n × d_latent}` is the cached latent block. The paper's stated
+//! extension path is exactly this: *"reconstructing per-head KV blocks
+//! from the latent representation and then applying the same prefix-aware
+//! attention and reduction pipeline"* — which is what this module does:
+//!
+//! 1. [`LatentStore`] caches per-(layer, node) latent rows under the same
+//!    prefix forest — sharing works identically (the latent of a shared
+//!    prefix is stored once);
+//! 2. [`reconstruct_kv`] materializes one head's (K, V) for a node range
+//!    — the per-subtask gather a CUDA kernel would do HBM→SMEM;
+//! 3. the reconstructed blocks feed the unchanged PAC/POR executors.
+//!
+//! The IO win compounds: MLA already shrinks per-token cache bytes by
+//! `2·h·d / d_latent`; CoDec then removes the cross-request duplication
+//! on top (the two reductions are orthogonal, like §8 says).
+
+use crate::kvforest::NodeId;
+use crate::tensor::{matmul_nn, Mat};
+use std::collections::BTreeMap;
+
+/// Per-head reconstruction weights.
+#[derive(Debug, Clone)]
+pub struct MlaHeadWeights {
+    /// d_latent × d_head
+    pub w_k: Mat,
+    /// d_latent × d_head
+    pub w_v: Mat,
+}
+
+/// Latent KV cache for one layer, keyed by forest node.
+#[derive(Debug, Default)]
+pub struct LatentStore {
+    /// node → latent rows (n × d_latent).
+    blocks: BTreeMap<NodeId, Mat>,
+    pub d_latent: usize,
+}
+
+impl LatentStore {
+    pub fn new(d_latent: usize) -> LatentStore {
+        LatentStore {
+            blocks: BTreeMap::new(),
+            d_latent,
+        }
+    }
+
+    /// Append one token's latent row to `node`.
+    pub fn append(&mut self, node: NodeId, latent: &[f32]) {
+        assert_eq!(latent.len(), self.d_latent);
+        self.blocks
+            .entry(node)
+            .or_insert_with(|| Mat::zeros(0, latent.len()))
+            .push_row(latent);
+    }
+
+    pub fn len(&self, node: NodeId) -> usize {
+        self.blocks.get(&node).map(|m| m.rows).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self, node: NodeId) -> bool {
+        self.len(node) == 0
+    }
+
+    /// Latent rows [lo, hi) of `node`.
+    pub fn latent(&self, node: NodeId, lo: usize, hi: usize) -> Mat {
+        self.blocks.get(&node).expect("node has no latent").rows_slice(lo, hi)
+    }
+
+    /// Cache bytes per token (f32 here; f16 on device): the MLA saving
+    /// over full per-head KV is `2·h·d_head / d_latent`.
+    pub fn bytes_per_token(&self) -> usize {
+        self.d_latent * 4
+    }
+}
+
+/// Reconstruct one head's (K, V) for node rows [lo, hi): `C · W_k`,
+/// `C · W_v`. This is the extra per-subtask compute MLA trades for its
+/// smaller cache; it feeds straight into `pac_streamed`.
+pub fn reconstruct_kv(
+    store: &LatentStore,
+    node: NodeId,
+    lo: usize,
+    hi: usize,
+    head: &MlaHeadWeights,
+) -> (Mat, Mat) {
+    let c = store.latent(node, lo, hi);
+    (matmul_nn(&c, &head.w_k), matmul_nn(&c, &head.w_v))
+}
+
+/// Analytic cache-size comparison (Fig.-style sanity for docs/tests):
+/// bytes per token of (MHA/GQA per-head cache, MLA latent cache).
+pub fn cache_bytes_per_token(n_kv_heads: usize, d_head: usize, d_latent: usize) -> (usize, usize) {
+    (2 * n_kv_heads * d_head * 4, d_latent * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle::attention_exact;
+    use crate::attention::pac::{pac_streamed, por_merge};
+    use crate::util::prng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    fn setup(rng: &mut Rng, n: usize, d_latent: usize, d_head: usize) -> (LatentStore, MlaHeadWeights) {
+        let mut store = LatentStore::new(d_latent);
+        for _ in 0..n {
+            let mut row = vec![0.0f32; d_latent];
+            rng.fill_normal(&mut row, 1.0);
+            store.append(1, &row);
+        }
+        let head = MlaHeadWeights {
+            w_k: randm(rng, d_latent, d_head),
+            w_v: randm(rng, d_latent, d_head),
+        };
+        (store, head)
+    }
+
+    #[test]
+    fn reconstruction_shapes() {
+        let mut rng = Rng::new(1);
+        let (store, head) = setup(&mut rng, 50, 16, 8);
+        let (k, v) = reconstruct_kv(&store, 1, 10, 30, &head);
+        assert_eq!((k.rows, k.cols), (20, 8));
+        assert_eq!((v.rows, v.cols), (20, 8));
+    }
+
+    #[test]
+    fn mla_pac_equals_attention_over_reconstructed_kv() {
+        // PAC over reconstructed blocks == exact attention over the fully
+        // materialized reconstruction: the pipeline is unchanged.
+        let mut rng = Rng::new(2);
+        let (store, head) = setup(&mut rng, 96, 32, 16);
+        let q = randm(&mut rng, 3, 16);
+        let (k, v) = reconstruct_kv(&store, 1, 0, 96, &head);
+        let p = pac_streamed(&q, &k, &v, 96, 32);
+        let want = attention_exact(&q, &k, &v, 96);
+        assert!(crate::tensor::allclose(&p.o, &want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn split_reconstruction_merges_exactly() {
+        // Reconstruct two disjoint ranges separately (as two CoDec
+        // subtasks would), PAC each, POR-merge: must equal the one-shot
+        // result. This is the invariant that lets the divider split MLA
+        // nodes exactly like dense-KV nodes.
+        let mut rng = Rng::new(3);
+        let (store, head) = setup(&mut rng, 80, 24, 12);
+        let q = randm(&mut rng, 2, 12);
+        let (k, v) = reconstruct_kv(&store, 1, 0, 80, &head);
+        let whole = pac_streamed(&q, &k, &v, 80, 32);
+        let (k1, v1) = reconstruct_kv(&store, 1, 0, 35, &head);
+        let (k2, v2) = reconstruct_kv(&store, 1, 35, 80, &head);
+        let merged = por_merge(
+            &pac_streamed(&q, &k1, &v1, 35, 32),
+            &pac_streamed(&q, &k2, &v2, 45, 32),
+        );
+        assert!(crate::tensor::max_abs_diff(&merged.o, &whole.o) < 1e-5);
+    }
+
+    #[test]
+    fn latent_cache_is_smaller() {
+        // Qwen3-4B-ish: 8 kv heads × 128 = 2048 floats/token vs 512
+        // latent dims → 4x cache saving before prefix sharing.
+        let (dense, latent) = cache_bytes_per_token(8, 128, 512);
+        assert_eq!(dense, 8192);
+        assert_eq!(latent, 2048);
+    }
+
+    #[test]
+    fn store_per_node_isolation() {
+        let mut store = LatentStore::new(4);
+        store.append(1, &[1.0; 4]);
+        store.append(2, &[2.0; 4]);
+        store.append(1, &[3.0; 4]);
+        assert_eq!(store.len(1), 2);
+        assert_eq!(store.len(2), 1);
+        let c = store.latent(1, 1, 2);
+        assert_eq!(c.row(0), &[3.0; 4]);
+    }
+}

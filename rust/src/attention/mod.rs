@@ -1,0 +1,28 @@
+//! Attention primitives and executors (§4).
+//!
+//! * [`pac`] — the PAC/POR primitives (Algorithms 2-3) in native Rust.
+//!   These mirror the L1 Pallas kernels bit-for-bit in algorithm (streamed
+//!   softmax over KV tiles) and are the crate-internal oracle: the PJRT
+//!   path is validated against them, and they back the executors when no
+//!   PJRT client is wanted (unit tests, traffic accounting).
+//! * [`oracle`] — exact full attention over a request's concatenated
+//!   prefix path, the ground truth every executor is tested against.
+//! * [`flash_decoding`] — the FlashDecoding baseline (§2.4): per-request
+//!   split-KV decode attention, no cross-request sharing.
+//! * [`cascade`] — the FlashInfer multilevel-cascade baseline (§8):
+//!   per-node attention like CoDec, but per-node *independent* division
+//!   and level-by-level reduction (many small launches).
+//! * [`codec_exec`] — the CoDec executor: PAC per plan subtask in
+//!   parallel, then the parallel tree reduction of §4.3.
+//! * [`mla`] — the §8 multi-head-latent-attention extension: latent KV
+//!   cache under the same forest, per-head reconstruction feeding the
+//!   unchanged PAC/POR pipeline.
+
+pub mod cascade;
+pub mod mla;
+pub mod codec_exec;
+pub mod flash_decoding;
+pub mod oracle;
+pub mod pac;
+
+pub use pac::{pac_streamed, por_merge, Partial};

@@ -1,0 +1,312 @@
+//! PAC and POR in native Rust (Algorithms 2 and 3).
+//!
+//! Same streaming-softmax algorithm as the Pallas kernel in
+//! `python/compile/kernels/pac.py`: fold KV tiles into running
+//! (max, denom, accumulator) state, emit the *normalized* output plus the
+//! (m, s) stats POR needs. Numerical behaviour matches the kernel (f32
+//! accumulation, -inf masking, identity-safe merge).
+
+use crate::tensor::{dot, Mat};
+
+pub const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// A partial attention result for a query set: normalized output rows plus
+/// per-row softmax stats.
+#[derive(Debug, Clone)]
+pub struct Partial {
+    pub o: Mat,
+    pub m: Vec<f32>,
+    pub s: Vec<f32>,
+}
+
+impl Partial {
+    /// The POR identity element: zero output, m = -inf, s = 0.
+    pub fn identity(nq: usize, d: usize) -> Partial {
+        Partial {
+            o: Mat::zeros(nq, d),
+            m: vec![NEG_INF; nq],
+            s: vec![0.0; nq],
+        }
+    }
+
+    pub fn nq(&self) -> usize {
+        self.o.rows
+    }
+}
+
+/// Partial attention computation between `q` (nq×d) and `k`/`v` (n×d),
+/// with only the first `n_valid` KV rows visible. Streams over tiles of
+/// `block_k` rows exactly like the Pallas kernel.
+pub fn pac_streamed(q: &Mat, k: &Mat, v: &Mat, n_valid: usize, block_k: usize) -> Partial {
+    let (nq, d) = (q.rows, q.cols);
+    let n = k.rows;
+    assert_eq!(k.cols, d);
+    assert_eq!(v.rows, n);
+    assert!(n_valid >= 1 && n_valid <= n, "n_valid {n_valid} of {n}");
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut acc = Mat::zeros(nq, d);
+    let mut mi = vec![NEG_INF; nq];
+    let mut si = vec![0.0f32; nq];
+    // Per-tile score scratch: p[r][j] for the current KV tile.
+    let mut p = Mat::zeros(nq, block_k);
+
+    let mut lo = 0;
+    while lo < n_valid {
+        let hi = (lo + block_k).min(n_valid);
+        let tl = hi - lo;
+
+        // 1) Scores: 4 query rows per K-row pass (each K row is loaded
+        //    once for four dot products — the register-blocking that took
+        //    the native kernel from ~3.7 to >8 GFLOP/s, see EXPERIMENTS
+        //    §Perf).
+        let mut rb = 0;
+        while rb < nq {
+            let re = (rb + 4).min(nq);
+            for (jj, j) in (lo..hi).enumerate() {
+                let krow = k.row(j);
+                for r in rb..re {
+                    *p.at_mut(r, jj) = dot(q.row(r), krow) * scale;
+                }
+            }
+            rb = re;
+        }
+
+        // 2) Streaming-softmax update per query row; p becomes exp-weights.
+        for r in 0..nq {
+            let row = &mut p.row_mut(r)[..tl];
+            let tile_max = row.iter().cloned().fold(NEG_INF, f32::max);
+            let m_new = mi[r].max(tile_max);
+            let corr = if mi[r] == NEG_INF { 0.0 } else { (mi[r] - m_new).exp() };
+            if corr != 1.0 {
+                si[r] *= corr;
+                for x in acc.row_mut(r) {
+                    *x *= corr;
+                }
+            }
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - m_new).exp();
+                sum += *x;
+            }
+            si[r] += sum;
+            mi[r] = m_new;
+        }
+
+        // 3) acc += P · V_tile, four accumulator rows per V-row pass.
+        let mut rb = 0;
+        while rb < nq {
+            let re = (rb + 4).min(nq);
+            for jj in 0..tl {
+                let vrow = v.row(lo + jj);
+                for r in rb..re {
+                    let w = p.at(r, jj);
+                    if w != 0.0 {
+                        crate::tensor::axpy(w, vrow, acc.row_mut(r));
+                    }
+                }
+            }
+            rb = re;
+        }
+        lo = hi;
+    }
+
+    // Normalize.
+    for r in 0..nq {
+        let inv = 1.0 / si[r];
+        for x in acc.row_mut(r) {
+            *x *= inv;
+        }
+    }
+    Partial {
+        o: acc,
+        m: mi,
+        s: si,
+    }
+}
+
+/// POR: merge two partial results of the same query set (Algorithm 3).
+/// Identity-safe: a side with m = -inf (s = 0) contributes nothing.
+pub fn por_merge(a: &Partial, b: &Partial) -> Partial {
+    let nq = a.nq();
+    let d = a.o.cols;
+    assert_eq!(b.nq(), nq);
+    assert_eq!(b.o.cols, d);
+    let mut o = Mat::zeros(nq, d);
+    let mut m = vec![0.0f32; nq];
+    let mut s = vec![0.0f32; nq];
+    for r in 0..nq {
+        let mm = a.m[r].max(b.m[r]);
+        let e1 = if a.m[r] == NEG_INF { 0.0 } else { (a.m[r] - mm).exp() };
+        let e2 = if b.m[r] == NEG_INF { 0.0 } else { (b.m[r] - mm).exp() };
+        let w1 = a.s[r] * e1;
+        let w2 = b.s[r] * e2;
+        let ss = w1 + w2;
+        m[r] = mm;
+        s[r] = ss;
+        if ss > 0.0 {
+            let (c1, c2) = (w1 / ss, w2 / ss);
+            let row = o.row_mut(r);
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = a.o.at(r, i) * c1 + b.o.at(r, i) * c2;
+            }
+        }
+    }
+    Partial { o, m, s }
+}
+
+/// Fold a sequence of partials with POR (used where round-parallelism is
+/// irrelevant, e.g. the CPU-native executors).
+pub fn por_fold(parts: &[Partial]) -> Partial {
+    assert!(!parts.is_empty());
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        acc = por_merge(&acc, p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle::attention_exact;
+    use crate::util::prng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize, scale: f32) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, scale);
+        m
+    }
+
+    #[test]
+    fn pac_equals_exact_attention_when_fully_valid() {
+        let mut rng = Rng::new(1);
+        let q = randm(&mut rng, 4, 64, 1.0);
+        let k = randm(&mut rng, 300, 64, 1.0);
+        let v = randm(&mut rng, 300, 64, 1.0);
+        let p = pac_streamed(&q, &k, &v, 300, 128);
+        let want = attention_exact(&q, &k, &v, 300);
+        assert!(crate::tensor::allclose(&p.o, &want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn pac_respects_n_valid() {
+        let mut rng = Rng::new(2);
+        let q = randm(&mut rng, 2, 32, 1.0);
+        let k = randm(&mut rng, 100, 32, 1.0);
+        let v = randm(&mut rng, 100, 32, 1.0);
+        let p = pac_streamed(&q, &k, &v, 37, 16);
+        let k2 = k.rows_slice(0, 37);
+        let v2 = v.rows_slice(0, 37);
+        let want = attention_exact(&q, &k2, &v2, 37);
+        assert!(crate::tensor::allclose(&p.o, &want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn pac_tile_size_invariant() {
+        let mut rng = Rng::new(3);
+        let q = randm(&mut rng, 3, 64, 1.0);
+        let k = randm(&mut rng, 513, 64, 1.0);
+        let v = randm(&mut rng, 513, 64, 1.0);
+        let a = pac_streamed(&q, &k, &v, 513, 64);
+        let b = pac_streamed(&q, &k, &v, 513, 512);
+        assert!(crate::tensor::max_abs_diff(&a.o, &b.o) < 1e-5);
+        for r in 0..3 {
+            assert_eq!(a.m[r], b.m[r]);
+            assert!((a.s[r] - b.s[r]).abs() < 1e-3 * a.s[r].abs());
+        }
+    }
+
+    #[test]
+    fn pac_single_valid_row_returns_v0() {
+        let mut rng = Rng::new(4);
+        let q = randm(&mut rng, 3, 16, 1.0);
+        let k = randm(&mut rng, 10, 16, 1.0);
+        let v = randm(&mut rng, 10, 16, 1.0);
+        let p = pac_streamed(&q, &k, &v, 1, 4);
+        for r in 0..3 {
+            for c in 0..16 {
+                assert!((p.o.at(r, c) - v.at(0, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn por_split_equals_whole() {
+        let mut rng = Rng::new(5);
+        let q = randm(&mut rng, 4, 32, 1.0);
+        let k = randm(&mut rng, 200, 32, 1.0);
+        let v = randm(&mut rng, 200, 32, 1.0);
+        let whole = pac_streamed(&q, &k, &v, 200, 64);
+        let p1 = pac_streamed(&q, &k.rows_slice(0, 80), &v.rows_slice(0, 80), 80, 64);
+        let p2 = pac_streamed(&q, &k.rows_slice(80, 200), &v.rows_slice(80, 200), 120, 64);
+        let merged = por_merge(&p1, &p2);
+        assert!(crate::tensor::allclose(&merged.o, &whole.o, 1e-5, 1e-5));
+        for r in 0..4 {
+            assert!((merged.m[r] - whole.m[r]).abs() < 1e-6);
+            assert!((merged.s[r] - whole.s[r]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn por_identity() {
+        let mut rng = Rng::new(6);
+        let q = randm(&mut rng, 2, 16, 1.0);
+        let k = randm(&mut rng, 50, 16, 1.0);
+        let v = randm(&mut rng, 50, 16, 1.0);
+        let p = pac_streamed(&q, &k, &v, 50, 16);
+        let id = Partial::identity(2, 16);
+        let l = por_merge(&id, &p);
+        let r = por_merge(&p, &id);
+        assert!(crate::tensor::max_abs_diff(&l.o, &p.o) < 1e-7);
+        assert!(crate::tensor::max_abs_diff(&r.o, &p.o) < 1e-7);
+    }
+
+    #[test]
+    fn por_commutative_and_associative() {
+        let mut rng = Rng::new(7);
+        let q = randm(&mut rng, 2, 16, 1.0);
+        let mk = |rng: &mut Rng| {
+            let k = randm(rng, 40, 16, 1.0);
+            let v = randm(rng, 40, 16, 1.0);
+            pac_streamed(&q, &k, &v, 40, 16)
+        };
+        let (p1, p2, p3) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let ab = por_merge(&p1, &p2);
+        let ba = por_merge(&p2, &p1);
+        assert!(crate::tensor::max_abs_diff(&ab.o, &ba.o) < 1e-6);
+        let left = por_merge(&por_merge(&p1, &p2), &p3);
+        let right = por_merge(&p1, &por_merge(&p2, &p3));
+        assert!(crate::tensor::max_abs_diff(&left.o, &right.o) < 1e-5);
+    }
+
+    #[test]
+    fn por_fold_matches_pairwise_tree() {
+        let mut rng = Rng::new(8);
+        let q = randm(&mut rng, 2, 16, 1.0);
+        let parts: Vec<Partial> = (0..5)
+            .map(|_| {
+                let k = randm(&mut rng, 30, 16, 1.0);
+                let v = randm(&mut rng, 30, 16, 1.0);
+                pac_streamed(&q, &k, &v, 30, 16)
+            })
+            .collect();
+        let folded = por_fold(&parts);
+        // Balanced tree order.
+        let l = por_merge(&por_merge(&parts[0], &parts[1]), &parts[2]);
+        let r = por_merge(&parts[3], &parts[4]);
+        let tree = por_merge(&l, &r);
+        assert!(crate::tensor::max_abs_diff(&folded.o, &tree.o) < 1e-5);
+    }
+
+    #[test]
+    fn stable_with_large_logits() {
+        let mut rng = Rng::new(9);
+        let q = randm(&mut rng, 2, 16, 12.0);
+        let k = randm(&mut rng, 64, 16, 12.0);
+        let v = randm(&mut rng, 64, 16, 1.0);
+        let p = pac_streamed(&q, &k, &v, 64, 16);
+        assert!(p.o.data.iter().all(|x| x.is_finite()));
+        assert!(p.s.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,501 @@
+//! One driver per paper table/figure (DESIGN.md §5 experiment index).
+//!
+//! Timing figures replay each system's plan on the gpusim cost model
+//! (calibrated to the paper's Table 2 A100 grid); traffic figures use the
+//! exact byte accounting; Fig. 11 measures *this machine's* real divider
+//! CPU time; Fig. 7 additionally runs the real engine when artifacts are
+//! available. Expected *shapes* (who wins, by roughly what factor) match
+//! the paper; absolute values are model-derived — see EXPERIMENTS.md.
+
+use super::harness::{fmt_bytes, fmt_ms, fmt_x, FigureReport};
+use crate::cost::gpu_specs::{all_specs, A100};
+use crate::cost::Estimator;
+use crate::gpusim::{sim_cascade, sim_codec, sim_codec_ablated, sim_flash, AblationConfig};
+use crate::kvforest::Forest;
+use crate::model::config::{gqa_variant, model_sweep, ModelConfig, QWEN3_4B};
+use crate::sched::{divide_and_schedule, naive, tasks_from_forest, DividerConfig};
+use crate::util::stats::geomean;
+use crate::workload::{degenerate_tree, full_kary_tree, shared_ratio_tree, two_level_tree, LoogleCategory, LoogleGen};
+
+/// Default head geometry for the kernel benches (Qwen3-4B).
+const HKV: usize = QWEN3_4B.n_kv_heads;
+const GROUP: usize = QWEN3_4B.group_size();
+
+fn est_a100() -> Estimator {
+    Estimator::table2()
+}
+
+/// The paper's Fig. 5 workload suite; returns (label, forest).
+pub fn fig5_workloads() -> Vec<(String, Forest)> {
+    let mut w = Vec::new();
+    for private in [512usize, 1024, 2048, 4096, 8192] {
+        w.push((
+            format!("seqlen/private={private}"),
+            two_level_tree(32, 120_000, private),
+        ));
+    }
+    for bs in [4usize, 8, 16, 32, 64, 128] {
+        w.push((format!("batch/bs={bs}"), two_level_tree(bs, 120_000, 1024)));
+    }
+    for depth in [2usize, 3, 4, 5, 6] {
+        w.push((
+            format!("depth/d={depth}"),
+            full_kary_tree(2, depth, 8192),
+        ));
+    }
+    for ratio in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99] {
+        w.push((
+            format!("ratio/{:.0}%", ratio * 100.0),
+            shared_ratio_tree(32, 120_000, ratio),
+        ));
+    }
+    for (name, arity) in [("2T", 2usize), ("3T", 3), ("4T", 4), ("5T", 5)] {
+        w.push((format!("shape/{name}"), full_kary_tree(arity, 3, 8192)));
+    }
+    w.push(("shape/DT".to_string(), degenerate_tree(8, 8192)));
+    // The paper's extreme points: shared:unique 100:1 and large batches
+    // (where Fig. 6 reaches its 409.8x maximum).
+    w.push((
+        "extreme/100:1-bs64".to_string(),
+        two_level_tree(64, 100_000, 1_000),
+    ));
+    w.push((
+        "extreme/100:1-bs256".to_string(),
+        two_level_tree(256, 100_000, 1_000),
+    ));
+    w.push((
+        "extreme/500:1-bs1024".to_string(),
+        two_level_tree(1024, 120_000, 256),
+    ));
+    w
+}
+
+/// Fig. 5: attention-kernel execution time, CoDec vs FlashDecoding.
+pub fn fig5_exec_time() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig5_exec_time",
+        "Decode attention time (ms, simulated A100): CoDec vs FlashDecoding (paper: avg 1.9x, up to 3.6x)",
+        &["workload", "flash_ms", "codec_ms", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    for (label, f) in fig5_workloads() {
+        let codec = sim_codec(&f, HKV, GROUP, &est, &A100);
+        let flash = sim_flash(&f, HKV, GROUP, &est, &A100);
+        let sp = flash.total_ms() / codec.total_ms();
+        speedups.push(sp);
+        rep.row(vec![
+            label,
+            fmt_ms(flash.total_ms()),
+            fmt_ms(codec.total_ms()),
+            fmt_x(sp),
+        ]);
+    }
+    rep.note(format!(
+        "geomean speedup {} (paper mean 1.9x)",
+        fmt_x(geomean(&speedups))
+    ));
+    rep
+}
+
+/// Fig. 6: global memory access, CoDec vs FlashDecoding.
+pub fn fig6_mem_access() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig6_mem_access",
+        "Attention global-memory traffic: CoDec vs FlashDecoding (paper: 14.7-409.8x lower, avg 120.9x)",
+        &["workload", "flash", "codec", "reduction", "pred_nbar"],
+    );
+    let mut ratios = Vec::new();
+    for (label, f) in fig5_workloads() {
+        let codec = sim_codec(&f, HKV, GROUP, &est, &A100);
+        let flash = sim_flash(&f, HKV, GROUP, &est, &A100);
+        let ratio = flash.traffic_bytes as f64 / codec.traffic_bytes as f64;
+        ratios.push(ratio);
+        rep.row(vec![
+            label,
+            fmt_bytes(flash.traffic_bytes),
+            fmt_bytes(codec.traffic_bytes),
+            fmt_x(ratio),
+            format!("{:.1}", f.mean_sharing_degree()),
+        ]);
+    }
+    rep.note(format!("geomean reduction {}", fmt_x(geomean(&ratios))));
+    rep
+}
+
+/// FFN + projections decode-step time model (memory-bound weight read).
+fn ffn_step_ms(cfg: &ModelConfig, gpu: &crate::cost::GpuSpec) -> f64 {
+    let bytes = cfg.param_count() as f64 * 2.0; // f16 weights read once per step
+    bytes / (gpu.mem_bw_gbs * 1e9) * 1e3
+}
+
+/// Fig. 7: end-to-end TPOT, CoDec engine vs vLLM-like baseline
+/// (simulated at paper scale; `fig7_engine_rows` adds measured rows).
+pub fn fig7_tpot() -> FigureReport {
+    let est = est_a100();
+    let cfg = QWEN3_4B;
+    let mut rep = FigureReport::new(
+        "fig7_tpot",
+        "End-to-end TPOT (ms/token, simulated A100, Qwen3-4B): CoDec vs vLLM-like (paper: avg 3.8x)",
+        &["seqlen", "vllm_ms", "codec_ms", "speedup"],
+    );
+    let mut sps = Vec::new();
+    for shared in [20_000usize, 50_000, 100_000, 150_000] {
+        let f = two_level_tree(32, shared, 256);
+        let codec = sim_codec(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        let flash = sim_flash(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        let ffn = ffn_step_ms(&cfg, &A100);
+        // Per decode step: all layers' attention + one full weight pass.
+        let codec_tpot = codec.total_ms() * cfg.n_layers as f64 + ffn;
+        let vllm_tpot = flash.total_ms() * cfg.n_layers as f64 + ffn;
+        let sp = vllm_tpot / codec_tpot;
+        sps.push(sp);
+        rep.row(vec![
+            format!("{shared}"),
+            fmt_ms(vllm_tpot),
+            fmt_ms(codec_tpot),
+            fmt_x(sp),
+        ]);
+    }
+    rep.note(format!("geomean speedup {} (paper 3.8x)", fmt_x(geomean(&sps))));
+    rep.note("longer contexts shift time into attention, widening the gap (paper §7.2)");
+    rep
+}
+
+/// Fig. 8: LooGLE categories + cascade comparison across shared ratios.
+pub fn fig8_loogle() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig8_loogle",
+        "LooGLE-like corpus + FlashInfer-cascade baseline (paper: CoDec consistently lower latency)",
+        &["workload", "flash_ms", "cascade_ms", "codec_ms", "codec_vs_cascade"],
+    );
+    for cat in LoogleCategory::all() {
+        let f = LoogleGen {
+            category: cat,
+            num_docs: 4,
+            questions_per_doc: 10,
+            ..Default::default()
+        }
+        .build_forest();
+        let codec = sim_codec(&f, HKV, GROUP, &est, &A100);
+        let casc = sim_cascade(&f, HKV, GROUP, &est, &A100);
+        let flash = sim_flash(&f, HKV, GROUP, &est, &A100);
+        rep.row(vec![
+            format!("loogle/{}", cat.name()),
+            fmt_ms(flash.total_ms()),
+            fmt_ms(casc.total_ms()),
+            fmt_ms(codec.total_ms()),
+            fmt_x(casc.total_ms() / codec.total_ms()),
+        ]);
+    }
+    for ratio in [0.25, 0.5, 0.75, 0.9, 0.99] {
+        let f = shared_ratio_tree(32, 120_000, ratio);
+        let codec = sim_codec(&f, HKV, GROUP, &est, &A100);
+        let casc = sim_cascade(&f, HKV, GROUP, &est, &A100);
+        let flash = sim_flash(&f, HKV, GROUP, &est, &A100);
+        rep.row(vec![
+            format!("ratio/{:.0}%", ratio * 100.0),
+            fmt_ms(flash.total_ms()),
+            fmt_ms(casc.total_ms()),
+            fmt_ms(codec.total_ms()),
+            fmt_x(casc.total_ms() / codec.total_ms()),
+        ]);
+    }
+    rep.note("CoDec < cascade everywhere: global division + round-parallel reduction (§8)");
+    rep
+}
+
+/// Fig. 9: ablation study on balanced and degenerate 200k-context trees.
+pub fn fig9_ablation() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig9_ablation",
+        "Ablation (ms, simulated A100; paper: 26.1x balanced / 10.8x unbalanced full-stack speedup)",
+        &["workload", "none", "tree_only", "part_only", "all", "speedup"],
+    );
+    let balanced = full_kary_tree(2, 6, 200_000 / 6);
+    let degen = degenerate_tree(8, 200_000 / 8);
+    for (label, f) in [("balanced/2T-d6", &balanced), ("unbalanced/DT-d8", &degen)] {
+        let t = |ab: AblationConfig| sim_codec_ablated(f, HKV, GROUP, &est, &A100, ab).total_ms();
+        let none = t(AblationConfig::all_off());
+        let tree = t(AblationConfig {
+            prefix_tree: true,
+            partition: false,
+            parallel_reduction: false,
+        });
+        let part = t(AblationConfig {
+            prefix_tree: false,
+            partition: true,
+            parallel_reduction: false,
+        });
+        let all = t(AblationConfig::all_on());
+        rep.row(vec![
+            label.to_string(),
+            fmt_ms(none),
+            fmt_ms(tree),
+            fmt_ms(part),
+            fmt_ms(all),
+            fmt_x(none / all),
+        ]);
+    }
+    rep.note("each optimization strictly reduces latency; combination is largest (paper §7.3)");
+    rep
+}
+
+/// Fig. 10: division granularity — naive fixed splits vs CoDec adaptive.
+pub fn fig10_granularity() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig10_granularity",
+        "Fixed division counts vs CoDec adaptive (paper: adaptive beats best-fixed by 1.02-1.04x, no-division by 3.2-4.4x)",
+        &["workload", "div=1", "div=4", "div=16", "div=64", "best_fixed", "codec", "vs_none", "vs_best"],
+    );
+    let workloads = [
+        ("2level/120k", two_level_tree(32, 120_000, 1024)),
+        ("degenerate", degenerate_tree(8, 16_384)),
+    ];
+    for (label, f) in workloads {
+        let tasks = tasks_from_forest(&f, HKV, GROUP);
+        let mut fixed = Vec::new();
+        for splits in [1usize, 4, 16, 64] {
+            fixed.push(naive::naive_plan(tasks.clone(), &est, A100.sm_count, splits).makespan_ms);
+        }
+        let best_fixed = (1..=64)
+            .map(|s| naive::naive_plan(tasks.clone(), &est, A100.sm_count, s).makespan_ms)
+            .fold(f64::INFINITY, f64::min);
+        let codec = divide_and_schedule(
+            tasks,
+            &est,
+            &DividerConfig {
+                num_blocks: A100.sm_count,
+                ..Default::default()
+            },
+        )
+        .makespan_ms;
+        rep.row(vec![
+            label.to_string(),
+            fmt_ms(fixed[0]),
+            fmt_ms(fixed[1]),
+            fmt_ms(fixed[2]),
+            fmt_ms(fixed[3]),
+            fmt_ms(best_fixed),
+            fmt_ms(codec),
+            fmt_x(fixed[0] / codec),
+            fmt_x(best_fixed / codec),
+        ]);
+    }
+    rep
+}
+
+/// Fig. 11: real CPU time of computing a division plan vs batch size.
+pub fn fig11_division_overhead() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig11_division_overhead",
+        "Division-plan CPU time on this machine (paper: tens of ms at bs=64, amortized over steps)",
+        &["batch", "tasks", "plan_ms_mean", "plan_ms_p90"],
+    );
+    for bs in [1usize, 2, 4, 8, 16, 32, 64] {
+        let f = two_level_tree(bs, 120_000, 1024);
+        let tasks = tasks_from_forest(&f, HKV, GROUP);
+        let ntasks = tasks.len();
+        let cfg = DividerConfig {
+            num_blocks: A100.sm_count,
+            ..Default::default()
+        };
+        let s = super::harness::time_it(1, 5, || {
+            let _ = divide_and_schedule(tasks.clone(), &est, &cfg);
+        });
+        rep.row(vec![
+            format!("{bs}"),
+            format!("{ntasks}"),
+            fmt_ms(s.mean),
+            fmt_ms(s.p90),
+        ]);
+    }
+    rep.note("grows with task count; engine amortizes via plan reuse (§6)");
+    rep
+}
+
+/// Fig. 12: five GPUs at 50k context.
+pub fn fig12_gpus() -> FigureReport {
+    let mut rep = FigureReport::new(
+        "fig12_gpus",
+        "CoDec vs FlashDecoding across GPUs, 50k shared context (paper: H800 4.7x ... A6000 15x)",
+        &["gpu", "bw_GBps", "flash_ms", "codec_ms", "speedup"],
+    );
+    let f = two_level_tree(16, 50_000, 512);
+    for gpu in all_specs() {
+        let est = est_a100().for_gpu(gpu.clone());
+        let codec = sim_codec(&f, HKV, GROUP, &est, &gpu);
+        let flash = sim_flash(&f, HKV, GROUP, &est, &gpu);
+        rep.row(vec![
+            gpu.name.to_string(),
+            format!("{:.0}", gpu.mem_bw_gbs),
+            fmt_ms(flash.total_ms()),
+            fmt_ms(codec.total_ms()),
+            fmt_x(flash.total_ms() / codec.total_ms()),
+        ]);
+    }
+    rep.note("gap widens as bandwidth drops (paper §7.6)");
+    rep
+}
+
+/// Fig. 13: attention variants (GQA group sweep) and model sizes.
+pub fn fig13_models() -> FigureReport {
+    let est = est_a100();
+    let mut rep = FigureReport::new(
+        "fig13_models",
+        "Attention variants (MHA/GQA/MQA) and model sizes (paper: consistent gains across all)",
+        &["config", "kv_heads", "group", "flash_ms", "codec_ms", "speedup", "traffic_red"],
+    );
+    let f = two_level_tree(16, 50_000, 512);
+    for kv in [32usize, 8, 4, 1] {
+        let cfg = gqa_variant(kv);
+        let codec = sim_codec(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        let flash = sim_flash(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        rep.row(vec![
+            cfg.name.to_string(),
+            format!("{kv}"),
+            format!("{}", cfg.group_size()),
+            fmt_ms(flash.total_ms()),
+            fmt_ms(codec.total_ms()),
+            fmt_x(flash.total_ms() / codec.total_ms()),
+            fmt_x(flash.traffic_bytes as f64 / codec.traffic_bytes as f64),
+        ]);
+    }
+    for cfg in model_sweep() {
+        let codec = sim_codec(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        let flash = sim_flash(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        rep.row(vec![
+            cfg.name.to_string(),
+            format!("{}", cfg.n_kv_heads),
+            format!("{}", cfg.group_size()),
+            fmt_ms(flash.total_ms() * cfg.n_layers as f64),
+            fmt_ms(codec.total_ms() * cfg.n_layers as f64),
+            fmt_x(flash.total_ms() / codec.total_ms()),
+            fmt_x(flash.traffic_bytes as f64 / codec.traffic_bytes as f64),
+        ]);
+    }
+    rep.note(
+        "MQA (group 32) stacks 512 query rows per shared task, past the profiled \
+nq grid: the extrapolated cost model prices it at ~parity on time while the \
+traffic reduction (the paper's mechanism) stays ~15x — a conservative-model \
+artifact, not a CoDec regression (see EXPERIMENTS.md)",
+    );
+    rep
+}
+
+/// Table 2: the cost-profile grid (default = paper values; pass a
+/// calibrated profile path via the CLI to print this machine's).
+pub fn table2_profile(profile: &crate::cost::Profile) -> FigureReport {
+    let mut headers = vec!["n \\ nq".to_string()];
+    headers.extend(profile.nq_grid.iter().map(|q| format!("{q}")));
+    let mut rep = FigureReport::new(
+        "table2_profile",
+        &format!(
+            "Thread-block execution time (ms), d={} [{}]",
+            profile.d, profile.device
+        ),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (i, n) in profile.n_grid.iter().enumerate() {
+        let mut row = vec![format!("{n}")];
+        row.extend(profile.t_ms[i].iter().map(|t| format!("{t:.3}")));
+        rep.row(row);
+    }
+    rep
+}
+
+/// Fig. 1b: prefill/decode/attention time breakdown.
+pub fn fig1_breakdown() -> FigureReport {
+    let est = est_a100();
+    let cfg = QWEN3_4B;
+    let mut rep = FigureReport::new(
+        "fig1_breakdown",
+        "Decode-time share of attention as context grows (paper: attention ~90% at 100k)",
+        &["context", "attn_ms/step", "ffn_ms/step", "attn_share"],
+    );
+    for ctx in [8_000usize, 25_000, 50_000, 100_000] {
+        let f = two_level_tree(32, ctx, 128);
+        let flash = sim_flash(&f, cfg.n_kv_heads, cfg.group_size(), &est, &A100);
+        let attn = flash.total_ms() * cfg.n_layers as f64;
+        let ffn = ffn_step_ms(&cfg, &A100);
+        rep.row(vec![
+            format!("{ctx}"),
+            fmt_ms(attn),
+            fmt_ms(ffn),
+            format!("{:.0}%", 100.0 * attn / (attn + ffn)),
+        ]);
+    }
+    rep
+}
+
+/// All figure drivers in DESIGN.md order, for `codec bench-all`.
+pub fn all_figures() -> Vec<FigureReport> {
+    vec![
+        fig1_breakdown(),
+        table2_profile(&crate::cost::Profile::table2_a100()),
+        fig5_exec_time(),
+        fig6_mem_access(),
+        fig7_tpot(),
+        fig8_loogle(),
+        fig9_ablation(),
+        fig10_granularity(),
+        fig11_division_overhead(),
+        fig12_gpus(),
+        fig13_models(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_reports_speedup_above_one() {
+        let rep = fig5_exec_time();
+        assert!(rep.rows.len() >= 20);
+        // Geomean note exists and most rows show >= 1x.
+        let above: usize = rep
+            .rows
+            .iter()
+            .filter(|r| r[3].trim_end_matches('x').parse::<f64>().unwrap() >= 0.95)
+            .count();
+        assert!(above as f64 >= rep.rows.len() as f64 * 0.8, "{above}/{}", rep.rows.len());
+    }
+
+    #[test]
+    fn fig6_reduction_in_paper_range() {
+        let rep = fig6_mem_access();
+        let ratios: Vec<f64> = rep
+            .rows
+            .iter()
+            .map(|r| r[3].trim_end_matches('x').parse::<f64>().unwrap())
+            .collect();
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 50.0, "max reduction {max}");
+    }
+
+    #[test]
+    fn fig12_has_all_gpus() {
+        let rep = fig12_gpus();
+        assert_eq!(rep.rows.len(), 5);
+        for r in &rep.rows {
+            let sp: f64 = r[4].trim_end_matches('x').parse().unwrap();
+            assert!(sp >= 1.0, "{}: {sp}", r[0]);
+        }
+    }
+
+    #[test]
+    fn fig9_full_stack_fastest() {
+        let rep = fig9_ablation();
+        for r in &rep.rows {
+            let none: f64 = r[1].parse().unwrap_or(f64::MAX);
+            let all: f64 = r[4].parse().unwrap_or(f64::MAX);
+            assert!(all < none);
+        }
+    }
+}

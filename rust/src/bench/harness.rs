@@ -1,0 +1,206 @@
+//! Timing harness and report tables (criterion replacement).
+
+use crate::util::json::Json;
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+/// Time `f` with warmup; returns a summary over `iters` runs (ms).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(&samples)
+}
+
+/// Simple scoped timer.
+pub struct BenchTimer(Instant);
+
+impl BenchTimer {
+    pub fn start() -> BenchTimer {
+        BenchTimer(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// A printable figure/table reproduction.
+#[derive(Debug, Clone)]
+pub struct FigureReport {
+    pub name: String,
+    pub description: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (expected shape vs paper).
+    pub notes: Vec<String>,
+}
+
+impl FigureReport {
+    pub fn new(name: &str, description: &str, headers: &[&str]) -> FigureReport {
+        FigureReport {
+            name: name.to_string(),
+            description: description.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n{}\n", self.name, self.description));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("name", Json::from(self.name.clone())),
+            ("description", Json::from(self.description.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::from(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::from(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Persist under target/bench_results/<name>.json (best effort).
+    pub fn save(&self) {
+        let dir = "target/bench_results";
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(
+            format!("{dir}/{}.json", self.name),
+            crate::util::json::emit(&self.to_json()),
+        );
+    }
+}
+
+/// Format ms with sensible precision.
+pub fn fmt_ms(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Format a ratio like "3.8x".
+pub fn fmt_x(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format bytes as MB/GB.
+pub fn fmt_bytes(b: u64) -> String {
+    let gb = b as f64 / 1e9;
+    if gb >= 1.0 {
+        format!("{gb:.2}GB")
+    } else {
+        format!("{:.1}MB", b as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let s = time_it(1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 1.5, "mean = {}", s.mean);
+    }
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = FigureReport::new("t", "desc", &["a", "bbbb"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec!["1000".into(), "x".into()]);
+        let s = r.render();
+        assert!(s.contains("bbbb"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut r = FigureReport::new("t", "d", &["a", "b"]);
+        r.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ms(123.4), "123");
+        assert_eq!(fmt_ms(3.14159), "3.14");
+        assert_eq!(fmt_ms(0.01234), "0.0123");
+        assert_eq!(fmt_x(3.799), "3.80x");
+        assert_eq!(fmt_bytes(2_500_000_000), "2.50GB");
+        assert_eq!(fmt_bytes(3_200_000), "3.2MB");
+    }
+}

@@ -1,0 +1,12 @@
+//! Benchmark harness + per-figure drivers.
+//!
+//! criterion is unavailable offline, so [`harness`] provides
+//! warmup/iteration timing with summary statistics, and [`figures`]
+//! implements one driver per paper table/figure (see DESIGN.md §5 for the
+//! index). The `benches/` binaries and the `codec` CLI both call into
+//! here, so `cargo bench` and `codec bench-fig5` print identical tables.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{time_it, BenchTimer, FigureReport};

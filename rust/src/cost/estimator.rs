@@ -1,0 +1,193 @@
+//! C_est(n_q, n): interpolated cost estimation over the profile grid
+//! (§5.2), with roofline-based cross-GPU scaling (§7.6).
+
+use super::gpu_specs::{GpuSpec, A100};
+use super::profile::Profile;
+
+/// Profile-backed cost estimator for PAC tasks.
+#[derive(Debug, Clone)]
+pub struct Estimator {
+    profile: Profile,
+    /// Device the estimate is *for* (the profile itself was measured on
+    /// `profiled_on`; cells are re-scaled through the roofline ratio).
+    target: GpuSpec,
+    profiled_on: GpuSpec,
+}
+
+impl Estimator {
+    /// Estimator for the device the profile was measured on.
+    pub fn new(profile: Profile) -> Estimator {
+        Estimator {
+            profile,
+            target: A100,
+            profiled_on: A100,
+        }
+    }
+
+    /// The paper's Table 2 defaults.
+    pub fn table2() -> Estimator {
+        Estimator::new(Profile::table2_a100())
+    }
+
+    /// Re-target the estimator to another GPU: each profiled cell keeps
+    /// its measured *efficiency* (measured / roofline on the profiled
+    /// device) and is re-priced under the target's roofline + launch.
+    pub fn for_gpu(mut self, target: GpuSpec) -> Estimator {
+        self.target = target;
+        self
+    }
+
+    pub fn target(&self) -> &GpuSpec {
+        &self.target
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    /// Estimated execution time (ms) of one PAC task on the target GPU.
+    ///
+    /// Interpolation is bilinear in (log n, log n_q); outside the grid it
+    /// extrapolates physically: linear in n (memory-bound), linear in n_q
+    /// past the largest profiled n_q (compute-bound), flat into the
+    /// launch floor below the smallest grid point.
+    pub fn estimate_ms(&self, nq: usize, n: usize) -> f64 {
+        let base = self.estimate_on_profiled(nq.max(1), n.max(1));
+        if self.target == self.profiled_on {
+            return base;
+        }
+        // Efficiency transfer: strip profiled launch, re-scale the work
+        // part by the roofline ratio, add the target launch.
+        let work = (base - self.profiled_on.launch_ms()).max(1e-6);
+        let r_src = self.profiled_on.roofline_ms(nq, n, self.profile.d);
+        let r_dst = self.target.roofline_ms(nq, n, self.profile.d);
+        let scaled = if r_src > 0.0 { work * r_dst / r_src } else { work };
+        self.target.launch_ms() + scaled
+    }
+
+    fn estimate_on_profiled(&self, nq: usize, n: usize) -> f64 {
+        let p = &self.profile;
+        let nqf = nq as f64;
+        let nf = n as f64;
+        let nq_max = *p.nq_grid.last().unwrap();
+        let n_max = *p.n_grid.last().unwrap();
+        let nq_min = p.nq_grid[0];
+        let n_min = p.n_grid[0];
+
+        // Past the top of the grid: linear scaling in the overflowing
+        // dimension(s), evaluated at the clamped grid edge.
+        if nf > n_max || nqf > nq_max {
+            let scale_n = (nf / n_max).max(1.0);
+            let scale_nq = (nqf / nq_max).max(1.0);
+            // One axis may simultaneously be *below* the grid (e.g. many
+            // stacked queries over a tiny KV slice) — clamp both ways.
+            let edge = self.bilinear(nqf.clamp(nq_min, nq_max), nf.clamp(n_min, n_max));
+            let launch = p.launch_floor_ms().min(edge);
+            // Only the work part scales; launch overhead does not.
+            return launch + (edge - launch) * scale_n * scale_nq;
+        }
+        // Below the bottom: launch-overhead dominated — flat clamp (the
+        // paper: "for the small workload, the execution cost is dominated
+        // by the kernel launch overhead").
+        self.bilinear(nqf.clamp(nq_min, nq_max), nf.clamp(n_min, n_max))
+    }
+
+    /// Bilinear interpolation in (ln n, ln n_q).
+    fn bilinear(&self, nq: f64, n: f64) -> f64 {
+        let p = &self.profile;
+        let (i0, i1, tn) = bracket_log(&p.n_grid, n);
+        let (j0, j1, tq) = bracket_log(&p.nq_grid, nq);
+        let a = p.t_ms[i0][j0] * (1.0 - tq) + p.t_ms[i0][j1] * tq;
+        let b = p.t_ms[i1][j0] * (1.0 - tq) + p.t_ms[i1][j1] * tq;
+        a * (1.0 - tn) + b * tn
+    }
+}
+
+/// Bracket `x` in the (increasing) grid; returns (lo, hi, frac) with the
+/// fraction computed in log space.
+fn bracket_log(grid: &[f64], x: f64) -> (usize, usize, f64) {
+    debug_assert!(x >= grid[0] && x <= *grid.last().unwrap());
+    let mut i = 0;
+    while i + 1 < grid.len() - 1 && grid[i + 1] < x {
+        i += 1;
+    }
+    let (lo, hi) = (grid[i], grid[i + 1]);
+    let t = if hi > lo {
+        ((x.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    (i, i + 1, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::gpu_specs;
+
+    #[test]
+    fn exact_at_grid_points() {
+        let e = Estimator::table2();
+        let p = Profile::table2_a100();
+        for (i, &n) in p.n_grid.iter().enumerate() {
+            for (j, &nq) in p.nq_grid.iter().enumerate() {
+                let got = e.estimate_ms(nq as usize, n as usize);
+                assert!(
+                    (got - p.t_ms[i][j]).abs() < 1e-9,
+                    "cell ({n},{nq}): {got} vs {}",
+                    p.t_ms[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interpolates_between_points() {
+        let e = Estimator::table2();
+        // Between n=512 (0.036) and n=1024 (0.043) at nq=1.
+        let t = e.estimate_ms(1, 700);
+        assert!(t > 0.036 && t < 0.043, "t={t}");
+    }
+
+    #[test]
+    fn monotone_in_n_above_grid() {
+        let e = Estimator::table2();
+        let t1 = e.estimate_ms(1, 16384);
+        let t2 = e.estimate_ms(1, 32768);
+        let t3 = e.estimate_ms(1, 131072);
+        assert!(t2 > t1 * 1.5, "t1={t1} t2={t2}");
+        assert!(t3 > t2 * 3.0, "t2={t2} t3={t3}");
+    }
+
+    #[test]
+    fn clamps_below_grid_to_launch_floor_region() {
+        let e = Estimator::table2();
+        let t = e.estimate_ms(1, 64);
+        assert!((t - 0.036).abs() < 1e-9); // clamped to the n=512, nq=1 cell
+    }
+
+    #[test]
+    fn scales_in_nq_above_grid() {
+        let e = Estimator::table2();
+        let t100 = e.estimate_ms(100, 4096);
+        let t200 = e.estimate_ms(200, 4096);
+        assert!(t200 > t100 * 1.5 && t200 < t100 * 2.5);
+    }
+
+    #[test]
+    fn gpu_scaling_orders_by_bandwidth_for_thin_tasks() {
+        // nq=1 tasks are memory-bound: faster HBM → lower estimate.
+        let base = Estimator::table2();
+        let t_h800 = base.clone().for_gpu(gpu_specs::H800).estimate_ms(1, 16384);
+        let t_a100 = base.clone().estimate_ms(1, 16384);
+        let t_a6000 = base.clone().for_gpu(gpu_specs::A6000).estimate_ms(1, 16384);
+        assert!(t_h800 < t_a100, "h800={t_h800} a100={t_a100}");
+        assert!(t_a6000 > t_a100, "a6000={t_a6000} a100={t_a100}");
+    }
+
+    #[test]
+    fn a100_retarget_is_identity() {
+        let e = Estimator::table2().for_gpu(gpu_specs::A100);
+        assert!((e.estimate_ms(10, 2048) - 0.079).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! GPU spec registry for the cross-GPU study (§7.6, Fig. 12).
+//!
+//! The profile grid is measured on one device (the paper's Table 2 is
+//! A100). To predict other GPUs we decompose each profiled cell with a
+//! roofline model (launch + max(bytes/BW, flops/peak)), extract the
+//! cell's efficiency factor on the profiled device, and re-apply it under
+//! the target device's roofline — so relative cross-GPU behaviour follows
+//! hardware ratios while absolute A100 numbers stay faithful to Table 2.
+
+/// Static hardware parameters of a GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM/GDDR bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// fp16/bf16 tensor-core peak, TFLOPs.
+    pub tc_tflops: f64,
+    /// Streaming multiprocessors ≈ concurrently resident thread blocks
+    /// (×1 block/SM for this kernel's occupancy).
+    pub sm_count: usize,
+    /// Kernel launch overhead, microseconds.
+    pub launch_us: f64,
+}
+
+/// The five GPUs evaluated in §7.6, plus the profiled reference first.
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100-PCIe-40G",
+    mem_bw_gbs: 1555.0,
+    tc_tflops: 312.0,
+    sm_count: 108,
+    launch_us: 6.0,
+};
+pub const H800: GpuSpec = GpuSpec {
+    name: "H800",
+    mem_bw_gbs: 3350.0,
+    tc_tflops: 990.0,
+    sm_count: 132,
+    launch_us: 5.0,
+};
+pub const RTX4090: GpuSpec = GpuSpec {
+    name: "RTX-4090",
+    mem_bw_gbs: 1008.0,
+    tc_tflops: 330.0,
+    sm_count: 128,
+    launch_us: 5.0,
+};
+pub const A30: GpuSpec = GpuSpec {
+    name: "A30",
+    mem_bw_gbs: 933.0,
+    tc_tflops: 165.0,
+    sm_count: 56,
+    launch_us: 6.0,
+};
+pub const A6000: GpuSpec = GpuSpec {
+    name: "RTX-A6000",
+    mem_bw_gbs: 768.0,
+    tc_tflops: 155.0,
+    sm_count: 84,
+    launch_us: 6.0,
+};
+
+pub fn all_specs() -> Vec<GpuSpec> {
+    vec![H800, A100, RTX4090, A30, A6000]
+}
+
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    all_specs()
+        .into_iter()
+        .chain(std::iter::once(A100))
+        .find(|g| g.name.eq_ignore_ascii_case(name))
+}
+
+impl GpuSpec {
+    /// Roofline time (ms) of a PAC task (nq queries × n KV rows × head dim
+    /// d, f16 KV): max(memory, compute) without launch overhead.
+    ///
+    /// Memory: K+V rows read once (the kernel's defining property),
+    /// queries + outputs negligible for n >> nq but included.
+    /// Compute: 2·(QKᵀ) + 2·(PV) = 4·nq·n·d flops on the tensor core.
+    pub fn roofline_ms(&self, nq: usize, n: usize, d: usize) -> f64 {
+        let bytes = (2.0 * n as f64 * d as f64 // K and V
+            + 2.0 * nq as f64 * d as f64) // Q read + O write
+            * 2.0; // f16
+        let flops = 4.0 * nq as f64 * n as f64 * d as f64;
+        let t_mem_ms = bytes / (self.mem_bw_gbs * 1e9) * 1e3;
+        let t_cmp_ms = flops / (self.tc_tflops * 1e12) * 1e3;
+        t_mem_ms.max(t_cmp_ms)
+    }
+
+    pub fn launch_ms(&self) -> f64 {
+        self.launch_us * 1e-3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_five() {
+        assert_eq!(all_specs().len(), 5);
+        assert!(by_name("a100-pcie-40g").is_some());
+        assert!(by_name("H800").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn bandwidth_ordering_matches_paper() {
+        // §7.6: "FlashDecoding suffers on the A6000 (768 GB/s)".
+        assert!(H800.mem_bw_gbs > A100.mem_bw_gbs);
+        assert!(A100.mem_bw_gbs > RTX4090.mem_bw_gbs);
+        assert!(RTX4090.mem_bw_gbs > A30.mem_bw_gbs);
+        assert!(A30.mem_bw_gbs > A6000.mem_bw_gbs);
+    }
+
+    #[test]
+    fn roofline_memory_bound_for_thin_tasks() {
+        // nq = 1: memory term dominates on every spec.
+        for g in all_specs() {
+            let t = g.roofline_ms(1, 8192, 128);
+            let bytes = (2.0 * 8192.0 * 128.0 + 2.0 * 128.0) * 2.0;
+            let t_mem = bytes / (g.mem_bw_gbs * 1e9) * 1e3;
+            assert!((t - t_mem).abs() < 1e-12, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn roofline_compute_bound_for_fat_tasks() {
+        // Very large nq: compute term dominates.
+        let t = A100.roofline_ms(4096, 8192, 128);
+        let flops = 4.0 * 4096.0 * 8192.0 * 128.0;
+        let t_cmp = flops / (A100.tc_tflops * 1e12) * 1e3;
+        assert!((t - t_cmp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roofline_scales_linearly_in_n_when_memory_bound() {
+        let t1 = A100.roofline_ms(1, 4096, 128);
+        let t2 = A100.roofline_ms(1, 8192, 128);
+        assert!((t2 / t1 - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,28 @@
+//! Profile-based cost estimation (§5.2) and the GPU spec registry.
+//!
+//! The paper observes that PAC execution time is *neither* pure-IO nor
+//! pure-compute (Table 2): small workloads are launch-overhead bound,
+//! long-thin ones memory-bound, fat ones compute-bound. So the divider is
+//! driven by a profiled grid `C_est(n_q, n)` with interpolation, not a
+//! formula.
+//!
+//! * [`profile`] — the (n_q, n) → ms grid; ships the paper's Table 2
+//!   (A100 PCIe 40G, d = 128) as the default, load/save as JSON, and can
+//!   be regenerated on this machine by `codec calibrate` (which times the
+//!   PJRT PAC executables).
+//! * [`estimator`] — bilinear interpolation in log(n)×log(n_q) space with
+//!   physically-motivated extrapolation (linear in n when memory-bound,
+//!   linear in n_q when compute-bound, flat into the launch-overhead
+//!   floor).
+//! * [`gpu_specs`] — bandwidth/compute/launch parameters for the five
+//!   GPUs of §7.6 plus this paper's roofline scaling rule: per-cell
+//!   calibration against the A100 profile, then re-scaled by each GPU's
+//!   roofline (see `Estimator::for_gpu`).
+
+pub mod estimator;
+pub mod gpu_specs;
+pub mod profile;
+
+pub use estimator::Estimator;
+pub use gpu_specs::GpuSpec;
+pub use profile::Profile;

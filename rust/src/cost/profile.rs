@@ -1,0 +1,174 @@
+//! The PAC cost profile grid (§5.2, Table 2).
+
+use crate::util::json::{self, Json};
+
+/// Measured thread-block execution times (ms) on a grid of
+/// (n_q — query count, n — KV length) points, for a fixed head dim `d`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    pub d: usize,
+    /// Grid coordinates, strictly increasing.
+    pub nq_grid: Vec<f64>,
+    pub n_grid: Vec<f64>,
+    /// t_ms[i][j] = time at (n_grid[i], nq_grid[j]).
+    pub t_ms: Vec<Vec<f64>>,
+    /// Which device the grid was measured on (documentation only).
+    pub device: String,
+}
+
+impl Profile {
+    /// The paper's Table 2: NVIDIA A100 PCIe 40G, d = 128.
+    pub fn table2_a100() -> Profile {
+        Profile {
+            d: 128,
+            nq_grid: vec![1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0],
+            n_grid: vec![512.0, 1024.0, 2048.0, 4096.0, 8192.0, 16384.0],
+            t_ms: vec![
+                vec![0.036, 0.035, 0.036, 0.043, 0.048, 0.074, 0.112],
+                vec![0.043, 0.043, 0.044, 0.054, 0.062, 0.109, 0.122],
+                vec![0.060, 0.059, 0.059, 0.079, 0.094, 0.124, 0.145],
+                vec![0.092, 0.092, 0.093, 0.126, 0.147, 0.156, 0.183],
+                vec![0.156, 0.157, 0.156, 0.199, 0.189, 0.195, 0.266],
+                vec![0.283, 0.282, 0.283, 0.301, 0.303, 0.471, 0.746],
+            ],
+            device: "A100-PCIe-40G (paper Table 2)".to_string(),
+        }
+    }
+
+    /// Launch-overhead floor: the smallest measured time (the paper notes
+    /// small workloads are dominated by constant kernel-launch overhead).
+    pub fn launch_floor_ms(&self) -> f64 {
+        self.t_ms
+            .iter()
+            .flatten()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("d", Json::from(self.d)),
+            ("device", Json::from(self.device.clone())),
+            (
+                "nq_grid",
+                Json::Arr(self.nq_grid.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "n_grid",
+                Json::Arr(self.n_grid.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "t_ms",
+                Json::Arr(
+                    self.t_ms
+                        .iter()
+                        .map(|row| Json::Arr(row.iter().map(|&x| Json::Num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Profile, String> {
+        let nums = |key: &str| -> Result<Vec<f64>, String> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or(format!("profile: missing {key}"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or(format!("profile: non-number in {key}")))
+                .collect()
+        };
+        let nq_grid = nums("nq_grid")?;
+        let n_grid = nums("n_grid")?;
+        let t_ms: Vec<Vec<f64>> = v
+            .get("t_ms")
+            .and_then(Json::as_arr)
+            .ok_or("profile: missing t_ms")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or("profile: t_ms row not array".to_string())?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("profile: non-number".to_string()))
+                    .collect()
+            })
+            .collect::<Result<_, _>>()?;
+        if t_ms.len() != n_grid.len() || t_ms.iter().any(|r| r.len() != nq_grid.len()) {
+            return Err("profile: t_ms shape mismatch".into());
+        }
+        Ok(Profile {
+            d: v.get("d").and_then(Json::as_usize).unwrap_or(128),
+            nq_grid,
+            n_grid,
+            t_ms,
+            device: v
+                .get("device")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, json::emit(&self.to_json()))
+    }
+
+    pub fn load(path: &str) -> Result<Profile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let v = json::parse(&text).map_err(|e| e.to_string())?;
+        Profile::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shape() {
+        let p = Profile::table2_a100();
+        assert_eq!(p.n_grid.len(), 6);
+        assert_eq!(p.nq_grid.len(), 7);
+        assert_eq!(p.t_ms.len(), 6);
+        assert!(p.t_ms.iter().all(|r| r.len() == 7));
+    }
+
+    #[test]
+    fn table2_monotone_in_n_at_fixed_nq() {
+        // Memory-bound column: time grows with KV length.
+        let p = Profile::table2_a100();
+        for j in 0..p.nq_grid.len() {
+            for i in 1..p.n_grid.len() {
+                assert!(
+                    p.t_ms[i][j] >= p.t_ms[i - 1][j] * 0.95,
+                    "non-monotone at n={} nq={}",
+                    p.n_grid[i],
+                    p.nq_grid[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn launch_floor() {
+        let p = Profile::table2_a100();
+        assert!((p.launch_floor_ms() - 0.035).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = Profile::table2_a100();
+        let j = p.to_json();
+        let q = Profile::from_json(&j).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shape() {
+        let mut j = Profile::table2_a100().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("n_grid".into(), Json::Arr(vec![Json::Num(1.0)]));
+        }
+        assert!(Profile::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Continuous batching: admission queue + active set management.
+
+use super::request::{Request, RequestId};
+use std::collections::VecDeque;
+
+/// An admitted, in-flight request.
+#[derive(Debug, Clone)]
+pub struct ActiveRequest {
+    pub req: Request,
+    /// Sampled tokens so far.
+    pub generated: Vec<u32>,
+    /// Whether prefill has completed.
+    pub prefilled: bool,
+}
+
+impl ActiveRequest {
+    /// Absolute position of the *next* token to be produced.
+    pub fn next_pos(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+
+    /// The token consumed by the next decode step: the last sampled
+    /// token, or the last prompt token right after prefill.
+    pub fn last_token(&self) -> u32 {
+        *self
+            .generated
+            .last()
+            .unwrap_or_else(|| self.req.prompt.last().unwrap())
+    }
+
+    pub fn done(&self) -> bool {
+        if self.generated.len() >= self.req.max_new_tokens {
+            return true;
+        }
+        match (self.req.stop_token, self.generated.last()) {
+            (Some(stop), Some(&t)) => t == stop,
+            _ => false,
+        }
+    }
+}
+
+/// FIFO admission with a bounded active set (the continuous batcher).
+#[derive(Debug, Default)]
+pub struct Batcher {
+    pending: VecDeque<Request>,
+    active: Vec<ActiveRequest>,
+    max_active: usize,
+}
+
+impl Batcher {
+    pub fn new(max_active: usize) -> Batcher {
+        assert!(max_active >= 1);
+        Batcher {
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            max_active,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    /// Admit pending requests while slots are free; returns the newly
+    /// admitted ids (they still need prefill).
+    pub fn admit(&mut self) -> Vec<RequestId> {
+        let mut new = Vec::new();
+        while self.active.len() < self.max_active {
+            let Some(req) = self.pending.pop_front() else {
+                break;
+            };
+            new.push(req.id);
+            self.active.push(ActiveRequest {
+                req,
+                generated: Vec::new(),
+                prefilled: false,
+            });
+        }
+        new
+    }
+
+    pub fn active(&self) -> &[ActiveRequest] {
+        &self.active
+    }
+
+    pub fn active_mut(&mut self) -> &mut [ActiveRequest] {
+        &mut self.active
+    }
+
+    pub fn get_mut(&mut self, rid: RequestId) -> Option<&mut ActiveRequest> {
+        self.active.iter_mut().find(|a| a.req.id == rid)
+    }
+
+    /// Remove finished requests, returning them.
+    pub fn retire_done(&mut self) -> Vec<ActiveRequest> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done() {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, max_new: usize) -> Request {
+        Request::new(id, vec![1, 2, 3], max_new)
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.submit(req(i, 4));
+        }
+        assert_eq!(b.admit(), vec![0, 1]);
+        assert_eq!(b.active().len(), 2);
+        assert_eq!(b.pending_len(), 3);
+        // No slots → no admission.
+        assert!(b.admit().is_empty());
+    }
+
+    #[test]
+    fn retire_opens_slots_fifo_refill() {
+        let mut b = Batcher::new(2);
+        for i in 0..4 {
+            b.submit(req(i, 1));
+        }
+        b.admit();
+        // Generate one token each → both done (max_new = 1).
+        for a in b.active_mut() {
+            a.generated.push(9);
+        }
+        let done = b.retire_done();
+        assert_eq!(done.len(), 2);
+        assert_eq!(b.admit(), vec![2, 3]);
+    }
+
+    #[test]
+    fn stop_token_finishes_early() {
+        let mut b = Batcher::new(1);
+        let mut r = req(0, 100);
+        r.stop_token = Some(7);
+        b.submit(r);
+        b.admit();
+        b.active_mut()[0].generated.push(7);
+        assert!(b.active()[0].done());
+    }
+
+    #[test]
+    fn positions_and_last_token() {
+        let a = ActiveRequest {
+            req: req(0, 4),
+            generated: vec![10, 11],
+            prefilled: true,
+        };
+        assert_eq!(a.next_pos(), 5);
+        assert_eq!(a.last_token(), 11);
+        let fresh = ActiveRequest {
+            req: req(0, 4),
+            generated: vec![],
+            prefilled: true,
+        };
+        assert_eq!(fresh.last_token(), 3);
+    }
+}

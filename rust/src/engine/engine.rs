@@ -1,0 +1,563 @@
+//! The decode engine: prefix-shared prefill + continuous-batching decode
+//! with CoDec attention, running the transformer through AOT PJRT
+//! executables. This is the Layer-3 hot path — no Python anywhere.
+//!
+//! Decode-step dataflow (per layer, the vLLM attention-backend seam):
+//!
+//! ```text
+//!   x ──attn_pre(PJRT)──▶ (q, k_new, v_new)
+//!        k_new/v_new ──▶ KV forest append (paged store)
+//!        q ──▶ CoDec plan → PAC subtasks → POR tree reduction ──▶ attn_out
+//!   (x, attn_out) ──attn_post(PJRT)──▶ x'
+//! ```
+
+use super::batch::Batcher;
+use super::metrics::Metrics;
+use super::request::Request;
+use crate::attention::codec_exec::{run_codec_attention, QueryBatch};
+use crate::attention::flash_decoding::run_flash_decoding;
+use crate::attention::oracle::attention_exact;
+use crate::cost::Estimator;
+use crate::kvforest::forest::StorageEvent;
+use crate::kvforest::{Forest, KvStore, NodeId};
+use crate::model::{Sampler, Weights};
+use crate::runtime::exec::{run_codec_attention_pjrt, EnginePieces};
+use crate::runtime::Runtime;
+use crate::sched::plan::materialize_subtasks;
+use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
+use crate::tensor::Mat;
+use crate::util::prng::Rng;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Which attention core the engine uses for decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionBackend {
+    /// CoDec plan + native Rust PAC/POR (default).
+    CodecNative,
+    /// CoDec plan + the AOT Pallas PAC/POR kernels via PJRT.
+    CodecPjrt,
+    /// Per-request FlashDecoding — the vLLM-like baseline (Fig. 7).
+    FlashNative,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub backend: AttentionBackend,
+    /// Maximum concurrently decoding requests.
+    pub max_batch: usize,
+    /// Recompute the full division plan every this many decode steps;
+    /// in between, cached per-node divisions are re-materialized (§6).
+    pub replan_interval: usize,
+    /// Thread blocks m for the divider (SM-count analogue).
+    pub num_blocks: usize,
+    /// CPU worker threads for the native executors.
+    pub workers: usize,
+    pub page_tokens: usize,
+    pub seed: u64,
+    pub sampler: Sampler,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            backend: AttentionBackend::CodecNative,
+            max_batch: 8,
+            replan_interval: 8,
+            num_blocks: 64,
+            workers: crate::util::threadpool::default_workers(),
+            page_tokens: 16,
+            seed: 0,
+            sampler: Sampler::Greedy,
+        }
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    rt: Runtime,
+    weights: Weights,
+    cfg: EngineConfig,
+    est: Estimator,
+    forest: Forest,
+    store: KvStore,
+    batcher: Batcher,
+    rng: Rng,
+    pub metrics: Metrics,
+    step_count: usize,
+    /// Cached divisions from the last full plan: (node, kv_head) → b_k.
+    cached_divisions: BTreeMap<(NodeId, usize), usize>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str, cfg: EngineConfig) -> Result<Engine> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let mi = rt.manifest().model.clone();
+        // Pre-compile the engine pieces + upload weights once.
+        let weights = Weights::generate(&rt, cfg.seed)?;
+        let store = KvStore::new(mi.n_layers, cfg.page_tokens, mi.n_kv_heads, mi.d_head);
+        Ok(Engine {
+            rt,
+            weights,
+            est: Estimator::table2(),
+            forest: Forest::new(),
+            store,
+            batcher: Batcher::new(cfg.max_batch),
+            rng: Rng::new(cfg.seed ^ 0xC0DEC),
+            metrics: Metrics::default(),
+            step_count: 0,
+            cached_divisions: BTreeMap::new(),
+            cfg,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn forest(&self) -> &Forest {
+        &self.forest
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.on_submit(req.id);
+        self.batcher.submit(req);
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work()
+    }
+
+    /// Run until all submitted requests finish; returns (id, tokens).
+    pub fn run_to_completion(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// One engine iteration: admit → prefill new → one decode step →
+    /// retire finished. Returns finished (id, generated tokens).
+    pub fn step(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
+        for rid in self.batcher.admit() {
+            self.prefill(rid)?;
+        }
+        let decoding: Vec<u64> = self
+            .batcher
+            .active()
+            .iter()
+            .filter(|a| a.prefilled && !a.done())
+            .map(|a| a.req.id)
+            .collect();
+        if !decoding.is_empty() {
+            let t0 = Instant::now();
+            self.decode_step(&decoding)?;
+            self.metrics.step_times.push(t0.elapsed());
+        }
+        let done = self.batcher.retire_done();
+        let mut finished = Vec::new();
+        for a in done {
+            self.metrics.on_finish(a.req.id);
+            for ev in self.forest.remove_request(a.req.id) {
+                self.store.apply(&ev);
+            }
+            self.cached_divisions.clear(); // structure changed
+            finished.push((a.req.id, a.generated));
+        }
+        Ok(finished)
+    }
+
+    // -----------------------------------------------------------------
+    // Prefill (prefix-shared).
+    // -----------------------------------------------------------------
+
+    fn prefill(&mut self, rid: u64) -> Result<()> {
+        let req = self
+            .batcher
+            .get_mut(rid)
+            .expect("admitted request missing")
+            .req
+            .clone();
+        let outcome = self.forest.insert_request(rid, &req.prompt);
+        self.cached_divisions.clear();
+        for ev in &outcome.events {
+            self.store.apply(ev);
+        }
+        // Radix property: the only unfilled storage is brand-new leaves.
+        let mut novel = 0usize;
+        let mut x_last: Option<Mat> = None;
+        for ev in &outcome.events {
+            if let StorageEvent::NeedFill { node, len } = ev {
+                x_last = self.fill_node(rid, *node, *len)?;
+                novel += len;
+            }
+        }
+        self.metrics.prefill_tokens += novel;
+        self.metrics.prefill_tokens_shared += req.prompt.len() - novel;
+
+        // Hidden state of the last prompt token → first sampled token.
+        // Fully-shared prompts (novel == 0) recompute it without appends.
+        let x = match x_last {
+            Some(x) => x,
+            None => self.token_pass_no_append(rid, *req.prompt.last().unwrap())?,
+        };
+        let first = self.sample_rows(&x)?[0];
+        let a = self.batcher.get_mut(rid).unwrap();
+        a.generated.push(first);
+        a.prefilled = true;
+        self.metrics.on_token(rid);
+        Ok(())
+    }
+
+    /// Compute and append KV rows for the `len` tokens of freshly created
+    /// `node`, chunked through the batch-bucketed transformer pieces with
+    /// exact causal attention. Returns the final hidden state of the last
+    /// token processed (== last prompt token, since new leaves are path
+    /// suffixes).
+    fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
+        let mi = self.rt.manifest().model.clone();
+        let path = self.forest.path(rid).expect("path").to_vec();
+        let ctx_total: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
+        let start = ctx_total - len; // global position of the leaf's first token
+        let tokens: Vec<u32> = self.forest.node(node).tokens.clone();
+        debug_assert_eq!(tokens.len(), len);
+        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let g = mi.n_q_heads / mi.n_kv_heads;
+        let mut x_last = None;
+
+        let mut lo = 0usize;
+        while lo < len {
+            let hi = (lo + max_b).min(len);
+            let chunk = hi - lo;
+            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let mut toks: Vec<i32> = tokens[lo..hi].iter().map(|&t| t as i32).collect();
+            toks.resize(b, 0);
+            let mut pos: Vec<i32> = (lo..hi).map(|p| (start + p) as i32).collect();
+            pos.resize(b, 0);
+
+            let mut x = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+            for layer in 0..mi.n_layers {
+                let lw = &self.weights.layers[layer];
+                let (qs, ks, vs) = EnginePieces::attn_pre(&self.rt, b, &x, lw, &pos)?;
+                // Append the chunk's KV rows (real rows only, not padding).
+                for i in 0..chunk {
+                    self.store.append(layer, node, &ks[i].data, &vs[i].data);
+                }
+                // Causal attention: token at global pos p sees rows [0, p].
+                let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
+                for kvh in 0..mi.n_kv_heads {
+                    let (kfull, vfull) = self.gather_path_kv(&path, layer, kvh);
+                    for i in 0..chunk {
+                        let p = start + lo + i;
+                        let q = qs[i].rows_slice(kvh * g, (kvh + 1) * g);
+                        let o = attention_exact(&q, &kfull, &vfull, p + 1);
+                        for j in 0..g {
+                            let h = kvh * g + j;
+                            attn_out.row_mut(i)[h * mi.d_head..(h + 1) * mi.d_head]
+                                .copy_from_slice(o.row(j));
+                        }
+                    }
+                }
+                x = EnginePieces::attn_post(&self.rt, b, &x, &attn_out, lw)?;
+            }
+            if hi == len {
+                x_last = Some(x.rows_slice(chunk - 1, chunk));
+            }
+            lo = hi;
+        }
+        Ok(x_last)
+    }
+
+    /// Gather a request path's full (K, V) for one (layer, kv-head).
+    fn gather_path_kv(&self, path: &[NodeId], layer: usize, kvh: usize) -> (Mat, Mat) {
+        let d = self.rt.manifest().model.d_head;
+        let mut k = Mat::zeros(0, d);
+        let mut v = Mat::zeros(0, d);
+        for &nid in path {
+            let len = self.store.len(layer, nid);
+            if len == 0 {
+                continue;
+            }
+            let (kn, vn) = self.store.node_kv(layer, nid, kvh, 0, len);
+            k.push_rows(&kn);
+            v.push_rows(&vn);
+        }
+        (k, v)
+    }
+
+    /// Run one already-cached token through all layers *without*
+    /// appending KV (logits pass for fully-shared prompts).
+    fn token_pass_no_append(&mut self, rid: u64, token: u32) -> Result<Mat> {
+        let mi = self.rt.manifest().model.clone();
+        let path = self.forest.path(rid).expect("path").to_vec();
+        let ctx: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
+        let b = self.rt.manifest().batch_bucket(1).unwrap();
+        let mut toks = vec![token as i32];
+        toks.resize(b, 0);
+        let mut poss = vec![(ctx - 1) as i32];
+        poss.resize(b, 0);
+        let g = mi.n_q_heads / mi.n_kv_heads;
+
+        let mut x = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+        for layer in 0..mi.n_layers {
+            let lw = &self.weights.layers[layer];
+            let (qs, _ks, _vs) = EnginePieces::attn_pre(&self.rt, b, &x, lw, &poss)?;
+            let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
+            for kvh in 0..mi.n_kv_heads {
+                let (kfull, vfull) = self.gather_path_kv(&path, layer, kvh);
+                let q = qs[0].rows_slice(kvh * g, (kvh + 1) * g);
+                let o = attention_exact(&q, &kfull, &vfull, ctx);
+                for j in 0..g {
+                    let h = kvh * g + j;
+                    attn_out.row_mut(0)[h * mi.d_head..(h + 1) * mi.d_head]
+                        .copy_from_slice(o.row(j));
+                }
+            }
+            x = EnginePieces::attn_post(&self.rt, b, &x, &attn_out, lw)?;
+        }
+        Ok(x.rows_slice(0, 1))
+    }
+
+    /// lm_head + sampler over hidden rows; one token per row.
+    fn sample_rows(&mut self, x: &Mat) -> Result<Vec<u32>> {
+        let logits = self.piecewise_lm_head(x)?;
+        Ok((0..x.rows)
+            .map(|r| self.cfg.sampler.sample(logits.row(r), &mut self.rng))
+            .collect())
+    }
+
+    // -----------------------------------------------------------------
+    // Decode.
+    // -----------------------------------------------------------------
+
+    /// One batched decode step over `rids`: consume each request's last
+    /// generated token (append its KV), produce the next one.
+    fn decode_step(&mut self, rids: &[u64]) -> Result<()> {
+        let mi = self.rt.manifest().model.clone();
+        let bs = rids.len();
+        let mut tokens = Vec::with_capacity(bs);
+        let mut positions = Vec::with_capacity(bs);
+        let mut nodes = Vec::with_capacity(bs);
+        for &rid in rids {
+            let a = self.batcher.get_mut(rid).unwrap();
+            let tok = a.last_token();
+            let pos = a.next_pos() - 1; // position of `tok`
+            tokens.push(tok);
+            positions.push(pos);
+            // Topology append: tok joins the request's private node.
+            let (node, _off) = self.forest.append_token(rid, tok);
+            nodes.push(node);
+        }
+        // New private nodes may have appeared → divisions cache only
+        // covers old nodes; plan_attention handles defaults.
+
+        // Plan once per step, reused across layers (§6 amortization).
+        let t_plan = Instant::now();
+        let plan = self.plan_attention(&mi)?;
+        self.metrics.plan_times.push(t_plan.elapsed());
+
+        let mut x = self.piecewise_embed(&tokens)?;
+        for layer in 0..mi.n_layers {
+            let (qs, ks, vs) = self.piecewise_attn_pre(layer, &x, &positions)?;
+            // Append the new tokens' KV, then attention sees them (the
+            // token attends to itself).
+            for (ri, &node) in nodes.iter().enumerate() {
+                self.store.append(layer, node, &ks[ri].data, &vs[ri].data);
+            }
+            let batch = QueryBatch {
+                rids: rids.to_vec(),
+                q: qs,
+                n_q_heads: mi.n_q_heads,
+                n_kv_heads: mi.n_kv_heads,
+                d_head: mi.d_head,
+            };
+            let t_attn = Instant::now();
+            let outs: Vec<Mat> = match self.cfg.backend {
+                AttentionBackend::CodecNative => run_codec_attention(
+                    &self.forest,
+                    &self.store,
+                    layer,
+                    &batch,
+                    &plan,
+                    self.cfg.workers,
+                ),
+                AttentionBackend::CodecPjrt => run_codec_attention_pjrt(
+                    &self.rt,
+                    &self.forest,
+                    &self.store,
+                    layer,
+                    &batch,
+                    &plan,
+                )?,
+                AttentionBackend::FlashNative => run_flash_decoding(
+                    &self.forest,
+                    &self.store,
+                    layer,
+                    &batch,
+                    self.cfg.num_blocks,
+                    self.cfg.workers,
+                ),
+            };
+            self.metrics.attn_times.push(t_attn.elapsed());
+            let mut attn_out = Mat::zeros(bs, mi.n_q_heads * mi.d_head);
+            for (ri, o) in outs.iter().enumerate() {
+                for h in 0..mi.n_q_heads {
+                    attn_out.row_mut(ri)[h * mi.d_head..(h + 1) * mi.d_head]
+                        .copy_from_slice(o.row(h));
+                }
+            }
+            x = self.piecewise_attn_post(layer, &x, &attn_out)?;
+        }
+        let sampled = self.sample_rows(&x)?;
+        for (ri, &rid) in rids.iter().enumerate() {
+            self.batcher.get_mut(rid).unwrap().generated.push(sampled[ri]);
+            self.metrics.on_token(rid);
+        }
+        self.step_count += 1;
+        Ok(())
+    }
+
+    /// Build (or refresh from cache) the CoDec division plan. The plan
+    /// for one decode step is shared by all layers: the forest topology
+    /// and node lengths are layer-invariant.
+    fn plan_attention(&mut self, mi: &crate::runtime::manifest::ModelInfo) -> Result<Plan> {
+        let g = mi.n_q_heads / mi.n_kv_heads;
+        let tasks = tasks_from_forest(&self.forest, mi.n_kv_heads, g);
+        let full_replan = self.cached_divisions.is_empty()
+            || self.step_count % self.cfg.replan_interval == 0;
+        if full_replan {
+            let cfg = DividerConfig {
+                num_blocks: self.cfg.num_blocks,
+                ..Default::default()
+            };
+            let plan = divide_and_schedule(tasks, &self.est, &cfg);
+            self.cached_divisions = plan
+                .tasks
+                .iter()
+                .zip(&plan.divisions)
+                .map(|(t, &b)| ((t.node, t.kv_head), b))
+                .collect();
+            self.metrics.plans_computed += 1;
+            Ok(plan)
+        } else {
+            // Reuse cached divisions (new nodes default to 1): cheap
+            // re-materialization + LPT only (the §6 amortization).
+            let divisions: Vec<usize> = tasks
+                .iter()
+                .map(|t| {
+                    *self
+                        .cached_divisions
+                        .get(&(t.node, t.kv_head))
+                        .unwrap_or(&1)
+                })
+                .collect();
+            let subtasks = materialize_subtasks(&tasks, &divisions, &self.est);
+            let mut actual = vec![0usize; tasks.len()];
+            for s in &subtasks {
+                actual[s.task] += 1;
+            }
+            let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
+            let (assignment, makespan_ms) = lpt_schedule(&costs, self.cfg.num_blocks);
+            self.metrics.plans_reused += 1;
+            Ok(Plan {
+                tasks,
+                divisions: actual,
+                subtasks,
+                assignment,
+                makespan_ms,
+                lower_bound_ms: 0.0,
+            })
+        }
+    }
+
+    // Bucketed sub-batch helpers for the transformer pieces.
+
+    fn piecewise_embed(&self, tokens: &[u32]) -> Result<Mat> {
+        let mi = &self.rt.manifest().model;
+        let dm = mi.n_q_heads * mi.d_head;
+        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let mut x = Mat::zeros(0, dm);
+        for chunk in tokens.chunks(max_b) {
+            let b = self.rt.manifest().batch_bucket(chunk.len()).unwrap();
+            let mut toks: Vec<i32> = chunk.iter().map(|&t| t as i32).collect();
+            toks.resize(b, 0);
+            let xb = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+            x.push_rows(&xb.rows_slice(0, chunk.len()));
+        }
+        Ok(x)
+    }
+
+    fn piecewise_attn_pre(
+        &self,
+        layer: usize,
+        x: &Mat,
+        positions: &[usize],
+    ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
+        let lw = &self.weights.layers[layer];
+        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let (mut qs, mut ks, mut vs) = (Vec::new(), Vec::new(), Vec::new());
+        let mut lo = 0;
+        while lo < x.rows {
+            let hi = (lo + max_b).min(x.rows);
+            let chunk = hi - lo;
+            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let mut xb = x.rows_slice(lo, hi);
+            while xb.rows < b {
+                xb.push_row(&vec![0.0; xb.cols]);
+            }
+            let mut pos: Vec<i32> = positions[lo..hi].iter().map(|&p| p as i32).collect();
+            pos.resize(b, 0);
+            let (q, k, v) = EnginePieces::attn_pre(&self.rt, b, &xb, lw, &pos)?;
+            qs.extend(q.into_iter().take(chunk));
+            ks.extend(k.into_iter().take(chunk));
+            vs.extend(v.into_iter().take(chunk));
+            lo = hi;
+        }
+        Ok((qs, ks, vs))
+    }
+
+    fn piecewise_attn_post(&self, layer: usize, x: &Mat, attn_out: &Mat) -> Result<Mat> {
+        let lw = &self.weights.layers[layer];
+        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let mut out = Mat::zeros(0, x.cols);
+        let mut lo = 0;
+        while lo < x.rows {
+            let hi = (lo + max_b).min(x.rows);
+            let chunk = hi - lo;
+            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let mut xb = x.rows_slice(lo, hi);
+            let mut ab = attn_out.rows_slice(lo, hi);
+            while xb.rows < b {
+                xb.push_row(&vec![0.0; xb.cols]);
+                ab.push_row(&vec![0.0; ab.cols]);
+            }
+            let y = EnginePieces::attn_post(&self.rt, b, &xb, &ab, lw)?;
+            out.push_rows(&y.rows_slice(0, chunk));
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    fn piecewise_lm_head(&self, x: &Mat) -> Result<Mat> {
+        let mi = &self.rt.manifest().model;
+        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let mut out = Mat::zeros(0, mi.vocab);
+        let mut lo = 0;
+        while lo < x.rows {
+            let hi = (lo + max_b).min(x.rows);
+            let chunk = hi - lo;
+            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let mut xb = x.rows_slice(lo, hi);
+            while xb.rows < b {
+                xb.push_row(&vec![0.0; xb.cols]);
+            }
+            let y = EnginePieces::lm_head(&self.rt, b, &xb, &self.weights.ln_f, &self.weights.emb)?;
+            out.push_rows(&y.rows_slice(0, chunk));
+            lo = hi;
+        }
+        Ok(out)
+    }
+}

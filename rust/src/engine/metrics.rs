@@ -1,0 +1,157 @@
+//! Serving metrics: TPOT, TTFT, throughput, plan-cache stats.
+
+use crate::util::stats::{summarize, Summary};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Per-request timing record.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+    pub tokens: usize,
+}
+
+impl RequestMetrics {
+    /// Time per output token over the decode phase (excludes prefill).
+    pub fn tpot(&self) -> Option<Duration> {
+        let (f, t) = (self.first_token?, self.finished?);
+        if self.tokens > 1 {
+            Some((t - f) / (self.tokens as u32 - 1))
+        } else {
+            None
+        }
+    }
+
+    pub fn ttft(&self) -> Option<Duration> {
+        Some(self.first_token? - self.submitted)
+    }
+}
+
+/// Engine-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: BTreeMap<u64, RequestMetrics>,
+    /// Wall time of each decode step (all layers).
+    pub step_times: Vec<Duration>,
+    /// Wall time of attention only, per step (summed over layers).
+    pub attn_times: Vec<Duration>,
+    /// Wall time spent computing division plans.
+    pub plan_times: Vec<Duration>,
+    pub plans_computed: usize,
+    pub plans_reused: usize,
+    pub tokens_generated: usize,
+    pub prefill_tokens: usize,
+    pub prefill_tokens_shared: usize,
+}
+
+impl Metrics {
+    pub fn on_submit(&mut self, rid: u64) {
+        self.requests.insert(
+            rid,
+            RequestMetrics {
+                submitted: Instant::now(),
+                first_token: None,
+                finished: None,
+                tokens: 0,
+            },
+        );
+    }
+
+    pub fn on_token(&mut self, rid: u64) {
+        self.tokens_generated += 1;
+        if let Some(r) = self.requests.get_mut(&rid) {
+            r.tokens += 1;
+            if r.first_token.is_none() {
+                r.first_token = Some(Instant::now());
+            }
+        }
+    }
+
+    pub fn on_finish(&mut self, rid: u64) {
+        if let Some(r) = self.requests.get_mut(&rid) {
+            r.finished = Some(Instant::now());
+        }
+    }
+
+    /// Mean TPOT across finished requests (ms).
+    pub fn mean_tpot_ms(&self) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .requests
+            .values()
+            .filter_map(|r| r.tpot())
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    /// Decode-step wall-time summary (ms).
+    pub fn step_summary_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .step_times
+            .iter()
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        (!xs.is_empty()).then(|| summarize(&xs))
+    }
+
+    /// Fraction of prefill tokens that were served from the shared cache.
+    pub fn prefill_share_rate(&self) -> f64 {
+        let total = self.prefill_tokens + self.prefill_tokens_shared;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefill_tokens_shared as f64 / total as f64
+        }
+    }
+
+    /// Tokens per second over the whole decode phase.
+    pub fn decode_throughput(&self) -> f64 {
+        let total: f64 = self.step_times.iter().map(|d| d.as_secs_f64()).sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_counts_decode_interval() {
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        std::thread::sleep(Duration::from_millis(6));
+        m.on_token(1);
+        m.on_token(1);
+        m.on_finish(1);
+        let r = &m.requests[&1];
+        assert_eq!(r.tokens, 3);
+        let tpot = r.tpot().unwrap();
+        assert!(tpot >= Duration::from_millis(2), "{tpot:?}");
+        assert!(m.mean_tpot_ms().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_token_request_has_no_tpot() {
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        m.on_finish(1);
+        assert!(m.requests[&1].tpot().is_none());
+        assert!(m.mean_tpot_ms().is_none());
+    }
+
+    #[test]
+    fn share_rate() {
+        let mut m = Metrics::default();
+        m.prefill_tokens = 10;
+        m.prefill_tokens_shared = 90;
+        assert!((m.prefill_share_rate() - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! The serving engine: CoDec integrated as a first-class attention
+//! backend behind a vLLM-shaped coordinator.
+//!
+//! The engine owns the request lifecycle (admission → prefix-shared
+//! prefill → continuous-batching decode → completion), the KV forest and
+//! paged store, the division-plan cache (§6: plans are reused across
+//! decode steps and refreshed periodically), and metrics (TPOT, TTFT,
+//! throughput). The transformer pieces run through the AOT PJRT
+//! executables; the attention core is pluggable:
+//!
+//! * `CodecNative` — CoDec plan + native PAC/POR (default),
+//! * `CodecPjrt` — CoDec plan + the AOT Pallas PAC/POR kernels,
+//! * `FlashNative` — per-request FlashDecoding (the vLLM-like baseline
+//!   for the Fig. 7 TPOT comparison).
+
+pub mod batch;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{AttentionBackend, Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, RequestState};
+pub use server::{Server, SubmitHandle};

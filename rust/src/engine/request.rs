@@ -1,0 +1,53 @@
+//! Request types and lifecycle states.
+
+pub type RequestId = u64;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Stop early on this token id (e.g. an EOS id), if any.
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens >= 1);
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+        }
+    }
+}
+
+/// Lifecycle state, reported by the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding { generated: usize },
+    Finished { tokens: Vec<u32> },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_constructor_validates() {
+        let r = Request::new(1, vec![1, 2, 3], 8);
+        assert_eq!(r.id, 1);
+        assert_eq!(r.max_new_tokens, 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_prompt_panics() {
+        Request::new(1, vec![], 8);
+    }
+}

@@ -1,0 +1,154 @@
+//! Thread-based serving front-end: a request queue feeding the engine
+//! loop on a worker thread, with per-request completion channels.
+//! (tokio is unavailable offline; the event loop is a dedicated thread +
+//! mpsc channels, which for a CPU-bound engine is the honest design.)
+//!
+//! PJRT handles are not `Send`, so the engine is *created on* the worker
+//! thread and never leaves it; `shutdown()` returns a plain [`Metrics`]
+//! snapshot sent back over a channel.
+
+use super::engine::{Engine, EngineConfig};
+use super::metrics::Metrics;
+use super::request::Request;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+enum Msg {
+    Submit(Request, Sender<Vec<u32>>),
+    Shutdown,
+}
+
+/// Handle for one submitted request; resolves to the generated tokens.
+pub struct SubmitHandle {
+    pub id: u64,
+    rx: Receiver<Vec<u32>>,
+}
+
+impl SubmitHandle {
+    /// Block until the request completes.
+    pub fn wait(self) -> Result<Vec<u32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request {}", self.id))
+    }
+}
+
+/// A running engine server.
+pub struct Server {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+impl Server {
+    /// Start the engine loop on a background thread. Blocks until the
+    /// engine (PJRT client + weights) is ready or failed.
+    pub fn start(artifacts_dir: &str, cfg: EngineConfig) -> Result<Server> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let dir = artifacts_dir.to_string();
+        let worker = std::thread::spawn(move || -> Metrics {
+            let mut engine = match Engine::new(&dir, cfg) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return Metrics::default();
+                }
+            };
+            let mut waiters: std::collections::HashMap<u64, Sender<Vec<u32>>> =
+                Default::default();
+            let mut open = true;
+            loop {
+                // Drain the queue: block only when idle.
+                loop {
+                    let msg = if engine.has_work() {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                None
+                            }
+                        }
+                    } else if open {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => {
+                                open = false;
+                                None
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    match msg {
+                        Some(Msg::Submit(req, done_tx)) => {
+                            waiters.insert(req.id, done_tx);
+                            engine.submit(req);
+                        }
+                        Some(Msg::Shutdown) => open = false,
+                        None => break,
+                    }
+                }
+                if !engine.has_work() {
+                    if !open {
+                        return std::mem::take(&mut engine.metrics);
+                    }
+                    continue;
+                }
+                match engine.step() {
+                    Ok(finished) => {
+                        for (rid, tokens) in finished {
+                            if let Some(tx) = waiters.remove(&rid) {
+                                let _ = tx.send(tokens);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        log::error!("engine step failed: {e:#}");
+                        return std::mem::take(&mut engine.metrics);
+                    }
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server {
+                tx,
+                next_id: AtomicU64::new(1),
+                worker: Some(worker),
+            }),
+            Ok(Err(msg)) => {
+                let _ = worker.join();
+                anyhow::bail!("engine init failed: {msg}")
+            }
+            Err(_) => anyhow::bail!("engine thread died during init"),
+        }
+    }
+
+    /// Submit a prompt; returns a handle resolving to generated tokens.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize) -> SubmitHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (done_tx, done_rx) = channel();
+        let req = Request::new(id, prompt, max_new_tokens);
+        self.tx
+            .send(Msg::Submit(req, done_tx))
+            .expect("engine thread gone");
+        SubmitHandle { id, rx: done_rx }
+    }
+
+    /// Stop accepting requests, finish in-flight work, return the final
+    /// metrics snapshot.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .expect("shutdown twice")
+            .join()
+            .expect("engine thread panicked")
+    }
+}

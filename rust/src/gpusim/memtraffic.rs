@@ -1,0 +1,98 @@
+//! Analytic HBM traffic model (Fig. 6, §4.3 complexity analysis).
+//!
+//! The paper's IO complexity:
+//!   CoDec:          O(h·d · Σᵢ n[i])              — each node read once
+//!   FlashDecoding:  O(h·d · Σᵢ n[i] · n_q[i])     — once per sharing query
+//! so CoDec's reduction factor is the weighted mean sharing degree n̄_q.
+//! These helpers compute the exact byte counts (f16 KV, Q/O included,
+//! POR merge operands included) for whole-forest decode steps, matching
+//! what `sim::traffic_bytes` derives from concrete plans.
+
+use crate::kvforest::Forest;
+
+pub const F16: f64 = 2.0;
+
+/// CoDec's per-step attention traffic over the forest (bytes): every live
+/// node's K+V read once per kv-head; per node, its stacked queries and
+/// partial output move once.
+pub fn codec_ideal_bytes(forest: &Forest, n_kv_heads: usize, group: usize, d: usize) -> u64 {
+    let mut bytes = 0f64;
+    for (_, node) in forest.alive_nodes() {
+        if node.degree() == 0 || node.len == 0 {
+            continue;
+        }
+        let nq = node.degree() * group;
+        bytes += n_kv_heads as f64 * (2.0 * (node.len * d) as f64 + 2.0 * (nq * d) as f64) * F16;
+    }
+    bytes as u64
+}
+
+/// FlashDecoding's per-step traffic (bytes): every request reads its whole
+/// logical context per kv-head.
+pub fn flash_ideal_bytes(forest: &Forest, n_kv_heads: usize, group: usize, d: usize) -> u64 {
+    let mut bytes = 0f64;
+    for rid in forest.requests().collect::<Vec<_>>() {
+        let ctx: usize = forest
+            .path(rid)
+            .unwrap()
+            .iter()
+            .map(|&n| forest.node(n).len)
+            .sum();
+        bytes += n_kv_heads as f64 * (2.0 * (ctx * d) as f64 + 2.0 * (group * d) as f64) * F16;
+    }
+    bytes as u64
+}
+
+/// The predicted Fig. 6 reduction factor.
+pub fn predicted_reduction(forest: &Forest) -> f64 {
+    forest.mean_sharing_degree()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvforest::VIRTUAL_ROOT;
+
+    #[test]
+    fn reduction_equals_mean_sharing_degree_when_kv_dominates() {
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, 100_000);
+        for r in 0..100u64 {
+            let leaf = f.add_synthetic(root, 100);
+            f.assign_synthetic_request(r, leaf);
+        }
+        let codec = codec_ideal_bytes(&f, 1, 1, 128) as f64;
+        let flash = flash_ideal_bytes(&f, 1, 1, 128) as f64;
+        let ratio = flash / codec;
+        let nbar = predicted_reduction(&f);
+        assert!((ratio / nbar - 1.0).abs() < 0.1, "ratio {ratio:.1} nbar {nbar:.1}");
+        // Paper's range: 14.7–409.8× across workloads; this workload has
+        // ~91 mean sharing and must land inside that range.
+        assert!(ratio > 14.0 && ratio < 410.0, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn no_sharing_means_no_reduction() {
+        let mut f = Forest::new();
+        for r in 0..4u64 {
+            let leaf = f.add_synthetic(VIRTUAL_ROOT, 1000);
+            f.assign_synthetic_request(r, leaf);
+        }
+        let codec = codec_ideal_bytes(&f, 2, 2, 64) as f64;
+        let flash = flash_ideal_bytes(&f, 2, 2, 64) as f64;
+        assert!((flash / codec - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn heads_scale_linearly() {
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, 5000);
+        for r in 0..4u64 {
+            let leaf = f.add_synthetic(root, 50);
+            f.assign_synthetic_request(r, leaf);
+        }
+        let b1 = codec_ideal_bytes(&f, 1, 4, 128);
+        let b8 = codec_ideal_bytes(&f, 8, 4, 128);
+        assert_eq!(b8, b1 * 8);
+    }
+}

@@ -1,0 +1,23 @@
+//! Block-level GPU execution simulator + HBM traffic accounting.
+//!
+//! **Substitution note (DESIGN.md §3).** The paper times CUDA kernels on
+//! real GPUs; this environment has none. All of CoDec's reported wins are
+//! *schedule-level* (workload balance, division granularity, reduction
+//! parallelism) and *traffic-level* (shared KV reads) effects, so we
+//! replay each system's exact plan on a block-level timing model driven
+//! by the same profiled cost grid the paper's own divider trusts
+//! (Table 2), scaled across GPUs by roofline ratios. Numerics are
+//! validated separately (PJRT + native oracles); this module prices time
+//! and bytes.
+//!
+//! * [`sim`] — makespan of a plan over `m` blocks + reduction rounds,
+//!   with the ablation switches of Fig. 9.
+//! * [`memtraffic`] — exact byte accounting of PAC reads/writes and POR
+//!   merges for CoDec / FlashDecoding / cascade (Fig. 6).
+
+pub mod memtraffic;
+pub mod sim;
+
+pub use sim::{
+    sim_cascade, sim_codec, sim_codec_ablated, sim_flash, AblationConfig, SimResult,
+};

@@ -1,0 +1,438 @@
+//! Plan → time: block makespan + reduction rounds (§4.3, §5).
+
+use crate::attention::cascade::cascade_plan;
+use crate::attention::flash_decoding::flash_splits;
+use crate::cost::{Estimator, GpuSpec};
+use crate::kvforest::Forest;
+use crate::reduction::{plan_fold, plan_reduction, plan_sequential, ReductionPlan};
+use crate::sched::plan::{materialize_subtasks, Task};
+use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
+use std::collections::BTreeMap;
+
+/// Simulated timing of one decode-step attention op.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub attn_ms: f64,
+    pub reduction_ms: f64,
+    pub num_subtasks: usize,
+    pub reduction_rounds: usize,
+    pub reduction_ops: usize,
+    pub utilization: f64,
+    /// Bytes of global-memory traffic (PAC + reduction).
+    pub traffic_bytes: u64,
+}
+
+impl SimResult {
+    pub fn total_ms(&self) -> f64 {
+        self.attn_ms + self.reduction_ms
+    }
+}
+
+/// Fig. 9 ablation switches.
+#[derive(Debug, Clone, Copy)]
+pub struct AblationConfig {
+    /// Combine shared-KV access via the prefix tree (off ⇒ per-request
+    /// duplicated tasks, as FlashDecoding sees them).
+    pub prefix_tree: bool,
+    /// Workload partitioning + block-level scheduling (off ⇒ tasks are
+    /// undivided and launched one after another — no inter-block
+    /// balancing at all, the paper's "without optimization" execution).
+    pub partition: bool,
+    /// Parallel tree reduction (off ⇒ one launch per merge).
+    pub parallel_reduction: bool,
+}
+
+impl AblationConfig {
+    pub fn all_on() -> Self {
+        AblationConfig {
+            prefix_tree: true,
+            partition: true,
+            parallel_reduction: true,
+        }
+    }
+    pub fn all_off() -> Self {
+        AblationConfig {
+            prefix_tree: false,
+            partition: false,
+            parallel_reduction: false,
+        }
+    }
+}
+
+/// Cost (ms) of one POR merge of a (g × d) partial: launch + 3 tensors
+/// moved (read two partials, write one) at HBM bandwidth. POR itself runs
+/// in shared memory (§4.2) — only the operand movement is global.
+fn por_op_ms(gpu: &GpuSpec, g: usize, d: usize) -> f64 {
+    let bytes = 3.0 * (g * d) as f64 * 2.0 /* f16 */ + 3.0 * g as f64 * 4.0 * 2.0 /* m,s f32 */;
+    gpu.launch_ms() * 0.5 /* merged launches amortize */ + bytes / (gpu.mem_bw_gbs * 1e9) * 1e3
+}
+
+/// Time a reduction plan: each round's ops run `sm_count`-wide in waves;
+/// rounds are serialized (a round-level barrier, §4.3). The sequential
+/// plan degenerates to one launch per merge — the cascade overhead.
+pub fn reduction_ms(rp: &ReductionPlan, gpu: &GpuSpec, g: usize, d: usize) -> f64 {
+    let op = por_op_ms(gpu, g, d);
+    rp.rounds
+        .iter()
+        .map(|round| {
+            let waves = round.len().div_ceil(gpu.sm_count).max(1);
+            waves as f64 * op + gpu.launch_ms() // one launch per round
+        })
+        .sum()
+}
+
+/// Series lengths per (request, kv-head) given a plan's divisions.
+pub fn series_lens(forest: &Forest, plan: &Plan, n_kv_heads: usize) -> Vec<usize> {
+    let mut node_div: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        node_div.insert((t.node, t.kv_head), plan.divisions[ti]);
+    }
+    let mut lens = Vec::new();
+    for rid in forest.requests().collect::<Vec<_>>() {
+        let path = forest.path(rid).unwrap();
+        for kvh in 0..n_kv_heads {
+            let len: usize = path
+                .iter()
+                .filter_map(|&nid| node_div.get(&(nid, kvh)).copied())
+                .sum();
+            lens.push(len);
+        }
+    }
+    lens
+}
+
+/// PAC+POR traffic in bytes (f16 tensors): per subtask, K+V rows once plus
+/// Q read and partial-O write; per merge, 3 partial tensors.
+pub fn traffic_bytes(plan: &Plan, n_merge_ops: usize, g: usize, d: usize) -> u64 {
+    let mut bytes = 0f64;
+    for s in &plan.subtasks {
+        bytes += 2.0 * (s.len() * d) as f64 * 2.0; // K + V
+        bytes += 2.0 * (s.nq * d) as f64 * 2.0; // Q read + O write
+    }
+    bytes += n_merge_ops as f64 * (3.0 * (g * d) as f64 * 2.0 + 3.0 * g as f64 * 8.0);
+    bytes as u64
+}
+
+fn result_from(
+    plan: &Plan,
+    rp: &ReductionPlan,
+    gpu: &GpuSpec,
+    g: usize,
+    d: usize,
+) -> SimResult {
+    SimResult {
+        attn_ms: plan.makespan_ms,
+        reduction_ms: reduction_ms(rp, gpu, g, d),
+        num_subtasks: plan.num_subtasks(),
+        reduction_rounds: rp.num_rounds(),
+        reduction_ops: rp.total_ops(),
+        utilization: plan.utilization(),
+        traffic_bytes: traffic_bytes(plan, rp.total_ops(), g, d),
+    }
+}
+
+/// Simulate CoDec on the forest (divider + LPT + parallel reduction).
+pub fn sim_codec(
+    forest: &Forest,
+    n_kv_heads: usize,
+    group: usize,
+    est: &Estimator,
+    gpu: &GpuSpec,
+) -> SimResult {
+    sim_codec_ablated(forest, n_kv_heads, group, est, gpu, AblationConfig::all_on())
+}
+
+/// Simulate CoDec with the Fig. 9 ablation switches.
+pub fn sim_codec_ablated(
+    forest: &Forest,
+    n_kv_heads: usize,
+    group: usize,
+    est: &Estimator,
+    gpu: &GpuSpec,
+    ab: AblationConfig,
+) -> SimResult {
+    let d = est.profile().d;
+    let tasks = if ab.prefix_tree {
+        tasks_from_forest(forest, n_kv_heads, group)
+    } else {
+        per_request_tasks(forest, n_kv_heads, group)
+    };
+    let plan = if ab.partition {
+        let cfg = DividerConfig {
+            num_blocks: gpu.sm_count,
+            ..Default::default()
+        };
+        divide_and_schedule(tasks, est, &cfg)
+    } else {
+        sequential_plan(tasks, est)
+    };
+    let lens = series_lens(forest, &plan, n_kv_heads);
+    let rp = if ab.parallel_reduction {
+        plan_reduction(&lens)
+    } else {
+        plan_sequential(&lens)
+    };
+    result_from(&plan, &rp, gpu, group, d)
+}
+
+/// Simulate the FlashDecoding baseline: per-request duplicated KV tasks,
+/// fixed split heuristic, per-request merge (parallel across requests —
+/// FlashDecoding's own reduction is efficient, its traffic is the issue).
+pub fn sim_flash(
+    forest: &Forest,
+    n_kv_heads: usize,
+    group: usize,
+    est: &Estimator,
+    gpu: &GpuSpec,
+) -> SimResult {
+    let d = est.profile().d;
+    let bs = forest.num_requests();
+    let tasks = per_request_tasks(forest, n_kv_heads, group);
+    // Flash split heuristic per task.
+    let divisions: Vec<usize> = tasks
+        .iter()
+        .map(|t| flash_splits(t.n, bs, n_kv_heads, gpu.sm_count))
+        .collect();
+    let subtasks = materialize_subtasks(&tasks, &divisions, est);
+    let mut actual = vec![0usize; tasks.len()];
+    for s in &subtasks {
+        actual[s.task] += 1;
+    }
+    let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
+    let (assignment, makespan_ms) = lpt_schedule(&costs, gpu.sm_count);
+    let plan = Plan {
+        tasks,
+        divisions: actual,
+        subtasks,
+        assignment,
+        makespan_ms,
+        lower_bound_ms: 0.0,
+    };
+    // One series per (request, kv-head): its split count.
+    let lens: Vec<usize> = plan.divisions
+        .iter()
+        .copied()
+        .collect();
+    let rp = plan_reduction(&lens);
+    result_from(&plan, &rp, gpu, group, d)
+}
+
+/// Simulate the FlashInfer-style cascade baseline: shared-prefix tasks
+/// (same traffic as CoDec) but per-node blind division and one launch per
+/// merge.
+pub fn sim_cascade(
+    forest: &Forest,
+    n_kv_heads: usize,
+    group: usize,
+    est: &Estimator,
+    gpu: &GpuSpec,
+) -> SimResult {
+    let d = est.profile().d;
+    let tasks = tasks_from_forest(forest, n_kv_heads, group);
+    let plan = cascade_plan(tasks, est, gpu.sm_count);
+    let lens = series_lens(forest, &plan, n_kv_heads);
+    // Cascade batches merges per tree level but needs one launch per
+    // level (linear in path length) — versus CoDec's log-depth rounds.
+    let rp = plan_fold(&lens);
+    result_from(&plan, &rp, gpu, group, d)
+}
+
+/// Per-request tasks (no sharing): one task per (request, kv-head) whose
+/// n is the request's whole context length. The node id is the leaf.
+fn per_request_tasks(forest: &Forest, n_kv_heads: usize, group: usize) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for rid in forest.requests().collect::<Vec<_>>() {
+        let path = forest.path(rid).unwrap();
+        let n: usize = path.iter().map(|&nid| forest.node(nid).len).sum();
+        let leaf = *path.last().unwrap();
+        if n == 0 {
+            continue;
+        }
+        for h in 0..n_kv_heads {
+            tasks.push(Task {
+                node: leaf,
+                kv_head: h,
+                nq: group,
+                n,
+            });
+        }
+    }
+    tasks
+}
+
+/// Undivided tasks executed back-to-back (the "no partitioning"
+/// ablation): makespan is the *sum* of task costs — no division, no
+/// inter-block balancing.
+fn sequential_plan(tasks: Vec<Task>, est: &Estimator) -> Plan {
+    let divisions = vec![1usize; tasks.len()];
+    let subtasks = materialize_subtasks(&tasks, &divisions, est);
+    let makespan_ms: f64 = subtasks.iter().map(|s| s.cost_ms).sum();
+    let assignment = vec![(0..subtasks.len()).collect::<Vec<_>>()];
+    Plan {
+        tasks,
+        divisions,
+        subtasks,
+        assignment,
+        makespan_ms,
+        lower_bound_ms: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::gpu_specs::{A100, A6000, H800};
+    use crate::kvforest::VIRTUAL_ROOT;
+
+    fn two_level(bs: usize, shared: usize, private: usize) -> Forest {
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, shared);
+        for r in 0..bs {
+            let leaf = f.add_synthetic(root, private);
+            f.assign_synthetic_request(r as u64, leaf);
+        }
+        f
+    }
+
+    #[test]
+    fn codec_beats_flash_on_shared_heavy_workload() {
+        // 32 requests sharing a 120k-token prefix (the paper's default
+        // batch-size workload): CoDec reads the prefix once, Flash 32×.
+        let f = two_level(32, 120_000, 512);
+        let est = Estimator::table2();
+        let codec = sim_codec(&f, 8, 4, &est, &A100);
+        let flash = sim_flash(&f, 8, 4, &est, &A100);
+        let speedup = flash.total_ms() / codec.total_ms();
+        assert!(speedup > 1.5, "speedup = {speedup:.2}");
+        let traffic_ratio = flash.traffic_bytes as f64 / codec.traffic_bytes as f64;
+        assert!(traffic_ratio > 10.0, "traffic ratio = {traffic_ratio:.1}");
+    }
+
+    #[test]
+    fn no_sharing_no_major_regression() {
+        // Fully distinct prefixes: CoDec ≈ FlashDecoding (virtual root
+        // batching makes them the same computation).
+        let mut f = Forest::new();
+        for r in 0..8u64 {
+            let leaf = f.add_synthetic(VIRTUAL_ROOT, 8192);
+            f.assign_synthetic_request(r, leaf);
+        }
+        let est = Estimator::table2();
+        let codec = sim_codec(&f, 8, 4, &est, &A100);
+        let flash = sim_flash(&f, 8, 4, &est, &A100);
+        let ratio = codec.total_ms() / flash.total_ms();
+        assert!(ratio < 1.3, "codec regressed {ratio:.2}x on non-shared");
+    }
+
+    #[test]
+    fn ablation_ordering_matches_paper() {
+        // Fig. 9 column ordering: none > tree-only > partition-only > all.
+        let f = two_level(64, 200_000, 1024);
+        let est = Estimator::table2();
+        let none = sim_codec_ablated(&f, 8, 4, &est, &A100, AblationConfig::all_off());
+        let tree_only = sim_codec_ablated(
+            &f,
+            8,
+            4,
+            &est,
+            &A100,
+            AblationConfig {
+                prefix_tree: true,
+                partition: false,
+                parallel_reduction: false,
+            },
+        );
+        let part_only = sim_codec_ablated(
+            &f,
+            8,
+            4,
+            &est,
+            &A100,
+            AblationConfig {
+                prefix_tree: false,
+                partition: true,
+                parallel_reduction: false,
+            },
+        );
+        let all = sim_codec_ablated(&f, 8, 4, &est, &A100, AblationConfig::all_on());
+        assert!(
+            tree_only.total_ms() < none.total_ms(),
+            "tree {} vs none {}",
+            tree_only.total_ms(),
+            none.total_ms()
+        );
+        assert!(
+            part_only.total_ms() < none.total_ms(),
+            "part {} vs none {}",
+            part_only.total_ms(),
+            none.total_ms()
+        );
+        assert!(all.total_ms() < tree_only.total_ms());
+        assert!(all.total_ms() <= part_only.total_ms() * 1.01);
+        let speedup = none.total_ms() / all.total_ms();
+        assert!(speedup > 5.0, "full ablation speedup = {speedup:.1}");
+    }
+
+    #[test]
+    fn cascade_slower_than_codec_on_deep_trees() {
+        // Deep tree ⇒ many nodes ⇒ cascade's per-merge launches hurt.
+        let mut f = Forest::new();
+        let mut frontier = vec![VIRTUAL_ROOT];
+        for _depth in 0..5 {
+            let mut next = Vec::new();
+            for &p in &frontier {
+                for _ in 0..2 {
+                    next.push(f.add_synthetic(p, 4096));
+                }
+            }
+            frontier = next;
+        }
+        for (r, &leaf) in frontier.iter().enumerate() {
+            f.assign_synthetic_request(r as u64, leaf);
+        }
+        let est = Estimator::table2();
+        let codec = sim_codec(&f, 8, 4, &est, &A100);
+        let casc = sim_cascade(&f, 8, 4, &est, &A100);
+        assert!(
+            casc.total_ms() > codec.total_ms(),
+            "cascade {} <= codec {}",
+            casc.total_ms(),
+            codec.total_ms()
+        );
+        // Cascade's level-fold is linear in path length; CoDec's tree is
+        // logarithmic.
+        assert!(casc.reduction_rounds > codec.reduction_rounds);
+    }
+
+    #[test]
+    fn lower_bandwidth_gpu_hurts_flash_more() {
+        // §7.6: the gap widens on low-bandwidth GPUs.
+        let f = two_level(16, 50_000, 512);
+        let est = Estimator::table2();
+        let gap = |gpu: &GpuSpec| {
+            let e = est.clone().for_gpu(gpu.clone());
+            sim_flash(&f, 8, 4, &e, gpu).total_ms() / sim_codec(&f, 8, 4, &e, gpu).total_ms()
+        };
+        let g_h800 = gap(&H800);
+        let g_a6000 = gap(&A6000);
+        assert!(
+            g_a6000 > g_h800 * 0.8,
+            "h800 gap {g_h800:.2}, a6000 gap {g_a6000:.2}"
+        );
+    }
+
+    #[test]
+    fn traffic_ratio_tracks_mean_sharing_degree() {
+        // §4.3 complexity analysis: IO reduction ≈ n̄_q.
+        let f = two_level(64, 100_000, 1000);
+        let est = Estimator::table2();
+        let codec = sim_codec(&f, 1, 1, &est, &A100);
+        let flash = sim_flash(&f, 1, 1, &est, &A100);
+        let ratio = flash.traffic_bytes as f64 / codec.traffic_bytes as f64;
+        let nbar = f.mean_sharing_degree();
+        assert!(
+            (ratio / nbar) > 0.5 && (ratio / nbar) < 2.0,
+            "ratio {ratio:.1} vs n̄_q {nbar:.1}"
+        );
+    }
+}

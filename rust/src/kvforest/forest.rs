@@ -1,0 +1,542 @@
+//! Prefix-forest topology: radix-tree insert/split/prune plus the
+//! query-set / prefix-path indexes (§4.1, Fig. 4).
+
+use std::collections::BTreeMap;
+
+pub type NodeId = usize;
+pub type RequestId = u64;
+
+/// Node 0 is the virtual root (∅): it holds no tokens and exists so that
+/// requests with entirely distinct prefixes still live in one forest —
+/// this is what lets the kernel batch non-shared decoding too (§4.1).
+pub const VIRTUAL_ROOT: NodeId = 0;
+
+/// One KV-cache chunk node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub parent: NodeId,
+    pub children: Vec<NodeId>,
+    /// Token ids of this chunk. Empty for the virtual root and for
+    /// synthetic (bench) nodes, which track `len` only.
+    pub tokens: Vec<u32>,
+    /// Chunk length |n| in tokens (== tokens.len() when tokens are kept).
+    pub len: usize,
+    /// The query set I_n: ids of requests whose prefix path includes this
+    /// node, kept sorted. |I_n| is the node's sharing degree n_q.
+    pub requests: Vec<RequestId>,
+    pub alive: bool,
+}
+
+impl Node {
+    fn new(parent: NodeId) -> Node {
+        Node {
+            parent,
+            children: Vec::new(),
+            tokens: Vec::new(),
+            len: 0,
+            requests: Vec::new(),
+            alive: true,
+        }
+    }
+
+    /// Sharing degree n_q of this node.
+    pub fn degree(&self) -> usize {
+        self.requests.len()
+    }
+
+    fn add_request(&mut self, rid: RequestId) {
+        if let Err(pos) = self.requests.binary_search(&rid) {
+            self.requests.insert(pos, rid);
+        }
+    }
+
+    fn remove_request(&mut self, rid: RequestId) {
+        if let Ok(pos) = self.requests.binary_search(&rid) {
+            self.requests.remove(pos);
+        }
+    }
+}
+
+/// Structural change events the storage layer must mirror.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StorageEvent {
+    /// `node` was split at token offset `at`; rows [at, len) moved to
+    /// `tail` (which is now a child of `node`).
+    Split {
+        node: NodeId,
+        at: usize,
+        tail: NodeId,
+    },
+    /// `node` is new and owns `len` token positions that have no KV rows
+    /// yet (the engine must prefill them).
+    NeedFill { node: NodeId, len: usize },
+    /// `node` was pruned; its storage can be freed.
+    Freed { node: NodeId },
+}
+
+/// Result of inserting a request's prompt.
+#[derive(Debug, Clone)]
+pub struct InsertOutcome {
+    /// The request's prefix path π(r) (excludes the virtual root).
+    pub path: Vec<NodeId>,
+    /// Events for the storage layer, in order.
+    pub events: Vec<StorageEvent>,
+}
+
+/// The prefix forest.
+#[derive(Debug, Clone, Default)]
+pub struct Forest {
+    nodes: Vec<Node>,
+    /// J_r: request → prefix path (node ids, root-to-leaf, no virtual root).
+    paths: BTreeMap<RequestId, Vec<NodeId>>,
+}
+
+impl Forest {
+    pub fn new() -> Forest {
+        Forest {
+            nodes: vec![Node::new(VIRTUAL_ROOT)],
+            paths: BTreeMap::new(),
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// All live non-root nodes.
+    pub fn alive_nodes(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, n)| n.alive)
+    }
+
+    /// The request's prefix path J_r (root-to-leaf).
+    pub fn path(&self, rid: RequestId) -> Option<&[NodeId]> {
+        self.paths.get(&rid).map(|v| v.as_slice())
+    }
+
+    pub fn requests(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.paths.keys().copied()
+    }
+
+    pub fn num_requests(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Total tokens stored across live nodes (the *deduplicated* KV size).
+    pub fn total_tokens(&self) -> usize {
+        self.alive_nodes().map(|(_, n)| n.len).sum()
+    }
+
+    /// Total tokens as seen by per-request (non-shared) storage: the sum
+    /// over requests of their context length. The ratio of this to
+    /// `total_tokens` is the forest's deduplication factor.
+    pub fn logical_tokens(&self) -> usize {
+        self.paths
+            .values()
+            .map(|p| p.iter().map(|&n| self.nodes[n].len).sum::<usize>())
+            .sum()
+    }
+
+    /// Weighted-average sharing degree n̄_q (§4.3 complexity analysis):
+    /// Σ n[i]·n_q[i] / Σ n[i] over live nodes. This is the predicted IO
+    /// reduction of CoDec over FlashDecoding.
+    pub fn mean_sharing_degree(&self) -> f64 {
+        let (mut num, mut den) = (0f64, 0f64);
+        for (_, n) in self.alive_nodes() {
+            if n.degree() > 0 {
+                num += (n.len * n.degree()) as f64;
+                den += n.len as f64;
+            }
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    fn alloc(&mut self, parent: NodeId) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node::new(parent));
+        id
+    }
+
+    // ---------------------------------------------------------------
+    // Radix insert over token sequences (engine path).
+    // ---------------------------------------------------------------
+
+    /// Insert request `rid` with prompt `tokens`, sharing any existing
+    /// prefix. Returns the path and the storage events (splits + fills).
+    pub fn insert_request(&mut self, rid: RequestId, tokens: &[u32]) -> InsertOutcome {
+        assert!(
+            !self.paths.contains_key(&rid),
+            "request {rid} already inserted"
+        );
+        assert!(!tokens.is_empty(), "empty prompt");
+        let mut events = Vec::new();
+        let mut path = Vec::new();
+        let mut cur = VIRTUAL_ROOT;
+        let mut i = 0usize;
+
+        while i < tokens.len() {
+            // Find a child whose first token matches.
+            let next = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].alive && self.nodes[c].tokens.first() == Some(&tokens[i]));
+            match next {
+                None => {
+                    // New leaf with the remaining tokens.
+                    let leaf = self.alloc(cur);
+                    self.nodes[leaf].tokens = tokens[i..].to_vec();
+                    self.nodes[leaf].len = tokens.len() - i;
+                    self.nodes[cur].children.push(leaf);
+                    events.push(StorageEvent::NeedFill {
+                        node: leaf,
+                        len: tokens.len() - i,
+                    });
+                    self.nodes[leaf].add_request(rid);
+                    path.push(leaf);
+                    i = tokens.len();
+                }
+                Some(c) => {
+                    let common = common_prefix_len(&self.nodes[c].tokens, &tokens[i..]);
+                    debug_assert!(common > 0);
+                    if common < self.nodes[c].tokens.len() {
+                        // Split c at `common`.
+                        let tail = self.split_node(c, common);
+                        events.push(StorageEvent::Split {
+                            node: c,
+                            at: common,
+                            tail,
+                        });
+                    }
+                    // Now c's chunk is fully matched.
+                    self.nodes[c].add_request(rid);
+                    path.push(c);
+                    i += common;
+                    cur = c;
+                }
+            }
+        }
+        self.paths.insert(rid, path.clone());
+        InsertOutcome { path, events }
+    }
+
+    /// Split `node` at token offset `at` (0 < at < len): `node` keeps the
+    /// first `at` tokens, a new child `tail` takes the rest (inheriting
+    /// children and request set). Returns `tail`.
+    fn split_node(&mut self, node: NodeId, at: usize) -> NodeId {
+        let tail = self.alloc(node);
+        let n = &mut self.nodes[node];
+        assert!(at > 0 && at < n.len, "split at {} of len {}", at, n.len);
+        let tail_tokens = n.tokens.split_off(at);
+        let tail_len = n.len - at;
+        n.len = at;
+        let children = std::mem::take(&mut n.children);
+        let requests = n.requests.clone();
+        n.children = vec![tail];
+
+        let t = &mut self.nodes[tail];
+        t.tokens = tail_tokens;
+        t.len = tail_len;
+        t.children = children.clone();
+        t.requests = requests;
+        for c in children {
+            self.nodes[c].parent = tail;
+        }
+        // Fix paths of every request that passed through `node`: insert
+        // `tail` right after it.
+        for (_, p) in self.paths.iter_mut() {
+            if let Some(pos) = p.iter().position(|&x| x == node) {
+                p.insert(pos + 1, tail);
+            }
+        }
+        tail
+    }
+
+    /// Append one generated token for `rid`. If the request's leaf is
+    /// shared (degree > 1) a fresh private child is created first.
+    /// Returns (node, offset_in_node) where the KV row must be stored,
+    /// plus an optional NeedFill-free creation event.
+    pub fn append_token(&mut self, rid: RequestId, token: u32) -> (NodeId, usize) {
+        let path = self.paths.get(&rid).expect("unknown request").clone();
+        let leaf = *path.last().expect("empty path");
+        let private = self.nodes[leaf].degree() == 1 && self.nodes[leaf].children.is_empty();
+        let target = if private {
+            leaf
+        } else {
+            let nn = self.alloc(leaf);
+            self.nodes[leaf].children.push(nn);
+            self.nodes[nn].add_request(rid);
+            self.paths.get_mut(&rid).unwrap().push(nn);
+            nn
+        };
+        let n = &mut self.nodes[target];
+        n.tokens.push(token);
+        n.len += 1;
+        (target, n.len - 1)
+    }
+
+    /// Remove a finished request; prune nodes whose query set drops empty.
+    /// Returns storage events for freed nodes.
+    pub fn remove_request(&mut self, rid: RequestId) -> Vec<StorageEvent> {
+        let mut events = Vec::new();
+        let Some(path) = self.paths.remove(&rid) else {
+            return events;
+        };
+        for &nid in path.iter().rev() {
+            self.nodes[nid].remove_request(rid);
+            if self.nodes[nid].requests.is_empty() && self.nodes[nid].children.is_empty() {
+                self.nodes[nid].alive = false;
+                let parent = self.nodes[nid].parent;
+                self.nodes[parent].children.retain(|&c| c != nid);
+                events.push(StorageEvent::Freed { node: nid });
+            }
+        }
+        events
+    }
+
+    // ---------------------------------------------------------------
+    // Synthetic construction (bench path: shapes without payloads).
+    // ---------------------------------------------------------------
+
+    /// Add a synthetic node of `len` tokens under `parent` (no token ids,
+    /// no storage).
+    pub fn add_synthetic(&mut self, parent: NodeId, len: usize) -> NodeId {
+        let id = self.alloc(parent);
+        self.nodes[id].len = len;
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    /// Register a synthetic request whose prefix path ends at `leaf`,
+    /// updating every ancestor's query set.
+    pub fn assign_synthetic_request(&mut self, rid: RequestId, leaf: NodeId) {
+        assert!(
+            !self.paths.contains_key(&rid),
+            "request {rid} already inserted"
+        );
+        let mut path = Vec::new();
+        let mut cur = leaf;
+        while cur != VIRTUAL_ROOT {
+            path.push(cur);
+            self.nodes[cur].add_request(rid);
+            cur = self.nodes[cur].parent;
+        }
+        path.reverse();
+        self.paths.insert(rid, path);
+    }
+
+    /// Consistency checks used by tests and debug assertions:
+    /// * every path is parent-linked and ends at a leaf-ward node;
+    /// * I_n equals the set of requests whose path contains n;
+    /// * children's parent pointers are correct.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (rid, path) in &self.paths {
+            let mut prev = VIRTUAL_ROOT;
+            for &nid in path {
+                let n = &self.nodes[nid];
+                if !n.alive {
+                    return Err(format!("request {rid} path contains dead node {nid}"));
+                }
+                if n.parent != prev {
+                    return Err(format!(
+                        "request {rid}: node {nid} parent {} != expected {prev}",
+                        n.parent
+                    ));
+                }
+                if n.requests.binary_search(rid).is_err() {
+                    return Err(format!("node {nid} query set missing request {rid}"));
+                }
+                prev = nid;
+            }
+        }
+        for (nid, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            for &rid in &n.requests {
+                match self.paths.get(&rid) {
+                    None => return Err(format!("node {nid} lists unknown request {rid}")),
+                    Some(p) if !p.contains(&nid) => {
+                        return Err(format!("node {nid} lists request {rid} but not on path"))
+                    }
+                    _ => {}
+                }
+            }
+            for &c in &n.children {
+                if self.nodes[c].alive && self.nodes[c].parent != nid {
+                    return Err(format!("child {c} of {nid} has parent {}", self.nodes[c].parent));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<u32> {
+        s.bytes().map(|b| b as u32).collect()
+    }
+
+    #[test]
+    fn single_request_single_node() {
+        let mut f = Forest::new();
+        let out = f.insert_request(1, &toks("hello"));
+        assert_eq!(out.path.len(), 1);
+        assert_eq!(f.node(out.path[0]).len, 5);
+        assert_eq!(f.node(out.path[0]).degree(), 1);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_splits() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("document-alpha"));
+        let out = f.insert_request(2, &toks("document-beta"));
+        f.check_invariants().unwrap();
+        // Shared chunk "document-" + private "beta".
+        assert_eq!(out.path.len(), 2);
+        let shared = out.path[0];
+        assert_eq!(f.node(shared).len, "document-".len());
+        assert_eq!(f.node(shared).degree(), 2);
+        // Request 1's path got the split inserted.
+        let p1 = f.path(1).unwrap();
+        assert_eq!(p1.len(), 2);
+        assert_eq!(p1[0], shared);
+        // Total storage is deduplicated.
+        assert_eq!(
+            f.total_tokens(),
+            "document-".len() + "alpha".len() + "beta".len()
+        );
+        assert_eq!(
+            f.logical_tokens(),
+            "document-alpha".len() + "document-beta".len()
+        );
+    }
+
+    #[test]
+    fn identical_prompts_share_fully() {
+        let mut f = Forest::new();
+        let a = f.insert_request(1, &toks("same-prompt"));
+        let b = f.insert_request(2, &toks("same-prompt"));
+        assert_eq!(a.path, b.path);
+        assert_eq!(f.node(a.path[0]).degree(), 2);
+        assert_eq!(f.total_tokens(), "same-prompt".len());
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn three_way_split_chain() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("aaaa"));
+        f.insert_request(2, &toks("aabb"));
+        f.insert_request(3, &toks("aac"));
+        f.check_invariants().unwrap();
+        // Shared "aa" with children "aa", "bb", "c".
+        let p3 = f.path(3).unwrap();
+        assert_eq!(f.node(p3[0]).len, 2);
+        assert_eq!(f.node(p3[0]).degree(), 3);
+        assert_eq!(f.total_tokens(), 2 + 2 + 2 + 1);
+    }
+
+    #[test]
+    fn split_events_reported() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("xyz"));
+        let out = f.insert_request(2, &toks("xyw"));
+        let has_split = out
+            .events
+            .iter()
+            .any(|e| matches!(e, StorageEvent::Split { at: 2, .. }));
+        assert!(has_split, "events: {:?}", out.events);
+    }
+
+    #[test]
+    fn append_token_private_leaf_extends() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("abc"));
+        let (node, off) = f.append_token(1, 99);
+        assert_eq!(off, 3);
+        assert_eq!(f.node(node).len, 4);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_token_shared_leaf_creates_private() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("shared"));
+        f.insert_request(2, &toks("shared"));
+        let (n1, off1) = f.append_token(1, 7);
+        assert_eq!(off1, 0);
+        assert_eq!(f.node(n1).degree(), 1);
+        let (n2, _) = f.append_token(2, 8);
+        assert_ne!(n1, n2);
+        assert_eq!(f.path(1).unwrap().len(), 2);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_request_prunes() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-a"));
+        f.insert_request(2, &toks("doc-b"));
+        let ev = f.remove_request(1);
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, StorageEvent::Freed { .. })));
+        f.check_invariants().unwrap();
+        // Shared node survives (request 2 still uses it).
+        assert_eq!(f.num_requests(), 1);
+        let ev2 = f.remove_request(2);
+        assert_eq!(ev2.len(), 2); // private leaf + shared chunk both freed
+        assert_eq!(f.total_tokens(), 0);
+    }
+
+    #[test]
+    fn mean_sharing_degree_two_level() {
+        // Root chunk shared by 4 requests (len 100), 4 private (len 10).
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, 100);
+        for rid in 0..4 {
+            let leaf = f.add_synthetic(root, 10);
+            f.assign_synthetic_request(rid, leaf);
+        }
+        f.check_invariants().unwrap();
+        let want = (100.0 * 4.0 + 4.0 * (10.0 * 1.0)) / 140.0;
+        assert!((f.mean_sharing_degree() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_paths_root_to_leaf() {
+        let mut f = Forest::new();
+        let a = f.add_synthetic(VIRTUAL_ROOT, 5);
+        let b = f.add_synthetic(a, 3);
+        f.assign_synthetic_request(9, b);
+        assert_eq!(f.path(9).unwrap(), &[a, b]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_request_panics() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("x"));
+        f.insert_request(1, &toks("y"));
+    }
+}

@@ -1,0 +1,28 @@
+//! The KV-cache prefix forest (§4.1).
+//!
+//! The paper's "compute-centric KV cache management": the KV cache of the
+//! running batch is a forest `F = (N, E)` of chunk nodes under a virtual
+//! root, where an edge `p → c` means *p is a prefix of c*. Alongside the
+//! tensors, two index structures are maintained (the dashed boxes of
+//! Fig. 4):
+//!
+//! * per node `n`, the **query set** `I_n` — the requests whose prefix
+//!   path contains `n` (these form the PAC query tensor `Q^(n)`), and
+//! * per request `r`, the **prefix path** `J_r = π(r)` — the nodes whose
+//!   partial outputs must be POR-reduced to produce `O[r]`.
+//!
+//! The module splits the concern in two:
+//!
+//! * [`forest`] — the *topology*: radix insert/split/prune over token
+//!   sequences, plus synthetic constructors for the benches (which need
+//!   tree shapes, not tensor payloads);
+//! * [`paged`] — the *storage*: a PagedAttention-style paged pool holding
+//!   per-layer, per-head K/V rows, with block tables per node. The same
+//!   layout vLLM uses, so CoDec "follows the same paged KV-cache layout
+//!   as PagedAttention" (§6) holds structurally here too.
+
+pub mod forest;
+pub mod paged;
+
+pub use forest::{Forest, InsertOutcome, Node, NodeId, RequestId, VIRTUAL_ROOT};
+pub use paged::{KvStore, PagedPool};

@@ -1,0 +1,352 @@
+//! Paged KV storage beneath the forest — the PagedAttention layout (§6).
+//!
+//! Physical storage is a pool of fixed-size pages, each holding
+//! `page_tokens` token slots × `n_kv_heads` heads × `d_head` floats for K
+//! and V. Each (layer, node) owns an ordered block table of page ids plus
+//! a length; the forest's structural events ([`super::forest::StorageEvent`])
+//! are mirrored here (split moves rows, prune frees pages).
+//!
+//! `node_kv` materializes a node's (K, V) for one head as contiguous
+//! matrices — this is the gather the CUDA kernel does HBM→SMEM when it
+//! assembles a PAC operand, and the PJRT runtime does pool→literal.
+
+use super::forest::{NodeId, StorageEvent};
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+/// Fixed-size page pool for one layer.
+#[derive(Debug)]
+pub struct PagedPool {
+    pub page_tokens: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    /// page → flat [token][head][d] · 2 (K then V halves).
+    pages: Vec<Vec<f32>>,
+    free: Vec<usize>,
+}
+
+impl PagedPool {
+    pub fn new(page_tokens: usize, n_kv_heads: usize, d_head: usize) -> PagedPool {
+        PagedPool {
+            page_tokens,
+            n_kv_heads,
+            d_head,
+            pages: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    fn page_floats(&self) -> usize {
+        self.page_tokens * self.n_kv_heads * self.d_head * 2
+    }
+
+    fn alloc_page(&mut self) -> usize {
+        if let Some(p) = self.free.pop() {
+            self.pages[p].iter_mut().for_each(|x| *x = 0.0);
+            p
+        } else {
+            self.pages.push(vec![0.0; self.page_floats()]);
+            self.pages.len() - 1
+        }
+    }
+
+    fn free_page(&mut self, p: usize) {
+        self.free.push(p);
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+
+    #[inline]
+    fn slot_range(&self, slot: usize, head: usize, is_v: bool) -> std::ops::Range<usize> {
+        let d = self.d_head;
+        let base = (slot * self.n_kv_heads + head) * d * 2 + if is_v { d } else { 0 };
+        base..base + d
+    }
+
+    fn write_row(&mut self, page: usize, slot: usize, head: usize, k: &[f32], v: &[f32]) {
+        let r = self.slot_range(slot, head, false);
+        self.pages[page][r].copy_from_slice(k);
+        let r = self.slot_range(slot, head, true);
+        self.pages[page][r].copy_from_slice(v);
+    }
+
+    fn read_row(&self, page: usize, slot: usize, head: usize) -> (&[f32], &[f32]) {
+        let rk = self.slot_range(slot, head, false);
+        let rv = self.slot_range(slot, head, true);
+        (&self.pages[page][rk], &self.pages[page][rv])
+    }
+}
+
+/// Block table for one node in one layer.
+#[derive(Debug, Clone, Default)]
+struct BlockList {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+/// Per-layer paged storage for a whole forest.
+#[derive(Debug)]
+pub struct LayerStore {
+    pool: PagedPool,
+    blocks: BTreeMap<NodeId, BlockList>,
+}
+
+impl LayerStore {
+    fn new(page_tokens: usize, n_kv_heads: usize, d_head: usize) -> LayerStore {
+        LayerStore {
+            pool: PagedPool::new(page_tokens, n_kv_heads, d_head),
+            blocks: BTreeMap::new(),
+        }
+    }
+
+    /// Append one token's KV rows (all heads) to `node`.
+    /// `k`/`v`: [n_kv_heads][d_head] flattened.
+    fn append(&mut self, node: NodeId, k: &[f32], v: &[f32]) {
+        let (h, d) = (self.pool.n_kv_heads, self.pool.d_head);
+        assert_eq!(k.len(), h * d);
+        assert_eq!(v.len(), h * d);
+        let bl = self.blocks.entry(node).or_default();
+        let slot = bl.len % self.pool.page_tokens;
+        if slot == 0 {
+            let p = self.pool.alloc_page();
+            bl.pages.push(p);
+        }
+        let page = *bl.pages.last().unwrap();
+        bl.len += 1;
+        for head in 0..h {
+            self.pool
+                .write_row(page, slot, head, &k[head * d..(head + 1) * d], &v[head * d..(head + 1) * d]);
+        }
+    }
+
+    fn len(&self, node: NodeId) -> usize {
+        self.blocks.get(&node).map(|b| b.len).unwrap_or(0)
+    }
+
+    /// Materialize rows [lo, hi) of `node` for `head` as (K, V) matrices.
+    fn node_kv(&self, node: NodeId, head: usize, lo: usize, hi: usize) -> (Mat, Mat) {
+        let bl = self.blocks.get(&node).expect("node has no storage");
+        assert!(lo <= hi && hi <= bl.len, "range {lo}..{hi} of {}", bl.len);
+        let d = self.pool.d_head;
+        let mut k = Mat::zeros(hi - lo, d);
+        let mut v = Mat::zeros(hi - lo, d);
+        for (i, tok) in (lo..hi).enumerate() {
+            let page = bl.pages[tok / self.pool.page_tokens];
+            let slot = tok % self.pool.page_tokens;
+            let (kr, vr) = self.pool.read_row(page, slot, head);
+            k.row_mut(i).copy_from_slice(kr);
+            v.row_mut(i).copy_from_slice(vr);
+        }
+        (k, v)
+    }
+
+    /// Mirror a forest split: rows [at, len) of `node` move to `tail`.
+    fn split(&mut self, node: NodeId, at: usize, tail: NodeId) {
+        let Some(bl) = self.blocks.get(&node) else {
+            return; // node had no storage yet (synthetic/unfilled)
+        };
+        let total = bl.len;
+        assert!(at < total, "split at {at} of {total}");
+        let (h, _d) = (self.pool.n_kv_heads, self.pool.d_head);
+        // Copy tail rows out through the read/append API (page-boundary
+        // agnostic, at the cost of a copy — splits are rare and cold).
+        let mut tail_rows: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(total - at);
+        {
+            let bl = &self.blocks[&node];
+            for tok in at..total {
+                let page = bl.pages[tok / self.pool.page_tokens];
+                let slot = tok % self.pool.page_tokens;
+                let mut krow = Vec::with_capacity(h * self.pool.d_head);
+                let mut vrow = Vec::with_capacity(h * self.pool.d_head);
+                for head in 0..h {
+                    let (kr, vr) = self.pool.read_row(page, slot, head);
+                    krow.extend_from_slice(kr);
+                    vrow.extend_from_slice(vr);
+                }
+                tail_rows.push((krow, vrow));
+            }
+        }
+        // Truncate the head node: drop now-unused whole pages.
+        let bl = self.blocks.get_mut(&node).unwrap();
+        bl.len = at;
+        let pages_needed = at.div_ceil(self.pool.page_tokens);
+        let freed: Vec<usize> = bl.pages.split_off(pages_needed);
+        for p in freed {
+            self.pool.free_page(p);
+        }
+        for (krow, vrow) in tail_rows {
+            self.append(tail, &krow, &vrow);
+        }
+    }
+
+    fn free_node(&mut self, node: NodeId) {
+        if let Some(bl) = self.blocks.remove(&node) {
+            for p in bl.pages {
+                self.pool.free_page(p);
+            }
+        }
+    }
+}
+
+/// Multi-layer KV store mirroring one [`super::Forest`].
+#[derive(Debug)]
+pub struct KvStore {
+    layers: Vec<LayerStore>,
+}
+
+impl KvStore {
+    pub fn new(n_layers: usize, page_tokens: usize, n_kv_heads: usize, d_head: usize) -> KvStore {
+        KvStore {
+            layers: (0..n_layers)
+                .map(|_| LayerStore::new(page_tokens, n_kv_heads, d_head))
+                .collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Append one token's rows in `layer` (k/v: [n_kv_heads * d_head]).
+    pub fn append(&mut self, layer: usize, node: NodeId, k: &[f32], v: &[f32]) {
+        self.layers[layer].append(node, k, v);
+    }
+
+    /// Stored length of `node` in `layer`.
+    pub fn len(&self, layer: usize, node: NodeId) -> usize {
+        self.layers[layer].len(node)
+    }
+
+    /// Materialize (K, V) of `node` rows [lo, hi) for `head` in `layer`.
+    pub fn node_kv(&self, layer: usize, node: NodeId, head: usize, lo: usize, hi: usize) -> (Mat, Mat) {
+        self.layers[layer].node_kv(node, head, lo, hi)
+    }
+
+    /// Apply a forest structural event to every layer.
+    pub fn apply(&mut self, ev: &StorageEvent) {
+        match *ev {
+            StorageEvent::Split { node, at, tail } => {
+                for l in &mut self.layers {
+                    l.split(node, at, tail);
+                }
+            }
+            StorageEvent::Freed { node } => {
+                for l in &mut self.layers {
+                    l.free_node(node);
+                }
+            }
+            StorageEvent::NeedFill { .. } => {} // engine fills via append()
+        }
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.allocated_pages()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(h: usize, d: usize, base: f32) -> Vec<f32> {
+        (0..h * d).map(|i| base + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn append_and_read_roundtrip() {
+        let mut s = KvStore::new(1, 4, 2, 3); // pages of 4 tokens, 2 heads, d=3
+        for t in 0..10 {
+            s.append(0, 5, &row(2, 3, t as f32), &row(2, 3, 100.0 + t as f32));
+        }
+        assert_eq!(s.len(0, 5), 10);
+        let (k, v) = s.node_kv(0, 5, 1, 0, 10);
+        assert_eq!(k.rows, 10);
+        // Head 1 rows start at offset d in the flat row.
+        assert!((k.at(3, 0) - (3.0 + 0.03)).abs() < 1e-6);
+        assert!((v.at(7, 2) - (107.0 + 0.05)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn range_materialization() {
+        let mut s = KvStore::new(1, 4, 1, 2);
+        for t in 0..9 {
+            s.append(0, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        let (k, _) = s.node_kv(0, 1, 0, 3, 7);
+        assert_eq!(k.rows, 4);
+        assert!((k.at(0, 0) - 3.0).abs() < 1e-6);
+        assert!((k.at(3, 1) - 6.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_moves_rows() {
+        let mut s = KvStore::new(2, 4, 1, 2);
+        for layer in 0..2 {
+            for t in 0..10 {
+                s.append(layer, 1, &row(1, 2, t as f32), &row(1, 2, 50.0 + t as f32));
+            }
+        }
+        s.apply(&StorageEvent::Split {
+            node: 1,
+            at: 6,
+            tail: 2,
+        });
+        for layer in 0..2 {
+            assert_eq!(s.len(layer, 1), 6);
+            assert_eq!(s.len(layer, 2), 4);
+            let (k1, _) = s.node_kv(layer, 1, 0, 0, 6);
+            assert!((k1.at(5, 0) - 5.0).abs() < 1e-6);
+            let (k2, v2) = s.node_kv(layer, 2, 0, 0, 4);
+            assert!((k2.at(0, 0) - 6.0).abs() < 1e-6);
+            assert!((v2.at(3, 0) - 59.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn split_at_page_boundary() {
+        let mut s = KvStore::new(1, 4, 1, 2);
+        for t in 0..8 {
+            s.append(0, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        s.apply(&StorageEvent::Split {
+            node: 1,
+            at: 4,
+            tail: 2,
+        });
+        assert_eq!(s.len(0, 1), 4);
+        assert_eq!(s.len(0, 2), 4);
+        let (k2, _) = s.node_kv(0, 2, 0, 0, 4);
+        assert!((k2.at(0, 0) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn free_recycles_pages() {
+        let mut s = KvStore::new(1, 2, 1, 2);
+        for t in 0..6 {
+            s.append(0, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        let used = s.allocated_pages();
+        assert_eq!(used, 3);
+        s.apply(&StorageEvent::Freed { node: 1 });
+        assert_eq!(s.allocated_pages(), 0);
+        // Re-allocation reuses the freed pages.
+        for t in 0..4 {
+            s.append(0, 2, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        assert_eq!(s.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn zeroed_on_reuse() {
+        let mut s = KvStore::new(1, 2, 1, 2);
+        s.append(0, 1, &[5.0, 5.0], &[5.0, 5.0]);
+        s.apply(&StorageEvent::Freed { node: 1 });
+        s.append(0, 2, &[1.0, 1.0], &[1.0, 1.0]);
+        s.append(0, 2, &[2.0, 2.0], &[2.0, 2.0]);
+        let (k, _) = s.node_kv(0, 2, 0, 0, 2);
+        assert_eq!(k.row(0), &[1.0, 1.0]);
+        assert_eq!(k.row(1), &[2.0, 2.0]);
+    }
+}

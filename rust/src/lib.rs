@@ -1,0 +1,50 @@
+//! # CoDec — Prefix-Shared Decoding for LLMs (Rust coordinator)
+//!
+//! Reproduction of *CoDec: Prefix-Shared Decoding Kernel for LLMs*
+//! (SIGMOD 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): the PAC / POR Pallas kernels, AOT
+//!   lowered to HLO text in `artifacts/`.
+//! * **Layer 2** (build-time Python): the JAX transformer decode step and
+//!   kernel compositions, same artifacts.
+//! * **Layer 3** (this crate): everything the paper calls "CoDec the
+//!   system" — the KV-cache prefix forest, the cost estimator, the task
+//!   divider + scheduler, the parallel tree reduction, the block-level
+//!   executor, the serving engine, and every baseline it is evaluated
+//!   against (FlashDecoding, FlashInfer-style cascade, a vLLM-like
+//!   engine loop).
+//!
+//! The crate is organized bottom-up:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | substrates built in-repo: JSON, PRNG, CLI, stats, thread pool |
+//! | [`tensor`] | row-major f32 tensors + the math kernels the CPU executors use |
+//! | [`kvforest`] | the prefix-tree KV cache (§4.1): radix forest, indexes, paging |
+//! | [`attention`] | PAC/POR primitives and the CoDec / baseline executors (§4.2-4.3) |
+//! | [`cost`] | profile-based cost estimator + GPU spec registry (§5.2, Table 2) |
+//! | [`sched`] | task division and greedy scheduling (§5.1) |
+//! | [`reduction`] | parallel tree-reduction planner (§4.3) |
+//! | [`gpusim`] | block-level GPU timing simulator + HBM traffic accounting |
+//! | [`runtime`] | PJRT client: load + execute the AOT artifacts |
+//! | [`model`] | transformer configs, deterministic weights, sampling |
+//! | [`engine`] | continuous-batching serving engine + vLLM-like baseline |
+//! | [`workload`] | synthetic prefix-tree and LooGLE-like workload generators |
+//! | [`bench`] | the measurement harness behind every figure/table bench |
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! reproduced numbers.
+
+pub mod attention;
+pub mod bench;
+pub mod cost;
+pub mod engine;
+pub mod gpusim;
+pub mod kvforest;
+pub mod model;
+pub mod reduction;
+pub mod runtime;
+pub mod sched;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,302 @@
+//! `codec` — the CoDec leader binary.
+//!
+//! Subcommands:
+//!   serve        run the serving engine on a workload trace or synthetic
+//!                document-QA load and report TPOT/throughput
+//!   bench-figN   regenerate one paper figure table (N ∈ 1,5,6,…,13)
+//!   bench-all    regenerate every figure/table
+//!   table2       print the cost-profile grid
+//!   calibrate    re-profile the PAC kernel on this machine's PJRT CPU
+//!                client and write a profile JSON
+//!   demo         quick smoke: forest + plan + native CoDec vs oracle
+
+use codec::bench::figures;
+use codec::cost::Profile;
+use codec::engine::{AttentionBackend, EngineConfig, Server};
+use codec::model::Sampler;
+use codec::runtime::artifacts_dir;
+use codec::util::cli::Args;
+use codec::workload::{LoogleCategory, LoogleGen};
+use std::time::Instant;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: codec <command> [options]
+
+commands:
+  serve        --requests N --docs D --max-new M --backend codec|codec-pjrt|flash
+               [--artifacts DIR] [--batch B] [--scale-down K]
+  bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
+  bench-all
+  table2       [--profile FILE]
+  calibrate    --out FILE [--iters I]
+  demo
+"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    codec::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        usage()
+    };
+    let args = match Args::parse(argv[1..].iter().cloned(), &["verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage()
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "bench-all" => {
+            for rep in figures::all_figures() {
+                rep.print();
+                rep.save();
+            }
+            Ok(())
+        }
+        "bench-fig1" => print_one(figures::fig1_breakdown()),
+        "bench-fig5" => print_one(figures::fig5_exec_time()),
+        "bench-fig6" => print_one(figures::fig6_mem_access()),
+        "bench-fig7" => print_one(figures::fig7_tpot()),
+        "bench-fig8" => print_one(figures::fig8_loogle()),
+        "bench-fig9" => print_one(figures::fig9_ablation()),
+        "bench-fig10" => print_one(figures::fig10_granularity()),
+        "bench-fig11" => print_one(figures::fig11_division_overhead()),
+        "bench-fig12" => print_one(figures::fig12_gpus()),
+        "bench-fig13" => print_one(figures::fig13_models()),
+        "table2" => cmd_table2(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "demo" => cmd_demo(),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_one(rep: codec::bench::FigureReport) -> anyhow::Result<()> {
+    rep.print();
+    rep.save();
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> anyhow::Result<()> {
+    let profile = match args.get("profile") {
+        Some(path) => Profile::load(path).map_err(anyhow::Error::msg)?,
+        None => Profile::table2_a100(),
+    };
+    figures::table2_profile(&profile).print();
+    Ok(())
+}
+
+/// Re-profile PAC on this machine's PJRT CPU client (the §5.2 profiling
+/// step, pointed at our own hardware).
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    use codec::runtime::{exec::run_pac, Runtime};
+    use codec::tensor::Mat;
+    use codec::util::prng::Rng;
+    let out = args.str_or("out", "target/profile_cpu.json").to_string();
+    let iters = args.usize_or("iters", 3).map_err(anyhow::Error::msg)?;
+    let rt = Runtime::new(&artifacts_dir())?;
+    let m = rt.manifest().clone();
+    let d = 128usize;
+    let mut rng = Rng::new(7);
+    let mut t_ms: Vec<Vec<f64>> = Vec::new();
+    let nq_grid: Vec<f64> = m.nq_buckets.iter().map(|&x| x as f64).collect();
+    let n_grid: Vec<f64> = m.n_buckets.iter().map(|&x| x as f64).collect();
+    for &n in &m.n_buckets {
+        let mut row = Vec::new();
+        for &nq in &m.nq_buckets {
+            let mut q = Mat::zeros(nq, d);
+            let mut k = Mat::zeros(n, d);
+            let mut v = Mat::zeros(n, d);
+            rng.fill_normal(&mut q.data, 1.0);
+            rng.fill_normal(&mut k.data, 1.0);
+            rng.fill_normal(&mut v.data, 1.0);
+            let _ = run_pac(&rt, &q, &k, &v, n)?; // warm (compiles)
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let _ = run_pac(&rt, &q, &k, &v, n)?;
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            log::info!("calibrate nq={nq} n={n}: {ms:.3} ms");
+            row.push(ms);
+        }
+        t_ms.push(row);
+    }
+    let profile = Profile {
+        d,
+        nq_grid,
+        n_grid,
+        t_ms,
+        device: format!("PJRT-CPU ({})", std::env::consts::ARCH),
+    };
+    profile.save(&out)?;
+    println!("wrote {out}");
+    figures::table2_profile(&profile).print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let backend = match args.str_or("backend", "codec") {
+        "codec" => AttentionBackend::CodecNative,
+        "codec-pjrt" => AttentionBackend::CodecPjrt,
+        "flash" => AttentionBackend::FlashNative,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let docs = args.usize_or("docs", 2).map_err(anyhow::Error::msg)?;
+    let requests = args.usize_or("requests", 8).map_err(anyhow::Error::msg)?;
+    let max_new = args.usize_or("max-new", 16).map_err(anyhow::Error::msg)?;
+    let batch = args.usize_or("batch", 8).map_err(anyhow::Error::msg)?;
+    let scale_down = args.usize_or("scale-down", 100).map_err(anyhow::Error::msg)?;
+    let dir = args.str_or("artifacts", &artifacts_dir()).to_string();
+
+    let cfg = EngineConfig {
+        backend,
+        max_batch: batch,
+        sampler: Sampler::Temperature(0.8),
+        ..Default::default()
+    };
+    let gen = LoogleGen {
+        category: LoogleCategory::Wiki,
+        num_docs: docs,
+        questions_per_doc: requests.div_ceil(docs),
+        ..Default::default()
+    };
+    let prompts = gen.build_prompts(scale_down);
+    log::info!(
+        "serving {} requests over {} docs (backend {:?})",
+        prompts.len().min(requests),
+        docs,
+        backend
+    );
+    let t0 = Instant::now();
+    let server = Server::start(&dir, cfg)?;
+    let handles: Vec<_> = prompts
+        .into_iter()
+        .take(requests)
+        .map(|p| server.submit(p, max_new))
+        .collect();
+    for h in handles {
+        let id = h.id;
+        let toks = h.wait()?;
+        log::debug!("request {id}: {} tokens", toks.len());
+    }
+    let m = server.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    println!("backend:            {backend:?}");
+    println!("requests:           {}", m.requests.len());
+    println!("tokens generated:   {}", m.tokens_generated);
+    println!(
+        "prefill tokens:     {} ({}% served from shared cache)",
+        m.prefill_tokens + m.prefill_tokens_shared,
+        (m.prefill_share_rate() * 100.0).round()
+    );
+    if let Some(tpot) = m.mean_tpot_ms() {
+        println!("mean TPOT:          {tpot:.1} ms/token");
+    }
+    if let Some(s) = m.step_summary_ms() {
+        println!("decode step (ms):   mean {:.1} p50 {:.1} p99 {:.1}", s.mean, s.p50, s.p99);
+    }
+    println!("decode throughput:  {:.1} tok/s", m.decode_throughput());
+    println!(
+        "plans: {} computed, {} reused",
+        m.plans_computed, m.plans_reused
+    );
+    println!("wall time:          {wall:.2} s");
+    Ok(())
+}
+
+fn cmd_demo() -> anyhow::Result<()> {
+    use codec::attention::codec_exec::{run_codec_attention, QueryBatch};
+    use codec::attention::oracle::request_attention_exact;
+    use codec::cost::Estimator;
+    use codec::kvforest::forest::StorageEvent;
+    use codec::kvforest::{Forest, KvStore};
+    use codec::sched::{divide_and_schedule, tasks_from_forest, DividerConfig};
+    use codec::tensor::Mat;
+    use codec::util::prng::Rng;
+
+    let mut rng = Rng::new(1);
+    let mut forest = Forest::new();
+    let mut store = KvStore::new(1, 16, 2, 64);
+    // Three requests sharing a 600-token document.
+    let doc: Vec<u32> = (0..600).collect();
+    for r in 0..3u64 {
+        let mut p = doc.clone();
+        p.extend(7000 + r as u32 * 100..7000 + r as u32 * 100 + 40);
+        let out = forest.insert_request(r, &p);
+        for ev in &out.events {
+            store.apply(ev);
+            if let StorageEvent::NeedFill { node, len } = ev {
+                for _ in 0..*len {
+                    let mut k = vec![0.0f32; 2 * 64];
+                    let mut v = vec![0.0f32; 2 * 64];
+                    rng.fill_normal(&mut k, 1.0);
+                    rng.fill_normal(&mut v, 1.0);
+                    store.append(0, *node, &k, &v);
+                }
+            }
+        }
+    }
+    let q: Vec<Mat> = (0..3)
+        .map(|_| {
+            let mut m = Mat::zeros(8, 64);
+            rng.fill_normal(&mut m.data, 1.0);
+            m
+        })
+        .collect();
+    let batch = QueryBatch {
+        rids: vec![0, 1, 2],
+        q,
+        n_q_heads: 8,
+        n_kv_heads: 2,
+        d_head: 64,
+    };
+    let est = Estimator::table2();
+    let plan = divide_and_schedule(
+        tasks_from_forest(&forest, 2, 4),
+        &est,
+        &DividerConfig {
+            num_blocks: 16,
+            min_chunk: 128,
+            ..Default::default()
+        },
+    );
+    println!(
+        "forest: {} nodes, {} dedup tokens ({} logical), n̄_q = {:.1}",
+        forest.alive_nodes().count(),
+        forest.total_tokens(),
+        forest.logical_tokens(),
+        forest.mean_sharing_degree()
+    );
+    println!(
+        "plan: {} tasks → {} subtasks, predicted makespan {:.3} ms (lb {:.3})",
+        plan.tasks.len(),
+        plan.num_subtasks(),
+        plan.makespan_ms,
+        plan.lower_bound_ms
+    );
+    let outs = run_codec_attention(&forest, &store, 0, &batch, &plan, 4);
+    let mut max_err = 0f32;
+    for (ri, &rid) in batch.rids.iter().enumerate() {
+        for kvh in 0..2 {
+            let qg = batch.group_rows(ri, kvh);
+            let want = request_attention_exact(&forest, &store, 0, rid, kvh, &qg);
+            for j in 0..4 {
+                for c in 0..64 {
+                    max_err = max_err.max((outs[ri].at(kvh * 4 + j, c) - want.at(j, c)).abs());
+                }
+            }
+        }
+    }
+    println!("CoDec vs exact-attention oracle: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-4);
+    println!("demo OK");
+    Ok(())
+}

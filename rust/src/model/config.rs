@@ -1,0 +1,140 @@
+//! Transformer geometry presets (§7.7: attention variants and model
+//! sizes). The `tiny` config matches the AOT-compiled engine artifacts;
+//! the larger presets drive the gpusim benches (Fig. 13).
+
+/// Transformer geometry. Mirrors `python/compile/model.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+}
+
+impl ModelConfig {
+    pub const fn d_model(&self) -> usize {
+        self.n_q_heads * self.d_head
+    }
+
+    pub const fn group_size(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// Rough parameter count (tied embeddings).
+    pub fn param_count(&self) -> usize {
+        let dm = self.d_model();
+        let per_layer = dm * self.n_q_heads * self.d_head // wq
+            + 2 * dm * self.n_kv_heads * self.d_head // wk, wv
+            + self.n_q_heads * self.d_head * dm // wo
+            + 3 * dm * self.d_ff // gate, up, down
+            + 2 * dm; // norms
+        self.vocab * dm + self.n_layers * per_layer + dm
+    }
+
+    /// Per-token KV-cache bytes across all layers (f16).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.d_head * 2 * 2
+    }
+}
+
+/// The AOT-compiled end-to-end config (~50M params, GQA 4:1).
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny",
+    vocab: 8192,
+    n_layers: 8,
+    n_q_heads: 8,
+    n_kv_heads: 2,
+    d_head: 64,
+    d_ff: 2816,
+};
+
+/// The paper's default: Qwen3-4B (32 Q heads, 8 KV heads, d_head 128).
+pub const QWEN3_4B: ModelConfig = ModelConfig {
+    name: "qwen3-4b",
+    vocab: 151_936,
+    n_layers: 36,
+    n_q_heads: 32,
+    n_kv_heads: 8,
+    d_head: 128,
+    d_ff: 9728,
+};
+
+/// Llama-3.1-8B geometry (Fig. 1 motivation, Fig. 13 model sweep).
+pub const LLAMA31_8B: ModelConfig = ModelConfig {
+    name: "llama3.1-8b",
+    vocab: 128_256,
+    n_layers: 32,
+    n_q_heads: 32,
+    n_kv_heads: 8,
+    d_head: 128,
+    d_ff: 14_336,
+};
+
+/// A 14B-class config for the size sweep.
+pub const QWEN3_14B: ModelConfig = ModelConfig {
+    name: "qwen3-14b",
+    vocab: 151_936,
+    n_layers: 40,
+    n_q_heads: 40,
+    n_kv_heads: 8,
+    d_head: 128,
+    d_ff: 17_408,
+};
+
+/// MHA / MQA / GQA variants of the Qwen3-4B geometry for Fig. 13a: same
+/// query heads, varying KV sharing.
+pub fn gqa_variant(n_kv_heads: usize) -> ModelConfig {
+    assert!(QWEN3_4B.n_q_heads % n_kv_heads == 0);
+    ModelConfig {
+        name: match n_kv_heads {
+            32 => "mha-32kv",
+            8 => "gqa-8kv",
+            4 => "gqa-4kv",
+            1 => "mqa-1kv",
+            _ => "gqa-custom",
+        },
+        n_kv_heads,
+        ..QWEN3_4B
+    }
+}
+
+pub fn model_sweep() -> Vec<ModelConfig> {
+    vec![TINY, QWEN3_4B, LLAMA31_8B, QWEN3_14B]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_is_about_50m() {
+        let p = TINY.param_count();
+        assert!(p > 30_000_000 && p < 80_000_000, "params = {p}");
+    }
+
+    #[test]
+    fn qwen_geometry_matches_paper() {
+        assert_eq!(QWEN3_4B.n_q_heads, 32);
+        assert_eq!(QWEN3_4B.n_kv_heads, 8);
+        assert_eq!(QWEN3_4B.d_head, 128);
+        assert_eq!(QWEN3_4B.group_size(), 4);
+    }
+
+    #[test]
+    fn gqa_variants() {
+        assert_eq!(gqa_variant(32).group_size(), 1); // MHA
+        assert_eq!(gqa_variant(1).group_size(), 32); // MQA
+        assert_eq!(gqa_variant(8).group_size(), 4); // GQA
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_heads() {
+        assert_eq!(
+            gqa_variant(32).kv_bytes_per_token(),
+            8 * gqa_variant(4).kv_bytes_per_token()
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Model geometry, deterministic weights, and sampling.
+
+pub mod config;
+pub mod sampler;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use sampler::Sampler;
+pub use weights::Weights;

@@ -1,0 +1,78 @@
+//! Token sampling from logits.
+
+use crate::util::prng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    /// Softmax sampling with a temperature (> 0).
+    Temperature(f32),
+}
+
+impl Sampler {
+    /// Sample a token id from one logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::Temperature(t) => {
+                assert!(*t > 0.0);
+                let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = logits
+                    .iter()
+                    .map(|&x| (((x - mx) / t) as f64).exp())
+                    .collect();
+                rng.categorical(&weights) as u32
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let s = Sampler::Greedy;
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 2.9], &mut rng), 1);
+    }
+
+    #[test]
+    fn greedy_first_on_tie() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Sampler::Greedy.sample(&[1.0, 1.0, 1.0], &mut rng), 0);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(2);
+        let s = Sampler::Temperature(0.01);
+        let hits = (0..100)
+            .filter(|_| s.sample(&[0.0, 5.0, 1.0], &mut rng) == 1)
+            .count();
+        assert!(hits > 95);
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Rng::new(3);
+        let s = Sampler::Temperature(100.0);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[s.sample(&[0.0, 1.0, 2.0], &mut rng) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 700), "{counts:?}");
+    }
+}

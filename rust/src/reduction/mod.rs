@@ -1,0 +1,249 @@
+//! Parallel tree reduction planning (§4.3).
+//!
+//! After PAC, each (request, kv-head) owns a *series* of partial results —
+//! one per prefix-path node, plus one per extra vertical subtask split.
+//! POR is associative and commutative, so each series can be reduced as a
+//! balanced binary tree, and merges from *different* series (and
+//! non-adjacent merges within one series) are independent. The planner
+//! lays the whole batch's reduction out as **rounds** of independent POR
+//! operations: round count = ⌈log₂(longest series)⌉, total operations =
+//! Σ (len − 1) — the minimum possible.
+//!
+//! This is exactly the paper's answer to the "many small sequential
+//! reduction kernels" overhead of the cascade baseline: one parallel
+//! launch per round instead of one launch per merge.
+
+/// One merge: fold slot `src` of `series` into slot `dst` (dst < src).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Merge {
+    pub series: usize,
+    pub dst: usize,
+    pub src: usize,
+}
+
+/// Rounds of independent merges.
+#[derive(Debug, Clone, Default)]
+pub struct ReductionPlan {
+    pub rounds: Vec<Vec<Merge>>,
+    pub series_lens: Vec<usize>,
+}
+
+impl ReductionPlan {
+    pub fn total_ops(&self) -> usize {
+        self.rounds.iter().map(|r| r.len()).sum()
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Maximum independent merges in any round (the parallelism the GPU
+    /// must provide to run a round in one wave).
+    pub fn max_parallelism(&self) -> usize {
+        self.rounds.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    /// Checks: per series, ops = len-1; merges in one round touch
+    /// disjoint slots; every slot except 0 is consumed exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut consumed: Vec<Vec<bool>> = self
+            .series_lens
+            .iter()
+            .map(|&l| vec![false; l])
+            .collect();
+        for (ri, round) in self.rounds.iter().enumerate() {
+            let mut touched: std::collections::HashSet<(usize, usize)> = Default::default();
+            for m in round {
+                if m.dst >= m.src {
+                    return Err(format!("round {ri}: dst {} >= src {}", m.dst, m.src));
+                }
+                for slot in [m.dst, m.src] {
+                    if !touched.insert((m.series, slot)) {
+                        return Err(format!(
+                            "round {ri}: slot ({}, {slot}) touched twice",
+                            m.series
+                        ));
+                    }
+                }
+                if consumed[m.series][m.src] {
+                    return Err(format!("slot ({}, {}) consumed twice", m.series, m.src));
+                }
+                if consumed[m.series][m.dst] {
+                    return Err(format!(
+                        "merge into already-consumed slot ({}, {})",
+                        m.series, m.dst
+                    ));
+                }
+                consumed[m.series][m.src] = true;
+            }
+        }
+        for (si, c) in consumed.iter().enumerate() {
+            let n_consumed = c.iter().filter(|&&x| x).count();
+            if self.series_lens[si] > 0 && n_consumed != self.series_lens[si] - 1 {
+                return Err(format!(
+                    "series {si}: {} of {} slots consumed",
+                    n_consumed,
+                    self.series_lens[si] - 1
+                ));
+            }
+            if self.series_lens[si] > 0 && c[0] {
+                return Err(format!("series {si}: slot 0 consumed"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Plan the balanced-tree reduction for the given series lengths.
+pub fn plan_reduction(series_lens: &[usize]) -> ReductionPlan {
+    let max_len = series_lens.iter().copied().max().unwrap_or(0);
+    let mut rounds = Vec::new();
+    let mut stride = 1usize;
+    while stride < max_len {
+        let mut round = Vec::new();
+        for (si, &len) in series_lens.iter().enumerate() {
+            let mut dst = 0usize;
+            while dst + stride < len {
+                round.push(Merge {
+                    series: si,
+                    dst,
+                    src: dst + stride,
+                });
+                dst += stride * 2;
+            }
+        }
+        if !round.is_empty() {
+            rounds.push(round);
+        }
+        stride *= 2;
+    }
+    ReductionPlan {
+        rounds,
+        series_lens: series_lens.to_vec(),
+    }
+}
+
+/// Level-fold reduction: each round folds the next slot of *every*
+/// series into slot 0 (one batched launch per level). This is the
+/// FlashInfer-cascade shape — launches scale with the path length
+/// (linear) instead of its log, but requests are batched per level.
+pub fn plan_fold(series_lens: &[usize]) -> ReductionPlan {
+    let max_len = series_lens.iter().copied().max().unwrap_or(0);
+    let mut rounds = Vec::new();
+    for src in 1..max_len {
+        let round: Vec<Merge> = series_lens
+            .iter()
+            .enumerate()
+            .filter(|&(_, &len)| src < len)
+            .map(|(si, _)| Merge { series: si, dst: 0, src })
+            .collect();
+        if !round.is_empty() {
+            rounds.push(round);
+        }
+    }
+    ReductionPlan {
+        rounds,
+        series_lens: series_lens.to_vec(),
+    }
+}
+
+/// Sequentially-launched per-merge reduction (the worst case the paper's
+/// ablation charges): same ops, but each merge is its own
+/// "round"/launch, bottom-up left fold per series.
+pub fn plan_sequential(series_lens: &[usize]) -> ReductionPlan {
+    let mut rounds = Vec::new();
+    for (si, &len) in series_lens.iter().enumerate() {
+        for src in 1..len {
+            rounds.push(vec![Merge {
+                series: si,
+                dst: 0,
+                src,
+            }]);
+        }
+    }
+    ReductionPlan {
+        rounds,
+        series_lens: series_lens.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_rounds() {
+        let p = plan_reduction(&[8]);
+        assert_eq!(p.num_rounds(), 3);
+        assert_eq!(p.total_ops(), 7);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn non_power_of_two() {
+        for len in 1..=33 {
+            let p = plan_reduction(&[len]);
+            assert_eq!(p.total_ops(), len.saturating_sub(1), "len={len}");
+            if len > 1 {
+                let expect_rounds = (len as f64).log2().ceil() as usize;
+                assert_eq!(p.num_rounds(), expect_rounds, "len={len}");
+            }
+            p.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn multi_series_rounds_shared() {
+        let p = plan_reduction(&[4, 7, 1, 2]);
+        assert_eq!(p.total_ops(), 3 + 6 + 0 + 1);
+        assert_eq!(p.num_rounds(), 3); // ceil(log2(7))
+        p.check_invariants().unwrap();
+        // Round 0 runs merges from every series with len >= 2 in parallel.
+        let r0_series: std::collections::HashSet<usize> =
+            p.rounds[0].iter().map(|m| m.series).collect();
+        assert!(r0_series.contains(&0));
+        assert!(r0_series.contains(&1));
+        assert!(r0_series.contains(&3));
+    }
+
+    #[test]
+    fn fold_rounds_equal_longest_series() {
+        let p = plan_fold(&[4, 7, 1, 2]);
+        assert_eq!(p.num_rounds(), 6); // max len 7 → 6 folds
+        assert_eq!(p.total_ops(), 3 + 6 + 0 + 1);
+        p.check_invariants().unwrap();
+        // Every round is batched across series.
+        assert!(p.rounds[0].len() >= 3);
+    }
+
+    #[test]
+    fn sequential_has_one_op_per_round() {
+        let p = plan_sequential(&[4, 3]);
+        assert_eq!(p.num_rounds(), 5);
+        assert!(p.rounds.iter().all(|r| r.len() == 1));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn parallel_needs_fewer_rounds_than_sequential() {
+        let lens = vec![6; 32];
+        let par = plan_reduction(&lens);
+        let seq = plan_sequential(&lens);
+        assert_eq!(par.total_ops(), seq.total_ops());
+        assert!(par.num_rounds() < seq.num_rounds() / 10);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(plan_reduction(&[]).num_rounds(), 0);
+        let p = plan_reduction(&[1, 1]);
+        assert_eq!(p.total_ops(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn max_parallelism_counts_round_width() {
+        let p = plan_reduction(&[2, 2, 2]);
+        assert_eq!(p.max_parallelism(), 3);
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT CPU client + compile-on-demand executable cache.
+
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The serving runtime: one PJRT client, one compiled executable per
+/// artifact (compiled lazily on first use, cached thereafter — mirroring
+/// "one compiled executable per model variant").
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (see `make artifacts`).
+    pub fn new(dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime: PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of executables compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Fetch (compiling if needed) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self
+            .manifest
+            .path_of(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        log::debug!("compiled {name} in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with the given input literals; returns the
+    /// flattened tuple elements (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        out.to_tuple().map_err(Into::into)
+    }
+
+    /// Execute with device-resident buffers (hot path: weights stay on
+    /// device; only activations are staged per call).
+    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        out.to_tuple().map_err(Into::into)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(Into::into)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(Into::into)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn compile_and_run_smallest_pac() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let name = "pac_d64_nq1_n64";
+        let nv = xla::Literal::vec1(&[64i32]);
+        let q = xla::Literal::vec1(&vec![0.1f32; 64]).reshape(&[1, 64]).unwrap();
+        let k = xla::Literal::vec1(&vec![0.2f32; 64 * 64])
+            .reshape(&[64, 64])
+            .unwrap();
+        let v = xla::Literal::vec1(&vec![0.3f32; 64 * 64])
+            .reshape(&[64, 64])
+            .unwrap();
+        let outs = rt.run(name, &[nv, q, k, v]).unwrap();
+        assert_eq!(outs.len(), 3);
+        let o: Vec<f32> = outs[0].to_vec().unwrap();
+        assert_eq!(o.len(), 64);
+        // All V rows identical → output == v row.
+        assert!(o.iter().all(|x| (x - 0.3).abs() < 1e-5));
+        assert_eq!(rt.compiled_count(), 1);
+        // Second call hits the cache.
+        let _ = rt.run(name, &[
+            xla::Literal::vec1(&[64i32]),
+            xla::Literal::vec1(&vec![0.1f32; 64]).reshape(&[1, 64]).unwrap(),
+            xla::Literal::vec1(&vec![0.2f32; 64 * 64]).reshape(&[64, 64]).unwrap(),
+            xla::Literal::vec1(&vec![0.3f32; 64 * 64]).reshape(&[64, 64]).unwrap(),
+        ]).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,325 @@
+//! Typed execution helpers: bucketed PAC / POR and the transformer
+//! pieces, converting between [`Mat`] and PJRT literals.
+//!
+//! PJRT executables are fixed-shape; CoDec's subtasks are irregular. The
+//! helpers pad inputs up to the nearest compiled bucket: extra KV rows
+//! are masked off by `n_valid` inside the kernel; extra query rows
+//! compute garbage that is sliced away on return (the same wasted-lane
+//! trade a CUDA kernel makes when a tile is underfull).
+
+use super::client::Runtime;
+use crate::attention::pac::Partial;
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+fn lit_mat(m: &Mat, rows: usize, cols: usize) -> Result<xla::Literal> {
+    // Pad to (rows, cols) with zeros.
+    assert!(m.rows <= rows && m.cols == cols);
+    if m.rows == rows {
+        Ok(xla::Literal::vec1(&m.data).reshape(&[rows as i64, cols as i64])?)
+    } else {
+        let mut data = m.data.clone();
+        data.resize(rows * cols, 0.0);
+        Ok(xla::Literal::vec1(&data).reshape(&[rows as i64, cols as i64])?)
+    }
+}
+
+fn lit_vec_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data: Vec<f32> = lit.to_vec()?;
+    if data.len() != rows * cols {
+        bail!("literal size {} != {}x{}", data.len(), rows, cols);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Run PAC through the AOT kernel: pads (q, k, v) to the smallest bucket,
+/// passes the true `n_valid`, trims the result back to `q.rows`.
+pub fn run_pac(rt: &Runtime, q: &Mat, k: &Mat, v: &Mat, n_valid: usize) -> Result<Partial> {
+    let d = q.cols;
+    let (nq, n) = (q.rows, k.rows);
+    assert!(n_valid >= 1 && n_valid <= n);
+    let Some((nq_b, n_b)) = rt.manifest().pac_bucket(d, nq, n) else {
+        bail!("no PAC bucket for d={d} nq={nq} n={n}");
+    };
+    let name = super::manifest::Manifest::pac_name(d, nq_b, n_b);
+    let inputs = [
+        lit_vec_i32(&[n_valid as i32]),
+        lit_mat(q, nq_b, d)?,
+        lit_mat(k, n_b, d)?,
+        lit_mat(v, n_b, d)?,
+    ];
+    let outs = rt.run(&name, &inputs)?;
+    let o_full = mat_from(&outs[0], nq_b, d)?;
+    let m_full: Vec<f32> = outs[1].to_vec()?;
+    let s_full: Vec<f32> = outs[2].to_vec()?;
+    Ok(Partial {
+        o: o_full.rows_slice(0, nq),
+        m: m_full[..nq].to_vec(),
+        s: s_full[..nq].to_vec(),
+    })
+}
+
+/// Run POR through the AOT kernel (bucketed on nq). Padded rows carry the
+/// identity element so the merge is harmless.
+pub fn run_por(rt: &Runtime, a: &Partial, b: &Partial) -> Result<Partial> {
+    let d = a.o.cols;
+    let nq = a.nq();
+    assert_eq!(b.nq(), nq);
+    let Some(nq_b) = rt.manifest().por_bucket(d, nq) else {
+        bail!("no POR bucket for d={d} nq={nq}");
+    };
+    let name = format!("por_d{d}_nq{nq_b}");
+    let pad_stats = |v: &[f32], fill: f32| -> Vec<f32> {
+        let mut out = v.to_vec();
+        out.resize(nq_b, fill);
+        out
+    };
+    let inputs = [
+        lit_mat(&a.o, nq_b, d)?,
+        xla::Literal::vec1(&pad_stats(&a.m, f32::NEG_INFINITY)),
+        xla::Literal::vec1(&pad_stats(&a.s, 0.0)),
+        lit_mat(&b.o, nq_b, d)?,
+        xla::Literal::vec1(&pad_stats(&b.m, f32::NEG_INFINITY)),
+        xla::Literal::vec1(&pad_stats(&b.s, 0.0)),
+    ];
+    let outs = rt.run(&name, &inputs)?;
+    let o_full = mat_from(&outs[0], nq_b, d)?;
+    let m_full: Vec<f32> = outs[1].to_vec()?;
+    let s_full: Vec<f32> = outs[2].to_vec()?;
+    Ok(Partial {
+        o: o_full.rows_slice(0, nq),
+        m: m_full[..nq].to_vec(),
+        s: s_full[..nq].to_vec(),
+    })
+}
+
+/// Engine piece wrappers: transformer halves through `run_b` with
+/// device-resident weights (see `model::weights`). Activations are
+/// uploaded per call; weights never move after load.
+pub struct EnginePieces;
+
+impl EnginePieces {
+    fn up_mat(rt: &Runtime, m: &Mat, rows: usize) -> Result<xla::PjRtBuffer> {
+        assert!(m.rows <= rows);
+        if m.rows == rows {
+            rt.upload_f32(&m.data, &[rows, m.cols])
+        } else {
+            let mut data = m.data.clone();
+            data.resize(rows * m.cols, 0.0);
+            rt.upload_f32(&data, &[rows, m.cols])
+        }
+    }
+
+    /// embed_b{B}: (tokens i32[B], emb [V, dm]) -> x [B, dm]
+    pub fn embed(rt: &Runtime, b: usize, tokens: &[i32], emb: &xla::PjRtBuffer) -> Result<Mat> {
+        let dm = rt.manifest().model.n_q_heads * rt.manifest().model.d_head;
+        let toks = rt.upload_i32(tokens, &[b])?;
+        let outs = rt.run_b(&format!("embed_b{b}"), &[&toks, emb])?;
+        mat_from(&outs[0], b, dm)
+    }
+
+    /// attn_pre_b{B}: -> (q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh]) split
+    /// per request into row-major Mats of (H x Dh) each.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_pre(
+        rt: &Runtime,
+        b: usize,
+        x: &Mat,
+        lw: &crate::model::weights::LayerWeights,
+        pos: &[i32],
+    ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
+        let mi = &rt.manifest().model;
+        let (hq, hkv, dh) = (mi.n_q_heads, mi.n_kv_heads, mi.d_head);
+        let xb = Self::up_mat(rt, x, b)?;
+        let pb = rt.upload_i32(pos, &[b])?;
+        let outs = rt.run_b(
+            &format!("attn_pre_b{b}"),
+            &[&xb, &lw.ln1, &lw.wq, &lw.wk, &lw.wv, &pb],
+        )?;
+        let q_all: Vec<f32> = outs[0].to_vec()?;
+        let k_all: Vec<f32> = outs[1].to_vec()?;
+        let v_all: Vec<f32> = outs[2].to_vec()?;
+        let split = |all: &[f32], h: usize| -> Vec<Mat> {
+            (0..b)
+                .map(|r| Mat::from_vec(h, dh, all[r * h * dh..(r + 1) * h * dh].to_vec()))
+                .collect()
+        };
+        Ok((split(&q_all, hq), split(&k_all, hkv), split(&v_all, hkv)))
+    }
+
+    /// attn_post_b{B}: (x [B,dm], attn_out [B,Hq*Dh], weights...) -> x' [B,dm]
+    pub fn attn_post(
+        rt: &Runtime,
+        b: usize,
+        x: &Mat,
+        attn_out: &Mat,
+        lw: &crate::model::weights::LayerWeights,
+    ) -> Result<Mat> {
+        let mi = &rt.manifest().model;
+        let dm = mi.n_q_heads * mi.d_head;
+        let xb = Self::up_mat(rt, x, b)?;
+        let ab = Self::up_mat(rt, attn_out, b)?;
+        let outs = rt.run_b(
+            &format!("attn_post_b{b}"),
+            &[&xb, &ab, &lw.ln2, &lw.wo, &lw.w_gate, &lw.w_up, &lw.w_down],
+        )?;
+        mat_from(&outs[0], b, dm)
+    }
+
+    /// lm_head_b{B}: (x [B,dm], ln_f [dm], emb [V,dm]) -> logits [B,V]
+    pub fn lm_head(
+        rt: &Runtime,
+        b: usize,
+        x: &Mat,
+        ln_f: &xla::PjRtBuffer,
+        emb: &xla::PjRtBuffer,
+    ) -> Result<Mat> {
+        let mi = &rt.manifest().model;
+        let xb = Self::up_mat(rt, x, b)?;
+        let outs = rt.run_b(&format!("lm_head_b{b}"), &[&xb, ln_f, emb])?;
+        mat_from(&outs[0], b, mi.vocab)
+    }
+}
+
+/// CoDec attention through the AOT Pallas kernels: the same staging as
+/// `attention::codec_exec::run_codec_attention`, but every PAC subtask
+/// and POR merge executes on the PJRT client via the bucketed wrappers.
+/// Proves the three layers compose end to end; used by the engine's
+/// `CodecPjrt` backend.
+pub fn run_codec_attention_pjrt(
+    rt: &Runtime,
+    forest: &crate::kvforest::Forest,
+    store: &crate::kvforest::KvStore,
+    layer: usize,
+    batch: &crate::attention::codec_exec::QueryBatch,
+    plan: &crate::sched::Plan,
+) -> Result<Vec<Mat>> {
+    use crate::attention::codec_exec::stack_node_queries;
+    use std::collections::BTreeMap;
+    let g = batch.group_size();
+    let d = batch.d_head;
+
+    let task_queries: Vec<Mat> = plan
+        .tasks
+        .iter()
+        .map(|t| stack_node_queries(forest, batch, t.node, t.kv_head))
+        .collect();
+
+    let mut partials: Vec<Partial> = Vec::with_capacity(plan.subtasks.len());
+    for s in &plan.subtasks {
+        let q = &task_queries[s.task];
+        let (k, v) = store.node_kv(layer, s.node, s.kv_head, s.lo, s.hi);
+        let n = k.rows;
+        partials.push(run_pac(rt, q, &k, &v, n)?);
+    }
+
+    let mut task_subs: Vec<Vec<usize>> = vec![Vec::new(); plan.tasks.len()];
+    for (si, s) in plan.subtasks.iter().enumerate() {
+        task_subs[s.task].push(si);
+    }
+    for subs in &mut task_subs {
+        subs.sort_by_key(|&si| plan.subtasks[si].lo);
+    }
+    let mut node_task: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        node_task.insert((t.node, t.kv_head), ti);
+    }
+
+    let extract = |p: &Partial, row0: usize| Partial {
+        o: p.o.rows_slice(row0, row0 + g),
+        m: p.m[row0..row0 + g].to_vec(),
+        s: p.s[row0..row0 + g].to_vec(),
+    };
+
+    let mut outs = Vec::with_capacity(batch.rids.len());
+    for (ri, &rid) in batch.rids.iter().enumerate() {
+        let _ = ri;
+        let path = forest.path(rid).expect("request path");
+        let mut out = Mat::zeros(batch.n_q_heads, d);
+        for kvh in 0..batch.n_kv_heads {
+            let mut acc: Option<Partial> = None;
+            for &nid in path {
+                let Some(&ti) = node_task.get(&(nid, kvh)) else {
+                    continue;
+                };
+                let pos = forest.node(nid).requests.binary_search(&rid).unwrap();
+                for &si in &task_subs[ti] {
+                    let part = extract(&partials[si], pos * g);
+                    acc = Some(match acc {
+                        None => part,
+                        Some(prev) => run_por(rt, &prev, &part)?,
+                    });
+                }
+            }
+            let part = acc.unwrap_or_else(|| Partial::identity(g, d));
+            for j in 0..g {
+                out.row_mut(kvh * g + j).copy_from_slice(part.o.row(j));
+            }
+        }
+        outs.push(out);
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::pac::{pac_streamed, por_merge};
+    use crate::util::prng::Rng;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn pjrt_pac_matches_native() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let mut rng = Rng::new(21);
+        // Odd sizes force bucket padding: nq=3→4, n=200→256.
+        let q = randm(&mut rng, 3, 64);
+        let k = randm(&mut rng, 200, 64);
+        let v = randm(&mut rng, 200, 64);
+        let got = run_pac(&rt, &q, &k, &v, 137).unwrap();
+        let want = pac_streamed(&q, &k, &v, 137, 256);
+        assert!(
+            crate::tensor::max_abs_diff(&got.o, &want.o) < 1e-4,
+            "pjrt vs native mismatch"
+        );
+        for r in 0..3 {
+            assert!((got.m[r] - want.m[r]).abs() < 1e-5);
+            assert!((got.s[r] - want.s[r]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn pjrt_por_matches_native() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let mut rng = Rng::new(22);
+        let q = randm(&mut rng, 2, 64);
+        let mk = |rng: &mut Rng| {
+            let k = randm(rng, 100, 64);
+            let v = randm(rng, 100, 64);
+            pac_streamed(&q, &k, &v, 100, 64)
+        };
+        let (a, b) = (mk(&mut rng), mk(&mut rng));
+        let got = run_por(&rt, &a, &b).unwrap();
+        let want = por_merge(&a, &b);
+        assert!(crate::tensor::max_abs_diff(&got.o, &want.o) < 1e-5);
+    }
+}

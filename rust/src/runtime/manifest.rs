@@ -1,0 +1,232 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One AOT artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// PAC/POR: head dim and bucket sizes (0 when not applicable).
+    pub d: usize,
+    pub nq: usize,
+    pub n: usize,
+    /// Engine pieces: batch bucket.
+    pub batch: usize,
+    /// Declared input/output shapes: (type, dims).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// The engine model geometry recorded by aot.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+}
+
+/// Parsed manifest: artifacts by name + bucket grids + model info.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub nq_buckets: Vec<usize>,
+    pub n_buckets: Vec<usize>,
+    pub d_buckets: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub model: ModelInfo,
+    pub dir: String,
+}
+
+fn shapes(v: Option<&Json>) -> Vec<(String, Vec<usize>)> {
+    v.and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|e| {
+                    let ty = e.idx(0)?.as_str()?.to_string();
+                    let dims = e
+                        .idx(1)?
+                        .as_arr()?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect();
+                    Some((ty, dims))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn usizes(v: Option<&Json>) -> Vec<usize> {
+    v.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {path}: {e} (run `make artifacts`)"))?;
+        let v = json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &str) -> Result<Manifest, String> {
+        let mut artifacts = BTreeMap::new();
+        for e in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: no artifacts")?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("artifact without name")?
+                .to_string();
+            let g = |k: &str| e.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .unwrap_or(&format!("{name}.hlo.txt"))
+                        .to_string(),
+                    kind: e
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    d: g("d"),
+                    nq: g("nq"),
+                    n: g("n"),
+                    batch: g("batch"),
+                    inputs: shapes(e.get("inputs")),
+                    outputs: shapes(e.get("outputs")),
+                    name,
+                },
+            );
+        }
+        let buckets = v.get("buckets").ok_or("manifest: no buckets")?;
+        let m = v.get("model").ok_or("manifest: no model")?;
+        let mu = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(Manifest {
+            artifacts,
+            nq_buckets: usizes(buckets.get("nq")),
+            n_buckets: usizes(buckets.get("n")),
+            d_buckets: usizes(buckets.get("d")),
+            batch_buckets: usizes(buckets.get("batch")),
+            model: ModelInfo {
+                name: m
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("tiny")
+                    .to_string(),
+                vocab: mu("vocab"),
+                n_layers: mu("n_layers"),
+                n_q_heads: mu("n_q_heads"),
+                n_kv_heads: mu("n_kv_heads"),
+                d_head: mu("d_head"),
+                d_ff: mu("d_ff"),
+                rope_theta: m
+                    .get("rope_theta")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(10_000.0),
+            },
+            dir: dir.to_string(),
+        })
+    }
+
+    /// Smallest PAC bucket covering (nq, n) for head dim d.
+    pub fn pac_bucket(&self, d: usize, nq: usize, n: usize) -> Option<(usize, usize)> {
+        let nq_b = *self.nq_buckets.iter().find(|&&b| b >= nq)?;
+        let n_b = *self.n_buckets.iter().find(|&&b| b >= n)?;
+        let name = format!("pac_d{d}_nq{nq_b}_n{n_b}");
+        self.artifacts.contains_key(&name).then_some((nq_b, n_b))
+    }
+
+    pub fn pac_name(d: usize, nq_b: usize, n_b: usize) -> String {
+        format!("pac_d{d}_nq{nq_b}_n{n_b}")
+    }
+
+    pub fn por_bucket(&self, d: usize, nq: usize) -> Option<usize> {
+        let nq_b = *self.nq_buckets.iter().find(|&&b| b >= nq)?;
+        self.artifacts
+            .contains_key(&format!("por_d{d}_nq{nq_b}"))
+            .then_some(nq_b)
+    }
+
+    /// Smallest batch bucket covering `b`.
+    pub fn batch_bucket(&self, b: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&x| x >= b)
+    }
+
+    pub fn path_of(&self, name: &str) -> Option<String> {
+        self.artifacts
+            .get(name)
+            .map(|a| format!("{}/{}", self.dir, a.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        json::parse(
+            r#"{
+          "buckets": {"nq":[1,4,16,64], "n":[64,256,1024], "d":[64,128], "batch":[1,4,8]},
+          "model": {"name":"tiny","vocab":8192,"n_layers":4,"n_q_heads":8,
+                    "n_kv_heads":2,"d_head":64,"d_ff":1408,"rope_theta":10000.0},
+          "artifacts": [
+            {"name":"pac_d64_nq4_n256","file":"pac_d64_nq4_n256.hlo.txt","kind":"pac",
+             "d":64,"nq":4,"n":256,
+             "inputs":[["i32",[1]],["f32",[4,64]],["f32",[256,64]],["f32",[256,64]]],
+             "outputs":[["f32",[4,64]],["f32",[4]],["f32",[4]]]},
+            {"name":"por_d64_nq4","kind":"por","d":64,"nq":4,
+             "inputs":[],"outputs":[]}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::from_json(&sample(), "artifacts").unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts["pac_d64_nq4_n256"];
+        assert_eq!(a.kind, "pac");
+        assert_eq!(a.inputs[0], ("i32".to_string(), vec![1]));
+        assert_eq!(m.model.n_kv_heads, 2);
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let m = Manifest::from_json(&sample(), "artifacts").unwrap();
+        assert_eq!(m.pac_bucket(64, 3, 200), Some((4, 256)));
+        assert_eq!(m.pac_bucket(64, 4, 256), Some((4, 256)));
+        // No artifact for the bucket → None (sample only has one).
+        assert_eq!(m.pac_bucket(64, 5, 200), None);
+        assert_eq!(m.por_bucket(64, 2), Some(4));
+        assert_eq!(m.batch_bucket(3), Some(4));
+        assert_eq!(m.batch_bucket(9), None);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert!(m.artifacts.len() >= 40);
+            assert!(m.pac_bucket(128, 10, 5000).is_some());
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path. Python never runs at serving time.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (names, kinds,
+//!   shapes, bucket grids, engine model config).
+//! * [`client`] — the PJRT CPU client with a compile-on-demand executable
+//!   cache (one compiled executable per artifact, as the paper keeps one
+//!   kernel per tile config).
+//! * [`exec`] — typed wrappers: bucketed PAC / POR (pad + `n_valid`
+//!   masking) and the transformer pieces, converting between [`Mat`] and
+//!   PJRT literals.
+//!
+//! [`Mat`]: crate::tensor::Mat
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactInfo, Manifest};
+
+/// Default artifacts directory (overridable via `CODEC_ARTIFACTS`).
+pub fn artifacts_dir() -> String {
+    std::env::var("CODEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

@@ -1,0 +1,26 @@
+//! Task division and scheduling (§5.1).
+//!
+//! Each KV-cache node with a non-empty query set induces one *task*
+//! `T[i] = (n_q[i], n[i])`. Tasks may be divided vertically (in the KV
+//! dimension) into `b_k[i]` subtasks — horizontal division is fixed to
+//! `b_q = 1` per the paper's observation that splitting the query
+//! dimension forfeits the shared KV read. Subtasks are then assigned to
+//! `m` thread blocks minimizing the makespan (Eq. 3) — NP-hard, so:
+//!
+//! 1. a **lower bound** `cost_l` on the optimum via binary search over
+//!    the average-cost inequality (Eq. 4),
+//! 2. a **division cap** `b_k[i] ≤ ⌈C_est(n_q, n)/cost_l⌉` (Eq. 5) that
+//!    pins most small tasks to `b_k = 1`,
+//! 3. a bounded **grid search** (coordinate descent over per-task `b_k`
+//!    with greedy LPT scheduling as the evaluator).
+//!
+//! [`naive`] is the fixed-division baseline of §7.4 (Fig. 10).
+
+pub mod divider;
+pub mod naive;
+pub mod plan;
+pub mod scheduler;
+
+pub use divider::{divide_and_schedule, DividerConfig};
+pub use plan::{tasks_from_forest, Plan, Subtask, Task};
+pub use scheduler::lpt_schedule;

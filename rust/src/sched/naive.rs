@@ -1,0 +1,86 @@
+//! The naive fixed-division baseline of §7.4 (Fig. 10): every task is
+//! split into the same number of subtasks regardless of its workload,
+//! then LPT-scheduled. `splits = 1` degenerates to no division at all.
+
+use super::plan::{materialize_subtasks, Plan, Task};
+use super::scheduler::lpt_schedule;
+use crate::cost::Estimator;
+
+/// Split every task into exactly `splits` even vertical slices (clamped
+/// to the task length) and LPT-schedule on `num_blocks`.
+pub fn naive_plan(tasks: Vec<Task>, est: &Estimator, num_blocks: usize, splits: usize) -> Plan {
+    let divisions: Vec<usize> = tasks.iter().map(|t| splits.clamp(1, t.n)).collect();
+    let subtasks = materialize_subtasks(&tasks, &divisions, est);
+    let mut actual_div = vec![0usize; tasks.len()];
+    for s in &subtasks {
+        actual_div[s.task] += 1;
+    }
+    let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
+    let (assignment, makespan_ms) = lpt_schedule(&costs, num_blocks);
+    let plan = Plan {
+        tasks,
+        divisions: actual_div,
+        subtasks,
+        assignment,
+        makespan_ms,
+        lower_bound_ms: 0.0,
+    };
+    debug_assert_eq!(plan.check_invariants(), Ok(()));
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::divider::{divide_and_schedule, DividerConfig};
+
+    fn task(node: usize, nq: usize, n: usize) -> Task {
+        Task {
+            node,
+            kv_head: 0,
+            nq,
+            n,
+        }
+    }
+
+    #[test]
+    fn splits_every_task_equally() {
+        let est = Estimator::table2();
+        let plan = naive_plan(vec![task(1, 4, 1000), task(2, 1, 10)], &est, 8, 4);
+        assert_eq!(plan.divisions, vec![4, 4]);
+        plan.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn splits_one_is_no_division() {
+        let est = Estimator::table2();
+        let plan = naive_plan(vec![task(1, 4, 1000)], &est, 8, 1);
+        assert_eq!(plan.num_subtasks(), 1);
+    }
+
+    #[test]
+    fn adaptive_beats_or_matches_naive_on_skewed_load() {
+        // The Fig. 10 claim: CoDec's divider ≥ the best fixed division.
+        let est = Estimator::table2();
+        let mut tasks = vec![task(0, 64, 120_000)];
+        for i in 1..=16 {
+            tasks.push(task(i, 1, 128));
+        }
+        let adaptive = divide_and_schedule(
+            tasks.clone(),
+            &est,
+            &DividerConfig {
+                num_blocks: 108,
+                ..Default::default()
+            },
+        )
+        .makespan_ms;
+        let best_naive = (1..=64)
+            .map(|s| naive_plan(tasks.clone(), &est, 108, s).makespan_ms)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            adaptive <= best_naive * 1.05,
+            "adaptive {adaptive} vs best naive {best_naive}"
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Task and plan types shared by the divider, the executors and gpusim.
+
+use crate::cost::Estimator;
+use crate::kvforest::{Forest, NodeId};
+
+/// One partial-attention task: the computation between a KV-cache node
+/// (or one kv-head copy of it) and its query set (§5.1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Task {
+    pub node: NodeId,
+    /// Which kv-head copy this task is (tasks are replicated per kv head
+    /// when planning a real model's attention op).
+    pub kv_head: usize,
+    /// Query rows n_q (sharing degree × GQA group size).
+    pub nq: usize,
+    /// KV length n of the node.
+    pub n: usize,
+}
+
+/// A vertical slice [lo, hi) of a task, assigned to one thread block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Subtask {
+    pub task: usize,
+    pub node: NodeId,
+    pub kv_head: usize,
+    pub nq: usize,
+    pub lo: usize,
+    pub hi: usize,
+    /// Estimated execution time (ms) from the cost model.
+    pub cost_ms: f64,
+}
+
+impl Subtask {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// A complete division + scheduling decision.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub tasks: Vec<Task>,
+    /// b_k per task (vertical split counts).
+    pub divisions: Vec<usize>,
+    pub subtasks: Vec<Subtask>,
+    /// Block → indices into `subtasks`.
+    pub assignment: Vec<Vec<usize>>,
+    /// Predicted makespan over blocks (ms).
+    pub makespan_ms: f64,
+    /// The Eq. 4 lower bound the divider derived (ms).
+    pub lower_bound_ms: f64,
+}
+
+impl Plan {
+    /// Number of subtasks each (request-visible) task was divided into.
+    pub fn num_subtasks(&self) -> usize {
+        self.subtasks.len()
+    }
+
+    /// Sum of estimated subtask costs (ms) — the total work.
+    pub fn total_work_ms(&self) -> f64 {
+        self.subtasks.iter().map(|s| s.cost_ms).sum()
+    }
+
+    /// Block utilization = average block busy time / makespan.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_ms <= 0.0 || self.assignment.is_empty() {
+            return 0.0;
+        }
+        let avg = self.total_work_ms() / self.assignment.len() as f64;
+        avg / self.makespan_ms
+    }
+
+    /// Sanity checks: every subtask scheduled exactly once, ranges tile
+    /// their task exactly, costs positive.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.subtasks.len()];
+        for block in &self.assignment {
+            for &s in block {
+                if s >= self.subtasks.len() {
+                    return Err(format!("assignment references subtask {s}"));
+                }
+                if seen[s] {
+                    return Err(format!("subtask {s} scheduled twice"));
+                }
+                seen[s] = true;
+            }
+        }
+        if seen.iter().any(|x| !x) {
+            return Err("unscheduled subtask".into());
+        }
+        // Per task: subtask ranges must tile [0, n).
+        for (ti, task) in self.tasks.iter().enumerate() {
+            let mut ranges: Vec<(usize, usize)> = self
+                .subtasks
+                .iter()
+                .filter(|s| s.task == ti)
+                .map(|s| (s.lo, s.hi))
+                .collect();
+            ranges.sort();
+            if ranges.is_empty() {
+                return Err(format!("task {ti} has no subtasks"));
+            }
+            if ranges[0].0 != 0 || ranges.last().unwrap().1 != task.n {
+                return Err(format!("task {ti} ranges don't span [0,{})", task.n));
+            }
+            for w in ranges.windows(2) {
+                if w[0].1 != w[1].0 {
+                    return Err(format!("task {ti} ranges gap at {}", w[0].1));
+                }
+            }
+            if ranges.len() != self.divisions[ti] {
+                return Err(format!(
+                    "task {ti}: {} ranges but division {}",
+                    ranges.len(),
+                    self.divisions[ti]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the task list for one attention op over the forest: one task per
+/// (live node with a non-empty query set) × kv-head, with
+/// n_q = degree · group_size (the GQA stacking of §4 "load KV once,
+/// reuse for multiple queries").
+pub fn tasks_from_forest(forest: &Forest, n_kv_heads: usize, group_size: usize) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for (nid, node) in forest.alive_nodes() {
+        if node.degree() == 0 || node.len == 0 {
+            continue;
+        }
+        for h in 0..n_kv_heads {
+            tasks.push(Task {
+                node: nid,
+                kv_head: h,
+                nq: node.degree() * group_size,
+                n: node.len,
+            });
+        }
+    }
+    tasks
+}
+
+/// Materialize subtasks for a division vector: task i split into
+/// `div[i]` contiguous near-even ranges, costed by the estimator.
+pub fn materialize_subtasks(tasks: &[Task], divisions: &[usize], est: &Estimator) -> Vec<Subtask> {
+    let mut subs = Vec::new();
+    for (ti, task) in tasks.iter().enumerate() {
+        let b = divisions[ti].max(1).min(task.n);
+        let base = task.n / b;
+        let rem = task.n % b;
+        let mut lo = 0;
+        for j in 0..b {
+            let len = base + if j < rem { 1 } else { 0 };
+            let hi = lo + len;
+            subs.push(Subtask {
+                task: ti,
+                node: task.node,
+                kv_head: task.kv_head,
+                nq: task.nq,
+                lo,
+                hi,
+                cost_ms: est.estimate_ms(task.nq, len),
+            });
+            lo = hi;
+        }
+        debug_assert_eq!(lo, task.n);
+    }
+    subs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvforest::VIRTUAL_ROOT;
+
+    fn two_level_forest(bs: usize, shared: usize, private: usize) -> Forest {
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, shared);
+        for r in 0..bs {
+            let leaf = f.add_synthetic(root, private);
+            f.assign_synthetic_request(r as u64, leaf);
+        }
+        f
+    }
+
+    #[test]
+    fn tasks_cover_all_live_nodes_per_head() {
+        let f = two_level_forest(4, 1000, 50);
+        let tasks = tasks_from_forest(&f, 2, 4);
+        // (1 shared + 4 private) × 2 heads
+        assert_eq!(tasks.len(), 10);
+        let shared: Vec<_> = tasks.iter().filter(|t| t.n == 1000).collect();
+        assert_eq!(shared.len(), 2);
+        assert_eq!(shared[0].nq, 4 * 4); // degree 4 × group 4
+        let private: Vec<_> = tasks.iter().filter(|t| t.n == 50).collect();
+        assert_eq!(private.len(), 8);
+        assert_eq!(private[0].nq, 4);
+    }
+
+    #[test]
+    fn materialize_even_division() {
+        let est = Estimator::table2();
+        let tasks = vec![Task {
+            node: 1,
+            kv_head: 0,
+            nq: 4,
+            n: 10,
+        }];
+        let subs = materialize_subtasks(&tasks, &[3], &est);
+        assert_eq!(subs.len(), 3);
+        let lens: Vec<usize> = subs.iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(subs[0].lo, 0);
+        assert_eq!(subs[2].hi, 10);
+    }
+
+    #[test]
+    fn division_clamped_to_n() {
+        let est = Estimator::table2();
+        let tasks = vec![Task {
+            node: 1,
+            kv_head: 0,
+            nq: 1,
+            n: 2,
+        }];
+        let subs = materialize_subtasks(&tasks, &[10], &est);
+        assert_eq!(subs.len(), 2); // can't split 2 rows 10 ways
+    }
+}

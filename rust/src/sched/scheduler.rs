@@ -1,0 +1,121 @@
+//! Greedy LPT (longest processing time) list scheduling.
+//!
+//! The classic Graham bound applies: LPT is a (4/3 − 1/3m)-approximation
+//! to minimum makespan, which — combined with the Eq. 4 lower bound — is
+//! how the divider certifies its plans.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Total-ordered f64 for heap keys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Assign items with the given costs to `m` blocks, longest first, each
+/// to the currently least-loaded block. Returns (assignment, makespan).
+pub fn lpt_schedule(costs: &[f64], m: usize) -> (Vec<Vec<usize>>, f64) {
+    assert!(m > 0);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+
+    let mut assignment = vec![Vec::new(); m];
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize)>> =
+        (0..m).map(|b| Reverse((OrdF64(0.0), b))).collect();
+    for i in order {
+        let Reverse((OrdF64(load), b)) = heap.pop().unwrap();
+        assignment[b].push(i);
+        heap.push(Reverse((OrdF64(load + costs[i]), b)));
+    }
+    let makespan = heap
+        .into_iter()
+        .map(|Reverse((OrdF64(load), _))| load)
+        .fold(0.0, f64::max);
+    (assignment, makespan)
+}
+
+/// Makespan only (cheaper inner loop for the divider's grid search).
+pub fn lpt_makespan(costs: &[f64], m: usize) -> f64 {
+    assert!(m > 0);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+    let mut heap: BinaryHeap<Reverse<OrdF64>> = (0..m).map(|_| Reverse(OrdF64(0.0))).collect();
+    for i in order {
+        let Reverse(OrdF64(load)) = heap.pop().unwrap();
+        heap.push(Reverse(OrdF64(load + costs[i])));
+    }
+    heap.into_iter()
+        .map(|Reverse(OrdF64(load))| load)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_split() {
+        let (asg, ms) = lpt_schedule(&[2.0, 2.0, 2.0, 2.0], 2);
+        assert_eq!(asg.iter().map(|b| b.len()).sum::<usize>(), 4);
+        assert!((ms - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn longest_first_balances() {
+        // {5, 3, 3, 2, 2, 1} on 2 blocks: LPT gives 8/8.
+        let ms = lpt_makespan(&[5.0, 3.0, 3.0, 2.0, 2.0, 1.0], 2);
+        assert!((ms - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_block_sums() {
+        let ms = lpt_makespan(&[1.0, 2.0, 3.0], 1);
+        assert!((ms - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_blocks_than_items() {
+        let (asg, ms) = lpt_schedule(&[4.0, 1.0], 8);
+        assert_eq!(asg.len(), 8);
+        assert!((ms - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_items() {
+        let (asg, ms) = lpt_schedule(&[], 3);
+        assert_eq!(asg.len(), 3);
+        assert_eq!(ms, 0.0);
+    }
+
+    #[test]
+    fn makespan_matches_schedule() {
+        let costs: Vec<f64> = (1..40).map(|i| (i as f64 * 7.3) % 11.0 + 0.1).collect();
+        let (asg, ms) = lpt_schedule(&costs, 5);
+        let max_load = asg
+            .iter()
+            .map(|b| b.iter().map(|&i| costs[i]).sum::<f64>())
+            .fold(0.0, f64::max);
+        assert!((ms - max_load).abs() < 1e-9);
+        assert!((ms - lpt_makespan(&costs, 5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lpt_within_graham_bound_of_lower_bound() {
+        let costs: Vec<f64> = (0..100).map(|i| ((i * 37) % 19 + 1) as f64).collect();
+        let m = 7;
+        let ms = lpt_makespan(&costs, m);
+        let lb = (costs.iter().sum::<f64>() / m as f64)
+            .max(costs.iter().cloned().fold(0.0, f64::max));
+        assert!(ms <= lb * (4.0 / 3.0) + 1e-9, "ms={ms} lb={lb}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Row-major f32 matrices and the small math kernels the CPU-native
+//! executors are built on.
+//!
+//! This is deliberately minimal: the serving hot path runs through the
+//! AOT-compiled PJRT executables; `Mat` exists for (a) the rust-native
+//! oracle/baseline attention executors used by tests and the traffic
+//! model, (b) weight/KV staging, and (c) benches that need raw numerics
+//! without a PJRT client.
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy a contiguous row range into a new matrix.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack the given rows (by index) into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Append all rows of `other` (same col count).
+    pub fn push_rows(&mut self, other: &Mat) {
+        assert_eq!(self.cols, other.cols);
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: the autovectorizer reliably turns this into SIMD.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// C = A (m×k) · B (k×n). Cache-friendly ikj loop.
+pub fn matmul_nn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            axpy(aik, b.row(kk), crow);
+        }
+    }
+    c
+}
+
+/// C = A (m×k) · B^T (n×k) → m×n. The scores matmul q·kᵀ.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for j in 0..b.rows {
+            *c.at_mut(i, j) = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// Row-wise softmax in place; returns per-row (max, denom) stats.
+/// Entries equal to `f32::NEG_INFINITY` contribute zero mass.
+pub fn softmax_rows(m: &mut Mat) -> Vec<(f32, f32)> {
+    let mut stats = Vec::with_capacity(m.rows);
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for x in row.iter_mut() {
+            if mx == f32::NEG_INFINITY {
+                *x = 0.0;
+            } else {
+                *x = (*x - mx).exp();
+                denom += *x;
+            }
+        }
+        if denom > 0.0 {
+            for x in row.iter_mut() {
+                *x /= denom;
+            }
+        }
+        stats.push((mx, denom));
+    }
+    stats
+}
+
+/// Max absolute elementwise difference.
+pub fn max_abs_diff(a: &Mat, b: &Mat) -> f32 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// allclose with combined absolute + relative tolerance.
+pub fn allclose(a: &Mat, b: &Mat, rtol: f32, atol: f32) -> bool {
+    if (a.rows, a.cols) != (b.rows, b.cols) {
+        return false;
+    }
+    a.data
+        .iter()
+        .zip(&b.data)
+        .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_nn_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul_nn(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_nn_with_transpose() {
+        let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.1);
+        let b = Mat::from_fn(4, 5, |r, c| (r + c) as f32 * 0.2);
+        let bt = Mat::from_fn(5, 4, |r, c| b.at(c, r));
+        assert!(allclose(&matmul_nt(&a, &b), &matmul_nn(&a, &bt), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let x: Vec<f32> = (0..13).map(|i| i as f32 * 0.3).collect();
+        let y: Vec<f32> = (0..13).map(|i| (13 - i) as f32 * 0.7).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let stats = softmax_rows(&mut m);
+        for r in 0..2 {
+            let sum: f32 = m.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(stats[0].0, 3.0);
+        assert_eq!(stats[1].0, 1.0);
+    }
+
+    #[test]
+    fn softmax_handles_masked_row() {
+        let mut m = Mat::from_vec(1, 2, vec![f32::NEG_INFINITY, f32::NEG_INFINITY]);
+        let stats = softmax_rows(&mut m);
+        assert_eq!(m.data, vec![0.0, 0.0]);
+        assert_eq!(stats[0].1, 0.0);
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let m = Mat::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.data, vec![6.0, 7.0, 0.0, 1.0]);
+        let s = m.rows_slice(1, 3);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn push_rows_grows() {
+        let mut m = Mat::zeros(1, 2);
+        m.push_row(&[1.0, 2.0]);
+        m.push_rows(&Mat::from_vec(1, 2, vec![3.0, 4.0]));
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.row(2), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Mat::from_vec(2, 2, vec![1.0]);
+    }
+}

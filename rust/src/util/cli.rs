@@ -1,0 +1,175 @@
+//! Tiny typed CLI parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; typed getters with defaults; and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Parsed arguments: options (last occurrence wins), flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        iter: I,
+        known_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        return Err(CliError(format!("option --{body} needs a value")));
+                    }
+                    args.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    return Err(CliError(format!("option --{body} needs a value")));
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--sizes 512,1024`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{name}: bad element '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(
+            &["--n", "5", "--verbose", "--name=x", "pos1"],
+            &["verbose"],
+        );
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!(!a.flag("v"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--sizes", "1,2, 3"], &[]);
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.usize_list_or("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--n", "1", "--", "--not-an-opt"], &[]);
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--n".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["--n", "xyz"], &[]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["--n", "1", "--n", "2"], &[]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,58 @@
+//! Leveled stderr logger wired to the `log` crate facade.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl}] {}", record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Level from `CODEC_LOG` (error|warn|info|debug|trace),
+/// default info. Safe to call more than once (subsequent calls are no-ops).
+pub fn init() {
+    let level = match std::env::var("CODEC_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger {
+        start: Instant::now(),
+    });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_safe() {
+        super::init();
+        super::init();
+        log::info!("logging test line");
+    }
+}

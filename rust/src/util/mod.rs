@@ -1,0 +1,19 @@
+//! In-repo substrates.
+//!
+//! This build environment is fully offline and the usual ecosystem crates
+//! (serde, clap, rand, criterion, tokio) are not available, so the pieces
+//! of them this project needs are implemented here from scratch:
+//!
+//! * [`json`] — a complete JSON parser/emitter (manifest, profiles, traces)
+//! * [`prng`] — SplitMix64 / normal sampling (workloads, weights)
+//! * [`cli`] — a small typed argument parser for the `codec` binary
+//! * [`stats`] — summary statistics used by the bench harness
+//! * [`threadpool`] — a scoped worker pool for the parallel executors
+//! * [`logging`] — a leveled stderr logger
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,120 @@
+//! Scoped data-parallel helpers (tokio/rayon are unavailable offline).
+//!
+//! The executors need exactly one primitive: run N independent closures on
+//! W workers and collect results in order. `parallel_map` implements that
+//! with `std::thread::scope` and an atomic work index — no allocation per
+//! item beyond the results vector, no channels on the hot path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: the `CODEC_THREADS` env var if
+/// set, else available parallelism, else 4.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("CODEC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` on `workers` threads; results are
+/// returned in index order. `f` must be `Sync` (called concurrently).
+pub fn parallel_map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || n == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    // Hand each worker a disjoint view of the results through a Mutex of
+    // slot pointers is overkill; instead collect (idx, val) per worker and
+    // scatter at the end. Keeps the hot loop lock-free.
+    let collected: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    for (i, v) in collected.into_inner().unwrap() {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn parallel_map<I, T, F>(items: &[I], workers: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    parallel_map_indexed(items.len(), workers, |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map_indexed(100, 8, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_once() {
+        let counter = AtomicU64::new(0);
+        let out = parallel_map_indexed(1000, 7, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            ()
+        });
+        assert_eq!(out.len(), 1000);
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(parallel_map_indexed::<usize, _>(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map_indexed(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        assert_eq!(parallel_map_indexed(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn slice_variant() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 2, |x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

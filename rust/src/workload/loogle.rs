@@ -1,0 +1,203 @@
+//! Synthetic LooGLE-like long-context document-QA workload (§7.1, Fig. 8).
+//!
+//! **Substitution note (DESIGN.md §3).** The paper evaluates on the
+//! LooGLE dataset (arXiv / Wikipedia / movie-script documents, average
+//! prompt 20.9k–36.4k tokens, 91% sharing rate). The dataset is not
+//! available offline, so this generator reproduces its *statistics*:
+//! per-category document-length distributions, multiple questions per
+//! document (the sharing structure), and short question suffixes. Token
+//! ids are synthetic; the prefix-sharing structure — the only thing the
+//! kernels see — matches the dataset's.
+
+use crate::kvforest::Forest;
+use crate::util::prng::Rng;
+
+/// The three LooGLE categories (Fig. 8a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoogleCategory {
+    ArXiv,
+    Wiki,
+    Scripts,
+}
+
+impl LoogleCategory {
+    pub fn all() -> [LoogleCategory; 3] {
+        [
+            LoogleCategory::ArXiv,
+            LoogleCategory::Wiki,
+            LoogleCategory::Scripts,
+        ]
+    }
+
+    /// Mean document length in tokens (paper Fig. 8a).
+    pub fn mean_tokens(self) -> usize {
+        match self {
+            LoogleCategory::ArXiv => 20_887,
+            LoogleCategory::Wiki => 21_017,
+            LoogleCategory::Scripts => 36_412,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LoogleCategory::ArXiv => "arXiv",
+            LoogleCategory::Wiki => "Wiki",
+            LoogleCategory::Scripts => "Scripts",
+        }
+    }
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct LoogleGen {
+    pub category: LoogleCategory,
+    /// Documents in the corpus.
+    pub num_docs: usize,
+    /// Questions per document (sharing degree; the dataset's 91% sharing
+    /// rate corresponds to ~10 questions over ~21k-token documents with
+    /// ~50-token questions).
+    pub questions_per_doc: usize,
+    /// Mean question length in tokens.
+    pub question_tokens: usize,
+    /// Length jitter (fraction of the mean, uniform).
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for LoogleGen {
+    fn default() -> Self {
+        LoogleGen {
+            category: LoogleCategory::Wiki,
+            num_docs: 4,
+            questions_per_doc: 10,
+            question_tokens: 50,
+            jitter: 0.2,
+            seed: 1,
+        }
+    }
+}
+
+impl LoogleGen {
+    fn jittered(&self, rng: &mut Rng, mean: usize) -> usize {
+        let j = 1.0 + (rng.next_f64() * 2.0 - 1.0) * self.jitter;
+        ((mean as f64 * j).round() as usize).max(1)
+    }
+
+    /// Build the forest topology directly (for the gpusim benches).
+    pub fn build_forest(&self) -> Forest {
+        let mut rng = Rng::new(self.seed);
+        let mut f = Forest::new();
+        let mut rid = 0u64;
+        for _ in 0..self.num_docs {
+            let doc_len = self.jittered(&mut rng, self.category.mean_tokens());
+            let doc = f.add_synthetic(crate::kvforest::VIRTUAL_ROOT, doc_len);
+            for _ in 0..self.questions_per_doc {
+                let qlen = self.jittered(&mut rng, self.question_tokens);
+                let leaf = f.add_synthetic(doc, qlen);
+                f.assign_synthetic_request(rid, leaf);
+                rid += 1;
+            }
+        }
+        debug_assert_eq!(f.check_invariants(), Ok(()));
+        f
+    }
+
+    /// Generate token-level prompts (for the engine): each request is
+    /// document tokens ++ question tokens. Documents are deterministic
+    /// per (seed, doc index) so requests over the same document share the
+    /// prefix exactly.
+    pub fn build_prompts(&self, scale_down: usize) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(self.seed);
+        let mut prompts = Vec::new();
+        for doc in 0..self.num_docs {
+            let mean = (self.category.mean_tokens() / scale_down.max(1)).max(4);
+            let doc_len = self.jittered(&mut rng, mean);
+            let mut doc_rng = Rng::new(self.seed ^ (doc as u64 + 1) << 17);
+            let doc_tokens: Vec<u32> = (0..doc_len)
+                .map(|_| 100 + doc_rng.below(7000) as u32)
+                .collect();
+            for q in 0..self.questions_per_doc {
+                let qlen = self
+                    .jittered(&mut rng, (self.question_tokens / scale_down.max(1)).max(2));
+                let mut qrng = Rng::new(self.seed ^ 0xBEEF ^ ((doc * 1000 + q) as u64));
+                let mut p = doc_tokens.clone();
+                p.extend((0..qlen).map(|_| 100 + qrng.below(7000) as u32));
+                prompts.push(p);
+            }
+        }
+        prompts
+    }
+
+    /// The dataset's sharing rate: 1 − deduplicated/logical tokens.
+    pub fn sharing_rate(&self) -> f64 {
+        let f = self.build_forest();
+        1.0 - f.total_tokens() as f64 / f.logical_tokens() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forest_matches_corpus_shape() {
+        let g = LoogleGen {
+            num_docs: 3,
+            questions_per_doc: 5,
+            ..Default::default()
+        };
+        let f = g.build_forest();
+        assert_eq!(f.num_requests(), 15);
+        // 3 docs + 15 question leaves.
+        assert_eq!(f.alive_nodes().count(), 18);
+    }
+
+    #[test]
+    fn sharing_rate_matches_paper() {
+        // Paper: LooGLE sharing rate 91% (avg prompt 23,474 tokens).
+        let g = LoogleGen::default();
+        let f = g.build_forest();
+        let rate = 1.0 - f.total_tokens() as f64 / f.logical_tokens() as f64;
+        assert!(rate > 0.85 && rate < 0.95, "sharing rate = {rate:.3}");
+    }
+
+    #[test]
+    fn prompts_share_document_prefix() {
+        let g = LoogleGen {
+            num_docs: 2,
+            questions_per_doc: 3,
+            seed: 9,
+            ..Default::default()
+        };
+        let prompts = g.build_prompts(100);
+        assert_eq!(prompts.len(), 6);
+        // Questions on the same doc share its prefix…
+        let common: usize = prompts[0]
+            .iter()
+            .zip(&prompts[1])
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert!(common >= prompts[0].len() / 2);
+        // …across docs they diverge early.
+        let cross: usize = prompts[0]
+            .iter()
+            .zip(&prompts[3])
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert!(cross < 8, "cross-doc common prefix = {cross}");
+    }
+
+    #[test]
+    fn scripts_longer_than_wiki() {
+        assert!(LoogleCategory::Scripts.mean_tokens() > LoogleCategory::Wiki.mean_tokens());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g = LoogleGen {
+            seed: 5,
+            ..Default::default()
+        };
+        assert_eq!(g.build_prompts(100), g.build_prompts(100));
+    }
+}

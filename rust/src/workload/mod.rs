@@ -1,0 +1,9 @@
+//! Workload generators: the paper's synthetic prefix trees (§7.2) and a
+//! LooGLE-like long-context document-QA generator (§7.1, Fig. 8).
+
+pub mod loogle;
+pub mod trace;
+pub mod treegen;
+
+pub use loogle::{LoogleCategory, LoogleGen};
+pub use treegen::{degenerate_tree, full_kary_tree, shared_ratio_tree, speculative_tree, two_level_tree};

@@ -1,0 +1,101 @@
+//! Request traces: a JSON format for replayable engine workloads.
+
+use crate::util::json::{self, Json};
+
+/// One trace entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Submission delay relative to trace start, milliseconds.
+    pub at_ms: f64,
+}
+
+/// A replayable workload trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::from_pairs([
+                        (
+                            "prompt",
+                            Json::Arr(e.prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+                        ),
+                        ("max_new_tokens", Json::from(e.max_new_tokens)),
+                        ("at_ms", Json::Num(e.at_ms)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Trace, String> {
+        let arr = v.as_arr().ok_or("trace: not an array")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let prompt = e
+                .get("prompt")
+                .and_then(Json::as_arr)
+                .ok_or("trace: entry without prompt")?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as u32).ok_or("bad token"))
+                .collect::<Result<Vec<u32>, _>>()?;
+            entries.push(TraceEntry {
+                prompt,
+                max_new_tokens: e
+                    .get("max_new_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(16),
+                at_ms: e.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        Ok(Trace { entries })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, json::emit(&self.to_json()))
+    }
+
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Trace::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Trace {
+            entries: vec![
+                TraceEntry {
+                    prompt: vec![1, 2, 3],
+                    max_new_tokens: 8,
+                    at_ms: 0.0,
+                },
+                TraceEntry {
+                    prompt: vec![1, 2, 9],
+                    max_new_tokens: 4,
+                    at_ms: 12.5,
+                },
+            ],
+        };
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::from_json(&json::parse("{}").unwrap()).is_err());
+        assert!(Trace::from_json(&json::parse(r#"[{"no_prompt":1}]"#).unwrap()).is_err());
+    }
+}

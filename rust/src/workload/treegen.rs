@@ -1,0 +1,177 @@
+//! Synthetic prefix-tree workloads (§7.2).
+//!
+//! These build forest *topologies* (lengths + request assignments, no KV
+//! payloads) for the gpusim benches. Every generator mirrors one of the
+//! paper's workload axes: sequence length, batch size, tree depth,
+//! shared-prefix ratio, tree shape (k-ary / degenerate).
+
+use crate::kvforest::{Forest, NodeId, VIRTUAL_ROOT};
+
+/// The paper's default: a 2-level tree, one root chunk shared by all
+/// requests plus one private leaf per request.
+pub fn two_level_tree(bs: usize, shared_len: usize, private_len: usize) -> Forest {
+    let mut f = Forest::new();
+    let root = if shared_len > 0 {
+        f.add_synthetic(VIRTUAL_ROOT, shared_len)
+    } else {
+        VIRTUAL_ROOT
+    };
+    for r in 0..bs {
+        let leaf = f.add_synthetic(root, private_len.max(1));
+        f.assign_synthetic_request(r as u64, leaf);
+    }
+    debug_assert_eq!(f.check_invariants(), Ok(()));
+    f
+}
+
+/// Full k-ary tree of the given depth; every node holds `node_len`
+/// tokens; one request per leaf.
+pub fn full_kary_tree(arity: usize, depth: usize, node_len: usize) -> Forest {
+    assert!(arity >= 1 && depth >= 1);
+    let mut f = Forest::new();
+    let mut frontier = vec![VIRTUAL_ROOT];
+    for _ in 0..depth {
+        let mut next = Vec::with_capacity(frontier.len() * arity);
+        for &p in &frontier {
+            for _ in 0..arity {
+                next.push(f.add_synthetic(p, node_len));
+            }
+        }
+        frontier = next;
+    }
+    for (r, &leaf) in frontier.iter().enumerate() {
+        f.assign_synthetic_request(r as u64, leaf);
+    }
+    debug_assert_eq!(f.check_invariants(), Ok(()));
+    f
+}
+
+/// Degenerate tree (DT in §7.2): a left-spine chain — at every level the
+/// left child keeps descending while the right child is a request leaf.
+/// Produces maximal skew between node query-set sizes.
+pub fn degenerate_tree(depth: usize, node_len: usize) -> Forest {
+    assert!(depth >= 1);
+    let mut f = Forest::new();
+    let mut spine = VIRTUAL_ROOT;
+    let mut rid = 0u64;
+    let mut leaves: Vec<NodeId> = Vec::new();
+    for level in 0..depth {
+        spine = f.add_synthetic(spine, node_len);
+        // A request leaf hanging off the spine at this level.
+        let leaf = f.add_synthetic(spine, node_len);
+        leaves.push(leaf);
+        let _ = level;
+    }
+    // Deepest spine node also hosts a request directly.
+    leaves.push(spine);
+    for &leaf in &leaves {
+        f.assign_synthetic_request(rid, leaf);
+        rid += 1;
+    }
+    debug_assert_eq!(f.check_invariants(), Ok(()));
+    f
+}
+
+/// Two-level tree with a controlled shared-token ratio at fixed total
+/// per-request context (`ctx`): shared = ratio·ctx, private = rest.
+pub fn shared_ratio_tree(bs: usize, ctx: usize, ratio: f64) -> Forest {
+    assert!((0.0..=1.0).contains(&ratio));
+    let shared = (ctx as f64 * ratio).round() as usize;
+    let private = ctx - shared;
+    two_level_tree(bs, shared, private.max(1))
+}
+
+/// Speculative-decoding verification trees (§2.5): a shared context of
+/// `ctx` tokens plus a draft token tree of the given depth/width — every
+/// node holds exactly one draft token, one "verification query" request
+/// per tree node (SpecInfer-style tree verification). Maximal node count,
+/// minimal node length: the stress case for reduction-launch overhead.
+pub fn speculative_tree(ctx: usize, draft_depth: usize, draft_width: usize) -> Forest {
+    let mut f = Forest::new();
+    let root = f.add_synthetic(VIRTUAL_ROOT, ctx.max(1));
+    let mut frontier = vec![root];
+    let mut rid = 0u64;
+    for _ in 0..draft_depth {
+        let mut next = Vec::new();
+        for &p in &frontier {
+            for _ in 0..draft_width {
+                let node = f.add_synthetic(p, 1); // one draft token
+                f.assign_synthetic_request(rid, node);
+                rid += 1;
+                next.push(node);
+            }
+        }
+        frontier = next;
+    }
+    debug_assert_eq!(f.check_invariants(), Ok(()));
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_level_shape() {
+        let f = two_level_tree(8, 1000, 50);
+        assert_eq!(f.num_requests(), 8);
+        assert_eq!(f.total_tokens(), 1000 + 8 * 50);
+        assert_eq!(f.logical_tokens(), 8 * 1050);
+        assert!(f.mean_sharing_degree() > 5.0);
+    }
+
+    #[test]
+    fn kary_counts() {
+        let f = full_kary_tree(2, 3, 100);
+        // 2 + 4 + 8 nodes, 8 requests.
+        assert_eq!(f.num_requests(), 8);
+        assert_eq!(f.total_tokens(), (2 + 4 + 8) * 100);
+        // Each request's context = depth × node_len.
+        assert_eq!(f.logical_tokens(), 8 * 3 * 100);
+    }
+
+    #[test]
+    fn ternary_wider_than_binary() {
+        let b = full_kary_tree(2, 2, 10);
+        let t = full_kary_tree(3, 2, 10);
+        assert!(t.num_requests() > b.num_requests());
+    }
+
+    #[test]
+    fn degenerate_is_skewed() {
+        let f = degenerate_tree(6, 100);
+        assert_eq!(f.num_requests(), 7);
+        // The top spine node is shared by all 7 requests; the deepest
+        // leaf by exactly 1 → heavy skew in query-set sizes.
+        let degrees: Vec<usize> = f.alive_nodes().map(|(_, n)| n.degree()).collect();
+        assert_eq!(degrees.iter().max(), Some(&7));
+        assert_eq!(degrees.iter().min(), Some(&1));
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn speculative_tree_shape() {
+        let f = speculative_tree(10_000, 3, 2);
+        // 2 + 4 + 8 draft nodes, one request each.
+        assert_eq!(f.num_requests(), 14);
+        // Every draft node holds one token; context is shared by all.
+        assert_eq!(f.total_tokens(), 10_000 + 14);
+        let root_deg = f
+            .alive_nodes()
+            .find(|(_, n)| n.len == 10_000)
+            .unwrap()
+            .1
+            .degree();
+        assert_eq!(root_deg, 14);
+    }
+
+    #[test]
+    fn ratio_extremes() {
+        let f0 = shared_ratio_tree(4, 1000, 0.0);
+        assert!(f0.mean_sharing_degree() < 1.01);
+        let f9 = shared_ratio_tree(4, 1000, 0.9);
+        assert!(f9.mean_sharing_degree() > 2.0);
+        // Total per-request context is preserved.
+        assert_eq!(f9.logical_tokens(), 4 * 1000);
+    }
+}

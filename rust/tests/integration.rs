@@ -1,0 +1,315 @@
+//! Cross-module integration tests: forest + store + divider + executors
+//! against the exact-attention oracle, plan/reduction consistency across
+//! the three executors, and property-style randomized sweeps (a
+//! hand-rolled proptest: deterministic PRNG-driven case generation with
+//! failure-reproducing seeds).
+
+use codec::attention::cascade::cascade_plan;
+use codec::attention::codec_exec::{run_codec_attention, QueryBatch};
+use codec::attention::flash_decoding::run_flash_decoding;
+use codec::attention::oracle::request_attention_exact;
+use codec::cost::Estimator;
+use codec::kvforest::forest::StorageEvent;
+use codec::kvforest::{Forest, KvStore};
+use codec::sched::{divide_and_schedule, naive, tasks_from_forest, DividerConfig};
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+
+/// Random world: a forest + KV store built from `prompts`, 1 layer.
+fn build_world(
+    rng: &mut Rng,
+    prompts: &[Vec<u32>],
+    n_kv_heads: usize,
+    d: usize,
+) -> (Forest, KvStore) {
+    let mut f = Forest::new();
+    let mut store = KvStore::new(1, 16, n_kv_heads, d);
+    for (r, toks) in prompts.iter().enumerate() {
+        let out = f.insert_request(r as u64, toks);
+        for ev in &out.events {
+            store.apply(ev);
+            if let StorageEvent::NeedFill { node, len } = ev {
+                for _ in 0..*len {
+                    let mut k = vec![0.0f32; n_kv_heads * d];
+                    let mut v = vec![0.0f32; n_kv_heads * d];
+                    rng.fill_normal(&mut k, 1.0);
+                    rng.fill_normal(&mut v, 1.0);
+                    store.append(0, *node, &k, &v);
+                }
+            }
+        }
+    }
+    f.check_invariants().unwrap();
+    (f, store)
+}
+
+fn rand_batch(
+    rng: &mut Rng,
+    bs: usize,
+    n_q_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+) -> QueryBatch {
+    QueryBatch {
+        rids: (0..bs as u64).collect(),
+        q: (0..bs)
+            .map(|_| {
+                let mut m = Mat::zeros(n_q_heads, d);
+                rng.fill_normal(&mut m.data, 1.0);
+                m
+            })
+            .collect(),
+        n_q_heads,
+        n_kv_heads,
+        d_head: d,
+    }
+}
+
+fn assert_matches_oracle(f: &Forest, s: &KvStore, b: &QueryBatch, outs: &[Mat], tol: f32) {
+    let g = b.group_size();
+    for (ri, &rid) in b.rids.iter().enumerate() {
+        for kvh in 0..b.n_kv_heads {
+            let want = request_attention_exact(f, s, 0, rid, kvh, &b.group_rows(ri, kvh));
+            for j in 0..g {
+                for c in 0..b.d_head {
+                    let got = outs[ri].at(kvh * g + j, c);
+                    assert!(
+                        (got - want.at(j, c)).abs() < tol,
+                        "rid={rid} kvh={kvh}: {got} vs {}",
+                        want.at(j, c)
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Random prompt set with controlled sharing: `n_groups` documents, a few
+/// requests each, random doc/question lengths.
+fn random_prompts(rng: &mut Rng, n_groups: usize, per_group: usize) -> Vec<Vec<u32>> {
+    let mut prompts = Vec::new();
+    for gidx in 0..n_groups {
+        let doc_len = rng.range(40, 400);
+        let doc: Vec<u32> = (0..doc_len as u32).map(|t| t + 10_000 * gidx as u32).collect();
+        for q in 0..per_group {
+            let mut p = doc.clone();
+            let q_len = rng.range(1, 50);
+            p.extend((0..q_len as u32).map(|t| 500_000 + (gidx * 100 + q) as u32 * 1000 + t));
+            prompts.push(p);
+        }
+    }
+    prompts
+}
+
+#[test]
+fn property_codec_equals_oracle_random_forests() {
+    // 10 randomized worlds; any failure reports its seed.
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let n_groups = rng.range(1, 3);
+        let per_group = rng.range(1, 4);
+        let prompts = random_prompts(&mut rng, n_groups, per_group);
+        let (f, store) = build_world(&mut rng, &prompts, 2, 32);
+        let batch = rand_batch(&mut rng, prompts.len(), 4, 2, 32);
+        let est = Estimator::table2();
+        let plan = divide_and_schedule(
+            tasks_from_forest(&f, 2, 2),
+            &est,
+            &DividerConfig {
+                num_blocks: rng.range(2, 16),
+                min_chunk: 32,
+                ..Default::default()
+            },
+        );
+        plan.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 4);
+        assert_matches_oracle(&f, &store, &batch, &outs, 2e-4);
+    }
+}
+
+#[test]
+fn property_all_executors_agree() {
+    // CoDec (adaptive plan), CoDec (cascade plan), naive-division plan and
+    // FlashDecoding must produce the same numbers — division/scheduling
+    // must never change semantics.
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let prompts = random_prompts(&mut rng, 2, 3);
+        let (f, store) = build_world(&mut rng, &prompts, 2, 32);
+        let batch = rand_batch(&mut rng, prompts.len(), 4, 2, 32);
+        let est = Estimator::table2();
+        let tasks = tasks_from_forest(&f, 2, 2);
+
+        let adaptive = divide_and_schedule(
+            tasks.clone(),
+            &est,
+            &DividerConfig {
+                num_blocks: 8,
+                min_chunk: 32,
+                ..Default::default()
+            },
+        );
+        let casc = cascade_plan(tasks.clone(), &est, 8);
+        let fixed = naive::naive_plan(tasks, &est, 8, 5);
+
+        let o1 = run_codec_attention(&f, &store, 0, &batch, &adaptive, 4);
+        let o2 = run_codec_attention(&f, &store, 0, &batch, &casc, 2);
+        let o3 = run_codec_attention(&f, &store, 0, &batch, &fixed, 1);
+        let o4 = run_flash_decoding(&f, &store, 0, &batch, 16, 4);
+        for ri in 0..o1.len() {
+            for (a, b) in [(&o1[ri], &o2[ri]), (&o1[ri], &o3[ri]), (&o1[ri], &o4[ri])] {
+                assert!(
+                    codec::tensor::max_abs_diff(a, b) < 2e-4,
+                    "seed {seed} request {ri}: executors disagree"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_simulation_over_growing_forest() {
+    // Simulate 20 decode steps: every step appends one generated token
+    // per request and re-runs attention; results must stay exact and
+    // forest invariants must hold throughout.
+    let mut rng = Rng::new(77);
+    let prompts = random_prompts(&mut rng, 2, 2);
+    let (mut f, mut store) = build_world(&mut rng, &prompts, 1, 16);
+    let est = Estimator::table2();
+    for step in 0..20 {
+        // Append one token per request.
+        for rid in 0..prompts.len() as u64 {
+            let (node, _off) = f.append_token(rid, 900_000 + step);
+            let mut k = vec![0.0f32; 16];
+            let mut v = vec![0.0f32; 16];
+            rng.fill_normal(&mut k, 1.0);
+            rng.fill_normal(&mut v, 1.0);
+            store.append(0, node, &k, &v);
+        }
+        f.check_invariants().unwrap();
+        let batch = rand_batch(&mut rng, prompts.len(), 2, 1, 16);
+        let plan = divide_and_schedule(
+            tasks_from_forest(&f, 1, 2),
+            &est,
+            &DividerConfig {
+                num_blocks: 4,
+                min_chunk: 16,
+                ..Default::default()
+            },
+        );
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 2);
+        assert_matches_oracle(&f, &store, &batch, &outs, 2e-4);
+    }
+}
+
+#[test]
+fn request_retirement_releases_storage_and_stays_exact() {
+    let mut rng = Rng::new(88);
+    let prompts = random_prompts(&mut rng, 1, 4);
+    let (mut f, mut store) = build_world(&mut rng, &prompts, 1, 16);
+    let pages_before = store.allocated_pages();
+    // Retire two of four requests.
+    for rid in [1u64, 3] {
+        for ev in f.remove_request(rid) {
+            store.apply(&ev);
+        }
+    }
+    f.check_invariants().unwrap();
+    assert!(store.allocated_pages() < pages_before);
+    // Remaining requests still compute exactly.
+    let batch = QueryBatch {
+        rids: vec![0, 2],
+        q: (0..2)
+            .map(|_| {
+                let mut m = Mat::zeros(2, 16);
+                rng.fill_normal(&mut m.data, 1.0);
+                m
+            })
+            .collect(),
+        n_q_heads: 2,
+        n_kv_heads: 1,
+        d_head: 16,
+    };
+    let est = Estimator::table2();
+    let plan = divide_and_schedule(
+        tasks_from_forest(&f, 1, 2),
+        &est,
+        &DividerConfig {
+            num_blocks: 4,
+            min_chunk: 16,
+            ..Default::default()
+        },
+    );
+    let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 2);
+    assert_matches_oracle(&f, &store, &batch, &outs, 2e-4);
+}
+
+#[test]
+fn property_divider_invariants_random_task_sets() {
+    // Divider invariants across random task sets: plans always tile,
+    // schedule everything once, respect Eq. 5 caps, and never do worse
+    // than the undivided LPT baseline.
+    let est = Estimator::table2();
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let n_tasks = rng.range(1, 40);
+        let tasks: Vec<codec::sched::Task> = (0..n_tasks)
+            .map(|i| codec::sched::Task {
+                node: i + 1,
+                kv_head: 0,
+                nq: rng.range(1, 128),
+                n: rng.range(1, 200_000),
+            })
+            .collect();
+        let m = rng.range(2, 128);
+        let cfg = DividerConfig {
+            num_blocks: m,
+            ..Default::default()
+        };
+        let plan = divide_and_schedule(tasks.clone(), &est, &cfg);
+        plan.check_invariants()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let undivided = naive::naive_plan(tasks, &est, m, 1).makespan_ms;
+        assert!(
+            plan.makespan_ms <= undivided * 1.001,
+            "seed {seed}: divided {} > undivided {}",
+            plan.makespan_ms,
+            undivided
+        );
+    }
+}
+
+#[test]
+fn property_reduction_plans_random_series() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let lens: Vec<usize> = (0..rng.range(1, 40)).map(|_| rng.range(0, 17)).collect();
+        let p = codec::reduction::plan_reduction(&lens);
+        p.check_invariants()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let want_ops: usize = lens.iter().map(|&l| l.saturating_sub(1)).sum();
+        assert_eq!(p.total_ops(), want_ops, "seed {seed}");
+    }
+}
+
+#[test]
+fn gpusim_speedup_correlates_with_sharing() {
+    // Across a shared-ratio sweep, simulated CoDec speedup must be
+    // monotone non-decreasing (the paper's central trend).
+    use codec::cost::gpu_specs::A100;
+    use codec::gpusim::{sim_codec, sim_flash};
+    use codec::workload::shared_ratio_tree;
+    let est = Estimator::table2();
+    let mut last = 0.0;
+    for ratio in [0.0, 0.5, 0.9, 0.99] {
+        let f = shared_ratio_tree(32, 60_000, ratio);
+        let sp = sim_flash(&f, 8, 4, &est, &A100).total_ms()
+            / sim_codec(&f, 8, 4, &est, &A100).total_ms();
+        assert!(
+            sp >= last * 0.9,
+            "speedup dropped: {last:.2} -> {sp:.2} at ratio {ratio}"
+        );
+        last = sp;
+    }
+    assert!(last > 1.5, "max-sharing speedup only {last:.2}");
+}

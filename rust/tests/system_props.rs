@@ -1,0 +1,265 @@
+//! System-level property tests (hand-rolled proptest: deterministic
+//! seeded generators, failure messages carry the seed).
+//!
+//! These pin the cross-cutting invariants the paper's design relies on:
+//! traffic dominance, schedule monotonicity, forest/store coherence under
+//! arbitrary operation sequences, estimator monotonicity, and reduction
+//! order-independence.
+
+use codec::attention::pac::{pac_streamed, por_fold, por_merge, Partial};
+use codec::cost::gpu_specs::A100;
+use codec::cost::Estimator;
+use codec::gpusim::{sim_codec, sim_flash};
+use codec::kvforest::{Forest, KvStore, VIRTUAL_ROOT};
+use codec::sched::{divide_and_schedule, DividerConfig, Task};
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+use codec::workload::{two_level_tree, LoogleGen};
+
+fn random_forest(rng: &mut Rng) -> Forest {
+    let mut f = Forest::new();
+    let n_roots = rng.range(1, 3);
+    let mut rid = 0u64;
+    for _ in 0..n_roots {
+        let root = f.add_synthetic(VIRTUAL_ROOT, rng.range(100, 50_000));
+        let n_children = rng.range(1, 6);
+        for _ in 0..n_children {
+            let child = f.add_synthetic(root, rng.range(10, 2_000));
+            if rng.next_f64() < 0.3 {
+                let gc = f.add_synthetic(child, rng.range(10, 500));
+                f.assign_synthetic_request(rid, gc);
+            } else {
+                f.assign_synthetic_request(rid, child);
+            }
+            rid += 1;
+        }
+    }
+    f.check_invariants().unwrap();
+    f
+}
+
+#[test]
+fn codec_traffic_never_exceeds_flash() {
+    // CoDec reads every KV byte at most as often as FlashDecoding — for
+    // *any* forest shape (§4.3 IO complexity).
+    let est = Estimator::table2();
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let f = random_forest(&mut rng);
+        let codec = sim_codec(&f, 4, 2, &est, &A100);
+        let flash = sim_flash(&f, 4, 2, &est, &A100);
+        assert!(
+            codec.traffic_bytes <= flash.traffic_bytes + flash.traffic_bytes / 10,
+            "seed {seed}: codec {} > flash {}",
+            codec.traffic_bytes,
+            flash.traffic_bytes
+        );
+    }
+}
+
+#[test]
+fn makespan_monotone_in_block_count() {
+    let est = Estimator::table2();
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(100 + seed);
+        let tasks: Vec<Task> = (0..rng.range(2, 30))
+            .map(|i| Task {
+                node: i + 1,
+                kv_head: 0,
+                nq: rng.range(1, 64),
+                n: rng.range(256, 100_000),
+            })
+            .collect();
+        let ms = |m: usize| {
+            divide_and_schedule(
+                tasks.clone(),
+                &est,
+                &DividerConfig {
+                    num_blocks: m,
+                    ..Default::default()
+                },
+            )
+            .makespan_ms
+        };
+        let m2 = ms(2);
+        let m16 = ms(16);
+        let m108 = ms(108);
+        assert!(m16 <= m2 * 1.05, "seed {seed}: m16 {m16} > m2 {m2}");
+        assert!(m108 <= m16 * 1.05, "seed {seed}: m108 {m108} > m16 {m16}");
+    }
+}
+
+#[test]
+fn forest_store_coherent_under_random_ops() {
+    // Fuzz: interleave insert/append/remove; forest token counts and
+    // store lengths must stay coherent and invariants must hold.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(200 + seed);
+        let mut f = Forest::new();
+        let mut store = KvStore::new(2, 4, 1, 8);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_rid = 0u64;
+        for _op in 0..120 {
+            match rng.below(10) {
+                // Insert a request (possibly sharing an old prompt's prefix).
+                0..=3 => {
+                    let base = rng.range(1, 60) as u32;
+                    let toks: Vec<u32> = (0..base).chain([1_000_000 + next_rid as u32]).collect();
+                    let out = f.insert_request(next_rid, &toks);
+                    for ev in &out.events {
+                        store.apply(ev);
+                        if let codec::kvforest::forest::StorageEvent::NeedFill { node, len } = ev {
+                            for layer in 0..2 {
+                                for t in 0..*len {
+                                    let val = vec![(t as f32) + 0.5; 8];
+                                    store.append(layer, *node, &val, &val);
+                                }
+                            }
+                        }
+                    }
+                    live.push(next_rid);
+                    next_rid += 1;
+                }
+                // Append a generated token.
+                4..=7 if !live.is_empty() => {
+                    let rid = live[rng.below(live.len())];
+                    let (node, _off) = f.append_token(rid, 2_000_000 + rng.below(100) as u32);
+                    for layer in 0..2 {
+                        store.append(layer, node, &[1.0; 8], &[1.0; 8]);
+                    }
+                }
+                // Remove a request.
+                _ if !live.is_empty() => {
+                    let idx = rng.below(live.len());
+                    let rid = live.swap_remove(idx);
+                    for ev in f.remove_request(rid) {
+                        store.apply(&ev);
+                    }
+                }
+                _ => {}
+            }
+            f.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            // Store length must equal topology length for every live node
+            // in every layer.
+            for (nid, node) in f.alive_nodes() {
+                for layer in 0..2 {
+                    assert_eq!(
+                        store.len(layer, nid),
+                        node.len,
+                        "seed {seed}: node {nid} layer {layer}"
+                    );
+                }
+            }
+        }
+        if live.is_empty() {
+            assert_eq!(f.total_tokens(), 0);
+            assert_eq!(store.allocated_pages(), 0, "seed {seed}: leaked pages");
+        }
+    }
+}
+
+#[test]
+fn estimator_monotone_in_workload() {
+    let est = Estimator::table2();
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(300 + seed);
+        let nq = rng.range(1, 200);
+        let n = rng.range(512, 500_000);
+        let t = est.estimate_ms(nq, n);
+        // More KV rows or more queries never gets cheaper (within interp
+        // wiggle on the non-monotone measured grid cells).
+        assert!(est.estimate_ms(nq, n * 2) >= t * 0.9, "seed {seed} (n)");
+        assert!(est.estimate_ms(nq * 2, n) >= t * 0.9, "seed {seed} (nq)");
+        assert!(t > 0.0 && t.is_finite());
+    }
+}
+
+#[test]
+fn reduction_order_independence_numeric() {
+    // por_fold (left fold), balanced tree, and reversed fold must agree —
+    // the numeric counterpart of §4.3's associativity/commutativity claim.
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(400 + seed);
+        let nq = rng.range(1, 8);
+        let d = 16;
+        let parts: Vec<Partial> = (0..rng.range(2, 9))
+            .map(|_| {
+                let mut q = Mat::zeros(nq, d);
+                let mut k = Mat::zeros(32, d);
+                let mut v = Mat::zeros(32, d);
+                rng.fill_normal(&mut q.data, 1.0);
+                rng.fill_normal(&mut k.data, 1.0);
+                rng.fill_normal(&mut v.data, 1.0);
+                pac_streamed(&q, &k, &v, 32, 16)
+            })
+            .collect();
+        let fold = por_fold(&parts);
+        let mut rev = parts.clone();
+        rev.reverse();
+        let fold_rev = por_fold(&rev);
+        fn tree(parts: &[Partial]) -> Partial {
+            match parts.len() {
+                1 => parts[0].clone(),
+                _ => {
+                    let mid = parts.len() / 2;
+                    por_merge(&tree(&parts[..mid]), &tree(&parts[mid..]))
+                }
+            }
+        }
+        let balanced = tree(&parts);
+        assert!(
+            codec::tensor::max_abs_diff(&fold.o, &fold_rev.o) < 1e-4,
+            "seed {seed}: fold vs reversed"
+        );
+        assert!(
+            codec::tensor::max_abs_diff(&fold.o, &balanced.o) < 1e-4,
+            "seed {seed}: fold vs balanced"
+        );
+    }
+}
+
+#[test]
+fn loogle_prompt_forest_matches_topology_generator() {
+    // Inserting the generated token prompts must produce the same
+    // dedup structure the synthetic topology generator predicts.
+    let gen = LoogleGen {
+        num_docs: 2,
+        questions_per_doc: 4,
+        seed: 9,
+        ..Default::default()
+    };
+    let prompts = gen.build_prompts(50);
+    let mut f = Forest::new();
+    for (r, p) in prompts.iter().enumerate() {
+        f.insert_request(r as u64, p);
+    }
+    f.check_invariants().unwrap();
+    assert_eq!(f.num_requests(), 8);
+    // Two shared document nodes with degree 4 each.
+    let deg4 = f
+        .alive_nodes()
+        .filter(|(_, n)| n.degree() == 4 && n.len > 50)
+        .count();
+    assert_eq!(deg4, 2, "expected 2 shared document nodes");
+    // Dedup factor ≈ questions_per_doc for long docs.
+    let dedup = f.logical_tokens() as f64 / f.total_tokens() as f64;
+    assert!(dedup > 3.0, "dedup factor {dedup:.2}");
+}
+
+#[test]
+fn speedup_grows_with_batch_at_fixed_shared_prefix() {
+    // The paper's batch-size sweep trend (Fig. 5): more requests sharing
+    // the same prefix → larger CoDec win.
+    let est = Estimator::table2();
+    let sp = |bs: usize| {
+        let f = two_level_tree(bs, 120_000, 1024);
+        sim_flash(&f, 8, 4, &est, &A100).total_ms() / sim_codec(&f, 8, 4, &est, &A100).total_ms()
+    };
+    let s4 = sp(4);
+    let s64 = sp(64);
+    assert!(
+        s64 > s4,
+        "speedup should grow with batch: bs=4 {s4:.2} vs bs=64 {s64:.2}"
+    );
+}
