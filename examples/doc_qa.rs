@@ -4,12 +4,12 @@
 //! forest stores each document once; CoDec's decode attention reads the
 //! shared document KV once per step for the whole question batch.
 //!
-//! Runs the full three-layer stack: transformer pieces and (optionally)
-//! PAC/POR execute as AOT-compiled Pallas/JAX HLO on the PJRT CPU client;
-//! the Rust engine owns batching, the forest, planning and sampling.
+//! Hermetic by default: the transformer pieces run on the pure-Rust
+//! native backend with seeded weights — no artifacts, no PJRT. The
+//! `codec-pjrt` backend option needs a `--features pjrt` build plus
+//! `make artifacts`.
 //!
-//! Requires artifacts: `make artifacts`, then
-//! `cargo run --release --example doc_qa [-- --backend codec|flash|codec-pjrt]`
+//! Run: `cargo run --release --example doc_qa [-- --backend codec|flash|codec-pjrt]`
 
 use codec::engine::{AttentionBackend, EngineConfig, Server};
 use codec::model::Sampler;
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     };
     let prompts = gen.build_prompts(100); // ~210-token documents
 
-    let server = Server::start(
+    let server = Server::start_for(
         "artifacts",
         EngineConfig {
             backend,

@@ -1,10 +1,12 @@
-//! Quickstart: the CoDec pipeline in ~60 lines.
+//! Quickstart: the CoDec pipeline in ~60 lines — fully hermetic.
 //!
 //! Builds a prefix forest for three document-QA requests, plans the
 //! decode-step attention with the §5 divider, executes it with the
-//! native PAC/POR executor, checks it against exact attention, and — if
-//! `make artifacts` has been run — repeats the PAC/POR execution through
-//! the AOT Pallas kernels on the PJRT CPU client.
+//! native PAC/POR executor, and checks it against exact attention. No
+//! artifacts directory or PJRT runtime needed. When built with
+//! `--features pjrt` *and* `make artifacts` has been run, it repeats
+//! the PAC/POR execution through the AOT Pallas kernels on the PJRT
+//! CPU client as a cross-check.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -102,11 +104,26 @@ fn main() -> anyhow::Result<()> {
     println!("native CoDec vs oracle: max |err| = {max_err:.2e}");
     assert!(max_err < 1e-4);
 
-    // 5. Same attention through the AOT Pallas kernels (if built).
+    // 5. Same attention through the AOT Pallas kernels (pjrt builds).
+    pjrt_crosscheck(&forest, &store, &batch, &plan, &outs)?;
+    println!("quickstart OK");
+    Ok(())
+}
+
+/// Cross-check the native outputs against the AOT Pallas kernels on the
+/// PJRT CPU client, when both the `pjrt` feature and artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck(
+    forest: &Forest,
+    store: &KvStore,
+    batch: &QueryBatch,
+    plan: &codec::sched::Plan,
+    outs: &[Mat],
+) -> anyhow::Result<()> {
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = codec::runtime::Runtime::new("artifacts")?;
         let outs_pjrt =
-            codec::runtime::exec::run_codec_attention_pjrt(&rt, &forest, &store, 0, &batch, &plan)?;
+            codec::runtime::exec::run_codec_attention_pjrt(&rt, forest, store, 0, batch, plan)?;
         let mut diff = 0f32;
         for (a, b) in outs.iter().zip(&outs_pjrt) {
             diff = diff.max(codec::tensor::max_abs_diff(a, b));
@@ -116,6 +133,17 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("artifacts/ not built — skipping the PJRT path (run `make artifacts`)");
     }
-    println!("quickstart OK");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck(
+    _forest: &Forest,
+    _store: &KvStore,
+    _batch: &QueryBatch,
+    _plan: &codec::sched::Plan,
+    _outs: &[Mat],
+) -> anyhow::Result<()> {
+    println!("built without `--features pjrt` — native path only (hermetic)");
     Ok(())
 }

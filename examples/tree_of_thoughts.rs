@@ -7,23 +7,20 @@
 //! round by round — exercising node splits, multi-level paths and the
 //! tree reduction, not just the two-level doc-QA shape.
 //!
-//! Requires artifacts: `make artifacts`, then
-//! `cargo run --release --example tree_of_thoughts`
+//! Hermetic: runs on the native transformer backend, no artifacts.
+//! Run: `cargo run --release --example tree_of_thoughts`
 
 use codec::engine::{EngineConfig, Server};
 use codec::model::Sampler;
 
 fn main() -> anyhow::Result<()> {
     codec::util::logging::init();
-    let server = Server::start(
-        "artifacts",
-        EngineConfig {
-            max_batch: 9,
-            sampler: Sampler::Temperature(0.9),
-            seed: 3,
-            ..Default::default()
-        },
-    )?;
+    let server = Server::start(EngineConfig {
+        max_batch: 9,
+        sampler: Sampler::Temperature(0.9),
+        seed: 3,
+        ..Default::default()
+    })?;
 
     // Root problem statement.
     let root: Vec<u32> = (1000..1096).collect();

@@ -45,23 +45,45 @@ impl QueryBatch {
     pub fn index_of(&self, rid: RequestId) -> Option<usize> {
         self.rids.iter().position(|&r| r == rid)
     }
+
+    /// rid → batch-row index, built once per attention call. Query
+    /// stacking touches every (request, task) pair; resolving each rid
+    /// with [`QueryBatch::index_of`]'s linear scan made that O(R²) per
+    /// task — precompute the map and thread it through instead.
+    pub fn rid_index(&self) -> BTreeMap<RequestId, usize> {
+        self.rids.iter().enumerate().map(|(i, &r)| (r, i)).collect()
+    }
 }
 
 /// Assemble the stacked per-node query tensor Q^(n) for `(node, kv_head)`:
 /// for each request in I_n (sorted), its head-group rows. (§4.1 "formal
 /// per-node assembly" — on the GPU this gather happens in shared memory.)
-pub fn stack_node_queries(forest: &Forest, batch: &QueryBatch, node: NodeId, kv_head: usize) -> Mat {
+/// `index` is the precomputed rid → batch-row map ([`QueryBatch::rid_index`]).
+pub fn stack_node_queries_indexed(
+    forest: &Forest,
+    batch: &QueryBatch,
+    node: NodeId,
+    kv_head: usize,
+    index: &BTreeMap<RequestId, usize>,
+) -> Mat {
     let g = batch.group_size();
     let reqs = &forest.node(node).requests;
     let mut q = Mat::zeros(reqs.len() * g, batch.d_head);
     for (i, &rid) in reqs.iter().enumerate() {
-        let ri = batch.index_of(rid).expect("request not in batch");
+        let ri = *index.get(&rid).expect("request not in batch");
         let rows = batch.group_rows(ri, kv_head);
         for j in 0..g {
             q.row_mut(i * g + j).copy_from_slice(rows.row(j));
         }
     }
     q
+}
+
+/// One-off convenience wrapper around [`stack_node_queries_indexed`].
+/// Executors stacking queries for many tasks should build the index once
+/// via [`QueryBatch::rid_index`] instead of calling this per task.
+pub fn stack_node_queries(forest: &Forest, batch: &QueryBatch, node: NodeId, kv_head: usize) -> Mat {
+    stack_node_queries_indexed(forest, batch, node, kv_head, &batch.rid_index())
 }
 
 /// Run the plan: PAC per subtask (parallel over subtasks — inter-block
@@ -79,11 +101,13 @@ pub fn run_codec_attention(
     let g = batch.group_size();
     let d = batch.d_head;
 
-    // Stage 1: stacked queries per (node, kv_head) task.
+    // Stage 1: stacked queries per (node, kv_head) task. The rid → row
+    // index is built once for the whole call (not per task).
+    let rid_index = batch.rid_index();
     let task_queries: Vec<Mat> = plan
         .tasks
         .iter()
-        .map(|t| stack_node_queries(forest, batch, t.node, t.kv_head))
+        .map(|t| stack_node_queries_indexed(forest, batch, t.node, t.kv_head, &rid_index))
         .collect();
 
     // Stage 2: PAC per subtask, embarrassingly parallel (Alg. 4 line 4).
@@ -349,6 +373,18 @@ mod tests {
             let want = batch.group_rows(ri, 0);
             assert_eq!(q.row(i * 2), want.row(0));
         }
+    }
+
+    #[test]
+    fn rid_index_matches_linear_scan() {
+        let mut rng = Rng::new(47);
+        let batch = rand_batch(&mut rng, vec![7, 2, 31, 0], 2, 1, 8);
+        let index = batch.rid_index();
+        assert_eq!(index.len(), 4);
+        for &rid in &batch.rids {
+            assert_eq!(index.get(&rid).copied(), batch.index_of(rid));
+        }
+        assert!(!index.contains_key(&99));
     }
 
     #[test]

@@ -37,12 +37,19 @@ impl Partial {
 /// Partial attention computation between `q` (nq×d) and `k`/`v` (n×d),
 /// with only the first `n_valid` KV rows visible. Streams over tiles of
 /// `block_k` rows exactly like the Pallas kernel.
+///
+/// A zero-length KV range (`n_valid == 0` — e.g. a just-split forest
+/// node whose storage is still empty) is the POR identity, not an
+/// error: the merge absorbs it without contributing mass.
 pub fn pac_streamed(q: &Mat, k: &Mat, v: &Mat, n_valid: usize, block_k: usize) -> Partial {
     let (nq, d) = (q.rows, q.cols);
     let n = k.rows;
     assert_eq!(k.cols, d);
     assert_eq!(v.rows, n);
-    assert!(n_valid >= 1 && n_valid <= n, "n_valid {n_valid} of {n}");
+    if n_valid == 0 {
+        return Partial::identity(nq, d);
+    }
+    assert!(n_valid <= n, "n_valid {n_valid} of {n}");
     let scale = 1.0 / (d as f32).sqrt();
 
     let mut acc = Mat::zeros(nq, d);
@@ -229,6 +236,29 @@ mod tests {
                 assert!((p.o.at(r, c) - v.at(0, c)).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn pac_empty_input_is_identity() {
+        // Regression: a zero-length node/subtask used to abort on
+        // `assert!(n_valid >= 1)`; it must yield the POR identity.
+        let mut rng = Rng::new(12);
+        let q = randm(&mut rng, 3, 16, 1.0);
+        let empty = Mat::zeros(0, 16);
+        let p = pac_streamed(&q, &empty, &empty, 0, 8);
+        assert_eq!(p.nq(), 3);
+        assert!(p.o.data.iter().all(|&x| x == 0.0));
+        assert!(p.m.iter().all(|&x| x == NEG_INF));
+        assert!(p.s.iter().all(|&x| x == 0.0));
+        // Merging the identity into a real partial changes nothing.
+        let k = randm(&mut rng, 40, 16, 1.0);
+        let v = randm(&mut rng, 40, 16, 1.0);
+        let real = pac_streamed(&q, &k, &v, 40, 16);
+        let merged = por_merge(&real, &p);
+        assert!(crate::tensor::max_abs_diff(&merged.o, &real.o) < 1e-7);
+        // n_valid == 0 with non-empty backing storage is also identity.
+        let p2 = pac_streamed(&q, &k, &v, 0, 16);
+        assert!(p2.s.iter().all(|&x| x == 0.0));
     }
 
     #[test]

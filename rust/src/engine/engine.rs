@@ -1,15 +1,21 @@
 //! The decode engine: prefix-shared prefill + continuous-batching decode
-//! with CoDec attention, running the transformer through AOT PJRT
-//! executables. This is the Layer-3 hot path — no Python anywhere.
+//! with CoDec attention, running the transformer through a pluggable
+//! [`Pieces`] backend. This is the Layer-3 hot path — no Python anywhere.
 //!
 //! Decode-step dataflow (per layer, the vLLM attention-backend seam):
 //!
 //! ```text
-//!   x ──attn_pre(PJRT)──▶ (q, k_new, v_new)
+//!   x ──attn_pre(Pieces)──▶ (q, k_new, v_new)
 //!        k_new/v_new ──▶ KV forest append (paged store)
 //!        q ──▶ CoDec plan → PAC subtasks → POR tree reduction ──▶ attn_out
-//!   (x, attn_out) ──attn_post(PJRT)──▶ x'
+//!   (x, attn_out) ──attn_post(Pieces)──▶ x'
 //! ```
+//!
+//! The default backend is [`NativePieces`]: pure Rust, no artifacts
+//! directory, no PJRT — `Engine::new(cfg)` is fully hermetic for the
+//! `CodecNative` and `FlashNative` attention modes. With the `pjrt`
+//! feature, `Engine::from_artifacts` runs the same engine over the
+//! AOT-compiled executables instead.
 
 use super::batch::Batcher;
 use super::metrics::Metrics;
@@ -20,9 +26,8 @@ use crate::attention::oracle::attention_exact;
 use crate::cost::Estimator;
 use crate::kvforest::forest::StorageEvent;
 use crate::kvforest::{Forest, KvStore, NodeId};
-use crate::model::{Sampler, Weights};
-use crate::runtime::exec::{run_codec_attention_pjrt, EnginePieces};
-use crate::runtime::Runtime;
+use crate::model::Sampler;
+use crate::runtime::{ModelInfo, NativePieces, Pieces};
 use crate::sched::plan::materialize_subtasks;
 use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
 use crate::tensor::Mat;
@@ -36,7 +41,8 @@ use std::time::Instant;
 pub enum AttentionBackend {
     /// CoDec plan + native Rust PAC/POR (default).
     CodecNative,
-    /// CoDec plan + the AOT Pallas PAC/POR kernels via PJRT.
+    /// CoDec plan + the AOT Pallas PAC/POR kernels via PJRT
+    /// (requires the `pjrt` feature and built artifacts).
     CodecPjrt,
     /// Per-request FlashDecoding — the vLLM-like baseline (Fig. 7).
     FlashNative,
@@ -46,6 +52,10 @@ pub enum AttentionBackend {
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub backend: AttentionBackend,
+    /// Model geometry for the native backend. Ignored by
+    /// `Engine::from_artifacts`, where the artifact manifest's recorded
+    /// geometry wins (the executables are compiled for it).
+    pub model: ModelInfo,
     /// Maximum concurrently decoding requests.
     pub max_batch: usize,
     /// Recompute the full division plan every this many decode steps;
@@ -64,6 +74,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             backend: AttentionBackend::CodecNative,
+            model: ModelInfo::tiny(),
             max_batch: 8,
             replan_interval: 8,
             num_blocks: 64,
@@ -77,8 +88,7 @@ impl Default for EngineConfig {
 
 /// The serving engine.
 pub struct Engine {
-    rt: Runtime,
-    weights: Weights,
+    pieces: Box<dyn Pieces>,
     cfg: EngineConfig,
     est: Estimator,
     forest: Forest,
@@ -92,15 +102,25 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(artifacts_dir: &str, cfg: EngineConfig) -> Result<Engine> {
-        let rt = Runtime::new(artifacts_dir)?;
-        let mi = rt.manifest().model.clone();
-        // Pre-compile the engine pieces + upload weights once.
-        let weights = Weights::generate(&rt, cfg.seed)?;
+    /// Create a hermetic engine: pure-Rust [`NativePieces`] transformer
+    /// over `cfg.model` with seeded weights — no artifacts directory and
+    /// no PJRT required. `AttentionBackend::CodecPjrt` is the exception:
+    /// it routes through the AOT artifacts (`CODEC_ARTIFACTS`, default
+    /// `artifacts/`) and needs the `pjrt` feature.
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        if cfg.backend == AttentionBackend::CodecPjrt {
+            return Self::new_pjrt_default(cfg);
+        }
+        let pieces = NativePieces::new(cfg.model.clone(), cfg.seed);
+        Self::with_pieces(Box::new(pieces), cfg)
+    }
+
+    /// Create over an explicit transformer-pieces backend.
+    pub fn with_pieces(pieces: Box<dyn Pieces>, cfg: EngineConfig) -> Result<Engine> {
+        let mi = pieces.model().clone();
         let store = KvStore::new(mi.n_layers, cfg.page_tokens, mi.n_kv_heads, mi.d_head);
         Ok(Engine {
-            rt,
-            weights,
+            pieces,
             est: Estimator::table2(),
             forest: Forest::new(),
             store,
@@ -113,8 +133,31 @@ impl Engine {
         })
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// Create over the PJRT runtime + AOT artifacts in `artifacts_dir`
+    /// (model geometry comes from the manifest). Any attention backend
+    /// works; the transformer pieces always run on the PJRT client.
+    #[cfg(feature = "pjrt")]
+    pub fn from_artifacts(artifacts_dir: &str, cfg: EngineConfig) -> Result<Engine> {
+        let pieces = crate::runtime::PjrtPieces::new(artifacts_dir, cfg.seed)?;
+        Self::with_pieces(Box::new(pieces), cfg)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn new_pjrt_default(cfg: EngineConfig) -> Result<Engine> {
+        Self::from_artifacts(&crate::runtime::artifacts_dir(), cfg)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn new_pjrt_default(_cfg: EngineConfig) -> Result<Engine> {
+        anyhow::bail!(
+            "AttentionBackend::CodecPjrt requires building with `--features pjrt` \
+             and AOT artifacts (see README.md); the default build is hermetic"
+        )
+    }
+
+    /// The transformer-pieces backend (model geometry lives here).
+    pub fn pieces(&self) -> &dyn Pieces {
+        self.pieces.as_ref()
     }
 
     pub fn forest(&self) -> &Forest {
@@ -218,30 +261,29 @@ impl Engine {
     /// token processed (== last prompt token, since new leaves are path
     /// suffixes).
     fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
-        let mi = self.rt.manifest().model.clone();
+        let mi = self.pieces.model().clone();
         let path = self.forest.path(rid).expect("path").to_vec();
         let ctx_total: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
         let start = ctx_total - len; // global position of the leaf's first token
         let tokens: Vec<u32> = self.forest.node(node).tokens.clone();
         debug_assert_eq!(tokens.len(), len);
-        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
-        let g = mi.n_q_heads / mi.n_kv_heads;
+        let max_b = self.pieces.max_batch_rows();
+        let g = mi.group_size();
         let mut x_last = None;
 
         let mut lo = 0usize;
         while lo < len {
             let hi = (lo + max_b).min(len);
             let chunk = hi - lo;
-            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let b = self.pieces.batch_bucket(chunk)?;
             let mut toks: Vec<i32> = tokens[lo..hi].iter().map(|&t| t as i32).collect();
             toks.resize(b, 0);
             let mut pos: Vec<i32> = (lo..hi).map(|p| (start + p) as i32).collect();
             pos.resize(b, 0);
 
-            let mut x = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+            let mut x = self.pieces.embed(b, &toks)?;
             for layer in 0..mi.n_layers {
-                let lw = &self.weights.layers[layer];
-                let (qs, ks, vs) = EnginePieces::attn_pre(&self.rt, b, &x, lw, &pos)?;
+                let (qs, ks, vs) = self.pieces.attn_pre(layer, b, &x, &pos)?;
                 // Append the chunk's KV rows (real rows only, not padding).
                 for i in 0..chunk {
                     self.store.append(layer, node, &ks[i].data, &vs[i].data);
@@ -261,7 +303,7 @@ impl Engine {
                         }
                     }
                 }
-                x = EnginePieces::attn_post(&self.rt, b, &x, &attn_out, lw)?;
+                x = self.pieces.attn_post(layer, b, &x, &attn_out)?;
             }
             if hi == len {
                 x_last = Some(x.rows_slice(chunk - 1, chunk));
@@ -273,7 +315,7 @@ impl Engine {
 
     /// Gather a request path's full (K, V) for one (layer, kv-head).
     fn gather_path_kv(&self, path: &[NodeId], layer: usize, kvh: usize) -> (Mat, Mat) {
-        let d = self.rt.manifest().model.d_head;
+        let d = self.pieces.model().d_head;
         let mut k = Mat::zeros(0, d);
         let mut v = Mat::zeros(0, d);
         for &nid in path {
@@ -291,20 +333,19 @@ impl Engine {
     /// Run one already-cached token through all layers *without*
     /// appending KV (logits pass for fully-shared prompts).
     fn token_pass_no_append(&mut self, rid: u64, token: u32) -> Result<Mat> {
-        let mi = self.rt.manifest().model.clone();
+        let mi = self.pieces.model().clone();
         let path = self.forest.path(rid).expect("path").to_vec();
         let ctx: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
-        let b = self.rt.manifest().batch_bucket(1).unwrap();
+        let b = self.pieces.batch_bucket(1)?;
         let mut toks = vec![token as i32];
         toks.resize(b, 0);
         let mut poss = vec![(ctx - 1) as i32];
         poss.resize(b, 0);
-        let g = mi.n_q_heads / mi.n_kv_heads;
+        let g = mi.group_size();
 
-        let mut x = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+        let mut x = self.pieces.embed(b, &toks)?;
         for layer in 0..mi.n_layers {
-            let lw = &self.weights.layers[layer];
-            let (qs, _ks, _vs) = EnginePieces::attn_pre(&self.rt, b, &x, lw, &poss)?;
+            let (qs, _ks, _vs) = self.pieces.attn_pre(layer, b, &x, &poss)?;
             let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
             for kvh in 0..mi.n_kv_heads {
                 let (kfull, vfull) = self.gather_path_kv(&path, layer, kvh);
@@ -316,7 +357,7 @@ impl Engine {
                         .copy_from_slice(o.row(j));
                 }
             }
-            x = EnginePieces::attn_post(&self.rt, b, &x, &attn_out, lw)?;
+            x = self.pieces.attn_post(layer, b, &x, &attn_out)?;
         }
         Ok(x.rows_slice(0, 1))
     }
@@ -336,7 +377,7 @@ impl Engine {
     /// One batched decode step over `rids`: consume each request's last
     /// generated token (append its KV), produce the next one.
     fn decode_step(&mut self, rids: &[u64]) -> Result<()> {
-        let mi = self.rt.manifest().model.clone();
+        let mi = self.pieces.model().clone();
         let bs = rids.len();
         let mut tokens = Vec::with_capacity(bs);
         let mut positions = Vec::with_capacity(bs);
@@ -384,14 +425,10 @@ impl Engine {
                     &plan,
                     self.cfg.workers,
                 ),
-                AttentionBackend::CodecPjrt => run_codec_attention_pjrt(
-                    &self.rt,
-                    &self.forest,
-                    &self.store,
-                    layer,
-                    &batch,
-                    &plan,
-                )?,
+                AttentionBackend::CodecPjrt => {
+                    self.pieces
+                        .codec_attention(&self.forest, &self.store, layer, &batch, &plan)?
+                }
                 AttentionBackend::FlashNative => run_flash_decoding(
                     &self.forest,
                     &self.store,
@@ -423,8 +460,8 @@ impl Engine {
     /// Build (or refresh from cache) the CoDec division plan. The plan
     /// for one decode step is shared by all layers: the forest topology
     /// and node lengths are layer-invariant.
-    fn plan_attention(&mut self, mi: &crate::runtime::manifest::ModelInfo) -> Result<Plan> {
-        let g = mi.n_q_heads / mi.n_kv_heads;
+    fn plan_attention(&mut self, mi: &ModelInfo) -> Result<Plan> {
+        let g = mi.group_size();
         let tasks = tasks_from_forest(&self.forest, mi.n_kv_heads, g);
         let full_replan = self.cached_divisions.is_empty()
             || self.step_count % self.cfg.replan_interval == 0;
@@ -473,18 +510,21 @@ impl Engine {
         }
     }
 
-    // Bucketed sub-batch helpers for the transformer pieces.
+    // Bucketed sub-batch helpers for the transformer pieces. Padding to
+    // a bucket is a single `pad_rows` resize (one allocation at most),
+    // not a per-row `push_row` loop — and a no-op on the native backend,
+    // whose buckets are the identity.
 
     fn piecewise_embed(&self, tokens: &[u32]) -> Result<Mat> {
-        let mi = &self.rt.manifest().model;
-        let dm = mi.n_q_heads * mi.d_head;
-        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let mi = self.pieces.model();
+        let dm = mi.d_model();
+        let max_b = self.pieces.max_batch_rows();
         let mut x = Mat::zeros(0, dm);
         for chunk in tokens.chunks(max_b) {
-            let b = self.rt.manifest().batch_bucket(chunk.len()).unwrap();
+            let b = self.pieces.batch_bucket(chunk.len())?;
             let mut toks: Vec<i32> = chunk.iter().map(|&t| t as i32).collect();
             toks.resize(b, 0);
-            let xb = EnginePieces::embed(&self.rt, b, &toks, &self.weights.emb)?;
+            let xb = self.pieces.embed(b, &toks)?;
             x.push_rows(&xb.rows_slice(0, chunk.len()));
         }
         Ok(x)
@@ -496,21 +536,18 @@ impl Engine {
         x: &Mat,
         positions: &[usize],
     ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
-        let lw = &self.weights.layers[layer];
-        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let max_b = self.pieces.max_batch_rows();
         let (mut qs, mut ks, mut vs) = (Vec::new(), Vec::new(), Vec::new());
         let mut lo = 0;
         while lo < x.rows {
             let hi = (lo + max_b).min(x.rows);
             let chunk = hi - lo;
-            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let b = self.pieces.batch_bucket(chunk)?;
             let mut xb = x.rows_slice(lo, hi);
-            while xb.rows < b {
-                xb.push_row(&vec![0.0; xb.cols]);
-            }
+            xb.pad_rows(b, 0.0);
             let mut pos: Vec<i32> = positions[lo..hi].iter().map(|&p| p as i32).collect();
             pos.resize(b, 0);
-            let (q, k, v) = EnginePieces::attn_pre(&self.rt, b, &xb, lw, &pos)?;
+            let (q, k, v) = self.pieces.attn_pre(layer, b, &xb, &pos)?;
             qs.extend(q.into_iter().take(chunk));
             ks.extend(k.into_iter().take(chunk));
             vs.extend(v.into_iter().take(chunk));
@@ -520,21 +557,18 @@ impl Engine {
     }
 
     fn piecewise_attn_post(&self, layer: usize, x: &Mat, attn_out: &Mat) -> Result<Mat> {
-        let lw = &self.weights.layers[layer];
-        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
+        let max_b = self.pieces.max_batch_rows();
         let mut out = Mat::zeros(0, x.cols);
         let mut lo = 0;
         while lo < x.rows {
             let hi = (lo + max_b).min(x.rows);
             let chunk = hi - lo;
-            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let b = self.pieces.batch_bucket(chunk)?;
             let mut xb = x.rows_slice(lo, hi);
             let mut ab = attn_out.rows_slice(lo, hi);
-            while xb.rows < b {
-                xb.push_row(&vec![0.0; xb.cols]);
-                ab.push_row(&vec![0.0; ab.cols]);
-            }
-            let y = EnginePieces::attn_post(&self.rt, b, &xb, &ab, lw)?;
+            xb.pad_rows(b, 0.0);
+            ab.pad_rows(b, 0.0);
+            let y = self.pieces.attn_post(layer, b, &xb, &ab)?;
             out.push_rows(&y.rows_slice(0, chunk));
             lo = hi;
         }
@@ -542,19 +576,17 @@ impl Engine {
     }
 
     fn piecewise_lm_head(&self, x: &Mat) -> Result<Mat> {
-        let mi = &self.rt.manifest().model;
-        let max_b = *self.rt.manifest().batch_buckets.last().unwrap();
-        let mut out = Mat::zeros(0, mi.vocab);
+        let vocab = self.pieces.model().vocab;
+        let max_b = self.pieces.max_batch_rows();
+        let mut out = Mat::zeros(0, vocab);
         let mut lo = 0;
         while lo < x.rows {
             let hi = (lo + max_b).min(x.rows);
             let chunk = hi - lo;
-            let b = self.rt.manifest().batch_bucket(chunk).unwrap();
+            let b = self.pieces.batch_bucket(chunk)?;
             let mut xb = x.rows_slice(lo, hi);
-            while xb.rows < b {
-                xb.push_row(&vec![0.0; xb.cols]);
-            }
-            let y = EnginePieces::lm_head(&self.rt, b, &xb, &self.weights.ln_f, &self.weights.emb)?;
+            xb.pad_rows(b, 0.0);
+            let y = self.pieces.lm_head(b, &xb)?;
             out.push_rows(&y.rows_slice(0, chunk));
             lo = hi;
         }

@@ -5,8 +5,10 @@
 //! prefill → continuous-batching decode → completion), the KV forest and
 //! paged store, the division-plan cache (§6: plans are reused across
 //! decode steps and refreshed periodically), and metrics (TPOT, TTFT,
-//! throughput). The transformer pieces run through the AOT PJRT
-//! executables; the attention core is pluggable:
+//! throughput). The transformer pieces run through the pluggable
+//! [`crate::runtime::Pieces`] seam — pure-Rust native by default,
+//! AOT PJRT executables with the `pjrt` feature — and the attention
+//! core is pluggable too:
 //!
 //! * `CodecNative` — CoDec plan + native PAC/POR (default),
 //! * `CodecPjrt` — CoDec plan + the AOT Pallas PAC/POR kernels,

@@ -3,11 +3,11 @@
 //! (tokio is unavailable offline; the event loop is a dedicated thread +
 //! mpsc channels, which for a CPU-bound engine is the honest design.)
 //!
-//! PJRT handles are not `Send`, so the engine is *created on* the worker
-//! thread and never leaves it; `shutdown()` returns a plain [`Metrics`]
-//! snapshot sent back over a channel.
+//! Backend handles (PJRT in particular) are not `Send`, so the engine is
+//! *created on* the worker thread and never leaves it; `shutdown()`
+//! returns a plain [`Metrics`] snapshot sent back over a channel.
 
-use super::engine::{Engine, EngineConfig};
+use super::engine::{AttentionBackend, Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::Request;
 use anyhow::Result;
@@ -43,14 +43,52 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the engine loop on a background thread. Blocks until the
-    /// engine (PJRT client + weights) is ready or failed.
-    pub fn start(artifacts_dir: &str, cfg: EngineConfig) -> Result<Server> {
+    /// Start a hermetic engine loop (native transformer backend, no
+    /// artifacts directory) on a background thread. Blocks until the
+    /// engine (weights + backend) is ready or failed.
+    pub fn start(cfg: EngineConfig) -> Result<Server> {
+        Self::start_with(move || Engine::new(cfg))
+    }
+
+    /// Start over the PJRT runtime + AOT artifacts in `artifacts_dir`.
+    #[cfg(feature = "pjrt")]
+    pub fn start_pjrt(artifacts_dir: &str, cfg: EngineConfig) -> Result<Server> {
+        let dir = artifacts_dir.to_string();
+        Self::start_with(move || Engine::from_artifacts(&dir, cfg))
+    }
+
+    /// Start the right server flavor for `cfg.backend`: the PJRT
+    /// artifact path for `CodecPjrt` (feature-gated, clear error on
+    /// hermetic builds), the native hermetic engine otherwise.
+    pub fn start_for(artifacts_dir: &str, cfg: EngineConfig) -> Result<Server> {
+        if cfg.backend == AttentionBackend::CodecPjrt {
+            return Self::start_pjrt_or_err(artifacts_dir, cfg);
+        }
+        Self::start(cfg)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn start_pjrt_or_err(dir: &str, cfg: EngineConfig) -> Result<Server> {
+        Self::start_pjrt(dir, cfg)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn start_pjrt_or_err(_dir: &str, _cfg: EngineConfig) -> Result<Server> {
+        anyhow::bail!(
+            "AttentionBackend::CodecPjrt requires building with `--features pjrt` \
+             and AOT artifacts (see README.md); the default build is hermetic"
+        )
+    }
+
+    /// Shared startup: build the engine *on* the worker thread (backend
+    /// handles may not be `Send`) and run the serve loop.
+    fn start_with(
+        make: impl FnOnce() -> Result<Engine> + Send + 'static,
+    ) -> Result<Server> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let dir = artifacts_dir.to_string();
         let worker = std::thread::spawn(move || -> Metrics {
-            let mut engine = match Engine::new(&dir, cfg) {
+            let mut engine = match make() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e

@@ -3,16 +3,23 @@
 //! Reproduction of *CoDec: Prefix-Shared Decoding Kernel for LLMs*
 //! (SIGMOD 2026) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **Layer 1** (build-time Python): the PAC / POR Pallas kernels, AOT
-//!   lowered to HLO text in `artifacts/`.
-//! * **Layer 2** (build-time Python): the JAX transformer decode step and
-//!   kernel compositions, same artifacts.
+//! * **Layer 1** (build-time Python, optional): the PAC / POR Pallas
+//!   kernels, AOT lowered to HLO text in `artifacts/`.
+//! * **Layer 2** (build-time Python, optional): the JAX transformer
+//!   decode step and kernel compositions, same artifacts.
 //! * **Layer 3** (this crate): everything the paper calls "CoDec the
 //!   system" — the KV-cache prefix forest, the cost estimator, the task
 //!   divider + scheduler, the parallel tree reduction, the block-level
 //!   executor, the serving engine, and every baseline it is evaluated
 //!   against (FlashDecoding, FlashInfer-style cascade, a vLLM-like
 //!   engine loop).
+//!
+//! The default build is **hermetic**: the engine's transformer pieces
+//! run on the pure-Rust [`runtime::NativePieces`] backend (numerics
+//! matching `python/compile/model.py`), so the whole system builds,
+//! tests, and serves with no Python, no XLA/PJRT libraries, and no
+//! `artifacts/` directory. The `pjrt` cargo feature compiles the PJRT
+//! runtime path behind the same [`runtime::Pieces`] seam.
 //!
 //! The crate is organized bottom-up:
 //!
@@ -26,14 +33,14 @@
 //! | [`sched`] | task division and greedy scheduling (§5.1) |
 //! | [`reduction`] | parallel tree-reduction planner (§4.3) |
 //! | [`gpusim`] | block-level GPU timing simulator + HBM traffic accounting |
-//! | [`runtime`] | PJRT client: load + execute the AOT artifacts |
-//! | [`model`] | transformer configs, deterministic weights, sampling |
+//! | [`runtime`] | the `Pieces` backend seam: native transformer + (pjrt) AOT executor |
+//! | [`model`] | transformer configs, deterministic host weights, sampling |
 //! | [`engine`] | continuous-batching serving engine + vLLM-like baseline |
 //! | [`workload`] | synthetic prefix-tree and LooGLE-like workload generators |
 //! | [`bench`] | the measurement harness behind every figure/table bench |
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
-//! reproduced numbers.
+//! See the repo-root `README.md` for build/test instructions, feature
+//! flags, and the artifact-free quickstart.
 
 pub mod attention;
 pub mod bench;

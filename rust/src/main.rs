@@ -26,10 +26,12 @@ fn usage() -> ! {
 commands:
   serve        --requests N --docs D --max-new M --backend codec|codec-pjrt|flash
                [--artifacts DIR] [--batch B] [--scale-down K]
+               (codec|flash run hermetically; codec-pjrt needs a build
+                with --features pjrt plus AOT artifacts)
   bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
   bench-all
   table2       [--profile FILE]
-  calibrate    --out FILE [--iters I]
+  calibrate    --out FILE [--iters I]   (requires --features pjrt)
   demo
 "
     );
@@ -96,6 +98,7 @@ fn cmd_table2(args: &Args) -> anyhow::Result<()> {
 
 /// Re-profile PAC on this machine's PJRT CPU client (the §5.2 profiling
 /// step, pointed at our own hardware).
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     use codec::runtime::{exec::run_pac, Runtime};
     use codec::tensor::Mat;
@@ -142,6 +145,15 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Hermetic builds have no PJRT client to profile.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "calibrate profiles the PJRT CPU client; rebuild with `--features pjrt` \
+         (and run `make artifacts`) to use it"
+    )
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let backend = match args.str_or("backend", "codec") {
         "codec" => AttentionBackend::CodecNative,
@@ -176,7 +188,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         backend
     );
     let t0 = Instant::now();
-    let server = Server::start(&dir, cfg)?;
+    let server = Server::start_for(&dir, cfg)?;
     let handles: Vec<_> = prompts
         .into_iter()
         .take(requests)

@@ -1,76 +1,138 @@
-//! Deterministic random weights, uploaded once as device-resident PJRT
-//! buffers.
+//! Deterministic random weights, host-resident.
 //!
-//! No pretrained checkpoints are available offline (DESIGN.md §3
-//! substitution: the paper serves Qwen3-4B/Llama-3.1-8B; we serve the
-//! same architecture with seeded random weights — TPOT/throughput depend
-//! on shapes, not values, and numerics are validated against oracles).
+//! No pretrained checkpoints are available offline (the paper serves
+//! Qwen3-4B/Llama-3.1-8B; we serve the same architecture with seeded
+//! random weights — TPOT/throughput depend on shapes, not values, and
+//! numerics are validated against oracles).
 //!
-//! Keeping weights as `PjRtBuffer`s is the §Perf fix for the engine hot
-//! path: the first implementation passed weight *literals* per call,
-//! which re-staged ~40 MB host→device on every transformer piece and
-//! blew memory churn up to GBs/step; buffers are uploaded once and only
-//! activations move per step.
+//! Weights are generated as plain [`Mat`]s from a [`ModelInfo`] + seed,
+//! so the artifact-free native backend and the PJRT backend share one
+//! initializer (same RNG draw order ⇒ same numbers). Device residency
+//! is the PJRT-only specialization: [`device::DeviceWeights`] uploads
+//! the host weights once as `PjRtBuffer`s — the §Perf fix for the
+//! engine hot path (the first implementation re-staged ~40 MB of weight
+//! literals host→device on every transformer piece call; buffers move
+//! once and only activations move per step).
 
-use crate::runtime::Runtime;
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Mat;
 use crate::util::prng::Rng;
-use anyhow::Result;
 
-/// One decoder layer's weights, device-resident.
+/// One decoder layer's weights, host-resident.
+#[derive(Debug, Clone)]
 pub struct LayerWeights {
-    pub ln1: xla::PjRtBuffer,
-    pub wq: xla::PjRtBuffer,
-    pub wk: xla::PjRtBuffer,
-    pub wv: xla::PjRtBuffer,
-    pub wo: xla::PjRtBuffer,
-    pub ln2: xla::PjRtBuffer,
-    pub w_gate: xla::PjRtBuffer,
-    pub w_up: xla::PjRtBuffer,
-    pub w_down: xla::PjRtBuffer,
+    /// RMSNorm gain before the attention half (length `d_model`).
+    pub ln1: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    /// RMSNorm gain before the MLP half (length `d_model`).
+    pub ln2: Vec<f32>,
+    pub w_gate: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
 }
 
-/// Full model weights.
+/// Full model weights (tied embeddings: `emb` doubles as the LM head).
+#[derive(Debug, Clone)]
 pub struct Weights {
-    pub emb: xla::PjRtBuffer,
-    pub ln_f: xla::PjRtBuffer,
+    pub emb: Mat,
+    /// Final RMSNorm gain (length `d_model`).
+    pub ln_f: Vec<f32>,
     pub layers: Vec<LayerWeights>,
 }
 
 impl Weights {
-    /// Generate deterministic weights for the runtime's model geometry
-    /// and upload them to the PJRT device once.
-    pub fn generate(rt: &Runtime, seed: u64) -> Result<Weights> {
-        let mi = rt.manifest().model.clone();
+    /// Generate deterministic weights for the given model geometry.
+    /// Same `(ModelInfo, seed)` ⇒ bit-identical weights, on every
+    /// backend.
+    pub fn generate(mi: &ModelInfo, seed: u64) -> Weights {
         let mut rng = Rng::new(seed);
-        let dm = mi.n_q_heads * mi.d_head;
+        let dm = mi.d_model();
         let s = |fan_in: usize| 1.0 / (fan_in as f32).sqrt();
 
-        let mut mat = |rows: usize, cols: usize, scale: f32| -> Result<xla::PjRtBuffer> {
-            let mut data = vec![0.0f32; rows * cols];
-            rng.fill_normal(&mut data, scale);
-            rt.upload_f32(&data, &[rows, cols])
+        let mut mat = |rows: usize, cols: usize, scale: f32| -> Mat {
+            let mut m = Mat::zeros(rows, cols);
+            rng.fill_normal(&mut m.data, scale);
+            m
         };
-        let ones = |rt: &Runtime, n: usize| rt.upload_f32(&vec![1.0f32; n], &[n]);
 
         let mut layers = Vec::with_capacity(mi.n_layers);
         for _ in 0..mi.n_layers {
             layers.push(LayerWeights {
-                ln1: ones(rt, dm)?,
-                wq: mat(dm, mi.n_q_heads * mi.d_head, s(dm))?,
-                wk: mat(dm, mi.n_kv_heads * mi.d_head, s(dm))?,
-                wv: mat(dm, mi.n_kv_heads * mi.d_head, s(dm))?,
-                wo: mat(mi.n_q_heads * mi.d_head, dm, s(dm))?,
-                ln2: ones(rt, dm)?,
-                w_gate: mat(dm, mi.d_ff, s(dm))?,
-                w_up: mat(dm, mi.d_ff, s(dm))?,
-                w_down: mat(mi.d_ff, dm, s(mi.d_ff))?,
+                ln1: vec![1.0; dm],
+                wq: mat(dm, mi.n_q_heads * mi.d_head, s(dm)),
+                wk: mat(dm, mi.n_kv_heads * mi.d_head, s(dm)),
+                wv: mat(dm, mi.n_kv_heads * mi.d_head, s(dm)),
+                wo: mat(mi.n_q_heads * mi.d_head, dm, s(dm)),
+                ln2: vec![1.0; dm],
+                w_gate: mat(dm, mi.d_ff, s(dm)),
+                w_up: mat(dm, mi.d_ff, s(dm)),
+                w_down: mat(mi.d_ff, dm, s(mi.d_ff)),
             });
         }
-        Ok(Weights {
-            emb: mat(mi.vocab, dm, 0.02)?,
-            ln_f: ones(rt, dm)?,
+        Weights {
+            emb: mat(mi.vocab, dm, 0.02),
+            ln_f: vec![1.0; dm],
             layers,
-        })
+        }
+    }
+}
+
+/// PJRT specialization: the same host weights, uploaded once as
+/// device-resident buffers.
+#[cfg(feature = "pjrt")]
+pub mod device {
+    use super::Weights;
+    use crate::runtime::Runtime;
+    use anyhow::Result;
+
+    /// One decoder layer's weights, device-resident.
+    pub struct DeviceLayerWeights {
+        pub ln1: xla::PjRtBuffer,
+        pub wq: xla::PjRtBuffer,
+        pub wk: xla::PjRtBuffer,
+        pub wv: xla::PjRtBuffer,
+        pub wo: xla::PjRtBuffer,
+        pub ln2: xla::PjRtBuffer,
+        pub w_gate: xla::PjRtBuffer,
+        pub w_up: xla::PjRtBuffer,
+        pub w_down: xla::PjRtBuffer,
+    }
+
+    /// Full model weights on the PJRT device.
+    pub struct DeviceWeights {
+        pub emb: xla::PjRtBuffer,
+        pub ln_f: xla::PjRtBuffer,
+        pub layers: Vec<DeviceLayerWeights>,
+    }
+
+    impl DeviceWeights {
+        /// Upload host weights to the runtime's device once.
+        pub fn upload(rt: &Runtime, w: &Weights) -> Result<DeviceWeights> {
+            let up = |m: &crate::tensor::Mat| rt.upload_f32(&m.data, &[m.rows, m.cols]);
+            let upv = |v: &[f32]| rt.upload_f32(v, &[v.len()]);
+            let mut layers = Vec::with_capacity(w.layers.len());
+            for lw in &w.layers {
+                layers.push(DeviceLayerWeights {
+                    ln1: upv(&lw.ln1)?,
+                    wq: up(&lw.wq)?,
+                    wk: up(&lw.wk)?,
+                    wv: up(&lw.wv)?,
+                    wo: up(&lw.wo)?,
+                    ln2: upv(&lw.ln2)?,
+                    w_gate: up(&lw.w_gate)?,
+                    w_up: up(&lw.w_up)?,
+                    w_down: up(&lw.w_down)?,
+                });
+            }
+            Ok(DeviceWeights {
+                emb: up(&w.emb)?,
+                ln_f: upv(&w.ln_f)?,
+                layers,
+            })
+        }
     }
 }
 
@@ -78,14 +140,40 @@ impl Weights {
 mod tests {
     use super::*;
 
-    #[test]
-    fn generate_uploads_all_layers() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
+    fn small_info() -> ModelInfo {
+        ModelInfo {
+            name: "unit".to_string(),
+            vocab: 64,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 16,
+            rope_theta: 10_000.0,
         }
-        let rt = Runtime::new("artifacts").unwrap();
-        let w = Weights::generate(&rt, 7).unwrap();
-        assert_eq!(w.layers.len(), rt.manifest().model.n_layers);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_shaped() {
+        let mi = small_info();
+        let a = Weights::generate(&mi, 7);
+        let b = Weights::generate(&mi, 7);
+        assert_eq!(a.layers.len(), 2);
+        assert_eq!(a.emb.rows, 64);
+        assert_eq!(a.emb.cols, 32);
+        assert_eq!(a.layers[0].wq.cols, 32);
+        assert_eq!(a.layers[0].wk.cols, 16);
+        assert_eq!(a.layers[0].w_down.rows, 16);
+        assert_eq!(a.ln_f.len(), 32);
+        assert_eq!(a.emb.data, b.emb.data);
+        assert_eq!(a.layers[1].w_up.data, b.layers[1].w_up.data);
+    }
+
+    #[test]
+    fn seeds_change_weights() {
+        let mi = small_info();
+        let a = Weights::generate(&mi, 1);
+        let b = Weights::generate(&mi, 2);
+        assert_ne!(a.emb.data, b.emb.data);
     }
 }

@@ -1,5 +1,6 @@
-//! Typed execution helpers: bucketed PAC / POR and the transformer
-//! pieces, converting between [`Mat`] and PJRT literals.
+//! Typed execution helpers for the PJRT path: bucketed PAC / POR and
+//! [`PjrtPieces`] — the device-backed [`Pieces`] implementation —
+//! converting between [`Mat`] and PJRT literals.
 //!
 //! PJRT executables are fixed-shape; CoDec's subtasks are irregular. The
 //! helpers pad inputs up to the nearest compiled bucket: extra KV rows
@@ -8,9 +9,13 @@
 //! trade a CUDA kernel makes when a tile is underfull).
 
 use super::client::Runtime;
+use super::manifest::ModelInfo;
+use super::pieces::Pieces;
 use crate::attention::pac::Partial;
+use crate::model::weights::device::DeviceWeights;
+use crate::model::Weights;
 use crate::tensor::Mat;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 fn lit_mat(m: &Mat, rows: usize, cols: usize) -> Result<xla::Literal> {
     // Pad to (rows, cols) with zeros.
@@ -37,11 +42,16 @@ fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
 }
 
 /// Run PAC through the AOT kernel: pads (q, k, v) to the smallest bucket,
-/// passes the true `n_valid`, trims the result back to `q.rows`.
+/// passes the true `n_valid`, trims the result back to `q.rows`. A
+/// zero-length KV range is the POR identity (no kernel dispatch), same
+/// as the native `pac_streamed`.
 pub fn run_pac(rt: &Runtime, q: &Mat, k: &Mat, v: &Mat, n_valid: usize) -> Result<Partial> {
     let d = q.cols;
     let (nq, n) = (q.rows, k.rows);
-    assert!(n_valid >= 1 && n_valid <= n);
+    if n_valid == 0 {
+        return Ok(Partial::identity(nq, d));
+    }
+    assert!(n_valid <= n);
     let Some((nq_b, n_b)) = rt.manifest().pac_bucket(d, nq, n) else {
         bail!("no PAC bucket for d={d} nq={nq} n={n}");
     };
@@ -97,46 +107,86 @@ pub fn run_por(rt: &Runtime, a: &Partial, b: &Partial) -> Result<Partial> {
     })
 }
 
-/// Engine piece wrappers: transformer halves through `run_b` with
-/// device-resident weights (see `model::weights`). Activations are
-/// uploaded per call; weights never move after load.
-pub struct EnginePieces;
+/// The PJRT-backed [`Pieces`] implementation: transformer halves run as
+/// AOT executables through [`Runtime::run_b`] with device-resident
+/// weights (see `model::weights::device`). Activations are uploaded per
+/// call; weights never move after load.
+pub struct PjrtPieces {
+    rt: Runtime,
+    w: DeviceWeights,
+}
 
-impl EnginePieces {
-    fn up_mat(rt: &Runtime, m: &Mat, rows: usize) -> Result<xla::PjRtBuffer> {
+impl PjrtPieces {
+    /// Load artifacts from `dir`, generate host weights for the
+    /// manifest's model geometry, and upload them to the device once.
+    pub fn new(dir: &str, seed: u64) -> Result<PjrtPieces> {
+        let rt = Runtime::new(dir)?;
+        let host = Weights::generate(&rt.manifest().model, seed);
+        let w = DeviceWeights::upload(&rt, &host).context("uploading weights")?;
+        Ok(PjrtPieces { rt, w })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Upload a Mat padded to `rows` rows (single backing allocation).
+    fn up_mat(&self, m: &Mat, rows: usize) -> Result<xla::PjRtBuffer> {
         assert!(m.rows <= rows);
         if m.rows == rows {
-            rt.upload_f32(&m.data, &[rows, m.cols])
+            self.rt.upload_f32(&m.data, &[rows, m.cols])
         } else {
             let mut data = m.data.clone();
             data.resize(rows * m.cols, 0.0);
-            rt.upload_f32(&data, &[rows, m.cols])
+            self.rt.upload_f32(&data, &[rows, m.cols])
         }
+    }
+}
+
+impl Pieces for PjrtPieces {
+    fn model(&self) -> &ModelInfo {
+        &self.rt.manifest().model
+    }
+
+    fn max_batch_rows(&self) -> usize {
+        *self
+            .rt
+            .manifest()
+            .batch_buckets
+            .last()
+            .expect("manifest has batch buckets")
+    }
+
+    fn batch_bucket(&self, b: usize) -> Result<usize> {
+        self.rt
+            .manifest()
+            .batch_bucket(b)
+            .with_context(|| format!("no batch bucket covers b={b}"))
     }
 
     /// embed_b{B}: (tokens i32[B], emb [V, dm]) -> x [B, dm]
-    pub fn embed(rt: &Runtime, b: usize, tokens: &[i32], emb: &xla::PjRtBuffer) -> Result<Mat> {
-        let dm = rt.manifest().model.n_q_heads * rt.manifest().model.d_head;
-        let toks = rt.upload_i32(tokens, &[b])?;
-        let outs = rt.run_b(&format!("embed_b{b}"), &[&toks, emb])?;
+    fn embed(&self, b: usize, tokens: &[i32]) -> Result<Mat> {
+        let dm = self.model().d_model();
+        let toks = self.rt.upload_i32(tokens, &[b])?;
+        let outs = self.rt.run_b(&format!("embed_b{b}"), &[&toks, &self.w.emb])?;
         mat_from(&outs[0], b, dm)
     }
 
     /// attn_pre_b{B}: -> (q [B,Hq,Dh], k [B,Hkv,Dh], v [B,Hkv,Dh]) split
     /// per request into row-major Mats of (H x Dh) each.
-    #[allow(clippy::too_many_arguments)]
-    pub fn attn_pre(
-        rt: &Runtime,
+    fn attn_pre(
+        &self,
+        layer: usize,
         b: usize,
         x: &Mat,
-        lw: &crate::model::weights::LayerWeights,
         pos: &[i32],
     ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
-        let mi = &rt.manifest().model;
+        let mi = self.model();
         let (hq, hkv, dh) = (mi.n_q_heads, mi.n_kv_heads, mi.d_head);
-        let xb = Self::up_mat(rt, x, b)?;
-        let pb = rt.upload_i32(pos, &[b])?;
-        let outs = rt.run_b(
+        let lw = &self.w.layers[layer];
+        let xb = self.up_mat(x, b)?;
+        let pb = self.rt.upload_i32(pos, &[b])?;
+        let outs = self.rt.run_b(
             &format!("attn_pre_b{b}"),
             &[&xb, &lw.ln1, &lw.wq, &lw.wk, &lw.wv, &pb],
         )?;
@@ -152,18 +202,12 @@ impl EnginePieces {
     }
 
     /// attn_post_b{B}: (x [B,dm], attn_out [B,Hq*Dh], weights...) -> x' [B,dm]
-    pub fn attn_post(
-        rt: &Runtime,
-        b: usize,
-        x: &Mat,
-        attn_out: &Mat,
-        lw: &crate::model::weights::LayerWeights,
-    ) -> Result<Mat> {
-        let mi = &rt.manifest().model;
-        let dm = mi.n_q_heads * mi.d_head;
-        let xb = Self::up_mat(rt, x, b)?;
-        let ab = Self::up_mat(rt, attn_out, b)?;
-        let outs = rt.run_b(
+    fn attn_post(&self, layer: usize, b: usize, x: &Mat, attn_out: &Mat) -> Result<Mat> {
+        let dm = self.model().d_model();
+        let lw = &self.w.layers[layer];
+        let xb = self.up_mat(x, b)?;
+        let ab = self.up_mat(attn_out, b)?;
+        let outs = self.rt.run_b(
             &format!("attn_post_b{b}"),
             &[&xb, &ab, &lw.ln2, &lw.wo, &lw.w_gate, &lw.w_up, &lw.w_down],
         )?;
@@ -171,17 +215,24 @@ impl EnginePieces {
     }
 
     /// lm_head_b{B}: (x [B,dm], ln_f [dm], emb [V,dm]) -> logits [B,V]
-    pub fn lm_head(
-        rt: &Runtime,
-        b: usize,
-        x: &Mat,
-        ln_f: &xla::PjRtBuffer,
-        emb: &xla::PjRtBuffer,
-    ) -> Result<Mat> {
-        let mi = &rt.manifest().model;
-        let xb = Self::up_mat(rt, x, b)?;
-        let outs = rt.run_b(&format!("lm_head_b{b}"), &[&xb, ln_f, emb])?;
-        mat_from(&outs[0], b, mi.vocab)
+    fn lm_head(&self, b: usize, x: &Mat) -> Result<Mat> {
+        let vocab = self.model().vocab;
+        let xb = self.up_mat(x, b)?;
+        let outs = self
+            .rt
+            .run_b(&format!("lm_head_b{b}"), &[&xb, &self.w.ln_f, &self.w.emb])?;
+        mat_from(&outs[0], b, vocab)
+    }
+
+    fn codec_attention(
+        &self,
+        forest: &crate::kvforest::Forest,
+        store: &crate::kvforest::KvStore,
+        layer: usize,
+        batch: &crate::attention::codec_exec::QueryBatch,
+        plan: &crate::sched::Plan,
+    ) -> Result<Vec<Mat>> {
+        run_codec_attention_pjrt(&self.rt, forest, store, layer, batch, plan)
     }
 }
 
@@ -198,15 +249,16 @@ pub fn run_codec_attention_pjrt(
     batch: &crate::attention::codec_exec::QueryBatch,
     plan: &crate::sched::Plan,
 ) -> Result<Vec<Mat>> {
-    use crate::attention::codec_exec::stack_node_queries;
+    use crate::attention::codec_exec::stack_node_queries_indexed;
     use std::collections::BTreeMap;
     let g = batch.group_size();
     let d = batch.d_head;
 
+    let rid_index = batch.rid_index();
     let task_queries: Vec<Mat> = plan
         .tasks
         .iter()
-        .map(|t| stack_node_queries(forest, batch, t.node, t.kv_head))
+        .map(|t| stack_node_queries_indexed(forest, batch, t.node, t.kv_head, &rid_index))
         .collect();
 
     let mut partials: Vec<Partial> = Vec::with_capacity(plan.subtasks.len());
@@ -236,8 +288,7 @@ pub fn run_codec_attention_pjrt(
     };
 
     let mut outs = Vec::with_capacity(batch.rids.len());
-    for (ri, &rid) in batch.rids.iter().enumerate() {
-        let _ = ri;
+    for &rid in batch.rids.iter() {
         let path = forest.path(rid).expect("request path");
         let mut out = Mat::zeros(batch.n_q_heads, d);
         for kvh in 0..batch.n_kv_heads {
@@ -302,6 +353,22 @@ mod tests {
             assert!((got.m[r] - want.m[r]).abs() < 1e-5);
             assert!((got.s[r] - want.s[r]).abs() < 1e-2);
         }
+    }
+
+    #[test]
+    fn pjrt_pac_empty_input_is_identity_without_dispatch() {
+        // No artifacts needed: the n_valid == 0 guard short-circuits
+        // before any bucket lookup or kernel launch.
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let mut rng = Rng::new(23);
+        let q = randm(&mut rng, 2, 64);
+        let empty = Mat::zeros(0, 64);
+        let p = run_pac(&rt, &q, &empty, &empty, 0).unwrap();
+        assert!(p.s.iter().all(|&x| x == 0.0));
+        assert_eq!(rt.compiled_count(), 0);
     }
 
     #[test]

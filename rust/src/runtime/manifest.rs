@@ -20,7 +20,9 @@ pub struct ArtifactInfo {
     pub outputs: Vec<(String, Vec<usize>)>,
 }
 
-/// The engine model geometry recorded by aot.py.
+/// The engine model geometry: recorded by aot.py in the artifact
+/// manifest, or constructed directly for the artifact-free native
+/// backend (see [`crate::runtime::NativePieces`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelInfo {
     pub name: String,
@@ -31,6 +33,38 @@ pub struct ModelInfo {
     pub d_head: usize,
     pub d_ff: usize,
     pub rope_theta: f64,
+}
+
+impl ModelInfo {
+    pub fn d_model(&self) -> usize {
+        self.n_q_heads * self.d_head
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn group_size(&self) -> usize {
+        debug_assert_eq!(self.n_q_heads % self.n_kv_heads, 0);
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// The `tiny` end-to-end geometry (matches `model::config::TINY` and
+    /// the default AOT-compiled artifacts): ~50M params, GQA 4:1.
+    pub fn tiny() -> ModelInfo {
+        ModelInfo::from_config(&crate::model::config::TINY, 10_000.0)
+    }
+
+    /// Build from a static [`crate::model::ModelConfig`] preset.
+    pub fn from_config(cfg: &crate::model::ModelConfig, rope_theta: f64) -> ModelInfo {
+        ModelInfo {
+            name: cfg.name.to_string(),
+            vocab: cfg.vocab,
+            n_layers: cfg.n_layers,
+            n_q_heads: cfg.n_q_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            d_head: cfg.d_head,
+            d_ff: cfg.d_ff,
+            rope_theta,
+        }
+    }
 }
 
 /// Parsed manifest: artifacts by name + bucket grids + model info.

@@ -1,23 +1,42 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! Rust hot path. Python never runs at serving time.
+//! The execution runtime: the transformer-piece backend seam plus the
+//! (feature-gated) PJRT client for AOT HLO-text artifacts.
 //!
+//! Always compiled (hermetic):
+//!
+//! * [`pieces`] — the [`Pieces`] backend trait the engine programs
+//!   against (embed / attn_pre / attn_post / lm_head).
+//! * [`native`] — [`NativePieces`], the pure-Rust artifact-free
+//!   implementation (matches `python/compile/model.py` numerics).
 //! * [`manifest`] — parses `artifacts/manifest.json` (names, kinds,
-//!   shapes, bucket grids, engine model config).
-//! * [`client`] — the PJRT CPU client with a compile-on-demand executable
-//!   cache (one compiled executable per artifact, as the paper keeps one
-//!   kernel per tile config).
+//!   shapes, bucket grids, engine model config). Pure JSON, no XLA.
+//!
+//! `pjrt` feature only (external `xla` dependency, quarantined here and
+//! in `model::weights::device`):
+//!
+//! * [`client`] — the PJRT CPU client with a compile-on-demand
+//!   executable cache (one compiled executable per artifact, as the
+//!   paper keeps one kernel per tile config).
 //! * [`exec`] — typed wrappers: bucketed PAC / POR (pad + `n_valid`
-//!   masking) and the transformer pieces, converting between [`Mat`] and
-//!   PJRT literals.
+//!   masking) and `PjrtPieces`, the device-backed [`Pieces`]
+//!   implementation, converting between [`Mat`] and PJRT literals.
 //!
 //! [`Mat`]: crate::tensor::Mat
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod manifest;
+pub mod native;
+pub mod pieces;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
-pub use manifest::{ArtifactInfo, Manifest};
+#[cfg(feature = "pjrt")]
+pub use exec::PjrtPieces;
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo};
+pub use native::NativePieces;
+pub use pieces::Pieces;
 
 /// Default artifacts directory (overridable via `CODEC_ARTIFACTS`).
 pub fn artifacts_dir() -> String {

@@ -1,0 +1,281 @@
+//! `NativePieces`: the pure-Rust, artifact-free transformer backend.
+//!
+//! Implements the exact computation of `python/compile/model.py` —
+//! RMSNorm (ε = 1e-6), QKV projections, rotary embedding (half-split
+//! layout), O-projection + residual, SwiGLU MLP, and the tied-embedding
+//! LM head — on host [`Mat`]s with the `tensor::` kernels. No PJRT, no
+//! `artifacts/` directory, no Python: this is what makes the whole
+//! CoDec system (forest, divider, scheduler, engine) exercisable
+//! hermetically.
+//!
+//! Being shape-polymorphic, it needs no batch buckets: `batch_bucket`
+//! is the identity, so the engine's padding machinery degenerates to
+//! no-ops on this backend.
+
+use super::manifest::ModelInfo;
+use super::pieces::Pieces;
+use crate::model::Weights;
+use crate::tensor::{matmul_nn, matmul_nt, Mat};
+use anyhow::{ensure, Result};
+
+/// Pure-Rust transformer pieces over host-resident weights.
+pub struct NativePieces {
+    mi: ModelInfo,
+    w: Weights,
+}
+
+impl NativePieces {
+    /// Build with deterministic seeded weights (see [`Weights::generate`]).
+    pub fn new(mi: ModelInfo, seed: u64) -> NativePieces {
+        let w = Weights::generate(&mi, seed);
+        NativePieces { mi, w }
+    }
+
+    /// Build over externally supplied weights.
+    pub fn with_weights(mi: ModelInfo, w: Weights) -> NativePieces {
+        NativePieces { mi, w }
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.w
+    }
+}
+
+/// RMSNorm over each row: `x * rsqrt(mean(x²) + ε) * w` (ε = 1e-6,
+/// matching `model.py::rms_norm`).
+fn rms_norm_rows(x: &Mat, w: &[f32]) -> Mat {
+    assert_eq!(x.cols, w.len());
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mut ss = 0.0f32;
+        for &v in row {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / x.cols as f32 + 1e-6).sqrt();
+        for (c, o) in out.row_mut(r).iter_mut().enumerate() {
+            *o = row[c] * inv * w[c];
+        }
+    }
+    out
+}
+
+/// Rotary position embedding, applied in place to an `[n_heads, d_head]`
+/// block at absolute position `pos`. Half-split layout, matching
+/// `model.py::rope`: pairs `(x[i], x[i + d/2])` rotate by
+/// `pos · θ^(-i/(d/2))`.
+fn rope_inplace(x: &mut Mat, pos: i32, theta: f64) {
+    let dh = x.cols;
+    let half = dh / 2;
+    debug_assert_eq!(half * 2, dh, "RoPE requires an even head dim");
+    for i in 0..half {
+        let freq = theta.powf(-(i as f64) / half as f64) as f32;
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        for h in 0..x.rows {
+            let row = x.row_mut(h);
+            let (x1, x2) = (row[i], row[half + i]);
+            row[i] = x1 * cos - x2 * sin;
+            row[half + i] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// SiLU (swish): `x · σ(x)`.
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Split a `[b, h·dh]` projection into per-row `[h, dh]` head blocks,
+/// applying RoPE at `pos[r]` when requested.
+fn split_heads(all: &Mat, h: usize, dh: usize, pos: Option<(&[i32], f64)>) -> Vec<Mat> {
+    (0..all.rows)
+        .map(|r| {
+            let mut m = Mat::from_vec(h, dh, all.row(r).to_vec());
+            if let Some((ps, theta)) = pos {
+                rope_inplace(&mut m, ps[r], theta);
+            }
+            m
+        })
+        .collect()
+}
+
+impl Pieces for NativePieces {
+    fn model(&self) -> &ModelInfo {
+        &self.mi
+    }
+
+    fn max_batch_rows(&self) -> usize {
+        // Chunk size for prefill passes; any bound works (the backend is
+        // shape-polymorphic), this one keeps scratch Mats cache-friendly.
+        64
+    }
+
+    fn batch_bucket(&self, b: usize) -> Result<usize> {
+        ensure!(b >= 1, "empty batch");
+        Ok(b)
+    }
+
+    fn embed(&self, b: usize, tokens: &[i32]) -> Result<Mat> {
+        ensure!(tokens.len() == b, "embed: {} tokens for b={b}", tokens.len());
+        let dm = self.mi.d_model();
+        let mut x = Mat::zeros(b, dm);
+        for (r, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize).min(self.mi.vocab - 1);
+            x.row_mut(r).copy_from_slice(self.w.emb.row(t));
+        }
+        Ok(x)
+    }
+
+    fn attn_pre(
+        &self,
+        layer: usize,
+        b: usize,
+        x: &Mat,
+        pos: &[i32],
+    ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
+        ensure!(x.rows == b && pos.len() == b, "attn_pre: shape mismatch");
+        let lw = &self.w.layers[layer];
+        let (hq, hkv, dh) = (self.mi.n_q_heads, self.mi.n_kv_heads, self.mi.d_head);
+        let h = rms_norm_rows(x, &lw.ln1);
+        let q_all = matmul_nn(&h, &lw.wq);
+        let k_all = matmul_nn(&h, &lw.wk);
+        let v_all = matmul_nn(&h, &lw.wv);
+        // q is *not* pre-scaled: PAC owns the 1/sqrt(d) scale, so the
+        // same attention kernels serve every backend.
+        let theta = self.mi.rope_theta;
+        let qs = split_heads(&q_all, hq, dh, Some((pos, theta)));
+        let ks = split_heads(&k_all, hkv, dh, Some((pos, theta)));
+        let vs = split_heads(&v_all, hkv, dh, None);
+        Ok((qs, ks, vs))
+    }
+
+    fn attn_post(&self, layer: usize, b: usize, x: &Mat, attn_out: &Mat) -> Result<Mat> {
+        ensure!(x.rows == b && attn_out.rows == b, "attn_post: shape mismatch");
+        let lw = &self.w.layers[layer];
+        // x + attn_out · Wo
+        let proj = matmul_nn(attn_out, &lw.wo);
+        let mut x2 = x.clone();
+        for (o, p) in x2.data.iter_mut().zip(&proj.data) {
+            *o += p;
+        }
+        // SwiGLU MLP on the normed residual stream.
+        let h = rms_norm_rows(&x2, &lw.ln2);
+        let gate = matmul_nn(&h, &lw.w_gate);
+        let up = matmul_nn(&h, &lw.w_up);
+        let mut ff_in = gate;
+        for (g, u) in ff_in.data.iter_mut().zip(&up.data) {
+            *g = silu(*g) * u;
+        }
+        let ff = matmul_nn(&ff_in, &lw.w_down);
+        for (o, f) in x2.data.iter_mut().zip(&ff.data) {
+            *o += f;
+        }
+        Ok(x2)
+    }
+
+    fn lm_head(&self, b: usize, x: &Mat) -> Result<Mat> {
+        ensure!(x.rows == b, "lm_head: shape mismatch");
+        let h = rms_norm_rows(x, &self.w.ln_f);
+        Ok(matmul_nt(&h, &self.w.emb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info() -> ModelInfo {
+        ModelInfo {
+            name: "unit".to_string(),
+            vocab: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 16,
+            rope_theta: 10_000.0,
+        }
+    }
+
+    #[test]
+    fn shapes_through_one_layer() {
+        let p = NativePieces::new(info(), 3);
+        let x = p.embed(2, &[1, 5]).unwrap();
+        assert_eq!((x.rows, x.cols), (2, 32));
+        let (qs, ks, vs) = p.attn_pre(0, 2, &x, &[0, 1]).unwrap();
+        assert_eq!(qs.len(), 2);
+        assert_eq!((qs[0].rows, qs[0].cols), (4, 8));
+        assert_eq!((ks[1].rows, ks[1].cols), (2, 8));
+        assert_eq!((vs[1].rows, vs[1].cols), (2, 8));
+        let attn = Mat::zeros(2, 32);
+        let x2 = p.attn_post(0, 2, &x, &attn).unwrap();
+        assert_eq!((x2.rows, x2.cols), (2, 32));
+        let logits = p.lm_head(2, &x2).unwrap();
+        assert_eq!((logits.rows, logits.cols), (2, 32));
+    }
+
+    #[test]
+    fn rope_at_position_zero_is_identity() {
+        let mut m = Mat::from_fn(2, 8, |r, c| (r * 8 + c) as f32 * 0.1);
+        let orig = m.clone();
+        rope_inplace(&mut m, 0, 10_000.0);
+        assert!(crate::tensor::max_abs_diff(&m, &orig) < 1e-7);
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms() {
+        let mut m = Mat::from_fn(1, 8, |_, c| c as f32 + 1.0);
+        let orig = m.clone();
+        rope_inplace(&mut m, 37, 10_000.0);
+        for i in 0..4 {
+            let n0 = orig.at(0, i).hypot(orig.at(0, 4 + i));
+            let n1 = m.at(0, i).hypot(m.at(0, 4 + i));
+            assert!((n0 - n1).abs() < 1e-4, "pair {i}: {n0} vs {n1}");
+        }
+        // Rotation actually moved something.
+        assert!(crate::tensor::max_abs_diff(&m, &orig) > 1e-3);
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        // A row of equal values x has mean(x²) = x², so the normed row is
+        // sign(x) · w (up to ε).
+        let x = Mat::from_vec(1, 4, vec![3.0, 3.0, 3.0, 3.0]);
+        let out = rms_norm_rows(&x, &[1.0, 2.0, 1.0, 0.5]);
+        assert!((out.at(0, 0) - 1.0).abs() < 1e-5);
+        assert!((out.at(0, 1) - 2.0).abs() < 1e-5);
+        assert!((out.at(0, 3) - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn silu_matches_definition() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3); // saturates to x
+        assert!(silu(-10.0).abs() < 1e-3); // saturates to 0
+        let x = 1.3f32;
+        let sig = 1.0 / (1.0 + (-x).exp());
+        assert!((silu(x) - x * sig).abs() < 1e-7);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = NativePieces::new(info(), 11);
+        let b = NativePieces::new(info(), 11);
+        let xa = a.embed(3, &[0, 7, 31]).unwrap();
+        let xb = b.embed(3, &[0, 7, 31]).unwrap();
+        assert_eq!(xa.data, xb.data);
+        let (qa, _, _) = a.attn_pre(1, 3, &xa, &[0, 5, 9]).unwrap();
+        let (qb, _, _) = b.attn_pre(1, 3, &xb, &[0, 5, 9]).unwrap();
+        assert_eq!(qa[2].data, qb[2].data);
+    }
+
+    #[test]
+    fn embed_clamps_out_of_vocab_tokens() {
+        let p = NativePieces::new(info(), 1);
+        let a = p.embed(1, &[31]).unwrap();
+        let b = p.embed(1, &[1000]).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,88 @@
+//! The transformer-piece backend seam.
+//!
+//! The engine splits a decode-step layer around the attention core the
+//! same way vLLM's "attention backend" seam does:
+//!
+//! ```text
+//!   x ──attn_pre──▶ (q, k_new, v_new)
+//!        k_new/v_new ──▶ KV forest append (paged store)
+//!        q ──▶ CoDec plan → PAC subtasks → POR tree reduction ──▶ attn_out
+//!   (x, attn_out) ──attn_post──▶ x'
+//! ```
+//!
+//! [`Pieces`] abstracts *who computes the transformer halves*: the
+//! pure-Rust [`crate::runtime::NativePieces`] (hermetic, artifact-free,
+//! the default) or the PJRT-backed `PjrtPieces` (`pjrt` feature:
+//! AOT-compiled JAX/Pallas HLO on a PJRT client, weights
+//! device-resident). Both must implement identical numerics — the
+//! engine asserts as much end-to-end under greedy sampling.
+
+use super::manifest::ModelInfo;
+use crate::attention::codec_exec::QueryBatch;
+use crate::kvforest::{Forest, KvStore};
+use crate::sched::Plan;
+use crate::tensor::Mat;
+use anyhow::Result;
+
+/// A transformer-pieces backend: embedding, the two decode-step layer
+/// halves, and the LM head, over batches of `b` rows.
+///
+/// Batch-size contract: callers chunk work to at most
+/// [`Pieces::max_batch_rows`] rows, round each chunk up to
+/// [`Pieces::batch_bucket`], pad inputs to exactly `b` rows and slice
+/// real rows back out. Fixed-shape backends (PJRT executables compiled
+/// per bucket) round up; the native backend is shape-polymorphic and
+/// returns `b` unchanged.
+pub trait Pieces {
+    /// The model geometry this backend serves.
+    fn model(&self) -> &ModelInfo;
+
+    /// Largest batch-row count a single piece call may receive.
+    fn max_batch_rows(&self) -> usize;
+
+    /// Smallest supported batch size covering `b` rows.
+    fn batch_bucket(&self, b: usize) -> Result<usize>;
+
+    /// Token embedding: `tokens` (len `b`) → hidden states `[b, d_model]`.
+    fn embed(&self, b: usize, tokens: &[i32]) -> Result<Mat>;
+
+    /// First half of layer `layer`: RMSNorm + QKV projections + RoPE.
+    /// `x`: `[b, d_model]`, `pos`: absolute positions (len `b`).
+    /// Returns per-row `(q, k_new, v_new)` with `q[i]`:
+    /// `[n_q_heads, d_head]` and `k/v[i]`: `[n_kv_heads, d_head]`
+    /// (keys post-RoPE — the KV forest stores keys rotation-applied).
+    fn attn_pre(
+        &self,
+        layer: usize,
+        b: usize,
+        x: &Mat,
+        pos: &[i32],
+    ) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)>;
+
+    /// Second half of layer `layer`: O-projection + residual + RMSNorm +
+    /// SwiGLU + residual. `x`: the layer input `[b, d_model]`,
+    /// `attn_out`: `[b, n_q_heads * d_head]`.
+    fn attn_post(&self, layer: usize, b: usize, x: &Mat, attn_out: &Mat) -> Result<Mat>;
+
+    /// Final norm + tied-embedding logits: `[b, d_model]` → `[b, vocab]`.
+    fn lm_head(&self, b: usize, x: &Mat) -> Result<Mat>;
+
+    /// Device-kernel CoDec attention (PAC/POR through the backend's own
+    /// kernels) for the `AttentionBackend::CodecPjrt` engine mode.
+    /// Backends without device kernels report an error; the engine's
+    /// native attention paths never call this.
+    fn codec_attention(
+        &self,
+        forest: &Forest,
+        store: &KvStore,
+        layer: usize,
+        batch: &QueryBatch,
+        plan: &Plan,
+    ) -> Result<Vec<Mat>> {
+        let _ = (forest, store, layer, batch, plan);
+        anyhow::bail!(
+            "this Pieces backend has no device attention kernels \
+             (AttentionBackend::CodecPjrt requires the `pjrt` feature and AOT artifacts)"
+        )
+    }
+}

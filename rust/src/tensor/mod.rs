@@ -93,6 +93,15 @@ impl Mat {
         self.data.extend_from_slice(row);
         self.rows += 1;
     }
+
+    /// Grow to `rows` rows, filling new rows with `fill`. One backing
+    /// allocation at most — the hot-path padding primitive (padding row
+    /// by row costs one heap allocation per row).
+    pub fn pad_rows(&mut self, rows: usize, fill: f32) {
+        assert!(rows >= self.rows, "pad_rows cannot shrink");
+        self.data.resize(rows * self.cols, fill);
+        self.rows = rows;
+    }
 }
 
 /// Dot product.
@@ -255,6 +264,20 @@ mod tests {
         assert_eq!(g.data, vec![6.0, 7.0, 0.0, 1.0]);
         let s = m.rows_slice(1, 3);
         assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn pad_rows_single_allocation_semantics() {
+        let mut m = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        m.pad_rows(3, 0.0);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[0.0, 0.0, 0.0]);
+        assert_eq!(m.row(2), &[0.0, 0.0, 0.0]);
+        // No-op when already at the target size.
+        m.pad_rows(3, 9.0);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.row(2), &[0.0, 0.0, 0.0]);
     }
 
     #[test]
