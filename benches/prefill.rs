@@ -1,0 +1,150 @@
+//! Prefill attention bench: the chunked causal PAC kernel vs the seed
+//! engine's token-at-a-time path, at shared-prefix lengths 256 / 1k / 4k.
+//!
+//! Both sides reproduce `Engine::fill_node`'s per-layer attention work
+//! for one fresh leaf of `len` tokens:
+//!
+//! * **old** — the seed inner loop: for every (chunk × kv-head) pair,
+//!   re-gather the full stored path KV *row by row* (the paged store's
+//!   `node_kv` granularity), then call `attention_exact` once per token
+//!   over the full-width gather — O(n²) copies plus per-token call
+//!   overhead, strictly serial.
+//! * **new** — gather once, extend in-memory as chunks append, stream
+//!   each chunk's queries over the KV tiles once per kv-head
+//!   ([`causal_pac_streamed`]), kv-heads in parallel on the worker pool
+//!   exactly as the engine runs it.
+//!
+//! Run: `cargo bench --bench prefill`. The SPEEDUP lines back the
+//! "≥5× prefill tokens/sec at 4k" acceptance bar.
+
+use codec::attention::oracle::attention_exact;
+use codec::attention::prefill::{prefill_chunk_attention, PREFILL_BLOCK_K};
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+use codec::util::threadpool::{default_workers, parallel_map_indexed};
+use std::time::Instant;
+
+const D_HEAD: usize = 64;
+const N_KV_HEADS: usize = 4;
+const GROUP: usize = 2; // GQA group size: 8 query heads over 4 kv heads
+const CHUNK: usize = 64; // NativePieces::max_batch_rows
+
+fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    let mut m = Mat::zeros(r, c);
+    rng.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+/// The seed `fill_node` inner loop for one layer: per (chunk × kv-head)
+/// full re-gather (row-by-row, like the paged store) + one
+/// `attention_exact` call per token.
+fn old_prefill(q: &[Mat], k: &[Mat], v: &[Mat], len: usize) -> Vec<Mat> {
+    let mut out: Vec<Mat> = (0..N_KV_HEADS)
+        .map(|_| Mat::zeros(len * GROUP, D_HEAD))
+        .collect();
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + CHUNK).min(len);
+        for kvh in 0..N_KV_HEADS {
+            // Re-gather everything stored so far (the chunk's own rows
+            // were already appended), row by row into a preallocated
+            // Mat — exactly the paged store's `node_kv` access pattern.
+            let mut kfull = Mat::zeros(hi, D_HEAD);
+            let mut vfull = Mat::zeros(hi, D_HEAD);
+            for i in 0..hi {
+                kfull.row_mut(i).copy_from_slice(k[kvh].row(i));
+                vfull.row_mut(i).copy_from_slice(v[kvh].row(i));
+            }
+            for i in lo..hi {
+                let qg = q[kvh].rows_slice(i * GROUP, (i + 1) * GROUP);
+                let o = attention_exact(&qg, &kfull, &vfull, i + 1);
+                for j in 0..GROUP {
+                    out[kvh].row_mut(i * GROUP + j).copy_from_slice(o.row(j));
+                }
+            }
+        }
+        lo = hi;
+    }
+    out
+}
+
+/// The reworked path for one layer: one gather (here: the incremental
+/// in-memory extend), then the causal kernel per kv-head in parallel.
+fn new_prefill(q: &[Mat], k: &[Mat], v: &[Mat], len: usize, workers: usize) -> Vec<Mat> {
+    let mut out: Vec<Mat> = (0..N_KV_HEADS)
+        .map(|_| Mat::zeros(len * GROUP, D_HEAD))
+        .collect();
+    // Running per-head KV, extended chunk by chunk as the engine does.
+    let mut kr: Vec<Mat> = (0..N_KV_HEADS).map(|_| Mat::zeros(0, D_HEAD)).collect();
+    let mut vr: Vec<Mat> = (0..N_KV_HEADS).map(|_| Mat::zeros(0, D_HEAD)).collect();
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + CHUNK).min(len);
+        let chunk = hi - lo;
+        for kvh in 0..N_KV_HEADS {
+            for i in lo..hi {
+                kr[kvh].push_row(k[kvh].row(i));
+                vr[kvh].push_row(v[kvh].row(i));
+            }
+        }
+        let parts = parallel_map_indexed(N_KV_HEADS, workers, |kvh| {
+            let qc = q[kvh].rows_slice(lo * GROUP, hi * GROUP);
+            prefill_chunk_attention(&qc, &kr[kvh], &vr[kvh], lo, GROUP, PREFILL_BLOCK_K)
+        });
+        for (kvh, o) in parts.iter().enumerate() {
+            for i in 0..chunk * GROUP {
+                out[kvh].row_mut(lo * GROUP + i).copy_from_slice(o.row(i));
+            }
+        }
+        lo = hi;
+    }
+    out
+}
+
+fn main() {
+    let workers = default_workers().min(N_KV_HEADS);
+    println!(
+        "prefill bench: d_head={D_HEAD} kv_heads={N_KV_HEADS} group={GROUP} \
+         chunk={CHUNK} workers={workers}"
+    );
+    for &len in &[256usize, 1024, 4096] {
+        let mut rng = Rng::new(len as u64);
+        let q: Vec<Mat> = (0..N_KV_HEADS)
+            .map(|_| randm(&mut rng, len * GROUP, D_HEAD))
+            .collect();
+        let k: Vec<Mat> = (0..N_KV_HEADS)
+            .map(|_| randm(&mut rng, len, D_HEAD))
+            .collect();
+        let v: Vec<Mat> = (0..N_KV_HEADS)
+            .map(|_| randm(&mut rng, len, D_HEAD))
+            .collect();
+
+        let t0 = Instant::now();
+        let old = std::hint::black_box(old_prefill(&q, &k, &v, len));
+        let t_old = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let new = std::hint::black_box(new_prefill(&q, &k, &v, len, workers));
+        let t_new = t1.elapsed().as_secs_f64();
+
+        // Oracle check: the two paths must agree numerically (loose
+        // tolerance — f32 accumulation order differs over 4k terms).
+        for kvh in 0..N_KV_HEADS {
+            assert!(
+                codec::tensor::allclose(&old[kvh], &new[kvh], 1e-3, 1e-3),
+                "prefill outputs diverge at len={len} kvh={kvh}"
+            );
+        }
+
+        let tps_old = len as f64 / t_old;
+        let tps_new = len as f64 / t_new;
+        println!(
+            "L={len:<5} old {:>9.1} tok/s ({:.3}s)   new {:>9.1} tok/s ({:.3}s)   SPEEDUP {:.1}x",
+            tps_old,
+            t_old,
+            tps_new,
+            t_new,
+            tps_new / tps_old
+        );
+    }
+}

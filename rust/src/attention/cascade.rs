@@ -16,7 +16,7 @@
 //! the two differences.
 
 use crate::cost::Estimator;
-use crate::sched::plan::{materialize_subtasks, Plan, Task};
+use crate::sched::plan::{lower_bound_from_costs, materialize_subtasks, Plan, Task};
 use crate::sched::scheduler::lpt_schedule;
 
 /// The per-node chunk length cascade targets (bandwidth-saturating tile,
@@ -43,7 +43,7 @@ pub fn cascade_plan(tasks: Vec<Task>, est: &Estimator, num_blocks: usize) -> Pla
         subtasks,
         assignment,
         makespan_ms,
-        lower_bound_ms: 0.0,
+        lower_bound_ms: lower_bound_from_costs(&costs, num_blocks),
     };
     debug_assert_eq!(plan.check_invariants(), Ok(()));
     plan

@@ -12,6 +12,10 @@
 //! * [`cascade`] — the FlashInfer multilevel-cascade baseline (§8):
 //!   per-node attention like CoDec, but per-node *independent* division
 //!   and level-by-level reduction (many small launches).
+//! * [`prefill`] — the chunked causal prefill kernel: PAC's streaming
+//!   softmax plus a causal mask on the diagonal tiles, so a whole
+//!   prefill chunk's queries hit each KV tile once (the engine's
+//!   prefix-insertion hot path).
 //! * [`codec_exec`] — the CoDec executor: PAC per plan subtask in
 //!   parallel, then the parallel tree reduction of §4.3.
 //! * [`mla`] — the §8 multi-head-latent-attention extension: latent KV
@@ -24,5 +28,7 @@ pub mod codec_exec;
 pub mod flash_decoding;
 pub mod oracle;
 pub mod pac;
+pub mod prefill;
 
 pub use pac::{pac_streamed, por_merge, Partial};
+pub use prefill::{causal_pac_streamed, prefill_chunk_attention};

@@ -6,7 +6,7 @@
 //! (m, s) stats POR needs. Numerical behaviour matches the kernel (f32
 //! accumulation, -inf masking, identity-safe merge).
 
-use crate::tensor::{dot, Mat};
+use crate::tensor::{scores_block, weighted_accum_block, Mat};
 
 pub const NEG_INF: f32 = f32::NEG_INFINITY;
 
@@ -63,21 +63,9 @@ pub fn pac_streamed(q: &Mat, k: &Mat, v: &Mat, n_valid: usize, block_k: usize) -
         let hi = (lo + block_k).min(n_valid);
         let tl = hi - lo;
 
-        // 1) Scores: 4 query rows per K-row pass (each K row is loaded
-        //    once for four dot products — the register-blocking that took
-        //    the native kernel from ~3.7 to >8 GFLOP/s, see EXPERIMENTS
-        //    §Perf).
-        let mut rb = 0;
-        while rb < nq {
-            let re = (rb + 4).min(nq);
-            for (jj, j) in (lo..hi).enumerate() {
-                let krow = k.row(j);
-                for r in rb..re {
-                    *p.at_mut(r, jj) = dot(q.row(r), krow) * scale;
-                }
-            }
-            rb = re;
-        }
+        // 1) Scores for the tile, register-blocked (4 query rows per
+        //    K-row pass — see `tensor::scores_block`).
+        scores_block(q, 0, nq, k, lo, hi, scale, &mut p);
 
         // 2) Streaming-softmax update per query row; p becomes exp-weights.
         for r in 0..nq {
@@ -101,20 +89,7 @@ pub fn pac_streamed(q: &Mat, k: &Mat, v: &Mat, n_valid: usize, block_k: usize) -
         }
 
         // 3) acc += P · V_tile, four accumulator rows per V-row pass.
-        let mut rb = 0;
-        while rb < nq {
-            let re = (rb + 4).min(nq);
-            for jj in 0..tl {
-                let vrow = v.row(lo + jj);
-                for r in rb..re {
-                    let w = p.at(r, jj);
-                    if w != 0.0 {
-                        crate::tensor::axpy(w, vrow, acc.row_mut(r));
-                    }
-                }
-            }
-            rb = re;
-        }
+        weighted_accum_block(&p, 0, nq, tl, v, lo, &mut acc);
         lo = hi;
     }
 

@@ -1,0 +1,302 @@
+//! Chunked causal prefill attention — the PAC numerics family with a
+//! causal mask on the diagonal tiles.
+//!
+//! The seed engine prefilled token-at-a-time: for every (chunk ×
+//! kv-head) pair it re-gathered the request's whole path KV and called
+//! `attention_exact` once per token — O(n²) copies with per-token call
+//! overhead on top. This kernel replaces that inner loop: a whole prefill
+//! chunk's query rows stream over each KV tile exactly once, folding
+//! tiles into running (max, denom, accumulator) softmax state like
+//! [`super::pac::pac_streamed`], and masking only the tiles that straddle
+//! a query row's causal horizon. Work per chunk is
+//! O(Σ_r (pos_r + 1) · d) — the causal triangle, not the full rectangle
+//! `attention_exact` scores before masking.
+//!
+//! Query rows carry explicit positions (`q_pos[r]` = the global KV index
+//! row `r` may attend up to, inclusive), so GQA head groups are handled
+//! by repeating a token's position `group_size` times. Positions must be
+//! non-decreasing — natural for a prefill chunk, and what lets the kernel
+//! skip whole tiles for the query prefix that cannot see them.
+
+use super::pac::{Partial, NEG_INF};
+use crate::tensor::{scores_block, weighted_accum_block, Mat};
+
+/// KV tile height for the native causal kernel — the same tile size the
+/// decode executor streams with (the Pallas DEFAULT_BLOCK_K).
+pub const PREFILL_BLOCK_K: usize = super::codec_exec::BLOCK_K;
+
+/// Causal streaming-softmax attention: query row `r` attends to KV rows
+/// `[0, q_pos[r]]` (inclusive). `q_pos` must be non-decreasing and
+/// `max(q_pos) < k.rows`. Returns a normalized [`Partial`] (merge-safe
+/// with POR, like `pac_streamed`).
+///
+/// An empty query set is the identity; `q_pos[r]` of 0 means row `r`
+/// sees exactly the first KV row.
+pub fn causal_pac_streamed(q: &Mat, k: &Mat, v: &Mat, q_pos: &[usize], block_k: usize) -> Partial {
+    let (nq, d) = (q.rows, q.cols);
+    assert_eq!(q_pos.len(), nq);
+    assert_eq!(k.cols, d);
+    assert_eq!(v.rows, k.rows);
+    assert_eq!(v.cols, d);
+    assert!(block_k >= 1);
+    debug_assert!(
+        q_pos.windows(2).all(|w| w[0] <= w[1]),
+        "q_pos must be non-decreasing"
+    );
+    if nq == 0 {
+        return Partial::identity(nq, d);
+    }
+    let n_valid = q_pos[nq - 1] + 1; // positions are sorted: last is max
+    assert!(
+        n_valid <= k.rows,
+        "q_pos max {} needs {} KV rows, have {}",
+        n_valid - 1,
+        n_valid,
+        k.rows
+    );
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut acc = Mat::zeros(nq, d);
+    let mut mi = vec![NEG_INF; nq];
+    let mut si = vec![0.0f32; nq];
+    let mut p = Mat::zeros(nq, block_k);
+
+    let mut lo = 0;
+    while lo < n_valid {
+        let hi = (lo + block_k).min(n_valid);
+        let tl = hi - lo;
+        // Rows before `rlo` have q_pos < lo: the whole tile is masked for
+        // them. Sorted positions make the visible rows a suffix.
+        let rlo = q_pos.partition_point(|&pos| pos < lo);
+        if rlo == nq {
+            break; // no row sees this tile or any later one
+        }
+
+        // 1) Scores for the visible rows, register-blocked.
+        scores_block(q, rlo, nq, k, lo, hi, scale, &mut p);
+
+        // 2) Streaming-softmax update over each row's visible prefix of
+        //    the tile; entries past the causal horizon are zeroed so the
+        //    accumulation pass skips them.
+        for r in rlo..nq {
+            let vis = (q_pos[r] + 1 - lo).min(tl); // ≥ 1 since q_pos[r] ≥ lo
+            let row = p.row_mut(r);
+            let tile_max = row[..vis].iter().cloned().fold(NEG_INF, f32::max);
+            let m_new = mi[r].max(tile_max);
+            let corr = if mi[r] == NEG_INF { 0.0 } else { (mi[r] - m_new).exp() };
+            if corr != 1.0 {
+                si[r] *= corr;
+                for x in acc.row_mut(r) {
+                    *x *= corr;
+                }
+            }
+            let mut sum = 0.0f32;
+            for x in row[..vis].iter_mut() {
+                *x = (*x - m_new).exp();
+                sum += *x;
+            }
+            for x in row[vis..tl].iter_mut() {
+                *x = 0.0;
+            }
+            si[r] += sum;
+            mi[r] = m_new;
+        }
+
+        // 3) acc += P · V_tile for the visible rows.
+        weighted_accum_block(&p, rlo, nq, tl, v, lo, &mut acc);
+        lo = hi;
+    }
+
+    // Normalize. Every row saw at least KV row 0 (q_pos[r] ≥ 0), so
+    // si > 0; the guard keeps a hypothetical empty row at the identity.
+    for r in 0..nq {
+        if si[r] > 0.0 {
+            let inv = 1.0 / si[r];
+            for x in acc.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    Partial {
+        o: acc,
+        m: mi,
+        s: si,
+    }
+}
+
+/// Grouped-query convenience wrapper for the engine's prefill: `q` holds
+/// `chunk × group` rows (token-major — rows `[i·group, (i+1)·group)` are
+/// token `i`'s head-group), token `i` sits at global position
+/// `start + i` and attends KV rows `[0, start + i]`. Returns the
+/// normalized output rows in the same layout.
+pub fn prefill_chunk_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    start: usize,
+    group: usize,
+    block_k: usize,
+) -> Mat {
+    assert!(group >= 1);
+    assert_eq!(q.rows % group, 0);
+    let chunk = q.rows / group;
+    let q_pos: Vec<usize> = (0..chunk)
+        .flat_map(|i| std::iter::repeat(start + i).take(group))
+        .collect();
+    causal_pac_streamed(q, k, v, &q_pos, block_k).o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::oracle::attention_exact;
+    use crate::attention::pac::por_merge;
+    use crate::util::prng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize, scale: f32) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, scale);
+        m
+    }
+
+    /// Per-row ground truth: row r == exact attention over KV[..pos+1].
+    fn oracle_rows(q: &Mat, k: &Mat, v: &Mat, q_pos: &[usize]) -> Mat {
+        let mut want = Mat::zeros(q.rows, q.cols);
+        for r in 0..q.rows {
+            let qr = q.rows_slice(r, r + 1);
+            let o = attention_exact(&qr, k, v, q_pos[r] + 1);
+            want.row_mut(r).copy_from_slice(o.row(0));
+        }
+        want
+    }
+
+    #[test]
+    fn causal_matches_exact_oracle_per_row() {
+        let mut rng = Rng::new(21);
+        let n = 300;
+        let q = randm(&mut rng, 8, 32, 1.0);
+        let k = randm(&mut rng, n, 32, 1.0);
+        let v = randm(&mut rng, n, 32, 1.0);
+        // Positions spread over the KV range, crossing several tiles.
+        let q_pos: Vec<usize> = vec![0, 1, 17, 64, 65, 130, 255, 299];
+        let got = causal_pac_streamed(&q, &k, &v, &q_pos, 64);
+        let want = oracle_rows(&q, &k, &v, &q_pos);
+        assert!(crate::tensor::allclose(&got.o, &want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn causal_tile_size_invariant_across_chunk_boundaries() {
+        let mut rng = Rng::new(22);
+        let n = 517; // prime-ish: misaligns every tile size
+        let q = randm(&mut rng, 12, 16, 1.0);
+        let k = randm(&mut rng, n, 16, 1.0);
+        let v = randm(&mut rng, n, 16, 1.0);
+        let q_pos: Vec<usize> = (0..12).map(|i| 400 + i * 9).collect();
+        let want = oracle_rows(&q, &k, &v, &q_pos);
+        for bk in [1, 3, 16, 64, 256, 1024] {
+            let got = causal_pac_streamed(&q, &k, &v, &q_pos, bk);
+            assert!(
+                crate::tensor::allclose(&got.o, &want, 1e-4, 1e-5),
+                "block_k = {bk}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_wrapper_matches_oracle_for_gqa_groups() {
+        let mut rng = Rng::new(23);
+        for group in [1usize, 2, 4] {
+            let chunk = 7;
+            let start = 40;
+            let n = start + chunk;
+            let q = randm(&mut rng, chunk * group, 24, 1.0);
+            let k = randm(&mut rng, n, 24, 1.0);
+            let v = randm(&mut rng, n, 24, 1.0);
+            let got = prefill_chunk_attention(&q, &k, &v, start, group, 16);
+            let q_pos: Vec<usize> = (0..chunk)
+                .flat_map(|i| std::iter::repeat(start + i).take(group))
+                .collect();
+            let want = oracle_rows(&q, &k, &v, &q_pos);
+            assert!(
+                crate::tensor::allclose(&got, &want, 1e-5, 1e-5),
+                "group = {group}"
+            );
+        }
+    }
+
+    #[test]
+    fn position_zero_row_returns_v0() {
+        let mut rng = Rng::new(24);
+        let q = randm(&mut rng, 2, 16, 1.0);
+        let k = randm(&mut rng, 10, 16, 1.0);
+        let v = randm(&mut rng, 10, 16, 1.0);
+        let got = causal_pac_streamed(&q, &k, &v, &[0, 0], 4);
+        for r in 0..2 {
+            for c in 0..16 {
+                assert!((got.o.at(r, c) - v.at(0, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_query_set_is_identity() {
+        let q = Mat::zeros(0, 8);
+        let k = Mat::zeros(5, 8);
+        let v = Mat::zeros(5, 8);
+        let got = causal_pac_streamed(&q, &k, &v, &[], 4);
+        assert_eq!(got.nq(), 0);
+    }
+
+    #[test]
+    fn full_horizon_matches_pac_streamed() {
+        // When every row sees the whole KV range the causal kernel must
+        // agree with the unmasked streaming kernel bit-for-bit-tolerance.
+        let mut rng = Rng::new(25);
+        let n = 200;
+        let q = randm(&mut rng, 6, 32, 1.0);
+        let k = randm(&mut rng, n, 32, 1.0);
+        let v = randm(&mut rng, n, 32, 1.0);
+        let causal = causal_pac_streamed(&q, &k, &v, &vec![n - 1; 6], 64);
+        let plain = super::super::pac::pac_streamed(&q, &k, &v, n, 64);
+        assert!(crate::tensor::max_abs_diff(&causal.o, &plain.o) < 1e-6);
+        for r in 0..6 {
+            assert_eq!(causal.m[r], plain.m[r]);
+            assert!((causal.s[r] - plain.s[r]).abs() < 1e-3 * plain.s[r].abs());
+        }
+    }
+
+    #[test]
+    fn partial_stats_compose_with_por() {
+        // The causal partial over KV[..pos+1] carries honest (m, s): a
+        // POR merge with a disjoint-tail partial must equal attention
+        // over the union, per row.
+        let mut rng = Rng::new(26);
+        let n = 96;
+        let q = randm(&mut rng, 3, 16, 1.0);
+        let k = randm(&mut rng, n, 16, 1.0);
+        let v = randm(&mut rng, n, 16, 1.0);
+        let pos = 59usize;
+        let head = causal_pac_streamed(&q, &k, &v, &[pos; 3], 32);
+        let tail = super::super::pac::pac_streamed(
+            &q,
+            &k.rows_slice(pos + 1, n),
+            &v.rows_slice(pos + 1, n),
+            n - pos - 1,
+            32,
+        );
+        let merged = por_merge(&head, &tail);
+        let want = attention_exact(&q, &k, &v, n);
+        assert!(crate::tensor::allclose(&merged.o, &want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn stable_with_large_logits() {
+        let mut rng = Rng::new(27);
+        let q = randm(&mut rng, 4, 16, 12.0);
+        let k = randm(&mut rng, 64, 16, 12.0);
+        let v = randm(&mut rng, 64, 16, 1.0);
+        let got = causal_pac_streamed(&q, &k, &v, &[10, 20, 40, 63], 16);
+        assert!(got.o.data.iter().all(|x| x.is_finite()));
+        assert!(got.s.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+}

@@ -1,7 +1,7 @@
 //! Continuous batching: admission queue + active set management.
 
 use super::request::{Request, RequestId};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// An admitted, in-flight request.
 #[derive(Debug, Clone)]
@@ -40,10 +40,17 @@ impl ActiveRequest {
 }
 
 /// FIFO admission with a bounded active set (the continuous batcher).
+///
+/// The active set is indexed by request id: `get_mut` is called once per
+/// request per decode step, so the seed's linear scan made every step
+/// O(B²); the map keeps it O(1), and retirement compacts with a single
+/// ordered pass instead of repeated `Vec::remove`.
 #[derive(Debug, Default)]
 pub struct Batcher {
     pending: VecDeque<Request>,
     active: Vec<ActiveRequest>,
+    /// rid → index into `active`; rebuilt when retirement compacts.
+    index: HashMap<RequestId, usize>,
     max_active: usize,
 }
 
@@ -53,6 +60,7 @@ impl Batcher {
         Batcher {
             pending: VecDeque::new(),
             active: Vec::new(),
+            index: HashMap::new(),
             max_active,
         }
     }
@@ -70,6 +78,7 @@ impl Batcher {
                 break;
             };
             new.push(req.id);
+            self.index.insert(req.id, self.active.len());
             self.active.push(ActiveRequest {
                 req,
                 generated: Vec::new(),
@@ -88,19 +97,30 @@ impl Batcher {
     }
 
     pub fn get_mut(&mut self, rid: RequestId) -> Option<&mut ActiveRequest> {
-        self.active.iter_mut().find(|a| a.req.id == rid)
+        let &i = self.index.get(&rid)?;
+        debug_assert_eq!(self.active[i].req.id, rid);
+        self.active.get_mut(i)
     }
 
-    /// Remove finished requests, returning them.
+    /// Remove finished requests, returning them (relative order of the
+    /// survivors is preserved).
     pub fn retire_done(&mut self) -> Vec<ActiveRequest> {
+        if !self.active.iter().any(|a| a.done()) {
+            return Vec::new();
+        }
         let mut done = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].done() {
-                done.push(self.active.remove(i));
+        let mut kept = Vec::with_capacity(self.active.len());
+        for a in self.active.drain(..) {
+            if a.done() {
+                done.push(a);
             } else {
-                i += 1;
+                kept.push(a);
             }
+        }
+        self.active = kept;
+        self.index.clear();
+        for (i, a) in self.active.iter().enumerate() {
+            self.index.insert(a.req.id, i);
         }
         done
     }
@@ -160,6 +180,29 @@ mod tests {
         b.admit();
         b.active_mut()[0].generated.push(7);
         assert!(b.active()[0].done());
+    }
+
+    #[test]
+    fn get_mut_resolves_after_retirement_compaction() {
+        let mut b = Batcher::new(4);
+        for i in 0..4 {
+            b.submit(req(i, if i % 2 == 0 { 1 } else { 3 }));
+        }
+        b.admit();
+        for a in b.active_mut() {
+            a.generated.push(9); // finishes requests 0 and 2 (max_new = 1)
+        }
+        let done = b.retire_done();
+        assert_eq!(done.iter().map(|a| a.req.id).collect::<Vec<_>>(), vec![0, 2]);
+        // Survivors must still resolve by id after indices shifted.
+        for rid in [1u64, 3] {
+            let a = b.get_mut(rid).expect("survivor lookup");
+            assert_eq!(a.req.id, rid);
+        }
+        assert!(b.get_mut(0).is_none());
+        assert!(b.get_mut(2).is_none());
+        // No-op retirement takes the early-out path.
+        assert!(b.retire_done().is_empty());
     }
 
     #[test]

@@ -11,6 +11,18 @@
 //!   (x, attn_out) ──attn_post(Pieces)──▶ x'
 //! ```
 //!
+//! Prefill dataflow (per chunk of a fresh leaf, per layer): the path KV
+//! is gathered **once per (layer, kv-head)** up front and extended
+//! in-memory as chunks append, then every kv-head runs the chunked
+//! causal PAC kernel in parallel:
+//!
+//! ```text
+//!   tokens[lo..hi] ──embed──▶ x ──attn_pre──▶ (q, k_new, v_new)
+//!        k_new/v_new ──▶ store.append + in-memory (K, V) extend
+//!        q ──▶ per-kv-head causal_pac_streamed over KV tiles ──▶ attn_out
+//!   (x, attn_out) ──attn_post──▶ x'   (next layer / next chunk)
+//! ```
+//!
 //! The default backend is [`NativePieces`]: pure Rust, no artifacts
 //! directory, no PJRT — `Engine::new(cfg)` is fully hermetic for the
 //! `CodecNative` and `FlashNative` attention modes. With the `pjrt`
@@ -20,18 +32,19 @@
 use super::batch::Batcher;
 use super::metrics::Metrics;
 use super::request::Request;
-use crate::attention::codec_exec::{run_codec_attention, QueryBatch};
+use crate::attention::codec_exec::{run_codec_attention, QueryBatch, BLOCK_K};
 use crate::attention::flash_decoding::run_flash_decoding;
-use crate::attention::oracle::attention_exact;
+use crate::attention::prefill::causal_pac_streamed;
 use crate::cost::Estimator;
 use crate::kvforest::forest::StorageEvent;
 use crate::kvforest::{Forest, KvStore, NodeId};
 use crate::model::Sampler;
 use crate::runtime::{ModelInfo, NativePieces, Pieces};
-use crate::sched::plan::materialize_subtasks;
+use crate::sched::plan::{lower_bound_from_costs, materialize_subtasks};
 use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
 use crate::tensor::Mat;
 use crate::util::prng::Rng;
+use crate::util::threadpool::parallel_map_indexed;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -68,6 +81,10 @@ pub struct EngineConfig {
     pub page_tokens: usize,
     pub seed: u64,
     pub sampler: Sampler,
+    /// Maximum prefill-chunk length in tokens (`None` = the backend's
+    /// `max_batch_rows`). Smaller chunks bound activation memory; the
+    /// oracle tests use `Some(1)` to cross every chunk boundary.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -82,6 +99,7 @@ impl Default for EngineConfig {
             page_tokens: 16,
             seed: 0,
             sampler: Sampler::Greedy,
+            prefill_chunk: None,
         }
     }
 }
@@ -198,7 +216,7 @@ impl Engine {
         if !decoding.is_empty() {
             let t0 = Instant::now();
             self.decode_step(&decoding)?;
-            self.metrics.step_times.push(t0.elapsed());
+            self.metrics.step_times.record(t0.elapsed());
         }
         let done = self.batcher.retire_done();
         let mut finished = Vec::new();
@@ -255,11 +273,29 @@ impl Engine {
         Ok(())
     }
 
+    /// Largest prefill chunk in tokens: the backend's batch bound,
+    /// optionally tightened by `cfg.prefill_chunk`.
+    fn prefill_chunk_rows(&self) -> usize {
+        let max_b = self.pieces.max_batch_rows();
+        match self.cfg.prefill_chunk {
+            Some(c) => c.clamp(1, max_b),
+            None => max_b,
+        }
+    }
+
     /// Compute and append KV rows for the `len` tokens of freshly created
     /// `node`, chunked through the batch-bucketed transformer pieces with
-    /// exact causal attention. Returns the final hidden state of the last
-    /// token processed (== last prompt token, since new leaves are path
-    /// suffixes).
+    /// the chunked causal PAC kernel. Returns the final hidden state of
+    /// the last token processed (== last prompt token, since new leaves
+    /// are path suffixes).
+    ///
+    /// The request path's KV is gathered from the paged store **once per
+    /// (layer, kv-head)** and extended in-memory as chunks append their
+    /// own rows — the seed re-gathered the full path per (chunk ×
+    /// kv-head), making prefix insertion O(n²) in copies. Each chunk's
+    /// queries then stream over the KV tiles once per kv-head
+    /// ([`causal_pac_streamed`]), kv-heads in parallel on the worker
+    /// pool.
     fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
         let mi = self.pieces.model().clone();
         let path = self.forest.path(rid).expect("path").to_vec();
@@ -267,39 +303,82 @@ impl Engine {
         let start = ctx_total - len; // global position of the leaf's first token
         let tokens: Vec<u32> = self.forest.node(node).tokens.clone();
         debug_assert_eq!(tokens.len(), len);
-        let max_b = self.pieces.max_batch_rows();
+        let max_chunk = self.prefill_chunk_rows();
         let g = mi.group_size();
+        let workers = self.cfg.workers;
         let mut x_last = None;
+
+        // One gather per (layer, kv-head) for the whole fill: the path
+        // prefix (everything before this leaf; the leaf itself has no
+        // stored rows yet). This holds a transient second copy of the
+        // path KV for the duration of the fill — the price of replacing
+        // the seed's per-(chunk × kv-head) regather (O(n²) copies) with
+        // O(n) — so peak memory during one prefill is ~2× that
+        // request's KV. `prefill_chunk` bounds activation memory only.
+        let mut kv: Vec<Vec<(Mat, Mat)>> = (0..mi.n_layers)
+            .map(|layer| {
+                (0..mi.n_kv_heads)
+                    .map(|kvh| self.gather_path_kv(&path, layer, kvh))
+                    .collect()
+            })
+            .collect();
 
         let mut lo = 0usize;
         while lo < len {
-            let hi = (lo + max_b).min(len);
+            let hi = (lo + max_chunk).min(len);
             let chunk = hi - lo;
             let b = self.pieces.batch_bucket(chunk)?;
             let mut toks: Vec<i32> = tokens[lo..hi].iter().map(|&t| t as i32).collect();
             toks.resize(b, 0);
             let mut pos: Vec<i32> = (lo..hi).map(|p| (start + p) as i32).collect();
             pos.resize(b, 0);
+            // Causal horizons: token i's head-group rows see [0, start+lo+i].
+            let q_pos: Vec<usize> = (0..chunk)
+                .flat_map(|i| std::iter::repeat(start + lo + i).take(g))
+                .collect();
 
             let mut x = self.pieces.embed(b, &toks)?;
             for layer in 0..mi.n_layers {
                 let (qs, ks, vs) = self.pieces.attn_pre(layer, b, &x, &pos)?;
-                // Append the chunk's KV rows (real rows only, not padding).
+                // Append the chunk's KV rows (real rows only, not
+                // padding) to the paged store and the in-memory gathers.
                 for i in 0..chunk {
                     self.store.append(layer, node, &ks[i].data, &vs[i].data);
                 }
-                // Causal attention: token at global pos p sees rows [0, p].
-                let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
                 for kvh in 0..mi.n_kv_heads {
-                    let (kfull, vfull) = self.gather_path_kv(&path, layer, kvh);
+                    let (kf, vf) = &mut kv[layer][kvh];
                     for i in 0..chunk {
-                        let p = start + lo + i;
-                        let q = qs[i].rows_slice(kvh * g, (kvh + 1) * g);
-                        let o = attention_exact(&q, &kfull, &vfull, p + 1);
+                        kf.push_row(ks[i].row(kvh));
+                        vf.push_row(vs[i].row(kvh));
+                    }
+                }
+                // Stack the chunk's queries per kv-head (token-major) and
+                // run the causal kernel for all kv-heads in parallel.
+                let qstacks: Vec<Mat> = (0..mi.n_kv_heads)
+                    .map(|kvh| {
+                        let mut qm = Mat::zeros(chunk * g, mi.d_head);
+                        for (i, qrow) in qs.iter().enumerate().take(chunk) {
+                            for j in 0..g {
+                                qm.row_mut(i * g + j).copy_from_slice(qrow.row(kvh * g + j));
+                            }
+                        }
+                        qm
+                    })
+                    .collect();
+                let layer_kv = &kv[layer];
+                let t_attn = Instant::now();
+                let outs = parallel_map_indexed(mi.n_kv_heads, workers, |kvh| {
+                    let (kf, vf) = &layer_kv[kvh];
+                    causal_pac_streamed(&qstacks[kvh], kf, vf, &q_pos, BLOCK_K)
+                });
+                self.metrics.prefill_attn_times.record(t_attn.elapsed());
+                let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
+                for (kvh, part) in outs.iter().enumerate() {
+                    for i in 0..chunk {
                         for j in 0..g {
                             let h = kvh * g + j;
                             attn_out.row_mut(i)[h * mi.d_head..(h + 1) * mi.d_head]
-                                .copy_from_slice(o.row(j));
+                                .copy_from_slice(part.o.row(i * g + j));
                         }
                     }
                 }
@@ -331,7 +410,9 @@ impl Engine {
     }
 
     /// Run one already-cached token through all layers *without*
-    /// appending KV (logits pass for fully-shared prompts).
+    /// appending KV (logits pass for fully-shared prompts). Same causal
+    /// kernel and per-layer gather discipline as [`Engine::fill_node`],
+    /// with kv-heads in parallel.
     fn token_pass_no_append(&mut self, rid: u64, token: u32) -> Result<Mat> {
         let mi = self.pieces.model().clone();
         let path = self.forest.path(rid).expect("path").to_vec();
@@ -342,19 +423,28 @@ impl Engine {
         let mut poss = vec![(ctx - 1) as i32];
         poss.resize(b, 0);
         let g = mi.group_size();
+        let workers = self.cfg.workers;
+        let q_pos = vec![ctx - 1; g];
 
         let mut x = self.pieces.embed(b, &toks)?;
         for layer in 0..mi.n_layers {
             let (qs, _ks, _vs) = self.pieces.attn_pre(layer, b, &x, &poss)?;
-            let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
-            for kvh in 0..mi.n_kv_heads {
-                let (kfull, vfull) = self.gather_path_kv(&path, layer, kvh);
+            let layer_kv: Vec<(Mat, Mat)> = (0..mi.n_kv_heads)
+                .map(|kvh| self.gather_path_kv(&path, layer, kvh))
+                .collect();
+            let t_attn = Instant::now();
+            let outs = parallel_map_indexed(mi.n_kv_heads, workers, |kvh| {
                 let q = qs[0].rows_slice(kvh * g, (kvh + 1) * g);
-                let o = attention_exact(&q, &kfull, &vfull, ctx);
+                let (kf, vf) = &layer_kv[kvh];
+                causal_pac_streamed(&q, kf, vf, &q_pos, BLOCK_K)
+            });
+            self.metrics.prefill_attn_times.record(t_attn.elapsed());
+            let mut attn_out = Mat::zeros(b, mi.n_q_heads * mi.d_head);
+            for (kvh, part) in outs.iter().enumerate() {
                 for j in 0..g {
                     let h = kvh * g + j;
                     attn_out.row_mut(0)[h * mi.d_head..(h + 1) * mi.d_head]
-                        .copy_from_slice(o.row(j));
+                        .copy_from_slice(part.o.row(j));
                 }
             }
             x = self.pieces.attn_post(layer, b, &x, &attn_out)?;
@@ -398,7 +488,7 @@ impl Engine {
         // Plan once per step, reused across layers (§6 amortization).
         let t_plan = Instant::now();
         let plan = self.plan_attention(&mi)?;
-        self.metrics.plan_times.push(t_plan.elapsed());
+        self.metrics.plan_times.record(t_plan.elapsed());
 
         let mut x = self.piecewise_embed(&tokens)?;
         for layer in 0..mi.n_layers {
@@ -438,7 +528,7 @@ impl Engine {
                     self.cfg.workers,
                 ),
             };
-            self.metrics.attn_times.push(t_attn.elapsed());
+            self.metrics.attn_times.record(t_attn.elapsed());
             let mut attn_out = Mat::zeros(bs, mi.n_q_heads * mi.d_head);
             for (ri, o) in outs.iter().enumerate() {
                 for h in 0..mi.n_q_heads {
@@ -478,6 +568,8 @@ impl Engine {
                 .map(|(t, &b)| ((t.node, t.kv_head), b))
                 .collect();
             self.metrics.plans_computed += 1;
+            self.metrics
+                .on_plan_lower_bound(plan.lower_bound_ms, plan.tasks.len());
             Ok(plan)
         } else {
             // Reuse cached divisions (new nodes default to 1): cheap
@@ -498,14 +590,19 @@ impl Engine {
             }
             let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
             let (assignment, makespan_ms) = lpt_schedule(&costs, self.cfg.num_blocks);
+            // The real Eq. 4 bound for this (fixed) division — the seed
+            // emitted 0.0 here, corrupting any makespan/LB quality ratio
+            // computed from a reused plan.
+            let lower_bound_ms = lower_bound_from_costs(&costs, self.cfg.num_blocks);
             self.metrics.plans_reused += 1;
+            self.metrics.on_plan_lower_bound(lower_bound_ms, tasks.len());
             Ok(Plan {
                 tasks,
                 divisions: actual,
                 subtasks,
                 assignment,
                 makespan_ms,
-                lower_bound_ms: 0.0,
+                lower_bound_ms,
             })
         }
     }

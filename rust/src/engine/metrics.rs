@@ -1,8 +1,127 @@
 //! Serving metrics: TPOT, TTFT, throughput, plan-cache stats.
+//!
+//! Timing streams (`step_times`, `attn_times`, …) are [`TimeStat`]s:
+//! bounded running statistics, not grow-forever vectors. A long-running
+//! server records one attention timing per layer per step — unbounded
+//! `Vec<Duration>`s were a memory leak measured in entries-per-token.
 
-use crate::util::stats::{summarize, Summary};
+use crate::util::stats::{percentile_sorted, Summary};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// Reservoir size for [`TimeStat`] percentiles. Memory per stat is
+/// bounded by this regardless of how many samples are recorded.
+pub const TIMESTAT_RESERVOIR: usize = 512;
+
+/// Bounded running statistics over a stream of durations: exact
+/// count/sum/sum-of-squares/min/max plus a fixed-size reservoir sample
+/// (Vitter's Algorithm R, deterministic xorshift) for percentiles.
+#[derive(Debug, Clone)]
+pub struct TimeStat {
+    count: u64,
+    sum_s: f64,
+    sum_sq_s: f64,
+    min_s: f64,
+    max_s: f64,
+    reservoir: Vec<f64>,
+    rng: u64,
+}
+
+impl Default for TimeStat {
+    fn default() -> Self {
+        TimeStat {
+            count: 0,
+            sum_s: 0.0,
+            sum_sq_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+            reservoir: Vec::new(),
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+}
+
+impl TimeStat {
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        self.count += 1;
+        self.sum_s += s;
+        self.sum_sq_s += s * s;
+        if s < self.min_s {
+            self.min_s = s;
+        }
+        if s > self.max_s {
+            self.max_s = s;
+        }
+        if self.reservoir.len() < TIMESTAT_RESERVOIR {
+            self.reservoir.push(s);
+        } else {
+            // Algorithm R: keep each of the `count` samples with equal
+            // probability RESERVOIR/count.
+            self.rng ^= self.rng << 13;
+            self.rng ^= self.rng >> 7;
+            self.rng ^= self.rng << 17;
+            let slot = (self.rng % self.count) as usize;
+            if slot < TIMESTAT_RESERVOIR {
+                self.reservoir[slot] = s;
+            }
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Total recorded wall time in seconds (exact).
+    pub fn total_secs(&self) -> f64 {
+        self.sum_s
+    }
+
+    pub fn mean_ms(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_s / self.count as f64 * 1e3)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_s * 1e3
+        }
+    }
+
+    /// Number of samples currently held for percentile estimation
+    /// (bounded by [`TIMESTAT_RESERVOIR`]).
+    pub fn reservoir_len(&self) -> usize {
+        self.reservoir.len()
+    }
+
+    /// Summary in milliseconds: n/mean/std/min/max are exact over the
+    /// whole stream; percentiles come from the reservoir sample.
+    pub fn summary_ms(&self) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        let n = self.count as f64;
+        let mean = self.sum_s / n;
+        let var = (self.sum_sq_s / n - mean * mean).max(0.0);
+        let mut sorted: Vec<f64> = self.reservoir.iter().map(|s| s * 1e3).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n: self.count as usize,
+            mean: mean * 1e3,
+            std: var.sqrt() * 1e3,
+            min: self.min_s * 1e3,
+            max: self.max_s * 1e3,
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
 
 /// Per-request timing record.
 #[derive(Debug, Clone)]
@@ -34,13 +153,20 @@ impl RequestMetrics {
 pub struct Metrics {
     pub requests: BTreeMap<u64, RequestMetrics>,
     /// Wall time of each decode step (all layers).
-    pub step_times: Vec<Duration>,
-    /// Wall time of attention only, per step (summed over layers).
-    pub attn_times: Vec<Duration>,
+    pub step_times: TimeStat,
+    /// Wall time of decode attention, per layer per step.
+    pub attn_times: TimeStat,
+    /// Wall time of prefill attention (the chunked causal kernel), per
+    /// layer per prefill chunk.
+    pub prefill_attn_times: TimeStat,
     /// Wall time spent computing division plans.
-    pub plan_times: Vec<Duration>,
+    pub plan_times: TimeStat,
     pub plans_computed: usize,
     pub plans_reused: usize,
+    /// Smallest Eq. 4 lower bound any non-empty plan reported (ms).
+    /// `Some(0.0)` would mean a plan whose makespan/LB quality ratio is
+    /// garbage — the reused-plan regression the tests pin down.
+    pub min_plan_lower_bound_ms: Option<f64>,
     pub tokens_generated: usize,
     pub prefill_tokens: usize,
     pub prefill_tokens_shared: usize,
@@ -75,6 +201,18 @@ impl Metrics {
         }
     }
 
+    /// Record a plan's Eq. 4 lower bound (ignoring empty-forest plans,
+    /// whose 0.0 is legitimate).
+    pub fn on_plan_lower_bound(&mut self, lb_ms: f64, n_tasks: usize) {
+        if n_tasks == 0 {
+            return;
+        }
+        self.min_plan_lower_bound_ms = Some(match self.min_plan_lower_bound_ms {
+            Some(cur) => cur.min(lb_ms),
+            None => lb_ms,
+        });
+    }
+
     /// Mean TPOT across finished requests (ms).
     pub fn mean_tpot_ms(&self) -> Option<f64> {
         let xs: Vec<f64> = self
@@ -88,12 +226,12 @@ impl Metrics {
 
     /// Decode-step wall-time summary (ms).
     pub fn step_summary_ms(&self) -> Option<Summary> {
-        let xs: Vec<f64> = self
-            .step_times
-            .iter()
-            .map(|d| d.as_secs_f64() * 1e3)
-            .collect();
-        (!xs.is_empty()).then(|| summarize(&xs))
+        self.step_times.summary_ms()
+    }
+
+    /// Prefill-attention wall-time summary (ms).
+    pub fn prefill_attn_summary_ms(&self) -> Option<Summary> {
+        self.prefill_attn_times.summary_ms()
     }
 
     /// Fraction of prefill tokens that were served from the shared cache.
@@ -108,7 +246,7 @@ impl Metrics {
 
     /// Tokens per second over the whole decode phase.
     pub fn decode_throughput(&self) -> f64 {
-        let total: f64 = self.step_times.iter().map(|d| d.as_secs_f64()).sum();
+        let total = self.step_times.total_secs();
         if total == 0.0 {
             0.0
         } else {
@@ -153,5 +291,55 @@ mod tests {
         m.prefill_tokens = 10;
         m.prefill_tokens_shared = 90;
         assert!((m.prefill_share_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timestat_exact_moments() {
+        let mut t = TimeStat::default();
+        for ms in [1u64, 2, 3, 4] {
+            t.record(Duration::from_millis(ms));
+        }
+        let s = t.summary_ms().unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-9);
+        assert!((s.min - 1.0).abs() < 1e-9);
+        assert!((s.max - 4.0).abs() < 1e-9);
+        assert!((t.total_secs() - 0.010).abs() < 1e-12);
+        assert!((t.mean_ms().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timestat_memory_bounded_over_many_records() {
+        // The satellite regression: 10k simulated steps × layers must not
+        // grow memory — the seed kept one Vec entry per record.
+        let mut t = TimeStat::default();
+        for i in 0..10_000u64 {
+            t.record(Duration::from_micros(100 + i % 50));
+        }
+        assert_eq!(t.count(), 10_000);
+        assert!(t.reservoir_len() <= TIMESTAT_RESERVOIR);
+        let s = t.summary_ms().unwrap();
+        assert_eq!(s.n, 10_000);
+        // Exact bounds hold even though percentiles are sampled.
+        assert!(s.min >= 0.1 - 1e-9 && s.max <= 0.15 + 1e-9);
+        assert!(s.p50 >= s.min - 1e-9 && s.p50 <= s.max + 1e-9);
+    }
+
+    #[test]
+    fn timestat_empty_summary_is_none() {
+        let t = TimeStat::default();
+        assert!(t.summary_ms().is_none());
+        assert!(t.mean_ms().is_none());
+        assert_eq!(t.max_ms(), 0.0);
+        assert_eq!(t.total_secs(), 0.0);
+    }
+
+    #[test]
+    fn min_plan_lower_bound_tracks_minimum_nonempty() {
+        let mut m = Metrics::default();
+        m.on_plan_lower_bound(0.8, 4);
+        m.on_plan_lower_bound(0.3, 4);
+        m.on_plan_lower_bound(0.0, 0); // empty forest: ignored
+        assert_eq!(m.min_plan_lower_bound_ms, Some(0.3));
     }
 }

@@ -6,32 +6,45 @@
 //! Backend handles (PJRT in particular) are not `Send`, so the engine is
 //! *created on* the worker thread and never leaves it; `shutdown()`
 //! returns a plain [`Metrics`] snapshot sent back over a channel.
+//!
+//! Completion contract: every [`SubmitHandle`] resolves — to the
+//! generated tokens, or to a clean error naming the cause. Submits
+//! already queued in the channel when `Shutdown` arrives are drained and
+//! served, and an engine failure notifies every outstanding waiter
+//! instead of silently dropping their channels.
 
 use super::engine::{AttentionBackend, Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::Request;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+/// Per-request completion payload: tokens, or a human-readable failure.
+type SubmitResult = std::result::Result<Vec<u32>, String>;
+
 enum Msg {
-    Submit(Request, Sender<Vec<u32>>),
+    Submit(Request, Sender<SubmitResult>),
     Shutdown,
 }
 
 /// Handle for one submitted request; resolves to the generated tokens.
 pub struct SubmitHandle {
     pub id: u64,
-    rx: Receiver<Vec<u32>>,
+    rx: Receiver<SubmitResult>,
 }
 
 impl SubmitHandle {
-    /// Block until the request completes.
+    /// Block until the request completes. Returns the generated tokens,
+    /// or the failure the engine reported for this request.
     pub fn wait(self) -> Result<Vec<u32>> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine dropped request {}", self.id))
+        match self.rx.recv() {
+            Ok(Ok(tokens)) => Ok(tokens),
+            Ok(Err(msg)) => Err(anyhow::anyhow!("request {}: {msg}", self.id)),
+            Err(_) => Err(anyhow::anyhow!("engine dropped request {}", self.id)),
+        }
     }
 }
 
@@ -80,80 +93,16 @@ impl Server {
         )
     }
 
-    /// Shared startup: build the engine *on* the worker thread (backend
-    /// handles may not be `Send`) and run the serve loop.
-    fn start_with(
+    /// Start over an engine built by an arbitrary constructor closure —
+    /// the seam the regression tests use to inject failing backends.
+    /// The engine is constructed *on* the worker thread (backend handles
+    /// may not be `Send`) and the serve loop runs there.
+    pub fn start_with(
         make: impl FnOnce() -> Result<Engine> + Send + 'static,
     ) -> Result<Server> {
         let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let worker = std::thread::spawn(move || -> Metrics {
-            let mut engine = match make() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return Metrics::default();
-                }
-            };
-            let mut waiters: std::collections::HashMap<u64, Sender<Vec<u32>>> =
-                Default::default();
-            let mut open = true;
-            loop {
-                // Drain the queue: block only when idle.
-                loop {
-                    let msg = if engine.has_work() {
-                        match rx.try_recv() {
-                            Ok(m) => Some(m),
-                            Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                open = false;
-                                None
-                            }
-                        }
-                    } else if open {
-                        match rx.recv() {
-                            Ok(m) => Some(m),
-                            Err(_) => {
-                                open = false;
-                                None
-                            }
-                        }
-                    } else {
-                        None
-                    };
-                    match msg {
-                        Some(Msg::Submit(req, done_tx)) => {
-                            waiters.insert(req.id, done_tx);
-                            engine.submit(req);
-                        }
-                        Some(Msg::Shutdown) => open = false,
-                        None => break,
-                    }
-                }
-                if !engine.has_work() {
-                    if !open {
-                        return std::mem::take(&mut engine.metrics);
-                    }
-                    continue;
-                }
-                match engine.step() {
-                    Ok(finished) => {
-                        for (rid, tokens) in finished {
-                            if let Some(tx) = waiters.remove(&rid) {
-                                let _ = tx.send(tokens);
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        log::error!("engine step failed: {e:#}");
-                        return std::mem::take(&mut engine.metrics);
-                    }
-                }
-            }
-        });
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let worker = std::thread::spawn(move || serve_loop(make, rx, ready_tx));
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Server {
                 tx,
@@ -169,18 +118,24 @@ impl Server {
     }
 
     /// Submit a prompt; returns a handle resolving to generated tokens.
+    /// If the engine thread already exited (fatal step error), the
+    /// handle resolves to a clean error instead of panicking here.
     pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize) -> SubmitHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = channel();
         let req = Request::new(id, prompt, max_new_tokens);
-        self.tx
-            .send(Msg::Submit(req, done_tx))
-            .expect("engine thread gone");
+        if let Err(std::sync::mpsc::SendError(msg)) = self.tx.send(Msg::Submit(req, done_tx)) {
+            if let Msg::Submit(_, done_tx) = msg {
+                let _ = done_tx.send(Err("engine is no longer running".to_string()));
+            }
+        }
         SubmitHandle { id, rx: done_rx }
     }
 
-    /// Stop accepting requests, finish in-flight work, return the final
-    /// metrics snapshot.
+    /// Stop accepting requests, finish in-flight *and already-queued*
+    /// work, return the final metrics snapshot. No handle is stranded:
+    /// every request submitted before this call resolves to tokens or a
+    /// clean error.
     pub fn shutdown(mut self) -> Metrics {
         let _ = self.tx.send(Msg::Shutdown);
         self.worker
@@ -188,5 +143,98 @@ impl Server {
             .expect("shutdown twice")
             .join()
             .expect("engine thread panicked")
+    }
+}
+
+/// The worker-thread event loop.
+fn serve_loop(
+    make: impl FnOnce() -> Result<Engine>,
+    rx: Receiver<Msg>,
+    ready_tx: Sender<std::result::Result<(), String>>,
+) -> Metrics {
+    let mut engine = match make() {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return Metrics::default();
+        }
+    };
+    let mut waiters: HashMap<u64, Sender<SubmitResult>> = HashMap::new();
+    let mut open = true;
+    loop {
+        // Drain the queue: block only when idle.
+        loop {
+            let msg = if engine.has_work() || !open {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some(Msg::Submit(req, done_tx)) => {
+                    waiters.insert(req.id, done_tx);
+                    engine.submit(req);
+                }
+                // Keep draining after Shutdown: submits already queued
+                // (e.g. sent by other threads racing the shutdown) are
+                // accepted and served, not stranded.
+                Some(Msg::Shutdown) => open = false,
+                None => break,
+            }
+        }
+        if !engine.has_work() {
+            if !open {
+                // Nothing left to run. Any waiter still registered here
+                // (a request the engine lost track of) gets an explicit
+                // error rather than a dropped channel.
+                for (_, done_tx) in waiters.drain() {
+                    let _ = done_tx.send(Err(
+                        "engine shut down before the request completed".to_string(),
+                    ));
+                }
+                return std::mem::take(&mut engine.metrics);
+            }
+            continue;
+        }
+        match engine.step() {
+            Ok(finished) => {
+                for (rid, tokens) in finished {
+                    if let Some(done_tx) = waiters.remove(&rid) {
+                        let _ = done_tx.send(Ok(tokens));
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine step failed: {e:#}");
+                log::error!("{msg}");
+                // Pick up submits still sitting in the channel so their
+                // waiters hear about the failure too, then notify every
+                // outstanding waiter instead of dropping them.
+                while let Ok(m) = rx.try_recv() {
+                    if let Msg::Submit(req, done_tx) = m {
+                        waiters.insert(req.id, done_tx);
+                    }
+                }
+                for (_, done_tx) in waiters.drain() {
+                    let _ = done_tx.send(Err(msg.clone()));
+                }
+                return std::mem::take(&mut engine.metrics);
+            }
+        }
     }
 }

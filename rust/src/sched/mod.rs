@@ -22,5 +22,5 @@ pub mod plan;
 pub mod scheduler;
 
 pub use divider::{divide_and_schedule, DividerConfig};
-pub use plan::{tasks_from_forest, Plan, Subtask, Task};
+pub use plan::{lower_bound_from_costs, tasks_from_forest, Plan, Subtask, Task};
 pub use scheduler::lpt_schedule;

@@ -2,7 +2,7 @@
 //! split into the same number of subtasks regardless of its workload,
 //! then LPT-scheduled. `splits = 1` degenerates to no division at all.
 
-use super::plan::{materialize_subtasks, Plan, Task};
+use super::plan::{lower_bound_from_costs, materialize_subtasks, Plan, Task};
 use super::scheduler::lpt_schedule;
 use crate::cost::Estimator;
 
@@ -23,7 +23,7 @@ pub fn naive_plan(tasks: Vec<Task>, est: &Estimator, num_blocks: usize, splits: 
         subtasks,
         assignment,
         makespan_ms,
-        lower_bound_ms: 0.0,
+        lower_bound_ms: lower_bound_from_costs(&costs, num_blocks),
     };
     debug_assert_eq!(plan.check_invariants(), Ok(()));
     plan

@@ -143,6 +143,19 @@ pub fn tasks_from_forest(forest: &Forest, n_kv_heads: usize, group_size: usize) 
     tasks
 }
 
+/// The Eq. 4 lower bound for an *already-materialized* division: with
+/// the subtask costs fixed, no schedule on `num_blocks` blocks can beat
+/// max(average block load, largest single subtask). This is what the
+/// plan-reuse fast path reports — the divider's full binary-search bound
+/// (which also optimizes over divisions) is only available on a replan.
+pub fn lower_bound_from_costs(costs: &[f64], num_blocks: usize) -> f64 {
+    if costs.is_empty() || num_blocks == 0 {
+        return 0.0;
+    }
+    let avg = costs.iter().sum::<f64>() / num_blocks as f64;
+    costs.iter().cloned().fold(avg, f64::max)
+}
+
 /// Materialize subtasks for a division vector: task i split into
 /// `div[i]` contiguous near-even ranges, costed by the estimator.
 pub fn materialize_subtasks(tasks: &[Task], divisions: &[usize], est: &Estimator) -> Vec<Subtask> {
@@ -215,6 +228,14 @@ mod tests {
         assert_eq!(lens, vec![4, 3, 3]);
         assert_eq!(subs[0].lo, 0);
         assert_eq!(subs[2].hi, 10);
+    }
+
+    #[test]
+    fn lower_bound_from_costs_is_max_of_avg_and_largest() {
+        assert_eq!(lower_bound_from_costs(&[], 4), 0.0);
+        assert_eq!(lower_bound_from_costs(&[1.0, 1.0, 1.0, 1.0], 2), 2.0);
+        assert_eq!(lower_bound_from_costs(&[5.0, 1.0], 4), 5.0);
+        assert!(lower_bound_from_costs(&[0.5, 0.5], 1) >= 1.0 - 1e-12);
     }
 
     #[test]

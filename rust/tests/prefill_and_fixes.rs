@@ -1,0 +1,301 @@
+//! Regression suite for the chunked causal prefill kernel and the
+//! engine hot-path bug sweep:
+//!
+//! * prefill oracle equivalence — greedy outputs are invariant to the
+//!   prefill chunk size (token-at-a-time ≡ whole-chunk) across GQA
+//!   geometries and deep radix trees, because the causal kernel's
+//!   per-row streaming state is independent of how rows are batched;
+//! * `Server::shutdown` never strands a `SubmitHandle`;
+//! * an engine failure notifies every outstanding waiter with a clean
+//!   error instead of dropping their channels;
+//! * reused division plans report a nonzero Eq. 4 lower bound.
+
+use codec::engine::{AttentionBackend, Engine, EngineConfig, Request, Server};
+use codec::model::Sampler;
+use codec::runtime::{ModelInfo, NativePieces, Pieces};
+use codec::sched::{divide_and_schedule, lower_bound_from_costs, DividerConfig};
+use codec::sched::plan::materialize_subtasks;
+use codec::tensor::Mat;
+use std::cell::Cell;
+
+fn geometry(n_q_heads: usize, n_kv_heads: usize) -> ModelInfo {
+    ModelInfo {
+        name: format!("prefill-{n_q_heads}q{n_kv_heads}kv"),
+        vocab: 256,
+        n_layers: 2,
+        n_q_heads,
+        n_kv_heads,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn engine_with(model: ModelInfo, prefill_chunk: Option<usize>) -> Engine {
+    Engine::new(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model,
+        max_batch: 4,
+        sampler: Sampler::Greedy,
+        seed: 11,
+        workers: 2,
+        prefill_chunk,
+        ..Default::default()
+    })
+    .expect("engine init")
+}
+
+fn run_prompts(
+    model: ModelInfo,
+    prefill_chunk: Option<usize>,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+) -> (Vec<(u64, Vec<u32>)>, usize) {
+    let mut e = engine_with(model, prefill_chunk);
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(Request::new(i as u64, p.clone(), max_new));
+    }
+    let mut out = e.run_to_completion().unwrap();
+    out.sort_by_key(|(id, _)| *id);
+    (out, e.metrics.prefill_attn_times.count())
+}
+
+/// Prompts sharing a long document prefix; length > 64 crosses the
+/// native backend's max-batch chunk boundary even with no chunk cap.
+fn shared_prompts(n: usize, doc_len: usize) -> Vec<Vec<u32>> {
+    let doc: Vec<u32> = (10..10 + doc_len as u32).collect();
+    (0..n)
+        .map(|r| {
+            let mut p = doc.clone();
+            p.extend(100 + r as u32 * 10..100 + r as u32 * 10 + 5);
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn prefill_chunking_invariant_across_gqa_geometries() {
+    // Token-at-a-time (chunk = 1), odd chunks (7), and the backend
+    // default must produce identical greedy tokens: the causal kernel's
+    // per-row math is independent of chunk batching, so any divergence
+    // means a chunk-boundary or masking bug. Runs the GQA spread the
+    // kernel has to get right: MHA (4:4), grouped (4:2), MQA (4:1).
+    for n_kv_heads in [4usize, 2, 1] {
+        let prompts = shared_prompts(3, 90);
+        let (whole, timings) = run_prompts(geometry(4, n_kv_heads), None, &prompts, 5);
+        assert!(timings > 0, "prefill attention timings must be recorded");
+        for chunk in [1usize, 7] {
+            let (chunked, _) =
+                run_prompts(geometry(4, n_kv_heads), Some(chunk), &prompts, 5);
+            assert_eq!(
+                whole, chunked,
+                "prefill_chunk = {chunk}, n_kv_heads = {n_kv_heads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prefill_chunking_invariant_on_deep_radix_trees() {
+    // Nested shared prefixes force radix splits: later requests prefill
+    // fresh leaves whose paths run through several ancestor nodes, so
+    // the per-layer KV gather spans multi-node paths.
+    let base: Vec<u32> = (10..80).collect(); // 70 tokens: > one chunk
+    let mut prompts = Vec::new();
+    for b in 0..2u32 {
+        for c in 0..2u32 {
+            let mut p = base.clone();
+            p.extend(90 + b * 5..90 + b * 5 + 4);
+            p.extend(200 + c * 7..200 + c * 7 + 3);
+            prompts.push(p);
+        }
+    }
+    let model = geometry(4, 2);
+    let (whole, _) = run_prompts(model.clone(), None, &prompts, 4);
+    let (token_at_a_time, _) = run_prompts(model, Some(1), &prompts, 4);
+    assert_eq!(whole, token_at_a_time);
+    assert_eq!(whole.len(), 4);
+}
+
+#[test]
+fn shutdown_never_strands_queued_submits() {
+    // Submit a burst and shut down immediately: every handle must
+    // resolve to tokens (the worker drains the queue before exiting),
+    // never to a dropped-channel error.
+    let server = Server::start(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: geometry(4, 2),
+        max_batch: 2,
+        sampler: Sampler::Greedy,
+        seed: 7,
+        workers: 2,
+        ..Default::default()
+    })
+    .expect("server start");
+    let handles: Vec<_> = shared_prompts(6, 24)
+        .into_iter()
+        .map(|p| server.submit(p, 3))
+        .collect();
+    let metrics = server.shutdown();
+    for h in handles {
+        let id = h.id;
+        let tokens = h
+            .wait()
+            .unwrap_or_else(|e| panic!("request {id} stranded: {e:#}"));
+        assert_eq!(tokens.len(), 3);
+    }
+    assert_eq!(metrics.tokens_generated, 6 * 3);
+}
+
+/// A transformer backend that fails after a fixed number of `attn_pre`
+/// calls — the injection seam for the engine-failure regression.
+struct FailingPieces {
+    inner: NativePieces,
+    calls: Cell<usize>,
+    fail_after: usize,
+}
+
+impl Pieces for FailingPieces {
+    fn model(&self) -> &ModelInfo {
+        self.inner.model()
+    }
+    fn max_batch_rows(&self) -> usize {
+        self.inner.max_batch_rows()
+    }
+    fn batch_bucket(&self, b: usize) -> anyhow::Result<usize> {
+        self.inner.batch_bucket(b)
+    }
+    fn embed(&self, b: usize, tokens: &[i32]) -> anyhow::Result<Mat> {
+        self.inner.embed(b, tokens)
+    }
+    fn attn_pre(
+        &self,
+        layer: usize,
+        b: usize,
+        x: &Mat,
+        pos: &[i32],
+    ) -> anyhow::Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>)> {
+        let n = self.calls.get() + 1;
+        self.calls.set(n);
+        if n > self.fail_after {
+            anyhow::bail!("injected backend failure (call {n})");
+        }
+        self.inner.attn_pre(layer, b, x, pos)
+    }
+    fn attn_post(&self, layer: usize, b: usize, x: &Mat, attn_out: &Mat) -> anyhow::Result<Mat> {
+        self.inner.attn_post(layer, b, x, attn_out)
+    }
+    fn lm_head(&self, b: usize, x: &Mat) -> anyhow::Result<Mat> {
+        self.inner.lm_head(b, x)
+    }
+}
+
+#[test]
+fn engine_failure_notifies_all_waiters() {
+    let model = geometry(4, 2);
+    let cfg = EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: model.clone(),
+        max_batch: 4,
+        sampler: Sampler::Greedy,
+        workers: 2,
+        ..Default::default()
+    };
+    let server = Server::start_with(move || {
+        let pieces = FailingPieces {
+            inner: NativePieces::new(model, 3),
+            calls: Cell::new(0),
+            fail_after: 6, // survives a bit, then dies mid-serve
+        };
+        Engine::with_pieces(Box::new(pieces), cfg)
+    })
+    .expect("server start");
+    let handles: Vec<_> = shared_prompts(4, 30)
+        .into_iter()
+        .map(|p| server.submit(p, 50))
+        .collect();
+    // Every handle must resolve — to tokens if it finished before the
+    // injected failure, otherwise to a clean error naming the cause,
+    // never the misleading dropped-channel message.
+    for h in handles {
+        match h.wait() {
+            Ok(tokens) => assert_eq!(tokens.len(), 50),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    !msg.contains("engine dropped request"),
+                    "waiter saw a dropped channel instead of the failure: {msg}"
+                );
+            }
+        }
+    }
+    // Shutdown after a fatal error must not panic.
+    let _ = server.shutdown();
+}
+
+#[test]
+fn reused_plans_report_nonzero_lower_bound() {
+    // Engine level: run long enough that the §6 plan-reuse fast path
+    // dominates, then check no plan ever reported the seed's bogus 0.0
+    // lower bound.
+    let mut e = Engine::new(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: geometry(4, 2),
+        max_batch: 3,
+        replan_interval: 4,
+        sampler: Sampler::Greedy,
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    for (i, p) in shared_prompts(3, 32).into_iter().enumerate() {
+        e.submit(Request::new(i as u64, p, 12));
+    }
+    e.run_to_completion().unwrap();
+    assert!(e.metrics.plans_reused > 0, "reuse path never exercised");
+    let lb = e
+        .metrics
+        .min_plan_lower_bound_ms
+        .expect("no plan lower bound recorded");
+    assert!(lb > 0.0, "a plan reported a zero lower bound");
+}
+
+#[test]
+fn fixed_division_lower_bound_consistent_with_divider() {
+    // Sched level: re-materializing a full plan's divisions (what the
+    // engine's reuse path does) must yield a bound that is positive, at
+    // most the LPT makespan, and not wildly below the divider's own
+    // certified bound.
+    let est = codec::cost::Estimator::table2();
+    let tasks: Vec<codec::sched::Task> = (0..12)
+        .map(|i| codec::sched::Task {
+            node: i + 1,
+            kv_head: 0,
+            nq: 4,
+            n: 2048 + 512 * i,
+        })
+        .collect();
+    let cfg = DividerConfig {
+        num_blocks: 16,
+        ..Default::default()
+    };
+    let full = divide_and_schedule(tasks.clone(), &est, &cfg);
+    assert!(full.lower_bound_ms > 0.0);
+    let subtasks = materialize_subtasks(&tasks, &full.divisions, &est);
+    let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
+    let reused_lb = lower_bound_from_costs(&costs, cfg.num_blocks);
+    assert!(reused_lb > 0.0);
+    assert!(
+        reused_lb <= full.makespan_ms + 1e-9,
+        "lower bound {reused_lb} exceeds makespan {}",
+        full.makespan_ms
+    );
+    // LPT's makespan is within 2× of the fixed-division bound, and the
+    // divider's binary-search bound is within 2× of the makespan, so the
+    // two bounds cannot be more than ~4× apart.
+    assert!(
+        reused_lb >= full.lower_bound_ms * 0.25,
+        "fixed-division bound {reused_lb} implausibly below divider bound {}",
+        full.lower_bound_ms
+    );
+}
