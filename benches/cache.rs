@@ -1,0 +1,156 @@
+//! KV cache manager bench: cold vs warm replay of a multi-wave
+//! shared-prefix workload (same documents, new questions per wave).
+//!
+//! * **cold** — retention disabled (`cache.retain = false`, the
+//!   pre-cache engine): every wave re-prefills its documents from
+//!   scratch.
+//! * **warm** — the retained prefix cache (default config): documents
+//!   are prefilled once in wave 0 and every later wave hits the cache.
+//! * **warm+budget** — same, under a page budget that forces eviction
+//!   pressure; reports occupancy and verifies the high-water mark never
+//!   exceeded the budget.
+//!
+//! Greedy outputs across all three runs must be identical — the
+//! cache-hit prefill path is an exact equivalence, not an
+//! approximation. The REDUCTION line backs the "warm wave prefills
+//! ≥ 80% fewer tokens" acceptance bar.
+//!
+//! Run: `cargo bench --bench cache`.
+
+use codec::cache::CacheConfig;
+use codec::engine::{AttentionBackend, Engine, EngineConfig, Request};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::workload::MultiWaveGen;
+use std::time::Instant;
+
+fn model() -> ModelInfo {
+    ModelInfo {
+        name: "cache-bench".to_string(),
+        vocab: 256,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn engine(cache: CacheConfig) -> Engine {
+    Engine::new(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: model(),
+        max_batch: 8,
+        sampler: Sampler::Greedy,
+        seed: 3,
+        workers: 2,
+        cache,
+        ..Default::default()
+    })
+    .expect("engine init")
+}
+
+/// Run every wave through one engine; returns (outputs, per-wave novel
+/// prefill tokens, wall seconds).
+fn run_waves(gen: &MultiWaveGen, cache: CacheConfig) -> (Vec<Vec<u32>>, Vec<usize>, f64, Engine) {
+    let mut e = engine(cache);
+    let mut outputs = Vec::new();
+    let mut novel = Vec::new();
+    let t0 = Instant::now();
+    let mut rid = 0u64;
+    let mut prev = 0usize;
+    for w in 0..gen.waves {
+        for p in gen.wave_prompts(w) {
+            e.submit(Request::new(rid, p, gen.max_new_tokens));
+            rid += 1;
+        }
+        let mut done = e.run_to_completion().expect("wave");
+        done.sort_by_key(|(id, _)| *id);
+        outputs.extend(done.into_iter().map(|(_, t)| t));
+        novel.push(e.metrics.prefill_tokens - prev);
+        prev = e.metrics.prefill_tokens;
+    }
+    (outputs, novel, t0.elapsed().as_secs_f64(), e)
+}
+
+fn main() {
+    let gen = MultiWaveGen {
+        num_docs: 2,
+        doc_tokens: 512,
+        waves: 2,
+        questions_per_doc: 4,
+        question_tokens: 8,
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    println!(
+        "cache bench: {} waves × {} requests, {}-token docs, {}-token questions\n",
+        gen.waves,
+        gen.num_docs * gen.questions_per_doc,
+        gen.doc_tokens,
+        gen.question_tokens
+    );
+
+    let (cold_out, cold_novel, cold_wall, cold_e) = run_waves(
+        &gen,
+        CacheConfig {
+            retain: false,
+            ..Default::default()
+        },
+    );
+    let (warm_out, warm_novel, warm_wall, warm_e) = run_waves(&gen, CacheConfig::default());
+    let budget = 120;
+    let (bud_out, bud_novel, bud_wall, bud_e) = run_waves(
+        &gen,
+        CacheConfig {
+            page_budget: Some(budget),
+            ..Default::default()
+        },
+    );
+
+    assert_eq!(cold_out, warm_out, "warm outputs must match cold exactly");
+    assert_eq!(cold_out, bud_out, "budgeted outputs must match cold exactly");
+    println!("✓ greedy outputs identical across cold / warm / warm+budget\n");
+
+    println!(
+        "{:<12} {:>14} {:>14} {:>9} {:>10}",
+        "run", "wave0 prefill", "wave1 prefill", "wall(s)", "hit rate"
+    );
+    for (name, novel, wall, hit) in [
+        ("cold", &cold_novel, cold_wall, cold_e.metrics.cache_hit_rate()),
+        ("warm", &warm_novel, warm_wall, warm_e.metrics.cache_hit_rate()),
+        ("warm+budget", &bud_novel, bud_wall, bud_e.metrics.cache_hit_rate()),
+    ] {
+        println!(
+            "{:<12} {:>14} {:>14} {:>9.2} {:>9.0}%",
+            name,
+            novel[0],
+            novel[1],
+            wall,
+            hit * 100.0
+        );
+    }
+
+    let reduction = 1.0 - warm_novel[1] as f64 / cold_novel[1] as f64;
+    println!(
+        "\nREDUCTION: warm wave-1 prefills {:.1}% fewer tokens than cold \
+         (bar: ≥ 80%)",
+        reduction * 100.0
+    );
+
+    let hw = bud_e.cache().store().max_allocated_pages();
+    println!(
+        "BUDGET: high-water {hw} pages ≤ budget {budget} pages ({} evictions, \
+         {} deferrals, occupancy {:.0}%)",
+        bud_e.metrics.cache_evictions,
+        bud_e.metrics.admissions_deferred,
+        bud_e.metrics.kv_occupancy().unwrap_or(0.0) * 100.0
+    );
+    assert!(hw <= budget, "page budget exceeded: {hw} > {budget}");
+    assert!(
+        reduction >= 0.8,
+        "warm reduction {:.1}% below the 80% bar",
+        reduction * 100.0
+    );
+}

@@ -1,24 +1,26 @@
 //! End-to-end validation driver — hermetic by default.
 //!
-//! Serves a real batched document-QA workload through the full stack
-//! under two attention backends and reports TPOT / throughput side by
-//! side:
+//! Replays a *timed* two-wave shared-prefix trace (same documents, new
+//! questions per wave, arrival offsets honored via `Server::replay`)
+//! through the full stack under two attention backends and reports
+//! TTFT / TPOT percentiles and KV-cache behavior side by side:
 //!
 //!   1. `CodecNative`  — CoDec plan + native PAC/POR
 //!   2. `FlashNative`  — per-request FlashDecoding (vLLM-like baseline)
 //!
 //! Greedy sampling makes the generated tokens a correctness check too:
 //! both backends must emit byte-identical outputs (same model, same
-//! exact attention semantics). With `--features pjrt` and built
-//! artifacts, a third run (`CodecPjrt` — the AOT Pallas PAC/POR kernels
-//! on the PJRT client) is reported as well.
+//! exact attention semantics). The second wave also demonstrates the
+//! retained prefix cache: its document prefills are served from cache,
+//! so the reported hit rate roughly doubles wave over wave. With
+//! `--features pjrt` and built artifacts, a third run (`CodecPjrt` —
+//! the AOT Pallas PAC/POR kernels on the PJRT client) is reported too.
 //!
 //! Run: `cargo run --release --example e2e_serve`
 
 use codec::engine::{AttentionBackend, EngineConfig, Server};
 use codec::model::Sampler;
-use codec::workload::{LoogleCategory, LoogleGen};
-use std::collections::BTreeMap;
+use codec::workload::MultiWaveGen;
 
 fn config(backend: AttentionBackend) -> EngineConfig {
     EngineConfig {
@@ -32,18 +34,15 @@ fn config(backend: AttentionBackend) -> EngineConfig {
 
 fn run(
     backend: AttentionBackend,
-    prompts: &[Vec<u32>],
-    max_new: usize,
-) -> anyhow::Result<(BTreeMap<usize, Vec<u32>>, codec::engine::Metrics, f64)> {
+    gen: &MultiWaveGen,
+) -> anyhow::Result<(Vec<Vec<u32>>, codec::engine::Metrics, f64)> {
     let server = Server::start_for("artifacts", config(backend))?;
     let t0 = std::time::Instant::now();
-    let handles: Vec<_> = prompts
-        .iter()
-        .map(|p| server.submit(p.clone(), max_new))
-        .collect();
-    let mut outputs = BTreeMap::new();
-    for (i, h) in handles.into_iter().enumerate() {
-        outputs.insert(i, h.wait()?);
+    let trace = gen.build_trace();
+    let handles = server.replay(&trace); // honors at_ms offsets
+    let mut outputs = Vec::new();
+    for h in handles {
+        outputs.push(h.wait()?);
     }
     let wall = t0.elapsed().as_secs_f64();
     Ok((outputs, server.shutdown(), wall))
@@ -55,20 +54,25 @@ fn pjrt_available() -> bool {
 
 fn main() -> anyhow::Result<()> {
     codec::util::logging::init();
-    let gen = LoogleGen {
-        category: LoogleCategory::Wiki,
+    let gen = MultiWaveGen {
         num_docs: 2,
+        doc_tokens: 350,
+        waves: 2,
         questions_per_doc: 4,
-        question_tokens: 16,
+        question_tokens: 12,
+        max_new_tokens: 16,
+        wave_gap_ms: 150.0,
+        intra_gap_ms: 2.0,
         seed: 11,
-        ..Default::default()
     };
-    let prompts = gen.build_prompts(60); // ~350-token docs on CPU
-    let max_new = 16;
     println!(
-        "e2e: {} requests over 2 shared documents ({}-token prompts), {max_new} new tokens each\n",
-        prompts.len(),
-        prompts[0].len()
+        "e2e: {} waves × {} requests over {} shared documents ({}-token docs), \
+         {} new tokens each, timed replay\n",
+        gen.waves,
+        gen.num_docs * gen.questions_per_doc,
+        gen.num_docs,
+        gen.doc_tokens,
+        gen.max_new_tokens
     );
 
     let mut backends = vec![AttentionBackend::CodecNative, AttentionBackend::FlashNative];
@@ -81,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for backend in backends {
         println!("running backend {backend:?}…");
-        let (outputs, metrics, wall) = run(backend, &prompts, max_new)?;
+        let (outputs, metrics, wall) = run(backend, &gen)?;
         results.push((backend, outputs, metrics, wall));
     }
 
@@ -101,24 +105,36 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!(
-        "{:<14} {:>10} {:>12} {:>10} {:>8}",
-        "backend", "TPOT(ms)", "decode tok/s", "plans c/r", "wall(s)"
+        "{:<14} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8}",
+        "backend", "TTFT p50", "TTFT p99", "TPOT p50", "TPOT p99", "tok/s", "hit%", "wall(s)"
     );
     for (backend, _, m, wall) in &results {
+        let ttft = m.ttft_summary_ms();
+        let tpot = m.tpot_summary_ms();
         println!(
-            "{:<14} {:>10.1} {:>12.1} {:>7}/{:<3} {:>8.2}",
+            "{:<14} {:>9.1} {:>9.1} {:>9.2} {:>9.2} {:>8.1} {:>8.0} {:>8.2}",
             format!("{backend:?}"),
-            m.mean_tpot_ms().unwrap_or(f64::NAN),
+            ttft.as_ref().map_or(f64::NAN, |s| s.p50),
+            ttft.as_ref().map_or(f64::NAN, |s| s.p99),
+            tpot.as_ref().map_or(f64::NAN, |s| s.p50),
+            tpot.as_ref().map_or(f64::NAN, |s| s.p99),
             m.decode_throughput(),
-            m.plans_computed,
-            m.plans_reused,
+            m.cache_hit_rate() * 100.0,
             wall
         );
     }
+    let m0 = &results[0].2;
+    println!(
+        "\nkv cache: {} pages in use (peak {}), {:.1} MiB resident, hit rate {:.0}%",
+        m0.kv_allocated_pages,
+        m0.kv_max_allocated_pages,
+        m0.kv_resident_bytes as f64 / (1024.0 * 1024.0),
+        m0.cache_hit_rate() * 100.0
+    );
     let tpot_codec = results[0].2.mean_tpot_ms().unwrap_or(f64::NAN);
     let tpot_flash = results[1].2.mean_tpot_ms().unwrap_or(f64::NAN);
     println!(
-        "\nCoDec vs vLLM-like TPOT on this CPU testbed: {:.2}x",
+        "CoDec vs vLLM-like TPOT on this CPU testbed: {:.2}x",
         tpot_flash / tpot_codec
     );
     println!("(the paper's 3.8x is GPU-scale; see README.md for scope)");

@@ -1,0 +1,37 @@
+//! KV cache management: retained prefixes, page-budgeted eviction, and
+//! memory-aware admission.
+//!
+//! The kvforest layer ([`crate::kvforest`]) stores the KV of the
+//! *running* batch; on its own it throws prefix sharing away at the
+//! worst moment — the instant a request retires, its nodes are pruned,
+//! so a second wave of questions over the same document re-prefills the
+//! whole prefix — and its paged pool grows without bound because
+//! nothing ever needs to be evicted. This module turns that storage
+//! into a managed, capacity-bounded cache (the ChunkAttention /
+//! SGLang-radix-cache posture):
+//!
+//! ```text
+//!   engine ──▶ CacheManager ──▶ Forest   (topology + refcounts)
+//!                       └─────▶ KvStore  (paged KV, budget accounting)
+//! ```
+//!
+//! * **Retained prefixes** — retiring a request *releases* its
+//!   refcounts instead of pruning ([`crate::kvforest::Forest::release_request`]);
+//!   nodes survive as cache entries with last-use stamps, and a new
+//!   request whose prompt walks a cached path skips prefill for the
+//!   matched tokens (cache-hit prefill is bit-identical to a cold run:
+//!   the matched rows *are* the rows a cold prefill would recompute).
+//! * **Page-budgeted eviction** — under a configured page budget the
+//!   manager evicts cold zero-refcount leaves (leaf-first LRU, cascading
+//!   up subtrees as parents go cold); pages on an active request's path
+//!   are never touched, by construction (every ancestor of an active
+//!   node has a non-empty query set).
+//! * **Memory-aware admission** — the engine consults
+//!   [`CacheManager::try_admit`] before admitting: the estimated pages
+//!   for the non-cached prompt suffix plus `max_new_tokens` are reserved
+//!   against the budget, so admission defers (and decode preempts to
+//!   pending as a last resort) instead of the pool OOMing.
+
+pub mod manager;
+
+pub use manager::{CacheConfig, CacheManager, CacheStats};

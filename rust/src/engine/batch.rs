@@ -69,23 +69,65 @@ impl Batcher {
         self.pending.push_back(req);
     }
 
+    /// Whether the active set has a free slot.
+    pub fn has_slot(&self) -> bool {
+        self.active.len() < self.max_active
+    }
+
+    /// The next request FIFO admission would take (the engine's
+    /// memory-aware gate inspects it before committing).
+    pub fn peek_pending(&self) -> Option<&Request> {
+        self.pending.front()
+    }
+
+    /// Admit the queue head into the active set (it still needs
+    /// prefill). `None` when the queue is empty or no slot is free.
+    pub fn admit_front(&mut self) -> Option<RequestId> {
+        if !self.has_slot() {
+            return None;
+        }
+        let req = self.pending.pop_front()?;
+        let id = req.id;
+        self.index.insert(id, self.active.len());
+        self.active.push(ActiveRequest {
+            req,
+            generated: Vec::new(),
+            prefilled: false,
+        });
+        Some(id)
+    }
+
+    /// Drop the queue head without admitting it (the engine rejects
+    /// memory-infeasible requests this way). Returns it for reporting.
+    pub fn reject_front(&mut self) -> Option<Request> {
+        self.pending.pop_front()
+    }
+
     /// Admit pending requests while slots are free; returns the newly
     /// admitted ids (they still need prefill).
     pub fn admit(&mut self) -> Vec<RequestId> {
         let mut new = Vec::new();
-        while self.active.len() < self.max_active {
-            let Some(req) = self.pending.pop_front() else {
-                break;
-            };
-            new.push(req.id);
-            self.index.insert(req.id, self.active.len());
-            self.active.push(ActiveRequest {
-                req,
-                generated: Vec::new(),
-                prefilled: false,
-            });
+        while let Some(id) = self.admit_front() {
+            new.push(id);
         }
         new
+    }
+
+    /// Preempt an active request back to the *front* of the pending
+    /// queue (it restarts from its prompt; generated tokens are
+    /// discarded — under greedy sampling and a warm prefix cache the
+    /// rerun is cheap and identical). Returns `false` for unknown ids.
+    pub fn preempt_to_pending(&mut self, rid: RequestId) -> bool {
+        let Some(&i) = self.index.get(&rid) else {
+            return false;
+        };
+        let a = self.active.remove(i);
+        self.index.clear();
+        for (j, b) in self.active.iter().enumerate() {
+            self.index.insert(b.req.id, j);
+        }
+        self.pending.push_front(a.req);
+        true
     }
 
     pub fn active(&self) -> &[ActiveRequest] {
@@ -203,6 +245,28 @@ mod tests {
         assert!(b.get_mut(2).is_none());
         // No-op retirement takes the early-out path.
         assert!(b.retire_done().is_empty());
+    }
+
+    #[test]
+    fn preempt_moves_to_pending_front() {
+        let mut b = Batcher::new(3);
+        for i in 0..4 {
+            b.submit(req(i, 4));
+        }
+        b.admit();
+        b.get_mut(2).unwrap().generated.push(9);
+        assert!(b.preempt_to_pending(2));
+        assert!(!b.preempt_to_pending(99));
+        assert_eq!(b.active().len(), 2);
+        // Preempted request is re-admitted *before* request 3 (front of
+        // the queue) and restarts clean.
+        assert_eq!(b.peek_pending().unwrap().id, 2);
+        assert_eq!(b.admit(), vec![2, 3]);
+        assert!(b.get_mut(2).unwrap().generated.is_empty());
+        // Survivors still resolve by id after the compaction.
+        for rid in [0u64, 1, 2, 3] {
+            assert_eq!(b.get_mut(rid).unwrap().req.id, rid);
+        }
     }
 
     #[test]

@@ -35,9 +35,10 @@ use super::request::Request;
 use crate::attention::codec_exec::{run_codec_attention, QueryBatch, BLOCK_K};
 use crate::attention::flash_decoding::run_flash_decoding;
 use crate::attention::prefill::causal_pac_streamed;
+use crate::cache::{CacheConfig, CacheManager};
 use crate::cost::Estimator;
 use crate::kvforest::forest::StorageEvent;
-use crate::kvforest::{Forest, KvStore, NodeId};
+use crate::kvforest::{Forest, NodeId};
 use crate::model::Sampler;
 use crate::runtime::{ModelInfo, NativePieces, Pieces};
 use crate::sched::plan::{lower_bound_from_costs, materialize_subtasks};
@@ -85,6 +86,9 @@ pub struct EngineConfig {
     /// `max_batch_rows`). Smaller chunks bound activation memory; the
     /// oracle tests use `Some(1)` to cross every chunk boundary.
     pub prefill_chunk: Option<usize>,
+    /// KV cache policy: prefix retention, page budget, eviction (see
+    /// [`crate::cache`]).
+    pub cache: CacheConfig,
 }
 
 impl Default for EngineConfig {
@@ -100,6 +104,7 @@ impl Default for EngineConfig {
             seed: 0,
             sampler: Sampler::Greedy,
             prefill_chunk: None,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -109,14 +114,20 @@ pub struct Engine {
     pieces: Box<dyn Pieces>,
     cfg: EngineConfig,
     est: Estimator,
-    forest: Forest,
-    store: KvStore,
+    /// The KV cache manager: owns the prefix forest and the paged store,
+    /// and enforces retention / eviction / admission (see [`crate::cache`]).
+    cache: CacheManager,
     batcher: Batcher,
     rng: Rng,
     pub metrics: Metrics,
     step_count: usize,
     /// Cached divisions from the last full plan: (node, kv_head) → b_k.
     cached_divisions: BTreeMap<(NodeId, usize), usize>,
+    /// Requests rejected by the admission gate (cannot fit the page
+    /// budget even with the cache drained), with the reason. Drained by
+    /// [`Engine::take_rejected`]; the server resolves their waiters with
+    /// the error while the engine keeps serving everyone else.
+    rejected: Vec<(u64, String)>,
 }
 
 impl Engine {
@@ -136,17 +147,23 @@ impl Engine {
     /// Create over an explicit transformer-pieces backend.
     pub fn with_pieces(pieces: Box<dyn Pieces>, cfg: EngineConfig) -> Result<Engine> {
         let mi = pieces.model().clone();
-        let store = KvStore::new(mi.n_layers, cfg.page_tokens, mi.n_kv_heads, mi.d_head);
+        let cache = CacheManager::new(
+            mi.n_layers,
+            cfg.page_tokens,
+            mi.n_kv_heads,
+            mi.d_head,
+            cfg.cache.clone(),
+        );
         Ok(Engine {
             pieces,
             est: Estimator::table2(),
-            forest: Forest::new(),
-            store,
+            cache,
             batcher: Batcher::new(cfg.max_batch),
             rng: Rng::new(cfg.seed ^ 0xC0DEC),
             metrics: Metrics::default(),
             step_count: 0,
             cached_divisions: BTreeMap::new(),
+            rejected: Vec::new(),
             cfg,
         })
     }
@@ -179,7 +196,12 @@ impl Engine {
     }
 
     pub fn forest(&self) -> &Forest {
-        &self.forest
+        self.cache.forest()
+    }
+
+    /// The KV cache manager (stats, occupancy, store accounting).
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -192,6 +214,9 @@ impl Engine {
     }
 
     /// Run until all submitted requests finish; returns (id, tokens).
+    /// Requests the admission gate rejected as infeasible for the page
+    /// budget are not in the result — drain them with
+    /// [`Engine::take_rejected`].
     pub fn run_to_completion(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
         let mut out = Vec::new();
         while self.has_work() {
@@ -200,12 +225,18 @@ impl Engine {
         Ok(out)
     }
 
-    /// One engine iteration: admit → prefill new → one decode step →
-    /// retire finished. Returns finished (id, generated tokens).
+    /// Drain the requests the admission gate rejected (with reasons):
+    /// requests that cannot fit the page budget even with the cache
+    /// drained and nothing else running.
+    pub fn take_rejected(&mut self) -> Vec<(u64, String)> {
+        std::mem::take(&mut self.rejected)
+    }
+
+    /// One engine iteration: memory-aware admit → prefill new → one
+    /// decode step (preempting under page pressure) → retire finished.
+    /// Returns finished (id, generated tokens).
     pub fn step(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
-        for rid in self.batcher.admit() {
-            self.prefill(rid)?;
-        }
+        self.admit_requests()?;
         let decoding: Vec<u64> = self
             .batcher
             .active()
@@ -213,6 +244,7 @@ impl Engine {
             .filter(|a| a.prefilled && !a.done())
             .map(|a| a.req.id)
             .collect();
+        let decoding = self.reclaim_for_decode(decoding)?;
         if !decoding.is_empty() {
             let t0 = Instant::now();
             self.decode_step(&decoding)?;
@@ -222,13 +254,146 @@ impl Engine {
         let mut finished = Vec::new();
         for a in done {
             self.metrics.on_finish(a.req.id);
-            for ev in self.forest.remove_request(a.req.id) {
-                self.store.apply(&ev);
-            }
+            // Retention policy lives in the manager: release (keep KV
+            // warm) by default, prune when `cache.retain` is off.
+            self.cache.on_retire(a.req.id);
             self.cached_divisions.clear(); // structure changed
             finished.push((a.req.id, a.generated));
         }
+        self.metrics.observe_cache(&self.cache);
         Ok(finished)
+    }
+
+    /// FIFO admission behind the manager's memory gate: the queue head
+    /// is admitted only when its page reservation (non-cached prompt
+    /// suffix + max_new_tokens) fits the budget, evicting cold cache
+    /// entries as needed. A head that cannot fit defers the whole queue
+    /// (order is preserved); if nothing is active either, it can never
+    /// fit — that one request is rejected (see [`Engine::take_rejected`])
+    /// and the engine keeps serving the rest of the queue.
+    fn admit_requests(&mut self) -> Result<()> {
+        loop {
+            if !self.batcher.has_slot() {
+                return Ok(());
+            }
+            let admitted = {
+                let Some(front) = self.batcher.peek_pending() else {
+                    return Ok(());
+                };
+                self.cache
+                    .try_admit(front.id, &front.prompt, front.max_new_tokens)
+            };
+            if !admitted {
+                if self.batcher.active().is_empty() {
+                    // Nothing running and nothing left to evict
+                    // (try_admit already fell back to a fully-cold
+                    // costing): this request can never fit. Reject it
+                    // alone; the rest of the queue may well fit.
+                    let req = self.batcher.reject_front().expect("peeked above");
+                    let msg = format!(
+                        "request {} ({} prompt tokens, max_new {}) cannot fit the \
+                         KV page budget of {:?} pages even with the cache drained",
+                        req.id,
+                        req.prompt.len(),
+                        req.max_new_tokens,
+                        self.cache.budget_pages()
+                    );
+                    log::warn!("{msg}");
+                    self.rejected.push((req.id, msg));
+                    continue;
+                }
+                // Defer: active work will free pages. (Counted here, not
+                // in try_admit, so rejections don't inflate the gauge.)
+                self.cache.note_deferral();
+                return Ok(());
+            }
+            let rid = self.batcher.admit_front().expect("slot + head checked");
+            let preemptions_before = self.cache.stats.preemptions;
+            self.prefill(rid)?;
+            if self.cache.stats.preemptions > preemptions_before {
+                // The fill hit memory pressure hard enough to preempt an
+                // active request; admitting more this step could ping-pong
+                // admissions against preemptions. Let decode make progress
+                // first.
+                return Ok(());
+            }
+        }
+    }
+
+    /// Make room for one decode step over `rids` (exact page count).
+    /// Eviction of cold entries is tried first; if the budget still
+    /// cannot cover the appends, the youngest active requests are
+    /// preempted back to pending until it can.
+    fn reclaim_for_decode(&mut self, mut rids: Vec<u64>) -> Result<Vec<u64>> {
+        loop {
+            if rids.is_empty() {
+                return Ok(rids);
+            }
+            let need = self.cache.decode_pages_needed(&rids);
+            if self.cache.prepare_pages(need) {
+                return Ok(rids);
+            }
+            if rids.len() == 1 {
+                anyhow::bail!(
+                    "KV page budget {:?} cannot cover a decode step for a single \
+                     request (need {} more pages; nothing evictable)",
+                    self.cache.budget_pages(),
+                    need
+                );
+            }
+            let victim = *rids.last().expect("non-empty");
+            self.preempt(victim);
+            rids.pop();
+        }
+    }
+
+    /// Preempt `rid` back to the pending queue: refcounts drop (KV stays
+    /// warm for the rerun), its reservation is released, and the request
+    /// restarts from its prompt at the queue front.
+    fn preempt(&mut self, rid: u64) {
+        self.cache.on_preempt(rid);
+        self.batcher.preempt_to_pending(rid);
+        // The discarded generation must not feed TTFT/TPOT: the first
+        // *delivered* token comes from the rerun.
+        self.metrics.on_preempt(rid);
+        self.cached_divisions.clear();
+    }
+
+    /// Test hook: force-preempt the youngest active request, exercising
+    /// the same path memory pressure takes ([`Engine::preempt`]).
+    /// Returns the preempted id.
+    #[doc(hidden)]
+    pub fn debug_preempt_youngest(&mut self) -> Option<u64> {
+        let victim = self.batcher.active().last().map(|a| a.req.id)?;
+        self.preempt(victim);
+        Some(victim)
+    }
+
+    /// Evict cold cache entries (and, failing that, preempt the youngest
+    /// active request other than `protect`) until `pages` more pages fit
+    /// under the budget.
+    fn ensure_pages_or_preempt(&mut self, pages: usize, protect: u64) -> Result<()> {
+        loop {
+            if self.cache.prepare_pages(pages) {
+                return Ok(());
+            }
+            let victim = self
+                .batcher
+                .active()
+                .iter()
+                .rev()
+                .map(|a| a.req.id)
+                .find(|&id| id != protect);
+            match victim {
+                Some(v) => self.preempt(v),
+                None => anyhow::bail!(
+                    "KV page budget {:?} cannot cover a prefill needing {} pages \
+                     (nothing evictable or preemptable)",
+                    self.cache.budget_pages(),
+                    pages
+                ),
+            }
+        }
     }
 
     // -----------------------------------------------------------------
@@ -242,17 +407,21 @@ impl Engine {
             .expect("admitted request missing")
             .req
             .clone();
-        let outcome = self.forest.insert_request(rid, &req.prompt);
+        // The manager mirrors splits into the store, stamps the path for
+        // LRU, and counts hit/miss tokens; NeedFill events come back for
+        // the engine to fill.
+        let outcome = self.cache.apply_insert(rid, &req.prompt);
         self.cached_divisions.clear();
-        for ev in &outcome.events {
-            self.store.apply(ev);
-        }
         // Radix property: the only unfilled storage is brand-new leaves.
         let mut novel = 0usize;
         let mut x_last: Option<Mat> = None;
         for ev in &outcome.events {
             if let StorageEvent::NeedFill { node, len } = ev {
+                // Exact-need capacity gate before the fill allocates.
+                let pages = self.cache.pages_for(*len);
+                self.ensure_pages_or_preempt(pages, rid)?;
                 x_last = self.fill_node(rid, *node, *len)?;
+                self.cache.consume_prefill(rid, *len);
                 novel += len;
             }
         }
@@ -298,10 +467,11 @@ impl Engine {
     /// pool.
     fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
         let mi = self.pieces.model().clone();
-        let path = self.forest.path(rid).expect("path").to_vec();
-        let ctx_total: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
+        let forest = self.cache.forest();
+        let path = forest.path(rid).expect("path").to_vec();
+        let ctx_total: usize = path.iter().map(|&n| forest.node(n).len).sum();
         let start = ctx_total - len; // global position of the leaf's first token
-        let tokens: Vec<u32> = self.forest.node(node).tokens.clone();
+        let tokens: Vec<u32> = forest.node(node).tokens.clone();
         debug_assert_eq!(tokens.len(), len);
         let max_chunk = self.prefill_chunk_rows();
         let g = mi.group_size();
@@ -343,7 +513,9 @@ impl Engine {
                 // Append the chunk's KV rows (real rows only, not
                 // padding) to the paged store and the in-memory gathers.
                 for i in 0..chunk {
-                    self.store.append(layer, node, &ks[i].data, &vs[i].data);
+                    self.cache
+                        .store_mut()
+                        .append(layer, node, &ks[i].data, &vs[i].data);
                 }
                 for kvh in 0..mi.n_kv_heads {
                     let (kf, vf) = &mut kv[layer][kvh];
@@ -395,14 +567,15 @@ impl Engine {
     /// Gather a request path's full (K, V) for one (layer, kv-head).
     fn gather_path_kv(&self, path: &[NodeId], layer: usize, kvh: usize) -> (Mat, Mat) {
         let d = self.pieces.model().d_head;
+        let store = self.cache.store();
         let mut k = Mat::zeros(0, d);
         let mut v = Mat::zeros(0, d);
         for &nid in path {
-            let len = self.store.len(layer, nid);
+            let len = store.len(layer, nid);
             if len == 0 {
                 continue;
             }
-            let (kn, vn) = self.store.node_kv(layer, nid, kvh, 0, len);
+            let (kn, vn) = store.node_kv(layer, nid, kvh, 0, len);
             k.push_rows(&kn);
             v.push_rows(&vn);
         }
@@ -415,8 +588,9 @@ impl Engine {
     /// with kv-heads in parallel.
     fn token_pass_no_append(&mut self, rid: u64, token: u32) -> Result<Mat> {
         let mi = self.pieces.model().clone();
-        let path = self.forest.path(rid).expect("path").to_vec();
-        let ctx: usize = path.iter().map(|&n| self.forest.node(n).len).sum();
+        let forest = self.cache.forest();
+        let path = forest.path(rid).expect("path").to_vec();
+        let ctx: usize = path.iter().map(|&n| forest.node(n).len).sum();
         let b = self.pieces.batch_bucket(1)?;
         let mut toks = vec![token as i32];
         toks.resize(b, 0);
@@ -478,8 +652,9 @@ impl Engine {
             let pos = a.next_pos() - 1; // position of `tok`
             tokens.push(tok);
             positions.push(pos);
-            // Topology append: tok joins the request's private node.
-            let (node, _off) = self.forest.append_token(rid, tok);
+            // Topology append: tok joins the request's private node (the
+            // manager stamps LRU and counts down the decode reservation).
+            let (node, _off) = self.cache.append_token(rid, tok);
             nodes.push(node);
         }
         // New private nodes may have appeared → divisions cache only
@@ -496,7 +671,9 @@ impl Engine {
             // Append the new tokens' KV, then attention sees them (the
             // token attends to itself).
             for (ri, &node) in nodes.iter().enumerate() {
-                self.store.append(layer, node, &ks[ri].data, &vs[ri].data);
+                self.cache
+                    .store_mut()
+                    .append(layer, node, &ks[ri].data, &vs[ri].data);
             }
             let batch = QueryBatch {
                 rids: rids.to_vec(),
@@ -506,22 +683,18 @@ impl Engine {
                 d_head: mi.d_head,
             };
             let t_attn = Instant::now();
+            let (forest, store) = (self.cache.forest(), self.cache.store());
             let outs: Vec<Mat> = match self.cfg.backend {
-                AttentionBackend::CodecNative => run_codec_attention(
-                    &self.forest,
-                    &self.store,
-                    layer,
-                    &batch,
-                    &plan,
-                    self.cfg.workers,
-                ),
+                AttentionBackend::CodecNative => {
+                    run_codec_attention(forest, store, layer, &batch, &plan, self.cfg.workers)
+                }
                 AttentionBackend::CodecPjrt => {
                     self.pieces
-                        .codec_attention(&self.forest, &self.store, layer, &batch, &plan)?
+                        .codec_attention(forest, store, layer, &batch, &plan)?
                 }
                 AttentionBackend::FlashNative => run_flash_decoding(
-                    &self.forest,
-                    &self.store,
+                    forest,
+                    store,
                     layer,
                     &batch,
                     self.cfg.num_blocks,
@@ -552,7 +725,7 @@ impl Engine {
     /// and node lengths are layer-invariant.
     fn plan_attention(&mut self, mi: &ModelInfo) -> Result<Plan> {
         let g = mi.group_size();
-        let tasks = tasks_from_forest(&self.forest, mi.n_kv_heads, g);
+        let tasks = tasks_from_forest(self.cache.forest(), mi.n_kv_heads, g);
         let full_replan = self.cached_divisions.is_empty()
             || self.step_count % self.cfg.replan_interval == 0;
         if full_replan {

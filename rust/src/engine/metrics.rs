@@ -5,7 +5,8 @@
 //! server records one attention timing per layer per step — unbounded
 //! `Vec<Duration>`s were a memory leak measured in entries-per-token.
 
-use crate::util::stats::{percentile_sorted, Summary};
+use crate::cache::CacheManager;
+use crate::util::stats::{percentile_sorted, summarize, Summary};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -170,6 +171,29 @@ pub struct Metrics {
     pub tokens_generated: usize,
     pub prefill_tokens: usize,
     pub prefill_tokens_shared: usize,
+
+    // --- KV cache gauges (mirrored from `crate::cache` once per engine
+    // step via [`Metrics::observe_cache`]) ---
+    /// Pages currently referenced by block tables.
+    pub kv_allocated_pages: usize,
+    /// High-water mark of allocated pages — the "never exceeds the
+    /// budget" invariant is checked against this.
+    pub kv_max_allocated_pages: usize,
+    /// Configured total page budget (`None` = unbounded).
+    pub kv_budget_pages: Option<usize>,
+    /// Bytes referenced by block tables (in-use pages).
+    pub kv_in_use_bytes: usize,
+    /// Bytes of page backing memory still resident (in-use + freed but
+    /// not yet shrunk — see `PagedPool::shrink_to`).
+    pub kv_resident_bytes: usize,
+    /// Cold nodes evicted under budget pressure.
+    pub cache_evictions: usize,
+    /// Pages freed by eviction.
+    pub cache_evicted_pages: usize,
+    /// Engine steps in which the queue head had to wait for pages.
+    pub admissions_deferred: usize,
+    /// Active requests preempted back to pending under memory pressure.
+    pub preemptions: usize,
 }
 
 impl Metrics {
@@ -201,6 +225,17 @@ impl Metrics {
         }
     }
 
+    /// Reset a request's delivery timings after preemption: its
+    /// generated tokens were discarded, so the first *kept* token (and
+    /// the TPOT window) is still ahead. `tokens_generated` is not rolled
+    /// back — it counts compute performed, not tokens delivered.
+    pub fn on_preempt(&mut self, rid: u64) {
+        if let Some(r) = self.requests.get_mut(&rid) {
+            r.first_token = None;
+            r.tokens = 0;
+        }
+    }
+
     /// Record a plan's Eq. 4 lower bound (ignoring empty-forest plans,
     /// whose 0.0 is legitimate).
     pub fn on_plan_lower_bound(&mut self, lb_ms: f64, n_tasks: usize) {
@@ -211,6 +246,59 @@ impl Metrics {
             Some(cur) => cur.min(lb_ms),
             None => lb_ms,
         });
+    }
+
+    /// Mirror the cache manager's counters and pool accounting into the
+    /// metric gauges (called once per engine step and at shutdown).
+    pub fn observe_cache(&mut self, cm: &CacheManager) {
+        let store = cm.store();
+        self.kv_allocated_pages = store.allocated_pages();
+        self.kv_max_allocated_pages = store.max_allocated_pages();
+        self.kv_budget_pages = cm.budget_pages();
+        self.kv_in_use_bytes = store.in_use_bytes();
+        self.kv_resident_bytes = store.resident_bytes();
+        self.cache_evictions = cm.stats.evictions;
+        self.cache_evicted_pages = cm.stats.evicted_pages;
+        self.admissions_deferred = cm.stats.admissions_deferred;
+        self.preemptions = cm.stats.preemptions;
+    }
+
+    /// Fraction of prompt tokens served from cached/shared KV — the
+    /// cache-centric name for [`Metrics::prefill_share_rate`]. The
+    /// token counts live in `prefill_tokens`/`prefill_tokens_shared`
+    /// (one pair; `cache::CacheStats` tracks the same quantities inside
+    /// the manager, asserted equal by the cache tests).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.prefill_share_rate()
+    }
+
+    /// Fraction of the page budget currently allocated (`None` when
+    /// unbounded).
+    pub fn kv_occupancy(&self) -> Option<f64> {
+        self.kv_budget_pages
+            .map(|b| self.kv_allocated_pages as f64 / b.max(1) as f64)
+    }
+
+    /// TTFT percentiles across requests that produced a first token (ms).
+    pub fn ttft_summary_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .requests
+            .values()
+            .filter_map(|r| r.ttft())
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        (!xs.is_empty()).then(|| summarize(&xs))
+    }
+
+    /// TPOT percentiles across finished multi-token requests (ms).
+    pub fn tpot_summary_ms(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .requests
+            .values()
+            .filter_map(|r| r.tpot())
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        (!xs.is_empty()).then(|| summarize(&xs))
     }
 
     /// Mean TPOT across finished requests (ms).
@@ -332,6 +420,55 @@ mod tests {
         assert!(t.mean_ms().is_none());
         assert_eq!(t.max_ms(), 0.0);
         assert_eq!(t.total_secs(), 0.0);
+    }
+
+    #[test]
+    fn cache_gauge_helpers() {
+        let mut m = Metrics::default();
+        m.prefill_tokens_shared = 90;
+        m.prefill_tokens = 10;
+        assert!((m.cache_hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(m.cache_hit_rate(), m.prefill_share_rate());
+        assert!(m.kv_occupancy().is_none());
+        m.kv_budget_pages = Some(200);
+        m.kv_allocated_pages = 50;
+        assert!((m.kv_occupancy().unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preempt_resets_delivery_timings() {
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        assert!(m.requests[&1].first_token.is_some());
+        m.on_preempt(1);
+        assert!(m.requests[&1].first_token.is_none());
+        assert_eq!(m.requests[&1].tokens, 0);
+        // The rerun's tokens count fresh.
+        m.on_token(1);
+        assert_eq!(m.requests[&1].tokens, 1);
+        assert!(m.requests[&1].first_token.is_some());
+    }
+
+    #[test]
+    fn ttft_and_tpot_summaries() {
+        let mut m = Metrics::default();
+        assert!(m.ttft_summary_ms().is_none());
+        assert!(m.tpot_summary_ms().is_none());
+        for rid in 1..=3u64 {
+            m.on_submit(rid);
+            std::thread::sleep(Duration::from_millis(2));
+            m.on_token(rid);
+            std::thread::sleep(Duration::from_millis(2));
+            m.on_token(rid);
+            m.on_finish(rid);
+        }
+        let ttft = m.ttft_summary_ms().unwrap();
+        assert_eq!(ttft.n, 3);
+        assert!(ttft.p50 >= 1.0, "ttft p50 = {}", ttft.p50);
+        let tpot = m.tpot_summary_ms().unwrap();
+        assert_eq!(tpot.n, 3);
+        assert!(tpot.p99 >= tpot.p50);
     }
 
     #[test]

@@ -24,4 +24,4 @@ pub mod server;
 pub use engine::{AttentionBackend, Engine, EngineConfig};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, RequestState};
-pub use server::{Server, SubmitHandle};
+pub use server::{Server, SubmitHandle, WaitError};

@@ -16,11 +16,13 @@
 use super::engine::{AttentionBackend, Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::Request;
+use crate::workload::trace::Trace;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Per-request completion payload: tokens, or a human-readable failure.
 type SubmitResult = std::result::Result<Vec<u32>, String>;
@@ -36,6 +38,30 @@ pub struct SubmitHandle {
     rx: Receiver<SubmitResult>,
 }
 
+/// Why a bounded wait did not return tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WaitError {
+    /// The deadline passed with the request still in flight. The handle
+    /// is untouched: wait again (or longer) to pick up the result.
+    Timeout,
+    /// The engine reported a failure for this request.
+    Failed(String),
+    /// The engine dropped the completion channel (thread death).
+    Disconnected,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Timeout => write!(f, "timed out waiting for the request"),
+            WaitError::Failed(msg) => write!(f, "{msg}"),
+            WaitError::Disconnected => write!(f, "engine dropped the request"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
 impl SubmitHandle {
     /// Block until the request completes. Returns the generated tokens,
     /// or the failure the engine reported for this request.
@@ -44,6 +70,19 @@ impl SubmitHandle {
             Ok(Ok(tokens)) => Ok(tokens),
             Ok(Err(msg)) => Err(anyhow::anyhow!("request {}: {msg}", self.id)),
             Err(_) => Err(anyhow::anyhow!("engine dropped request {}", self.id)),
+        }
+    }
+
+    /// Block for at most `timeout`. [`WaitError::Timeout`] leaves the
+    /// handle usable, so callers polling a wedged or merely slow engine
+    /// can bound each wait and retry (or give up) instead of blocking
+    /// forever in [`SubmitHandle::wait`].
+    pub fn wait_timeout(&self, timeout: Duration) -> std::result::Result<Vec<u32>, WaitError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(tokens)) => Ok(tokens),
+            Ok(Err(msg)) => Err(WaitError::Failed(msg)),
+            Err(RecvTimeoutError::Timeout) => Err(WaitError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(WaitError::Disconnected),
         }
     }
 }
@@ -132,6 +171,29 @@ impl Server {
         SubmitHandle { id, rx: done_rx }
     }
 
+    /// Timed trace replay: submit every entry at its recorded arrival
+    /// offset ([`crate::workload::trace::TraceEntry::at_ms`] relative to
+    /// the call), blocking the calling thread between arrivals. Entries
+    /// are replayed in arrival order; handles are returned in that same
+    /// order. TTFT/TPOT percentiles for the replay are available from
+    /// the [`Metrics`] snapshot `shutdown()` returns
+    /// ([`Metrics::ttft_summary_ms`] / [`Metrics::tpot_summary_ms`]).
+    pub fn replay(&self, trace: &Trace) -> Vec<SubmitHandle> {
+        let mut order: Vec<&crate::workload::trace::TraceEntry> = trace.entries.iter().collect();
+        order.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).expect("NaN at_ms"));
+        let t0 = Instant::now();
+        order
+            .into_iter()
+            .map(|e| {
+                let target = Duration::from_secs_f64(e.at_ms.max(0.0) / 1e3);
+                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+                self.submit(e.prompt.clone(), e.max_new_tokens)
+            })
+            .collect()
+    }
+
     /// Stop accepting requests, finish in-flight *and already-queued*
     /// work, return the final metrics snapshot. No handle is stranded:
     /// every request submitted before this call resolves to tokens or a
@@ -216,6 +278,13 @@ fn serve_loop(
                 for (rid, tokens) in finished {
                     if let Some(done_tx) = waiters.remove(&rid) {
                         let _ = done_tx.send(Ok(tokens));
+                    }
+                }
+                // Admission-rejected requests (infeasible for the page
+                // budget) fail individually; the engine keeps serving.
+                for (rid, msg) in engine.take_rejected() {
+                    if let Some(done_tx) = waiters.remove(&rid) {
+                        let _ = done_tx.send(Err(msg));
                     }
                 }
             }

@@ -286,6 +286,79 @@ impl Forest {
         (target, n.len - 1)
     }
 
+    /// Longest prompt prefix already present in the forest: the nodes it
+    /// runs through (including a final partially-matched node — an
+    /// insert would split there and still reuse the matched rows) and
+    /// its length in tokens. Read-only: used by the cache manager's
+    /// admission estimate and LRU touch before committing an insert.
+    pub fn match_path(&self, tokens: &[u32]) -> (Vec<NodeId>, usize) {
+        let mut nodes = Vec::new();
+        let mut cur = VIRTUAL_ROOT;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let next = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].alive && self.nodes[c].tokens.first() == Some(&tokens[i]));
+            let Some(c) = next else { break };
+            let common = common_prefix_len(&self.nodes[c].tokens, &tokens[i..]);
+            i += common;
+            nodes.push(c);
+            if common < self.nodes[c].tokens.len() {
+                break; // partial match: an insert would split here
+            }
+            cur = c;
+        }
+        (nodes, i)
+    }
+
+    /// Length in tokens of the longest cached prompt prefix.
+    pub fn match_len(&self, tokens: &[u32]) -> usize {
+        self.match_path(tokens).1
+    }
+
+    /// Drop `rid` from every query set on its path *without pruning*:
+    /// the nodes stay alive as retained cache entries (refcount may drop
+    /// to zero), so a later request over the same prefix skips prefill.
+    /// Returns the released path (root-to-leaf) so the cache manager can
+    /// stamp last-use times. The pruning counterpart is
+    /// [`Forest::remove_request`].
+    pub fn release_request(&mut self, rid: RequestId) -> Vec<NodeId> {
+        let Some(path) = self.paths.remove(&rid) else {
+            return Vec::new();
+        };
+        for &nid in &path {
+            self.nodes[nid].remove_request(rid);
+        }
+        path
+    }
+
+    /// Evictable frontier: alive nodes with an empty query set and no
+    /// children. Any ancestor of an active request's node has a
+    /// non-empty query set (paths are root-to-leaf), so evicting a cold
+    /// leaf can never free storage an active request references.
+    pub fn cold_leaves(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.alive_nodes()
+            .filter(|(_, n)| n.degree() == 0 && n.children.is_empty())
+            .map(|(id, _)| id)
+    }
+
+    /// Evict one cold leaf (see [`Forest::cold_leaves`]); the caller
+    /// frees its storage. Returns the parent, which may itself have
+    /// become a cold leaf.
+    pub fn evict_leaf(&mut self, nid: NodeId) -> NodeId {
+        let n = &self.nodes[nid];
+        assert!(
+            nid != VIRTUAL_ROOT && n.alive && n.degree() == 0 && n.children.is_empty(),
+            "evict_leaf({nid}): not a cold leaf"
+        );
+        self.nodes[nid].alive = false;
+        let parent = self.nodes[nid].parent;
+        self.nodes[parent].children.retain(|&c| c != nid);
+        parent
+    }
+
     /// Remove a finished request; prune nodes whose query set drops empty.
     /// Returns storage events for freed nodes.
     pub fn remove_request(&mut self, rid: RequestId) -> Vec<StorageEvent> {
@@ -530,6 +603,71 @@ mod tests {
         let b = f.add_synthetic(a, 3);
         f.assign_synthetic_request(9, b);
         assert_eq!(f.path(9).unwrap(), &[a, b]);
+    }
+
+    #[test]
+    fn release_retains_nodes_and_rematch_hits() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("document-alpha"));
+        let released = f.release_request(1);
+        assert_eq!(released.len(), 1);
+        f.check_invariants().unwrap();
+        // Nodes survive as cache: a new request over the same prompt
+        // matches fully and needs no NeedFill events.
+        assert_eq!(f.total_tokens(), "document-alpha".len());
+        assert_eq!(f.match_len(&toks("document-alpha")), "document-alpha".len());
+        let out = f.insert_request(2, &toks("document-alpha"));
+        assert!(out
+            .events
+            .iter()
+            .all(|e| !matches!(e, StorageEvent::NeedFill { .. })));
+    }
+
+    #[test]
+    fn match_len_partial_and_miss() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("document-alpha"));
+        f.release_request(1);
+        assert_eq!(f.match_len(&toks("document-beta")), "document-".len());
+        assert_eq!(f.match_len(&toks("other")), 0);
+        // Deep paths: split then match across two nodes.
+        f.insert_request(2, &toks("document-al")); // splits at "document-al"
+        assert_eq!(f.match_len(&toks("document-alpha")), "document-alpha".len());
+    }
+
+    #[test]
+    fn cold_leaves_and_evict_cascade() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-a"));
+        f.insert_request(2, &toks("doc-b"));
+        f.release_request(1);
+        f.release_request(2);
+        // Shared "doc-" node has children, so only the two leaves are cold.
+        let cold: Vec<NodeId> = f.cold_leaves().collect();
+        assert_eq!(cold.len(), 2);
+        let parent = f.evict_leaf(cold[0]);
+        // Parent still has the other child → still not a cold leaf.
+        assert!(!f.cold_leaves().any(|n| n == parent));
+        let parent2 = f.evict_leaf(cold[1]);
+        assert_eq!(parent, parent2);
+        // Now the shared node is the evictable frontier.
+        assert_eq!(f.cold_leaves().collect::<Vec<_>>(), vec![parent]);
+        f.evict_leaf(parent);
+        assert_eq!(f.total_tokens(), 0);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_never_offered_for_active_ancestors() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-a"));
+        f.insert_request(2, &toks("doc-b"));
+        f.release_request(1);
+        // "doc-" is on request 2's path (degree 1), "a" is cold.
+        let cold: Vec<NodeId> = f.cold_leaves().collect();
+        assert_eq!(cold.len(), 1);
+        let p2 = f.path(2).unwrap().to_vec();
+        assert!(!p2.contains(&cold[0]));
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!   per-layer, per-head K/V rows, with block tables per node. The same
 //!   layout vLLM uses, so CoDec "follows the same paged KV-cache layout
 //!   as PagedAttention" (§6) holds structurally here too.
+//!
+//! Lifecycle policy (prefix retention, LRU eviction under a page
+//! budget, admission gating) lives a layer up in [`crate::cache`]; this
+//! module only provides the mechanisms it builds on: release-without-
+//! prune ([`Forest::release_request`]), the cold-leaf eviction frontier
+//! ([`Forest::cold_leaves`]), prefix matching ([`Forest::match_path`]),
+//! and the pool's budget/high-water/resident accounting.
 
 pub mod forest;
 pub mod paged;

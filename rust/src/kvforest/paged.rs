@@ -15,14 +15,35 @@ use crate::tensor::Mat;
 use std::collections::BTreeMap;
 
 /// Fixed-size page pool for one layer.
+///
+/// The pool distinguishes three page populations:
+///
+/// * **in use** — pages referenced by some block table
+///   ([`PagedPool::allocated_pages`]);
+/// * **free** — page ids on the free list, ready for reuse;
+/// * **resident** — pages whose backing `Vec<f32>` is still allocated.
+///   Freeing a page keeps its backing resident for cheap reuse;
+///   [`PagedPool::shrink_to`] releases the excess back to the OS.
+///
+/// `page_budget` is an accounting target, not a hard allocator limit:
+/// the cache manager (`crate::cache`) evicts/defers to stay under it,
+/// and [`PagedPool::max_allocated_pages`] records the high-water mark so
+/// tests can verify the budget was never exceeded.
 #[derive(Debug)]
 pub struct PagedPool {
     pub page_tokens: usize,
     pub n_kv_heads: usize,
     pub d_head: usize,
-    /// page → flat [token][head][d] · 2 (K then V halves).
+    /// Per-pool budget target in pages (`None` = unbounded). Enforcement
+    /// (evict/defer) lives in the cache manager; the pool itself uses it
+    /// as the residency target of [`KvStore::shrink_to_budget`].
+    pub page_budget: Option<usize>,
+    /// page → flat [token][head][d] · 2 (K then V halves). An empty Vec
+    /// means the page was shrunk: the id is still valid (it is on the
+    /// free list) but the backing memory has been released.
     pages: Vec<Vec<f32>>,
     free: Vec<usize>,
+    max_allocated: usize,
 }
 
 impl PagedPool {
@@ -31,8 +52,10 @@ impl PagedPool {
             page_tokens,
             n_kv_heads,
             d_head,
+            page_budget: None,
             pages: Vec::new(),
             free: Vec::new(),
+            max_allocated: 0,
         }
     }
 
@@ -41,13 +64,20 @@ impl PagedPool {
     }
 
     fn alloc_page(&mut self) -> usize {
-        if let Some(p) = self.free.pop() {
-            self.pages[p].iter_mut().for_each(|x| *x = 0.0);
+        let p = if let Some(p) = self.free.pop() {
+            if self.pages[p].is_empty() {
+                // Shrunk page: re-materialize the backing memory.
+                self.pages[p] = vec![0.0; self.page_floats()];
+            } else {
+                self.pages[p].iter_mut().for_each(|x| *x = 0.0);
+            }
             p
         } else {
             self.pages.push(vec![0.0; self.page_floats()]);
             self.pages.len() - 1
-        }
+        };
+        self.max_allocated = self.max_allocated.max(self.allocated_pages());
+        p
     }
 
     fn free_page(&mut self, p: usize) {
@@ -56,6 +86,50 @@ impl PagedPool {
 
     pub fn allocated_pages(&self) -> usize {
         self.pages.len() - self.free.len()
+    }
+
+    /// Page ids on the free list (ready for reuse).
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages whose backing memory is still allocated (in use + freed but
+    /// not shrunk).
+    pub fn resident_pages(&self) -> usize {
+        self.pages.iter().filter(|p| !p.is_empty()).count()
+    }
+
+    /// Bytes of backing memory currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.pages.iter().map(|p| p.len() * 4).sum()
+    }
+
+    /// Bytes referenced by block tables (in-use pages only).
+    pub fn in_use_bytes(&self) -> usize {
+        self.allocated_pages() * self.page_floats() * 4
+    }
+
+    /// High-water mark of [`PagedPool::allocated_pages`].
+    pub fn max_allocated_pages(&self) -> usize {
+        self.max_allocated
+    }
+
+    /// Release backing memory of freed pages until at most
+    /// `max(target_pages, allocated_pages)` pages stay resident. In-use
+    /// pages are never touched; shrunk page ids remain reusable (the
+    /// next alloc re-materializes them).
+    pub fn shrink_to(&mut self, target_pages: usize) {
+        let floor = self.allocated_pages().max(target_pages);
+        let mut resident = self.resident_pages();
+        for &p in &self.free {
+            if resident <= floor {
+                break;
+            }
+            if !self.pages[p].is_empty() {
+                self.pages[p] = Vec::new();
+                resident -= 1;
+            }
+        }
     }
 
     #[inline]
@@ -181,11 +255,15 @@ impl LayerStore {
         }
     }
 
-    fn free_node(&mut self, node: NodeId) {
+    fn free_node(&mut self, node: NodeId) -> usize {
         if let Some(bl) = self.blocks.remove(&node) {
+            let n = bl.pages.len();
             for p in bl.pages {
                 self.pool.free_page(p);
             }
+            n
+        } else {
+            0
         }
     }
 }
@@ -233,16 +311,97 @@ impl KvStore {
                 }
             }
             StorageEvent::Freed { node } => {
-                for l in &mut self.layers {
-                    l.free_node(node);
-                }
+                self.free_node(node);
             }
             StorageEvent::NeedFill { .. } => {} // engine fills via append()
         }
     }
 
+    /// Free `node`'s pages in every layer; returns total pages freed.
+    pub fn free_node(&mut self, node: NodeId) -> usize {
+        self.layers.iter_mut().map(|l| l.free_node(node)).sum()
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.layers[0].pool.page_tokens
+    }
+
+    /// Set a *total* page-budget target, spread evenly over the layers
+    /// (appends are layer-symmetric: every token adds one row to every
+    /// layer, so per-layer loads stay in lockstep).
+    pub fn set_page_budget(&mut self, total: Option<usize>) {
+        let n = self.layers.len();
+        for l in &mut self.layers {
+            l.pool.page_budget = total.map(|t| (t / n).max(1));
+        }
+    }
+
     pub fn allocated_pages(&self) -> usize {
         self.layers.iter().map(|l| l.pool.allocated_pages()).sum()
+    }
+
+    /// Sum of per-layer allocation high-water marks. Because appends are
+    /// layer-symmetric this equals the peak of [`KvStore::allocated_pages`];
+    /// in general it is an upper bound on it, so asserting it stays under
+    /// a budget is the *stronger* check.
+    pub fn max_allocated_pages(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.pool.max_allocated_pages())
+            .sum()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.free_pages()).sum()
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.resident_pages()).sum()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.resident_bytes()).sum()
+    }
+
+    pub fn in_use_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.in_use_bytes()).sum()
+    }
+
+    /// Release freed-page backing memory until at most `total_pages`
+    /// (spread per layer) stay resident. See [`PagedPool::shrink_to`].
+    pub fn shrink_to(&mut self, total_pages: usize) {
+        let n = self.layers.len();
+        for l in &mut self.layers {
+            l.pool.shrink_to((total_pages / n).max(1));
+        }
+    }
+
+    /// Shrink each layer's pool to its own configured
+    /// [`PagedPool::page_budget`] (no-op for pools without one). This is
+    /// what the cache manager calls after an eviction burst.
+    pub fn shrink_to_budget(&mut self) {
+        for l in &mut self.layers {
+            if let Some(b) = l.pool.page_budget {
+                l.pool.shrink_to(b);
+            }
+        }
+    }
+
+    /// Page ids backing `node` in `layer` — test/introspection hook for
+    /// the eviction-safety property tests.
+    #[doc(hidden)]
+    pub fn node_page_ids(&self, layer: usize, node: NodeId) -> Vec<usize> {
+        self.layers[layer]
+            .blocks
+            .get(&node)
+            .map(|b| b.pages.clone())
+            .unwrap_or_default()
+    }
+
+    /// Free-list page ids of `layer` — test/introspection hook.
+    #[doc(hidden)]
+    pub fn free_page_ids(&self, layer: usize) -> Vec<usize> {
+        self.layers[layer].pool.free.clone()
     }
 }
 
@@ -336,6 +495,72 @@ mod tests {
             s.append(0, 2, &row(1, 2, t as f32), &row(1, 2, t as f32));
         }
         assert_eq!(s.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn shrink_releases_freed_backing_only() {
+        let mut s = KvStore::new(1, 2, 1, 2);
+        for t in 0..8 {
+            s.append(0, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        for t in 0..4 {
+            s.append(0, 2, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        assert_eq!(s.allocated_pages(), 6);
+        assert_eq!(s.resident_pages(), 6);
+        s.free_node(1); // 4 pages to the free list, still resident
+        assert_eq!(s.allocated_pages(), 2);
+        assert_eq!(s.free_pages(), 4);
+        assert_eq!(s.resident_pages(), 6);
+        assert!(s.resident_bytes() > s.in_use_bytes());
+        s.shrink_to(3);
+        // 2 in use + at most 1 freed stay resident.
+        assert_eq!(s.allocated_pages(), 2);
+        assert_eq!(s.resident_pages(), 3);
+        // Node 2's rows are untouched by the shrink.
+        let (k, _) = s.node_kv(0, 2, 0, 0, 4);
+        assert!((k.at(3, 0) - 3.0).abs() < 1e-6);
+        // Shrunk ids are still reusable: new appends re-materialize them.
+        for t in 0..8 {
+            s.append(0, 3, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        assert_eq!(s.allocated_pages(), 6);
+        let (k3, _) = s.node_kv(0, 3, 0, 0, 8);
+        assert!((k3.at(7, 0) - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shrink_to_budget_uses_per_pool_targets() {
+        let mut s = KvStore::new(2, 2, 1, 2);
+        s.set_page_budget(Some(4)); // 2 pages per layer
+        for layer in 0..2 {
+            for t in 0..8 {
+                s.append(layer, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+            }
+        }
+        s.free_node(1); // 8 freed pages stay resident…
+        assert_eq!(s.resident_pages(), 8);
+        s.shrink_to_budget(); // …until shrunk to the per-pool budget
+        assert_eq!(s.resident_pages(), 4);
+        // No budget configured → no-op.
+        s.set_page_budget(None);
+        s.shrink_to_budget();
+        assert_eq!(s.resident_pages(), 4);
+    }
+
+    #[test]
+    fn high_water_mark_tracks_peak_not_current() {
+        let mut s = KvStore::new(2, 2, 1, 2);
+        for layer in 0..2 {
+            for t in 0..6 {
+                s.append(layer, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+            }
+        }
+        assert_eq!(s.allocated_pages(), 6);
+        assert_eq!(s.max_allocated_pages(), 6);
+        s.free_node(1);
+        assert_eq!(s.allocated_pages(), 0);
+        assert_eq!(s.max_allocated_pages(), 6, "peak must persist");
     }
 
     #[test]

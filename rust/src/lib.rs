@@ -28,6 +28,7 @@
 //! | [`util`] | substrates built in-repo: JSON, PRNG, CLI, stats, thread pool |
 //! | [`tensor`] | row-major f32 tensors + the math kernels the CPU executors use |
 //! | [`kvforest`] | the prefix-tree KV cache (§4.1): radix forest, indexes, paging |
+//! | [`cache`] | KV cache manager: retained prefixes, page-budgeted LRU eviction, memory-aware admission |
 //! | [`attention`] | PAC/POR primitives, the chunked causal prefill kernel, and the CoDec / baseline executors (§4.2-4.3) |
 //! | [`cost`] | profile-based cost estimator + GPU spec registry (§5.2, Table 2) |
 //! | [`sched`] | task division and greedy scheduling (§5.1) |
@@ -44,6 +45,7 @@
 
 pub mod attention;
 pub mod bench;
+pub mod cache;
 pub mod cost;
 pub mod engine;
 pub mod gpusim;

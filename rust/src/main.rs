@@ -11,6 +11,7 @@
 //!   demo         quick smoke: forest + plan + native CoDec vs oracle
 
 use codec::bench::figures;
+use codec::cache::CacheConfig;
 use codec::cost::Profile;
 use codec::engine::{AttentionBackend, EngineConfig, Server};
 use codec::model::Sampler;
@@ -26,6 +27,9 @@ fn usage() -> ! {
 commands:
   serve        --requests N --docs D --max-new M --backend codec|codec-pjrt|flash
                [--artifacts DIR] [--batch B] [--scale-down K]
+               [--kv-budget PAGES]  (0 = unbounded; with a budget the
+                retained prefix cache evicts LRU to stay under it —
+                recommended for long-running servers)
                (codec|flash run hermetically; codec-pjrt needs a build
                 with --features pjrt plus AOT artifacts)
   bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
@@ -166,12 +170,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_new = args.usize_or("max-new", 16).map_err(anyhow::Error::msg)?;
     let batch = args.usize_or("batch", 8).map_err(anyhow::Error::msg)?;
     let scale_down = args.usize_or("scale-down", 100).map_err(anyhow::Error::msg)?;
+    let kv_budget = args.usize_or("kv-budget", 0).map_err(anyhow::Error::msg)?;
     let dir = args.str_or("artifacts", &artifacts_dir()).to_string();
 
     let cfg = EngineConfig {
         backend,
         max_batch: batch,
         sampler: Sampler::Temperature(0.8),
+        cache: CacheConfig {
+            // 0 = unbounded: the retained cache grows with the corpus.
+            // Long-running servers should set a budget so cold prefixes
+            // are evicted LRU instead of accumulating forever.
+            page_budget: (kv_budget > 0).then_some(kv_budget),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let gen = LoogleGen {
@@ -220,6 +232,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "plans: {} computed, {} reused",
         m.plans_computed, m.plans_reused
     );
+    println!(
+        "kv cache:           {} pages in use (peak {}, budget {}), hit rate {}%",
+        m.kv_allocated_pages,
+        m.kv_max_allocated_pages,
+        m.kv_budget_pages
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "∞".to_string()),
+        (m.cache_hit_rate() * 100.0).round()
+    );
+    if m.cache_evictions + m.preemptions + m.admissions_deferred > 0 {
+        println!(
+            "memory pressure:    {} evictions ({} pages), {} deferrals, {} preemptions",
+            m.cache_evictions, m.cache_evicted_pages, m.admissions_deferred, m.preemptions
+        );
+    }
     println!("wall time:          {wall:.2} s");
     Ok(())
 }

@@ -1,0 +1,154 @@
+//! Multi-wave shared-prefix traces: the retained-cache workload.
+//!
+//! Wave `w` asks a fresh set of questions over the *same* document
+//! corpus as wave `w-1`, arriving after a gap. A cold engine re-prefills
+//! every document each wave; an engine with a retained prefix cache
+//! (`crate::cache`) prefills each document once and serves later waves
+//! from the cache — the cold-vs-warm comparison `benches/cache.rs` and
+//! the cache-manager acceptance tests measure exactly this trace shape.
+//!
+//! Documents are deterministic per (seed, doc); questions are
+//! deterministic per (seed, wave, doc, q) — so wave prompts share each
+//! document prefix exactly while every wave's questions are new.
+
+use super::trace::{Trace, TraceEntry};
+use crate::util::prng::Rng;
+
+/// Generator for multi-wave shared-prefix traces.
+#[derive(Debug, Clone)]
+pub struct MultiWaveGen {
+    /// Documents in the corpus.
+    pub num_docs: usize,
+    /// Tokens per document.
+    pub doc_tokens: usize,
+    /// Question waves over the corpus.
+    pub waves: usize,
+    /// Questions per document per wave.
+    pub questions_per_doc: usize,
+    /// Tokens per question suffix.
+    pub question_tokens: usize,
+    /// Decode length requested per entry.
+    pub max_new_tokens: usize,
+    /// Arrival gap between waves, milliseconds.
+    pub wave_gap_ms: f64,
+    /// Arrival gap between entries within a wave, milliseconds.
+    pub intra_gap_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for MultiWaveGen {
+    fn default() -> Self {
+        MultiWaveGen {
+            num_docs: 2,
+            doc_tokens: 96,
+            waves: 2,
+            questions_per_doc: 4,
+            question_tokens: 8,
+            max_new_tokens: 8,
+            wave_gap_ms: 60.0,
+            intra_gap_ms: 1.0,
+            seed: 7,
+        }
+    }
+}
+
+impl MultiWaveGen {
+    /// Document `d`'s tokens (deterministic per seed and doc index).
+    pub fn doc(&self, d: usize) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed ^ ((d as u64 + 1) << 17));
+        (0..self.doc_tokens)
+            .map(|_| 100 + rng.below(7000) as u32)
+            .collect()
+    }
+
+    /// Prompt for question `q` of document `d` in wave `w`:
+    /// document tokens ++ wave-unique question tokens.
+    pub fn prompt(&self, w: usize, d: usize, q: usize) -> Vec<u32> {
+        let mut p = self.doc(d);
+        let tag = ((w as u64) << 32) | ((d as u64) << 16) | (q as u64);
+        let mut rng = Rng::new(self.seed ^ 0xBEEF ^ tag.wrapping_mul(0x9E37_79B9));
+        p.extend((0..self.question_tokens).map(|_| 100 + rng.below(7000) as u32));
+        p
+    }
+
+    /// All prompts of wave `w`, doc-major.
+    pub fn wave_prompts(&self, w: usize) -> Vec<Vec<u32>> {
+        (0..self.num_docs)
+            .flat_map(|d| (0..self.questions_per_doc).map(move |q| self.prompt(w, d, q)))
+            .collect()
+    }
+
+    /// The full replayable trace: wave `w`'s entries arrive at
+    /// `w·wave_gap_ms + i·intra_gap_ms`.
+    pub fn build_trace(&self) -> Trace {
+        let mut entries = Vec::new();
+        for w in 0..self.waves {
+            for (i, prompt) in self.wave_prompts(w).into_iter().enumerate() {
+                entries.push(TraceEntry {
+                    prompt,
+                    max_new_tokens: self.max_new_tokens,
+                    at_ms: w as f64 * self.wave_gap_ms + i as f64 * self.intra_gap_ms,
+                });
+            }
+        }
+        Trace { entries }
+    }
+
+    /// Tokens a *cold* engine prefills per wave (every prompt in full).
+    pub fn cold_prefill_tokens_per_wave(&self) -> usize {
+        self.num_docs * self.questions_per_doc * (self.doc_tokens + self.question_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waves_share_documents_with_fresh_questions() {
+        let g = MultiWaveGen::default();
+        let w0 = g.wave_prompts(0);
+        let w1 = g.wave_prompts(1);
+        assert_eq!(w0.len(), g.num_docs * g.questions_per_doc);
+        // Same doc prefix across waves…
+        let common: usize = w0[0]
+            .iter()
+            .zip(&w1[0])
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert!(common >= g.doc_tokens, "waves must share the document");
+        // …but the question suffixes differ (and differ within a wave).
+        assert_ne!(w0[0], w1[0]);
+        assert_ne!(w0[0], w0[1]);
+    }
+
+    #[test]
+    fn trace_arrival_offsets_are_wave_ordered() {
+        let g = MultiWaveGen {
+            waves: 3,
+            wave_gap_ms: 50.0,
+            intra_gap_ms: 2.0,
+            ..Default::default()
+        };
+        let t = g.build_trace();
+        assert_eq!(t.entries.len(), 3 * g.num_docs * g.questions_per_doc);
+        let per_wave = g.num_docs * g.questions_per_doc;
+        assert_eq!(t.entries[0].at_ms, 0.0);
+        assert_eq!(t.entries[per_wave].at_ms, 50.0);
+        assert!(t.entries[per_wave - 1].at_ms < t.entries[per_wave].at_ms);
+        // Round-trips through the JSON trace format.
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g = MultiWaveGen::default();
+        assert_eq!(g.build_trace(), g.build_trace());
+        let g2 = MultiWaveGen {
+            seed: 8,
+            ..Default::default()
+        };
+        assert_ne!(g.wave_prompts(0), g2.wave_prompts(0));
+    }
+}
