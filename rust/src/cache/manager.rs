@@ -65,10 +65,19 @@ pub struct CacheStats {
     /// Pages freed by eviction.
     pub evicted_pages: usize,
     /// Admission attempts deferred for lack of budget (one per engine
-    /// step in which the queue head could not be admitted).
+    /// step in which no pending request could be admitted).
     pub admissions_deferred: usize,
     /// Active requests preempted back to pending under memory pressure.
     pub preemptions: usize,
+    /// Requests admitted ahead of an older pending request by the
+    /// cost-ranked admission reorder (engine-side; mirrored here so the
+    /// gauges travel together).
+    pub admission_reorders: usize,
+    /// Cold-leaf frontier entries examined across all evictions. With
+    /// the incremental frontier this is O(1 + pinned) per eviction; the
+    /// old full re-scan was O(alive nodes) per eviction — quadratic over
+    /// an eviction burst. `benches/sched.rs` asserts on this counter.
+    pub eviction_scan_steps: usize,
 }
 
 /// Pages a request is still expected to allocate, in tokens. Prefill
@@ -89,10 +98,10 @@ pub struct CacheManager {
     cfg: CacheConfig,
     n_layers: usize,
     page_tokens: usize,
-    /// Logical LRU clock; bumped on every touching operation.
+    /// Logical LRU clock; bumped on every touching operation. Stamps
+    /// live on the forest nodes themselves (`Forest::touch`), which
+    /// keeps the cold-leaf frontier key exact.
     clock: u64,
-    /// node → last-use stamp. Nodes missing from the map rank coldest.
-    last_use: BTreeMap<NodeId, u64>,
     reserved: BTreeMap<RequestId, Reservation>,
     pub stats: CacheStats,
 }
@@ -114,7 +123,6 @@ impl CacheManager {
             n_layers,
             page_tokens,
             clock: 0,
-            last_use: BTreeMap::new(),
             reserved: BTreeMap::new(),
             stats: CacheStats::default(),
         }
@@ -179,6 +187,18 @@ impl CacheManager {
         self.forest.match_len(prompt)
     }
 
+    /// Cost-ranked admission score (lower admits first): the pages the
+    /// request would *reserve* (novel prompt suffix + decode budget)
+    /// minus the pages its cached prefix hit re-uses. Small warm
+    /// requests score lowest, large cold ones highest. Read-only — the
+    /// engine ranks a scan window of pending requests with this before
+    /// committing [`CacheManager::try_admit`].
+    pub fn admission_score(&self, prompt: &[u32], max_new: usize) -> i64 {
+        let matched = self.forest.match_len(prompt);
+        let novel = prompt.len() - matched;
+        (self.pages_for(novel) + self.pages_for(max_new)) as i64 - self.pages_for(matched) as i64
+    }
+
     // -----------------------------------------------------------------
     // Admission.
     // -----------------------------------------------------------------
@@ -232,10 +252,11 @@ impl CacheManager {
             return true;
         };
         // Touch the pinned prefix so LRU eviction prefers other entries
-        // beyond this attempt too.
+        // beyond this attempt too. `Forest::touch` re-keys any frontier
+        // entry atomically — the pin must not leave a stale cold key.
         let now = self.tick();
         for &nid in &protect {
-            self.last_use.insert(nid, now);
+            self.forest.touch(nid, now);
         }
         let need = self.pages_for(novel) + self.pages_for(max_new);
         let evictions_before = self.stats.evictions;
@@ -276,14 +297,13 @@ impl CacheManager {
         let mut novel = 0usize;
         for ev in &outcome.events {
             match *ev {
-                StorageEvent::Split { node, tail, .. } => {
-                    // Mirror the split into the store and stamp the tail
-                    // (inheriting the head's recency) BEFORE any eviction
-                    // can run: an unstamped, unmirrored tail is a cold
-                    // leaf that would rank coldest — evicting it and then
-                    // moving rows into the dead node would leak its pages.
-                    let stamp = self.last_use.get(&node).copied().unwrap_or(now);
-                    self.last_use.insert(tail, stamp);
+                StorageEvent::Split { .. } => {
+                    // Mirror the split into the store BEFORE any eviction
+                    // can run: the forest already stamped the tail with
+                    // the head's recency at split time, but until the
+                    // rows are mirrored an eviction of the (possibly
+                    // cold) tail would free pages the store still maps
+                    // to the head.
                     self.store.apply(ev);
                     // A split can cost one extra page per layer;
                     // re-establish headroom from cold entries
@@ -298,7 +318,7 @@ impl CacheManager {
             }
         }
         for &nid in &outcome.path {
-            self.last_use.insert(nid, now);
+            self.forest.touch(nid, now);
         }
         self.stats.hit_tokens += prompt.len() - novel;
         self.stats.miss_tokens += novel;
@@ -310,7 +330,7 @@ impl CacheManager {
     pub fn append_token(&mut self, rid: RequestId, token: u32) -> (NodeId, usize) {
         let (node, off) = self.forest.append_token(rid, token);
         let now = self.tick();
-        self.last_use.insert(node, now);
+        self.forest.touch(node, now);
         if let Some(r) = self.reserved.get_mut(&rid) {
             r.decode_tokens = r.decode_tokens.saturating_sub(1);
         }
@@ -326,13 +346,10 @@ impl CacheManager {
             let path = self.forest.release_request(rid);
             let now = self.tick();
             for nid in path {
-                self.last_use.insert(nid, now);
+                self.forest.touch(nid, now);
             }
         } else {
             for ev in self.forest.remove_request(rid) {
-                if let StorageEvent::Freed { node } = ev {
-                    self.last_use.remove(&node);
-                }
                 self.store.apply(&ev);
             }
         }
@@ -386,15 +403,25 @@ impl CacheManager {
     /// [`CacheManager::evict_one`] with a pin list: nodes in `protect`
     /// are never chosen (used by admission to keep the matched prefix
     /// alive while sizing its reservation).
+    ///
+    /// The victim is the head of the forest's incrementally maintained
+    /// cold-leaf frontier — O(pinned) per eviction instead of the old
+    /// full re-scan of every alive node (quadratic over a burst).
+    /// `stats.eviction_scan_steps` counts the frontier entries examined.
     fn evict_one_excluding(&mut self, protect: &[NodeId]) -> Option<usize> {
-        let victim = self
-            .forest
-            .cold_leaves()
-            .filter(|nid| !protect.contains(nid))
-            .min_by_key(|nid| self.last_use.get(nid).copied().unwrap_or(0))?;
+        let mut scanned = 0usize;
+        let mut victim = None;
+        for nid in self.forest.coldest_leaves() {
+            scanned += 1;
+            if !protect.contains(&nid) {
+                victim = Some(nid);
+                break;
+            }
+        }
+        self.stats.eviction_scan_steps += scanned;
+        let victim = victim?;
         self.forest.evict_leaf(victim);
         let freed = self.store.free_node(victim);
-        self.last_use.remove(&victim);
         self.stats.evictions += 1;
         self.stats.evicted_pages += freed;
         Some(freed)

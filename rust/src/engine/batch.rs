@@ -11,6 +11,11 @@ pub struct ActiveRequest {
     pub generated: Vec<u32>,
     /// Whether prefill has completed.
     pub prefilled: bool,
+    /// Bypass count carried from the pending queue; restored if the
+    /// request is preempted back to pending, so the anti-starvation
+    /// bound K is cumulative across admit/preempt cycles instead of
+    /// resetting on every admission.
+    pub bypassed: usize,
 }
 
 impl ActiveRequest {
@@ -39,7 +44,16 @@ impl ActiveRequest {
     }
 }
 
-/// FIFO admission with a bounded active set (the continuous batcher).
+/// Admission queue with a bounded active set (the continuous batcher).
+///
+/// Admission order is the engine's call: FIFO via
+/// [`Batcher::admit_front`], or cost-ranked within a bounded scan window
+/// via [`Batcher::scan_window`] + [`Batcher::admit_at`]. Reordering is
+/// starvation-bounded: every admission that jumps the queue increments
+/// the bypass count of the requests it passed, and the scan window is
+/// truncated at the first request whose count reached the engine's K —
+/// nothing behind it can be admitted before it, so no request is ever
+/// bypassed more than K times.
 ///
 /// The active set is indexed by request id: `get_mut` is called once per
 /// request per decode step, so the seed's linear scan made every step
@@ -51,6 +65,8 @@ pub struct Batcher {
     active: Vec<ActiveRequest>,
     /// rid → index into `active`; rebuilt when retirement compacts.
     index: HashMap<RequestId, usize>,
+    /// rid → times a younger pending request was admitted ahead of it.
+    bypasses: HashMap<RequestId, usize>,
     max_active: usize,
 }
 
@@ -61,6 +77,7 @@ impl Batcher {
             pending: VecDeque::new(),
             active: Vec::new(),
             index: HashMap::new(),
+            bypasses: HashMap::new(),
             max_active,
         }
     }
@@ -74,33 +91,73 @@ impl Batcher {
         self.active.len() < self.max_active
     }
 
-    /// The next request FIFO admission would take (the engine's
-    /// memory-aware gate inspects it before committing).
+    /// The next request FIFO admission would take (equivalent to
+    /// [`Batcher::pending_at`] with index 0).
     pub fn peek_pending(&self) -> Option<&Request> {
-        self.pending.front()
+        self.pending_at(0)
     }
 
     /// Admit the queue head into the active set (it still needs
     /// prefill). `None` when the queue is empty or no slot is free.
     pub fn admit_front(&mut self) -> Option<RequestId> {
-        if !self.has_slot() {
+        self.admit_at(0)
+    }
+
+    /// Admit the pending request at queue position `idx` into the active
+    /// set, bypassing (and bumping the bypass count of) every older
+    /// pending request in front of it. `None` when no slot is free or
+    /// `idx` is out of range.
+    pub fn admit_at(&mut self, idx: usize) -> Option<RequestId> {
+        if !self.has_slot() || idx >= self.pending.len() {
             return None;
         }
-        let req = self.pending.pop_front()?;
+        for skipped in self.pending.iter().take(idx) {
+            *self.bypasses.entry(skipped.id).or_insert(0) += 1;
+        }
+        let req = self.pending.remove(idx).expect("idx bounds checked");
         let id = req.id;
+        let bypassed = self.bypasses.remove(&id).unwrap_or(0);
         self.index.insert(id, self.active.len());
         self.active.push(ActiveRequest {
             req,
             generated: Vec::new(),
             prefilled: false,
+            bypassed,
         });
         Some(id)
+    }
+
+    /// The admission scan window: pending requests in queue order, at
+    /// most `max_window` long, truncated *just after* the first request
+    /// already bypassed `max_bypass` times (it may still be chosen —
+    /// nothing behind it may). Each entry is (queue index, request).
+    pub fn scan_window(&self, max_window: usize, max_bypass: usize) -> Vec<(usize, &Request)> {
+        let mut out = Vec::new();
+        for (i, req) in self.pending.iter().enumerate().take(max_window.max(1)) {
+            out.push((i, req));
+            if self.bypass_count(req.id) >= max_bypass {
+                break;
+            }
+        }
+        out
+    }
+
+    /// The pending request at queue position `idx`, if any.
+    pub fn pending_at(&self, idx: usize) -> Option<&Request> {
+        self.pending.get(idx)
+    }
+
+    /// Times `rid` has been bypassed by a younger admitted request.
+    pub fn bypass_count(&self, rid: RequestId) -> usize {
+        self.bypasses.get(&rid).copied().unwrap_or(0)
     }
 
     /// Drop the queue head without admitting it (the engine rejects
     /// memory-infeasible requests this way). Returns it for reporting.
     pub fn reject_front(&mut self) -> Option<Request> {
-        self.pending.pop_front()
+        let req = self.pending.pop_front()?;
+        self.bypasses.remove(&req.id);
+        Some(req)
     }
 
     /// Admit pending requests while slots are free; returns the newly
@@ -125,6 +182,11 @@ impl Batcher {
         self.index.clear();
         for (j, b) in self.active.iter().enumerate() {
             self.index.insert(b.req.id, j);
+        }
+        // Restore the bypass count: the starvation bound K is over the
+        // request's whole lifetime, not per admission.
+        if a.bypassed > 0 {
+            self.bypasses.insert(a.req.id, a.bypassed);
         }
         self.pending.push_front(a.req);
         true
@@ -270,11 +332,64 @@ mod tests {
     }
 
     #[test]
+    fn admit_at_counts_bypasses_and_window_caps_starvation() {
+        let mut b = Batcher::new(8);
+        for i in 0..5 {
+            b.submit(req(i, 4));
+        }
+        const K: usize = 2;
+        // Admit index 2 twice-removed: requests 0 and 1 each get bypassed.
+        assert_eq!(b.admit_at(2), Some(2));
+        assert_eq!(b.bypass_count(0), 1);
+        assert_eq!(b.bypass_count(1), 1);
+        // Window honors the cap but not yet the starvation barrier.
+        assert_eq!(b.scan_window(3, K).len(), 3);
+        assert_eq!(b.admit_at(1), Some(1)); // bypasses 0 again → K reached
+        assert_eq!(b.bypass_count(0), K);
+        // Request 0 is starved: the window truncates right after it, so
+        // nothing behind it can be admitted before it.
+        let w = b.scan_window(4, K);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].1.id, 0);
+        // Admitting it clears its counter.
+        assert_eq!(b.admit_at(0), Some(0));
+        assert_eq!(b.bypass_count(0), 0);
+        assert_eq!(b.scan_window(4, K).len(), 2);
+        // Out-of-range and full-active guards.
+        assert_eq!(b.admit_at(9), None);
+        let mut full = Batcher::new(1);
+        full.submit(req(10, 1));
+        full.submit(req(11, 1));
+        full.admit_front();
+        assert_eq!(full.admit_at(0), None, "no slot");
+    }
+
+    #[test]
+    fn bypass_count_survives_preemption() {
+        // The K bound is over the request's lifetime: a request admitted
+        // after some bypasses and then preempted back to pending resumes
+        // with its count, not a fresh zero.
+        let mut b = Batcher::new(4);
+        for i in 0..3 {
+            b.submit(req(i, 4));
+        }
+        assert_eq!(b.admit_at(1), Some(1)); // bypasses request 0 once
+        assert_eq!(b.admit_at(0), Some(0));
+        assert_eq!(b.bypass_count(0), 0, "count moves with the admission");
+        assert!(b.preempt_to_pending(0));
+        assert_eq!(b.bypass_count(0), 1, "count restored on preemption");
+        // A never-bypassed request round-trips without creating a count.
+        assert!(b.preempt_to_pending(1));
+        assert_eq!(b.bypass_count(1), 0);
+    }
+
+    #[test]
     fn positions_and_last_token() {
         let a = ActiveRequest {
             req: req(0, 4),
             generated: vec![10, 11],
             prefilled: true,
+            bypassed: 0,
         };
         assert_eq!(a.next_pos(), 5);
         assert_eq!(a.last_token(), 11);
@@ -282,6 +397,7 @@ mod tests {
             req: req(0, 4),
             generated: vec![],
             prefilled: true,
+            bypassed: 0,
         };
         assert_eq!(fresh.last_token(), 3);
     }

@@ -86,6 +86,17 @@ pub struct EngineConfig {
     /// `max_batch_rows`). Smaller chunks bound activation memory; the
     /// oracle tests use `Some(1)` to cross every chunk boundary.
     pub prefill_chunk: Option<usize>,
+    /// Admission scan window: how many pending requests the
+    /// pressure-aware admission gate ranks by cost before admitting.
+    /// `1` = strict FIFO (the pre-reorder behavior); larger windows let
+    /// small / cache-warm requests jump large cold ones under memory
+    /// pressure. Per-request greedy outputs are unaffected — only the
+    /// service order changes.
+    pub admit_window: usize,
+    /// Anti-starvation bound K: once a pending request has been bypassed
+    /// K times, the scan window truncates at it — no younger request can
+    /// be admitted before it again.
+    pub admit_max_bypass: usize,
     /// KV cache policy: prefix retention, page budget, eviction (see
     /// [`crate::cache`]).
     pub cache: CacheConfig,
@@ -104,6 +115,8 @@ impl Default for EngineConfig {
             seed: 0,
             sampler: Sampler::Greedy,
             prefill_chunk: None,
+            admit_window: 8,
+            admit_max_bypass: 4,
             cache: CacheConfig::default(),
         }
     }
@@ -264,32 +277,52 @@ impl Engine {
         Ok(finished)
     }
 
-    /// FIFO admission behind the manager's memory gate: the queue head
-    /// is admitted only when its page reservation (non-cached prompt
-    /// suffix + max_new_tokens) fits the budget, evicting cold cache
-    /// entries as needed. A head that cannot fit defers the whole queue
-    /// (order is preserved); if nothing is active either, it can never
-    /// fit — that one request is rejected (see [`Engine::take_rejected`])
-    /// and the engine keeps serving the rest of the queue.
+    /// Pressure-aware admission behind the manager's memory gate. A
+    /// bounded scan window over the pending queue is ranked by
+    /// [`CacheManager::admission_score`] (novel-page reservation minus
+    /// cached-prefix hit, FIFO position as tie-break) and candidates are
+    /// tried cheapest-first — so a small or cache-warm request can jump
+    /// a large cold one stuck at the head. Starvation is bounded by
+    /// `admit_max_bypass`: the window truncates at the first request
+    /// bypassed K times, forcing it to be served next. `admit_window: 1`
+    /// recovers strict FIFO. Per-request greedy outputs are order-
+    /// independent, so reordering changes latency, never tokens.
+    ///
+    /// If no candidate fits, the queue waits (order is preserved); if
+    /// nothing is active either, the head can never fit — that one
+    /// request is rejected (see [`Engine::take_rejected`]) and the
+    /// engine keeps serving the rest of the queue.
     fn admit_requests(&mut self) -> Result<()> {
         loop {
-            if !self.batcher.has_slot() {
+            if !self.batcher.has_slot() || self.batcher.pending_len() == 0 {
                 return Ok(());
             }
-            let admitted = {
-                let Some(front) = self.batcher.peek_pending() else {
-                    return Ok(());
-                };
-                self.cache
-                    .try_admit(front.id, &front.prompt, front.max_new_tokens)
-            };
-            if !admitted {
+            // Rank the scan window by admission score; ties fall back to
+            // queue order, so equal-cost requests stay FIFO.
+            let (w, k) = (self.cfg.admit_window, self.cfg.admit_max_bypass);
+            let mut ranked: Vec<(i64, usize)> = self
+                .batcher
+                .scan_window(w, k)
+                .into_iter()
+                .map(|(i, r)| (self.cache.admission_score(&r.prompt, r.max_new_tokens), i))
+                .collect();
+            ranked.sort_unstable();
+            let mut admitted = None;
+            for &(_, idx) in &ranked {
+                let req = self.batcher.pending_at(idx).expect("window index in range");
+                if self.cache.try_admit(req.id, &req.prompt, req.max_new_tokens) {
+                    admitted = Some((idx, req.id));
+                    break;
+                }
+            }
+            let Some((idx, rid)) = admitted else {
                 if self.batcher.active().is_empty() {
-                    // Nothing running and nothing left to evict
-                    // (try_admit already fell back to a fully-cold
-                    // costing): this request can never fit. Reject it
-                    // alone; the rest of the queue may well fit.
-                    let req = self.batcher.reject_front().expect("peeked above");
+                    // Nothing running, nothing left to evict (try_admit
+                    // already fell back to a fully-cold costing), and no
+                    // window candidate fits — the head in particular can
+                    // never fit. Reject it alone; the rest of the queue
+                    // may well fit once it is out of the way.
+                    let req = self.batcher.reject_front().expect("pending checked");
                     let msg = format!(
                         "request {} ({} prompt tokens, max_new {}) cannot fit the \
                          KV page budget of {:?} pages even with the cache drained",
@@ -306,8 +339,11 @@ impl Engine {
                 // in try_admit, so rejections don't inflate the gauge.)
                 self.cache.note_deferral();
                 return Ok(());
+            };
+            if idx > 0 {
+                self.cache.stats.admission_reorders += 1;
             }
-            let rid = self.batcher.admit_front().expect("slot + head checked");
+            self.batcher.admit_at(idx).expect("slot + index checked");
             let preemptions_before = self.cache.stats.preemptions;
             self.prefill(rid)?;
             if self.cache.stats.preemptions > preemptions_before {
@@ -357,6 +393,13 @@ impl Engine {
         // *delivered* token comes from the rerun.
         self.metrics.on_preempt(rid);
         self.cached_divisions.clear();
+    }
+
+    /// Test hook: ids of the active set in admission order (the
+    /// starvation-bound tests reconstruct admission order from this).
+    #[doc(hidden)]
+    pub fn debug_active_ids(&self) -> Vec<u64> {
+        self.batcher.active().iter().map(|a| a.req.id).collect()
     }
 
     /// Test hook: force-preempt the youngest active request, exercising

@@ -44,7 +44,16 @@ impl Default for TimeStat {
 
 impl TimeStat {
     pub fn record(&mut self, d: Duration) {
-        let s = d.as_secs_f64();
+        self.record_secs(d.as_secs_f64());
+    }
+
+    /// Record a raw duration in seconds. Non-finite samples are dropped:
+    /// one NaN in the reservoir would otherwise poison every percentile
+    /// (and the seed's `partial_cmp().unwrap()` sort panicked on it).
+    pub fn record_secs(&mut self, s: f64) {
+        if !s.is_finite() {
+            return;
+        }
         self.count += 1;
         self.sum_s += s;
         self.sum_sq_s += s * s;
@@ -110,7 +119,7 @@ impl TimeStat {
         let mean = self.sum_s / n;
         let var = (self.sum_sq_s / n - mean * mean).max(0.0);
         let mut sorted: Vec<f64> = self.reservoir.iter().map(|s| s * 1e3).collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Some(Summary {
             n: self.count as usize,
             mean: mean * 1e3,
@@ -190,10 +199,93 @@ pub struct Metrics {
     pub cache_evictions: usize,
     /// Pages freed by eviction.
     pub cache_evicted_pages: usize,
-    /// Engine steps in which the queue head had to wait for pages.
+    /// Engine steps in which no pending request could be admitted.
     pub admissions_deferred: usize,
     /// Active requests preempted back to pending under memory pressure.
     pub preemptions: usize,
+    /// Requests admitted ahead of an older pending request by the
+    /// cost-ranked admission reorder.
+    pub admission_reorders: usize,
+    /// Cold-leaf frontier entries examined across all evictions (the
+    /// eviction work counter `benches/sched.rs` asserts on).
+    pub eviction_scan_steps: usize,
+}
+
+/// Latency targets for SLO-attainment reporting: a request meets its SLO
+/// when TTFT ≤ `ttft_ms` and TPOT ≤ `tpot_ms` (single-token requests
+/// have no TPOT and are judged on TTFT alone).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        // Interactive-serving defaults; `codec serve` overrides them
+        // with `--slo-ttft` / `--slo-tpot`.
+        SloTargets {
+            ttft_ms: 2000.0,
+            tpot_ms: 200.0,
+        }
+    }
+}
+
+/// SLO attainment over the finished requests of a run (see
+/// [`Metrics::slo_report`]).
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub targets: SloTargets,
+    /// Requests that finished (the denominator for attainment).
+    pub finished: usize,
+    /// TTFT percentiles (ms) across requests with a first token.
+    pub ttft: Option<Summary>,
+    /// TPOT percentiles (ms) across finished multi-token requests.
+    pub tpot: Option<Summary>,
+    /// Fraction of finished requests with TTFT ≤ target.
+    pub ttft_attainment: f64,
+    /// Fraction of finished requests with TPOT ≤ target (single-token
+    /// requests count as meeting it).
+    pub tpot_attainment: f64,
+    /// Fraction of finished requests meeting *both* targets.
+    pub slo_attainment: f64,
+    /// Finished requests per second over the serving span (first submit
+    /// → last finish).
+    pub throughput_rps: f64,
+    /// SLO-meeting requests per second over the same span — the number
+    /// that actually matters under load: admitting work you then serve
+    /// too slowly adds throughput but no goodput.
+    pub goodput_rps: f64,
+}
+
+impl SloReport {
+    /// Multi-line human-readable rendering (used by `codec serve` and
+    /// the sched bench).
+    pub fn render(&self) -> String {
+        let pct = |x: f64| format!("{:.1}%", x * 100.0);
+        let sum = |s: &Option<Summary>| match s {
+            Some(s) => format!("p50 {:.1} p90 {:.1} p99 {:.1}", s.p50, s.p90, s.p99),
+            None => "n/a".to_string(),
+        };
+        format!(
+            "SLO report ({} finished, targets TTFT ≤ {:.0} ms, TPOT ≤ {:.0} ms)\n\
+             \x20 TTFT (ms):      {}   attainment {}\n\
+             \x20 TPOT (ms):      {}   attainment {}\n\
+             \x20 SLO attainment: {}\n\
+             \x20 throughput:     {:.2} req/s\n\
+             \x20 goodput:        {:.2} req/s (SLO-meeting)",
+            self.finished,
+            self.targets.ttft_ms,
+            self.targets.tpot_ms,
+            sum(&self.ttft),
+            pct(self.ttft_attainment),
+            sum(&self.tpot),
+            pct(self.tpot_attainment),
+            pct(self.slo_attainment),
+            self.throughput_rps,
+            self.goodput_rps,
+        )
+    }
 }
 
 impl Metrics {
@@ -261,6 +353,56 @@ impl Metrics {
         self.cache_evicted_pages = cm.stats.evicted_pages;
         self.admissions_deferred = cm.stats.admissions_deferred;
         self.preemptions = cm.stats.preemptions;
+        self.admission_reorders = cm.stats.admission_reorders;
+        self.eviction_scan_steps = cm.stats.eviction_scan_steps;
+    }
+
+    /// SLO attainment + goodput over the finished requests. `None` when
+    /// nothing finished. Only *finished* requests count: a request still
+    /// in flight has no verdict yet, and a rejected one never will.
+    pub fn slo_report(&self, targets: SloTargets) -> Option<SloReport> {
+        let finished: Vec<&RequestMetrics> = self
+            .requests
+            .values()
+            .filter(|r| r.finished.is_some())
+            .collect();
+        if finished.is_empty() {
+            return None;
+        }
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let mut ttft_ok = 0usize;
+        let mut tpot_ok = 0usize;
+        let mut both_ok = 0usize;
+        for r in &finished {
+            let t_ok = r.ttft().is_some_and(|d| ms(d) <= targets.ttft_ms);
+            // Single-token requests have no decode phase to judge.
+            let p_ok = match r.tpot() {
+                Some(d) => ms(d) <= targets.tpot_ms,
+                None => true,
+            };
+            ttft_ok += t_ok as usize;
+            tpot_ok += p_ok as usize;
+            both_ok += (t_ok && p_ok) as usize;
+        }
+        // Span starts at the earliest submit over *all* requests (the
+        // serving window opened there even if that request never
+        // finished — under overload, span from finished-only submits
+        // would overstate throughput exactly when it matters).
+        let first_submit = self.requests.values().map(|r| r.submitted).min()?;
+        let last_finish = finished.iter().filter_map(|r| r.finished).max()?;
+        let span_s = (last_finish - first_submit).as_secs_f64().max(1e-9);
+        let n = finished.len();
+        Some(SloReport {
+            targets,
+            finished: n,
+            ttft: self.ttft_summary_ms(),
+            tpot: self.tpot_summary_ms(),
+            ttft_attainment: ttft_ok as f64 / n as f64,
+            tpot_attainment: tpot_ok as f64 / n as f64,
+            slo_attainment: both_ok as f64 / n as f64,
+            throughput_rps: n as f64 / span_s,
+            goodput_rps: both_ok as f64 / span_s,
+        })
     }
 
     /// Fraction of prompt tokens served from cached/shared KV — the
@@ -469,6 +611,58 @@ mod tests {
         let tpot = m.tpot_summary_ms().unwrap();
         assert_eq!(tpot.n, 3);
         assert!(tpot.p99 >= tpot.p50);
+    }
+
+    #[test]
+    fn timestat_drops_non_finite_samples() {
+        let mut t = TimeStat::default();
+        t.record_secs(f64::NAN);
+        t.record_secs(f64::INFINITY);
+        t.record_secs(f64::NEG_INFINITY);
+        assert!(t.is_empty(), "non-finite samples must be dropped");
+        t.record_secs(0.002);
+        let s = t.summary_ms().unwrap();
+        assert_eq!(s.n, 1);
+        assert!((s.p99 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_report_attainment_and_goodput() {
+        let mut m = Metrics::default();
+        // Request 1: fast (meets any sane target). Request 2: never
+        // finishes (excluded). Request 3: finishes.
+        for rid in [1u64, 2, 3] {
+            m.on_submit(rid);
+        }
+        m.on_token(1);
+        m.on_token(1);
+        m.on_finish(1);
+        std::thread::sleep(Duration::from_millis(4));
+        m.on_token(3);
+        m.on_token(3);
+        m.on_finish(3);
+        let targets = SloTargets {
+            ttft_ms: 1000.0,
+            tpot_ms: 1000.0,
+        };
+        let rep = m.slo_report(targets).expect("finished requests exist");
+        assert_eq!(rep.finished, 2, "in-flight request 2 excluded");
+        assert!((rep.slo_attainment - 1.0).abs() < 1e-12);
+        assert!(rep.goodput_rps > 0.0);
+        assert!((rep.goodput_rps - rep.throughput_rps).abs() < 1e-9);
+        // Impossible targets: attainment and goodput collapse to zero,
+        // throughput unchanged.
+        let impossible = SloTargets {
+            ttft_ms: -1.0,
+            tpot_ms: -1.0,
+        };
+        let strict = m.slo_report(impossible).unwrap();
+        assert_eq!(strict.slo_attainment, 0.0);
+        assert_eq!(strict.goodput_rps, 0.0);
+        assert!((strict.throughput_rps - rep.throughput_rps).abs() < 1e-9);
+        assert!(strict.render().contains("SLO attainment: 0.0%"));
+        // Nothing finished → no report.
+        assert!(Metrics::default().slo_report(targets).is_none());
     }
 
     #[test]

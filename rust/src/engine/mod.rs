@@ -22,6 +22,6 @@ pub mod request;
 pub mod server;
 
 pub use engine::{AttentionBackend, Engine, EngineConfig};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, SloReport, SloTargets};
 pub use request::{Request, RequestId, RequestState};
 pub use server::{Server, SubmitHandle, WaitError};

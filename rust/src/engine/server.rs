@@ -180,12 +180,21 @@ impl Server {
     /// ([`Metrics::ttft_summary_ms`] / [`Metrics::tpot_summary_ms`]).
     pub fn replay(&self, trace: &Trace) -> Vec<SubmitHandle> {
         let mut order: Vec<&crate::workload::trace::TraceEntry> = trace.entries.iter().collect();
-        order.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).expect("NaN at_ms"));
+        // Total order even over non-finite offsets: parsed traces reject
+        // them (`Trace::from_json`), but a programmatically built trace
+        // must not be able to panic the server thread and strand every
+        // waiter (NaN sorts last here and clamps to 0 below).
+        order.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
         let t0 = Instant::now();
         order
             .into_iter()
             .map(|e| {
-                let target = Duration::from_secs_f64(e.at_ms.max(0.0) / 1e3);
+                // Non-finite offsets submit immediately, and finite ones
+                // are clamped to ~30k years: from_secs_f64 panics on
+                // NaN/∞ *and* on huge finite seconds — the other half of
+                // the panic class.
+                let at_ms = if e.at_ms.is_finite() { e.at_ms } else { 0.0 };
+                let target = Duration::from_secs_f64(at_ms.clamp(0.0, 1e15) / 1e3);
                 if let Some(sleep) = target.checked_sub(t0.elapsed()) {
                     std::thread::sleep(sleep);
                 }

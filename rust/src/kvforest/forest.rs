@@ -25,6 +25,11 @@ pub struct Node {
     /// node, kept sorted. |I_n| is the node's sharing degree n_q.
     pub requests: Vec<RequestId>,
     pub alive: bool,
+    /// Last-use LRU stamp (the cache manager's logical clock). Nodes
+    /// never touched rank coldest (stamp 0). The stamp is part of the
+    /// cold-leaf frontier key, so it is only mutated through
+    /// [`Forest::touch`], which keeps the frontier key in sync.
+    stamp: u64,
 }
 
 impl Node {
@@ -36,7 +41,13 @@ impl Node {
             len: 0,
             requests: Vec::new(),
             alive: true,
+            stamp: 0,
         }
+    }
+
+    /// Last-use LRU stamp (see [`Forest::touch`]).
+    pub fn stamp(&self) -> u64 {
+        self.stamp
     }
 
     /// Sharing degree n_q of this node.
@@ -89,6 +100,16 @@ pub struct Forest {
     nodes: Vec<Node>,
     /// J_r: request → prefix path (node ids, root-to-leaf, no virtual root).
     paths: BTreeMap<RequestId, Vec<NodeId>>,
+    /// The cold-leaf frontier, ordered coldest-first: `(stamp, node)` for
+    /// every alive node with an empty query set and no children.
+    /// Maintained incrementally on release / evict / re-reference / split
+    /// so eviction never re-scans all alive nodes (the full-scan
+    /// [`Forest::cold_leaves`] is kept as the test oracle). Membership
+    /// changes route through [`Forest::refresh_frontier`]; stamp changes
+    /// through [`Forest::touch`] — both keep the `(stamp, node)` key
+    /// exact, closing the stale-stamp hazard where a re-referenced node's
+    /// old key would linger and evict it out of LRU order.
+    frontier: BTreeMap<(u64, NodeId), ()>,
 }
 
 impl Forest {
@@ -96,6 +117,7 @@ impl Forest {
         Forest {
             nodes: vec![Node::new(VIRTUAL_ROOT)],
             paths: BTreeMap::new(),
+            frontier: BTreeMap::new(),
         }
     }
 
@@ -169,6 +191,57 @@ impl Forest {
     }
 
     // ---------------------------------------------------------------
+    // Cold-leaf frontier (incremental LRU eviction index).
+    // ---------------------------------------------------------------
+
+    /// Re-derive `nid`'s frontier membership from its current state:
+    /// present iff alive ∧ no requests ∧ no children. Called after every
+    /// mutation that can change eligibility (request add/remove, child
+    /// add/remove, split, evict). Uses the node's *current* stamp, so any
+    /// stamp change must go through [`Forest::touch`] first.
+    fn refresh_frontier(&mut self, nid: NodeId) {
+        if nid == VIRTUAL_ROOT {
+            return;
+        }
+        let n = &self.nodes[nid];
+        let key = (n.stamp, nid);
+        if n.alive && n.requests.is_empty() && n.children.is_empty() {
+            self.frontier.insert(key, ());
+        } else {
+            self.frontier.remove(&key);
+        }
+    }
+
+    /// Update `nid`'s LRU stamp. If the node sits on the cold-leaf
+    /// frontier its `(stamp, node)` key is re-keyed atomically — removing
+    /// the old entry *before* writing the new stamp is what prevents the
+    /// stale-stamp hazard (a re-referenced node evicted out of LRU order
+    /// through its leftover cold key).
+    pub fn touch(&mut self, nid: NodeId, stamp: u64) {
+        let old = self.nodes[nid].stamp;
+        if old == stamp {
+            return;
+        }
+        let was_cold = self.frontier.remove(&(old, nid)).is_some();
+        self.nodes[nid].stamp = stamp;
+        if was_cold {
+            self.frontier.insert((stamp, nid), ());
+        }
+    }
+
+    /// Evictable frontier in LRU order (coldest stamp first, node id as
+    /// tie-break): O(log n) maintenance per structural change instead of
+    /// the full alive-node re-scan of [`Forest::cold_leaves`].
+    pub fn coldest_leaves(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.frontier.keys().map(|&(_, nid)| nid)
+    }
+
+    /// Number of entries on the cold-leaf frontier.
+    pub fn frontier_len(&self) -> usize {
+        self.frontier.len()
+    }
+
+    // ---------------------------------------------------------------
     // Radix insert over token sequences (engine path).
     // ---------------------------------------------------------------
 
@@ -204,6 +277,7 @@ impl Forest {
                         len: tokens.len() - i,
                     });
                     self.nodes[leaf].add_request(rid);
+                    self.refresh_frontier(leaf);
                     path.push(leaf);
                     i = tokens.len();
                 }
@@ -219,8 +293,11 @@ impl Forest {
                             tail,
                         });
                     }
-                    // Now c's chunk is fully matched.
+                    // Now c's chunk is fully matched. Adding the request
+                    // re-references a cold cache entry: the frontier
+                    // refresh drops it from the eviction index.
                     self.nodes[c].add_request(rid);
+                    self.refresh_frontier(c);
                     path.push(c);
                     i += common;
                     cur = c;
@@ -243,6 +320,7 @@ impl Forest {
         n.len = at;
         let children = std::mem::take(&mut n.children);
         let requests = n.requests.clone();
+        let head_stamp = n.stamp;
         n.children = vec![tail];
 
         let t = &mut self.nodes[tail];
@@ -250,9 +328,16 @@ impl Forest {
         t.len = tail_len;
         t.children = children.clone();
         t.requests = requests;
+        // The tail inherits the head's recency: splitting a cold cache
+        // entry must not make its suffix rank colder than the entry was.
+        t.stamp = head_stamp;
         for c in children {
             self.nodes[c].parent = tail;
         }
+        // The head gained a child (never a cold leaf now); the tail of a
+        // split *cold* entry is a fresh cold leaf and joins the frontier.
+        self.refresh_frontier(node);
+        self.refresh_frontier(tail);
         // Fix paths of every request that passed through `node`: insert
         // `tail` right after it.
         for (_, p) in self.paths.iter_mut() {
@@ -278,6 +363,9 @@ impl Forest {
             self.nodes[leaf].children.push(nn);
             self.nodes[nn].add_request(rid);
             self.paths.get_mut(&rid).unwrap().push(nn);
+            // A *cold* shared leaf cannot fork (degree 0 requests never
+            // append), but refresh anyway to keep the invariant local.
+            self.refresh_frontier(leaf);
             nn
         };
         let n = &mut self.nodes[target];
@@ -330,14 +418,21 @@ impl Forest {
         };
         for &nid in &path {
             self.nodes[nid].remove_request(rid);
+            // The leaf may have just gone cold (interior path nodes have
+            // children, so only the leaf can join the frontier here).
+            self.refresh_frontier(nid);
         }
         path
     }
 
-    /// Evictable frontier: alive nodes with an empty query set and no
-    /// children. Any ancestor of an active request's node has a
-    /// non-empty query set (paths are root-to-leaf), so evicting a cold
-    /// leaf can never free storage an active request references.
+    /// Evictable frontier by *full scan*: alive nodes with an empty
+    /// query set and no children. Any ancestor of an active request's
+    /// node has a non-empty query set (paths are root-to-leaf), so
+    /// evicting a cold leaf can never free storage an active request
+    /// references. Eviction uses the incrementally maintained
+    /// [`Forest::coldest_leaves`] instead (O(log n) per update); this
+    /// scan is the oracle the invariant checks and property tests
+    /// compare it against.
     pub fn cold_leaves(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.alive_nodes()
             .filter(|(_, n)| n.degree() == 0 && n.children.is_empty())
@@ -356,6 +451,10 @@ impl Forest {
         self.nodes[nid].alive = false;
         let parent = self.nodes[nid].parent;
         self.nodes[parent].children.retain(|&c| c != nid);
+        // Victim leaves the frontier; the parent may have just become
+        // the new cold-leaf frontier (cascade).
+        self.refresh_frontier(nid);
+        self.refresh_frontier(parent);
         parent
     }
 
@@ -374,6 +473,7 @@ impl Forest {
                 self.nodes[parent].children.retain(|&c| c != nid);
                 events.push(StorageEvent::Freed { node: nid });
             }
+            self.refresh_frontier(nid);
         }
         events
     }
@@ -388,6 +488,8 @@ impl Forest {
         let id = self.alloc(parent);
         self.nodes[id].len = len;
         self.nodes[parent].children.push(id);
+        self.refresh_frontier(parent);
+        self.refresh_frontier(id);
         id
     }
 
@@ -403,6 +505,7 @@ impl Forest {
         while cur != VIRTUAL_ROOT {
             path.push(cur);
             self.nodes[cur].add_request(rid);
+            self.refresh_frontier(cur);
             cur = self.nodes[cur].parent;
         }
         path.reverse();
@@ -450,6 +553,23 @@ impl Forest {
                 if self.nodes[c].alive && self.nodes[c].parent != nid {
                     return Err(format!("child {c} of {nid} has parent {}", self.nodes[c].parent));
                 }
+            }
+        }
+        // The incremental frontier must equal the full-scan oracle, with
+        // every key's stamp matching its node's current stamp (the
+        // stale-stamp hazard).
+        let oracle: std::collections::BTreeSet<NodeId> = self.cold_leaves().collect();
+        let frontier: std::collections::BTreeSet<NodeId> =
+            self.frontier.keys().map(|&(_, nid)| nid).collect();
+        if oracle != frontier {
+            return Err(format!("frontier {frontier:?} != cold-leaf oracle {oracle:?}"));
+        }
+        for &(stamp, nid) in self.frontier.keys() {
+            if self.nodes[nid].stamp != stamp {
+                return Err(format!(
+                    "frontier key ({stamp}, {nid}) is stale: node stamp is {}",
+                    self.nodes[nid].stamp
+                ));
             }
         }
         Ok(())
@@ -676,5 +796,103 @@ mod tests {
         let mut f = Forest::new();
         f.insert_request(1, &toks("x"));
         f.insert_request(1, &toks("y"));
+    }
+
+    #[test]
+    fn frontier_tracks_cold_leaves_in_lru_order() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-a"));
+        f.insert_request(2, &toks("doc-b"));
+        assert_eq!(f.frontier_len(), 0, "active leaves are not evictable");
+        f.release_request(1);
+        let a_leaf = {
+            let cold: Vec<NodeId> = f.coldest_leaves().collect();
+            assert_eq!(cold.len(), 1);
+            cold[0]
+        };
+        f.release_request(2);
+        assert_eq!(f.frontier_len(), 2);
+        // Stamp "a" warmer than "b": eviction order must flip to b-first.
+        f.touch(a_leaf, 10);
+        let order: Vec<NodeId> = f.coldest_leaves().collect();
+        assert_eq!(order.last(), Some(&a_leaf), "touched leaf ranks warmest");
+        f.check_invariants().unwrap();
+        // Re-reference: a new request over "doc-a" pulls its nodes off
+        // the frontier.
+        f.insert_request(3, &toks("doc-a"));
+        assert!(!f.coldest_leaves().any(|n| n == a_leaf));
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_rekeys_frontier_without_stale_entries() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("entry"));
+        f.release_request(1);
+        let leaf: NodeId = f.coldest_leaves().next().unwrap();
+        // The stale-stamp hazard: a fresh stamp must *move* the frontier
+        // key, not duplicate it.
+        f.touch(leaf, 5);
+        f.touch(leaf, 9);
+        assert_eq!(f.frontier_len(), 1);
+        assert_eq!(f.node(leaf).stamp(), 9);
+        f.check_invariants().unwrap();
+    }
+
+    /// Randomized property test: under arbitrary interleavings of
+    /// insert / release / touch / evict / prune, the incremental
+    /// frontier equals the full-scan `cold_leaves` oracle with exact
+    /// stamps (checked by `check_invariants` after every op). This is
+    /// the migration guard for the stale-stamp hazard: a node
+    /// re-referenced (or re-stamped during admission pinning) must not
+    /// keep its old `(stamp, node)` key.
+    #[test]
+    fn randomized_frontier_matches_full_scan_oracle() {
+        use crate::util::prng::Rng;
+        let mut f = Forest::new();
+        let mut rng = Rng::new(0xF0_11E5);
+        let docs = ["doc-one-", "doc-two-", "other-"];
+        let mut active: Vec<RequestId> = Vec::new();
+        let mut next_rid: RequestId = 1;
+        let mut clock = 0u64;
+        for _ in 0..600 {
+            match rng.below(6) {
+                0 | 1 => {
+                    let mut p = toks(docs[rng.below(docs.len())]);
+                    for _ in 0..1 + rng.below(4) {
+                        p.push(b'a' as u32 + rng.below(4) as u32);
+                    }
+                    f.insert_request(next_rid, &p);
+                    active.push(next_rid);
+                    next_rid += 1;
+                }
+                2 => {
+                    if let Some(i) = (!active.is_empty()).then(|| rng.below(active.len())) {
+                        f.release_request(active.swap_remove(i));
+                    }
+                }
+                3 => {
+                    // Touch a random alive node (admission pinning path).
+                    let alive: Vec<NodeId> = f.alive_nodes().map(|(id, _)| id).collect();
+                    if !alive.is_empty() {
+                        clock += 1;
+                        f.touch(alive[rng.below(alive.len())], clock);
+                    }
+                }
+                4 => {
+                    let victim = f.coldest_leaves().next();
+                    if let Some(v) = victim {
+                        f.evict_leaf(v);
+                    }
+                }
+                _ => {
+                    if let Some(i) = (!active.is_empty()).then(|| rng.below(active.len())) {
+                        f.remove_request(active.swap_remove(i));
+                    }
+                }
+            }
+            f.check_invariants()
+                .expect("frontier must match the full-scan oracle");
+        }
     }
 }

@@ -30,6 +30,16 @@ commands:
                [--kv-budget PAGES]  (0 = unbounded; with a budget the
                 retained prefix cache evicts LRU to stay under it —
                 recommended for long-running servers)
+               [--poisson RPS]      (open-loop timed replay: requests
+                arrive as a seeded Poisson process at RPS req/s instead
+                of all at once; reports SLO attainment + goodput.
+                --requests stays the total; --scale-down is unused)
+               [--waves W]          (question waves over the corpus in
+                Poisson mode; later waves hit the retained cache)
+               [--slo-ttft MS] [--slo-tpot MS]
+               [--admit-window N]   (pressure-aware admission: rank the
+                first N pending by cost; 1 = strict FIFO)
+               [--admit-max-bypass K] (anti-starvation bound)
                (codec|flash run hermetically; codec-pjrt needs a build
                 with --features pjrt plus AOT artifacts)
   bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
@@ -171,12 +181,33 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.usize_or("batch", 8).map_err(anyhow::Error::msg)?;
     let scale_down = args.usize_or("scale-down", 100).map_err(anyhow::Error::msg)?;
     let kv_budget = args.usize_or("kv-budget", 0).map_err(anyhow::Error::msg)?;
+    let poisson_rps = args.f64_or("poisson", 0.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        poisson_rps.is_finite() && poisson_rps >= 0.0,
+        "--poisson: expected a finite rate ≥ 0 req/s, got {poisson_rps}"
+    );
+    let waves = args.usize_or("waves", 2).map_err(anyhow::Error::msg)?;
+    let slo_default = codec::engine::SloTargets::default();
+    let slo = codec::engine::SloTargets {
+        ttft_ms: args
+            .f64_or("slo-ttft", slo_default.ttft_ms)
+            .map_err(anyhow::Error::msg)?,
+        tpot_ms: args
+            .f64_or("slo-tpot", slo_default.tpot_ms)
+            .map_err(anyhow::Error::msg)?,
+    };
+    let admit_window = args.usize_or("admit-window", 8).map_err(anyhow::Error::msg)?;
+    let admit_max_bypass = args
+        .usize_or("admit-max-bypass", 4)
+        .map_err(anyhow::Error::msg)?;
     let dir = args.str_or("artifacts", &artifacts_dir()).to_string();
 
     let cfg = EngineConfig {
         backend,
         max_batch: batch,
         sampler: Sampler::Temperature(0.8),
+        admit_window: admit_window.max(1),
+        admit_max_bypass,
         cache: CacheConfig {
             // 0 = unbounded: the retained cache grows with the corpus.
             // Long-running servers should set a budget so cold prefixes
@@ -186,30 +217,64 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         ..Default::default()
     };
-    let gen = LoogleGen {
-        category: LoogleCategory::Wiki,
-        num_docs: docs,
-        questions_per_doc: requests.div_ceil(docs),
-        ..Default::default()
-    };
-    let prompts = gen.build_prompts(scale_down);
-    log::info!(
-        "serving {} requests over {} docs (backend {:?})",
-        prompts.len().min(requests),
-        docs,
-        backend
-    );
     let t0 = Instant::now();
     let server = Server::start_for(&dir, cfg)?;
-    let handles: Vec<_> = prompts
-        .into_iter()
-        .take(requests)
-        .map(|p| server.submit(p, max_new))
-        .collect();
-    for h in handles {
-        let id = h.id;
-        let toks = h.wait()?;
-        log::debug!("request {id}: {} tokens", toks.len());
+    if poisson_rps > 0.0 {
+        // Open-loop Poisson timed replay over the multi-wave
+        // shared-prefix workload: arrivals keep coming at the configured
+        // rate whether or not the engine keeps up — the regime where the
+        // SLO report below is meaningful.
+        // `--requests` stays the *total* across waves (matching the
+        // non-Poisson branch): waves × docs × questions/doc ≈ requests,
+        // rounded up to fill the last wave.
+        let waves = waves.max(1);
+        let per_wave = requests.div_ceil(waves).max(1);
+        let gen = codec::workload::MultiWaveGen {
+            num_docs: docs,
+            waves,
+            questions_per_doc: per_wave.div_ceil(docs.max(1)).max(1),
+            max_new_tokens: max_new,
+            ..Default::default()
+        };
+        let trace = gen.build_poisson_trace(poisson_rps);
+        log::info!(
+            "replaying {} requests open-loop at {poisson_rps} req/s ({} waves, {} docs, {:?})",
+            trace.entries.len(),
+            gen.waves,
+            docs,
+            backend
+        );
+        for h in server.replay(&trace) {
+            let id = h.id;
+            match h.wait() {
+                Ok(toks) => log::debug!("request {id}: {} tokens", toks.len()),
+                Err(e) => log::warn!("request {id}: {e:#}"),
+            }
+        }
+    } else {
+        let gen = LoogleGen {
+            category: LoogleCategory::Wiki,
+            num_docs: docs,
+            questions_per_doc: requests.div_ceil(docs),
+            ..Default::default()
+        };
+        let prompts = gen.build_prompts(scale_down);
+        log::info!(
+            "serving {} requests over {} docs (backend {:?})",
+            prompts.len().min(requests),
+            docs,
+            backend
+        );
+        let handles: Vec<_> = prompts
+            .into_iter()
+            .take(requests)
+            .map(|p| server.submit(p, max_new))
+            .collect();
+        for h in handles {
+            let id = h.id;
+            let toks = h.wait()?;
+            log::debug!("request {id}: {} tokens", toks.len());
+        }
     }
     let m = server.shutdown();
     let wall = t0.elapsed().as_secs_f64();
@@ -241,11 +306,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "∞".to_string()),
         (m.cache_hit_rate() * 100.0).round()
     );
-    if m.cache_evictions + m.preemptions + m.admissions_deferred > 0 {
+    if m.cache_evictions + m.preemptions + m.admissions_deferred + m.admission_reorders > 0 {
         println!(
-            "memory pressure:    {} evictions ({} pages), {} deferrals, {} preemptions",
-            m.cache_evictions, m.cache_evicted_pages, m.admissions_deferred, m.preemptions
+            "memory pressure:    {} evictions ({} pages), {} deferrals, {} preemptions, \
+             {} admission reorders",
+            m.cache_evictions, m.cache_evicted_pages, m.admissions_deferred, m.preemptions,
+            m.admission_reorders
         );
+    }
+    if let Some(rep) = m.slo_report(slo) {
+        println!("{}", rep.render());
     }
     println!("wall time:          {wall:.2} s");
     Ok(())

@@ -20,7 +20,9 @@ pub fn summarize(xs: &[f64]) -> Summary {
     let mean = xs.iter().sum::<f64>() / n as f64;
     let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a stray NaN must not panic a metrics summary mid-run
+    // (it sorts last instead).
+    sorted.sort_by(f64::total_cmp);
     Summary {
         n,
         mean,

@@ -1,14 +1,17 @@
 //! Workload generators: the paper's synthetic prefix trees (§7.2), a
-//! LooGLE-like long-context document-QA generator (§7.1, Fig. 8), and
-//! the multi-wave shared-prefix traces that exercise the retained
-//! prefix cache.
+//! LooGLE-like long-context document-QA generator (§7.1, Fig. 8), the
+//! multi-wave shared-prefix traces that exercise the retained prefix
+//! cache, and the Poisson open-loop arrival process for SLO-style load
+//! testing.
 
 pub mod loogle;
 pub mod multiwave;
+pub mod poisson;
 pub mod trace;
 pub mod treegen;
 
 pub use loogle::{LoogleCategory, LoogleGen};
 pub use multiwave::MultiWaveGen;
-pub use trace::{Trace, TraceEntry};
+pub use poisson::PoissonProcess;
+pub use trace::{Trace, TraceEntry, TraceError};
 pub use treegen::{degenerate_tree, full_kary_tree, shared_ratio_tree, speculative_tree, two_level_tree};

@@ -1,0 +1,137 @@
+//! Poisson open-loop arrival process for timed trace replay.
+//!
+//! Closed-loop drivers (submit, wait, submit) hide queueing collapse:
+//! the generator slows down exactly when the server does, so tail
+//! latency looks flat no matter how overloaded the engine is. An
+//! *open-loop* generator fixes arrival times up front — requests keep
+//! arriving at the configured rate whether or not the engine keeps up —
+//! which is the regime where SLO attainment and goodput mean something.
+//!
+//! [`PoissonProcess`] draws i.i.d. exponential inter-arrival gaps
+//! (`gap = -ln(1-U)/λ`), the standard memoryless model of independent
+//! user traffic, deterministically from a seed so replays are
+//! reproducible. [`MultiWaveGen::build_poisson_trace`] stitches it onto
+//! the multi-wave shared-prefix workload: same prompts, Poisson
+//! arrivals instead of fixed gaps.
+
+use super::multiwave::MultiWaveGen;
+use super::trace::Trace;
+use crate::util::prng::Rng;
+
+/// A seeded Poisson arrival process: `rate_rps` requests per second on
+/// average, exponential inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub struct PoissonProcess {
+    /// Mean arrival rate, requests per second (> 0).
+    pub rate_rps: f64,
+    pub seed: u64,
+}
+
+impl PoissonProcess {
+    pub fn new(rate_rps: f64, seed: u64) -> PoissonProcess {
+        assert!(
+            rate_rps.is_finite() && rate_rps > 0.0,
+            "arrival rate must be a positive finite req/s, got {rate_rps}"
+        );
+        PoissonProcess { rate_rps, seed }
+    }
+
+    /// The first `n` arrival offsets in milliseconds, strictly
+    /// increasing, deterministic per seed.
+    pub fn arrival_offsets_ms(&self, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed ^ 0x9015_50_AA);
+        let mut t_ms = 0.0f64;
+        (0..n)
+            .map(|_| {
+                // Inverse-CDF exponential: -ln(1-U)/λ seconds. 1-U ∈
+                // (0, 1] keeps the log finite.
+                let u = 1.0 - rng.next_f64();
+                t_ms += -u.ln() / self.rate_rps * 1e3;
+                t_ms
+            })
+            .collect()
+    }
+
+    /// Re-time `trace` in place as this open-loop process: entry order
+    /// is preserved, `at_ms` becomes the i-th Poisson arrival.
+    pub fn retime(&self, trace: &mut Trace) {
+        let offsets = self.arrival_offsets_ms(trace.entries.len());
+        for (e, at_ms) in trace.entries.iter_mut().zip(offsets) {
+            e.at_ms = at_ms;
+        }
+    }
+}
+
+impl MultiWaveGen {
+    /// The multi-wave trace with open-loop Poisson arrivals at
+    /// `rate_rps` instead of the fixed wave/intra gaps. Prompts (and
+    /// therefore greedy outputs) are identical to
+    /// [`MultiWaveGen::build_trace`]; only arrival times differ.
+    pub fn build_poisson_trace(&self, rate_rps: f64) -> Trace {
+        let mut trace = self.build_trace();
+        PoissonProcess::new(rate_rps, self.seed).retime(&mut trace);
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_increase_and_match_rate() {
+        let p = PoissonProcess::new(100.0, 7); // mean gap 10 ms
+        let n = 4000;
+        let at = p.arrival_offsets_ms(n);
+        assert_eq!(at.len(), n);
+        assert!(at.windows(2).all(|w| w[0] < w[1]), "offsets must increase");
+        let mean_gap = at[n - 1] / n as f64;
+        assert!(
+            (mean_gap - 10.0).abs() < 1.0,
+            "mean inter-arrival {mean_gap:.2} ms should be ≈ 10 ms"
+        );
+        // Exponential gaps: the variance is large (CV ≈ 1), unlike a
+        // fixed-gap trace. Check we are not emitting a constant gap.
+        let gaps: Vec<f64> = at.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "exponential CV ≈ 1, got {cv:.2}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = PoissonProcess::new(50.0, 3).arrival_offsets_ms(64);
+        let b = PoissonProcess::new(50.0, 3).arrival_offsets_ms(64);
+        assert_eq!(a, b);
+        let c = PoissonProcess::new(50.0, 4).arrival_offsets_ms(64);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn multiwave_poisson_keeps_prompts_changes_arrivals() {
+        let gen = MultiWaveGen::default();
+        let fixed = gen.build_trace();
+        let poisson = gen.build_poisson_trace(200.0);
+        assert_eq!(fixed.entries.len(), poisson.entries.len());
+        for (f, p) in fixed.entries.iter().zip(&poisson.entries) {
+            assert_eq!(f.prompt, p.prompt, "prompts must be unchanged");
+            assert_eq!(f.max_new_tokens, p.max_new_tokens);
+            assert!(p.at_ms.is_finite() && p.at_ms > 0.0);
+        }
+        let arrivals = &poisson.entries;
+        assert!(
+            arrivals.windows(2).all(|w| w[0].at_ms < w[1].at_ms),
+            "open-loop arrivals are strictly increasing"
+        );
+        // Round-trips through the JSON trace format (finite offsets).
+        let j = poisson.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), poisson);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rate_rejected() {
+        PoissonProcess::new(0.0, 1);
+    }
+}

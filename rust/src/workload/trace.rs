@@ -1,6 +1,37 @@
 //! Request traces: a JSON format for replayable engine workloads.
 
 use crate::util::json::{self, Json};
+use std::fmt;
+
+/// Why a trace failed to load or parse.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// The JSON shape is wrong (not an array, entry without a prompt, …).
+    Malformed(String),
+    /// An entry's `at_ms` arrival offset is NaN or infinite. A NaN here
+    /// used to survive parsing and panic the server thread inside
+    /// `Server::replay`'s sort, stranding every waiter — reject it at
+    /// the boundary instead.
+    NonFiniteAtMs { index: usize, value: f64 },
+    /// The trace file could not be read.
+    Io(String),
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Malformed(msg) => write!(f, "trace: {msg}"),
+            TraceError::NonFiniteAtMs { index, value } => write!(
+                f,
+                "trace: entry {index} has non-finite at_ms ({value}); \
+                 arrival offsets must be finite milliseconds"
+            ),
+            TraceError::Io(msg) => write!(f, "trace: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 /// One trace entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,24 +67,32 @@ impl Trace {
         )
     }
 
-    pub fn from_json(v: &Json) -> Result<Trace, String> {
-        let arr = v.as_arr().ok_or("trace: not an array")?;
+    pub fn from_json(v: &Json) -> Result<Trace, TraceError> {
+        let malformed = |msg: &str| TraceError::Malformed(msg.to_string());
+        let arr = v.as_arr().ok_or_else(|| malformed("not an array"))?;
         let mut entries = Vec::with_capacity(arr.len());
-        for e in arr {
+        for (index, e) in arr.iter().enumerate() {
             let prompt = e
                 .get("prompt")
                 .and_then(Json::as_arr)
-                .ok_or("trace: entry without prompt")?
+                .ok_or_else(|| malformed("entry without prompt"))?
                 .iter()
-                .map(|x| x.as_f64().map(|f| f as u32).ok_or("bad token"))
+                .map(|x| x.as_f64().map(|f| f as u32).ok_or_else(|| malformed("bad token")))
                 .collect::<Result<Vec<u32>, _>>()?;
+            let at_ms = e.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0);
+            if !at_ms.is_finite() {
+                return Err(TraceError::NonFiniteAtMs {
+                    index,
+                    value: at_ms,
+                });
+            }
             entries.push(TraceEntry {
                 prompt,
                 max_new_tokens: e
                     .get("max_new_tokens")
                     .and_then(Json::as_usize)
                     .unwrap_or(16),
-                at_ms: e.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                at_ms,
             });
         }
         Ok(Trace { entries })
@@ -63,9 +102,10 @@ impl Trace {
         std::fs::write(path, json::emit(&self.to_json()))
     }
 
-    pub fn load(path: &str) -> Result<Trace, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        Trace::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
+    pub fn load(path: &str) -> Result<Trace, TraceError> {
+        let text = std::fs::read_to_string(path).map_err(|e| TraceError::Io(e.to_string()))?;
+        let v = json::parse(&text).map_err(|e| TraceError::Malformed(e.to_string()))?;
+        Trace::from_json(&v)
     }
 }
 
@@ -95,7 +135,37 @@ mod tests {
 
     #[test]
     fn rejects_malformed() {
-        assert!(Trace::from_json(&json::parse("{}").unwrap()).is_err());
-        assert!(Trace::from_json(&json::parse(r#"[{"no_prompt":1}]"#).unwrap()).is_err());
+        assert!(matches!(
+            Trace::from_json(&json::parse("{}").unwrap()),
+            Err(TraceError::Malformed(_))
+        ));
+        assert!(matches!(
+            Trace::from_json(&json::parse(r#"[{"no_prompt":1}]"#).unwrap()),
+            Err(TraceError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_non_finite_at_ms() {
+        // The panic-class regression: a NaN/Inf arrival offset must be a
+        // typed parse error, not a latent server-thread panic.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::Arr(vec![Json::from_pairs([
+                ("prompt", Json::Arr(vec![Json::Num(1.0)])),
+                ("at_ms", Json::Num(bad)),
+            ])]);
+            match Trace::from_json(&j) {
+                Err(TraceError::NonFiniteAtMs { index: 0, value }) => {
+                    assert!(!value.is_finite())
+                }
+                other => panic!("expected NonFiniteAtMs, got {other:?}"),
+            }
+        }
+        // Finite negative offsets stay legal (replay clamps to 0).
+        let j = Json::Arr(vec![Json::from_pairs([
+            ("prompt", Json::Arr(vec![Json::Num(1.0)])),
+            ("at_ms", Json::Num(-5.0)),
+        ])]);
+        assert!(Trace::from_json(&j).is_ok());
     }
 }
