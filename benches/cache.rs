@@ -9,11 +9,18 @@
 //! * **warm+budget** — same, under a page budget that forces eviction
 //!   pressure; reports occupancy and verifies the high-water mark never
 //!   exceeded the budget.
+//! * **evict-tight / swap-tight** — the swap-vs-evict scenario: a
+//!   device budget too small to hold both documents, without and with a
+//!   host swap tier. Without swap, wave 1 re-prefills the destroyed
+//!   document; with swap it restores demoted pages by memcpy, so the
+//!   prefill work counter matches the *unconstrained* warm run exactly.
 //!
-//! Greedy outputs across all three runs must be identical — the
-//! cache-hit prefill path is an exact equivalence, not an
-//! approximation. The REDUCTION line backs the "warm wave prefills
-//! ≥ 80% fewer tokens" acceptance bar.
+//! Greedy outputs across all runs must be identical — the cache-hit
+//! (and swap-restore) prefill paths are exact equivalences, not
+//! approximations. The REDUCTION line backs the "warm wave prefills
+//! ≥ 80% fewer tokens" acceptance bar; the SWAP line backs "warm
+//! re-admission after demotion performs no re-prefill of swapped
+//! tokens".
 //!
 //! Run: `cargo bench --bench cache`.
 
@@ -152,5 +159,80 @@ fn main() {
         reduction >= 0.8,
         "warm reduction {:.1}% below the 80% bar",
         reduction * 100.0
+    );
+
+    // ---- swap-vs-evict: a device budget that cannot hold both docs ----
+    // One 512-token doc = 32 pages × 2 layers = 64; a single cold
+    // request needs ≤ 70 pages incl. headroom. 80 pages therefore fits
+    // one document + working set but never two, so the second document
+    // always displaces the first.
+    let tight = 80;
+    let swap_budget = 256;
+    let (ev_out, ev_novel, ev_wall, _ev_e) = run_waves(
+        &gen,
+        CacheConfig {
+            page_budget: Some(tight),
+            ..Default::default()
+        },
+    );
+    let (sw_out, sw_novel, sw_wall, sw_e) = run_waves(
+        &gen,
+        CacheConfig {
+            page_budget: Some(tight),
+            swap_budget: Some(swap_budget),
+            ..Default::default()
+        },
+    );
+    assert_eq!(cold_out, ev_out, "evict-tight outputs must match cold");
+    assert_eq!(cold_out, sw_out, "swap-tight outputs must match cold");
+    println!("\n✓ greedy outputs identical under evict-tight / swap-tight ({tight} pages)\n");
+    println!(
+        "{:<12} {:>14} {:>14} {:>9}",
+        "run", "wave0 prefill", "wave1 prefill", "wall(s)"
+    );
+    for (name, novel, wall) in [
+        ("evict-tight", &ev_novel, ev_wall),
+        ("swap-tight", &sw_novel, sw_wall),
+    ] {
+        println!("{:<12} {:>14} {:>14} {:>9.2}", name, novel[0], novel[1], wall);
+    }
+    println!(
+        "\nSWAP: wave-1 prefill — unconstrained warm {} vs swap-tight {} vs \
+         evict-tight {} tokens; swap tier did {} swap-outs ({} pages), {} \
+         swap-ins ({} pages), {} host evictions",
+        warm_novel[1],
+        sw_novel[1],
+        ev_novel[1],
+        sw_e.metrics.swap_outs,
+        sw_e.metrics.swap_out_pages,
+        sw_e.metrics.swap_ins,
+        sw_e.metrics.swap_in_pages,
+        sw_e.metrics.host_evictions,
+    );
+    if let Some(s) = sw_e.metrics.swap_restore_times.summary_ms() {
+        println!(
+            "SWAP: restore latency mean {:.3} ms p50 {:.3} p99 {:.3} per node",
+            s.mean, s.p50, s.p99
+        );
+    }
+    assert_eq!(
+        sw_novel[1], warm_novel[1],
+        "swap-tight wave 1 must re-prefill nothing that was swapped \
+         (work counter must equal the unconstrained warm run)"
+    );
+    assert!(
+        ev_novel[1] > warm_novel[1],
+        "evict-tight wave 1 should re-prefill destroyed documents \
+         ({} vs warm {})",
+        ev_novel[1],
+        warm_novel[1]
+    );
+    assert!(sw_e.metrics.swap_outs > 0 && sw_e.metrics.swap_ins > 0);
+    let sw_hw = sw_e.cache().store().max_allocated_pages();
+    let sw_host_hw = sw_e.cache().store().max_swapped_pages();
+    assert!(sw_hw <= tight, "device budget exceeded: {sw_hw} > {tight}");
+    assert!(
+        sw_host_hw <= swap_budget,
+        "swap budget exceeded: {sw_host_hw} > {swap_budget}"
     );
 }

@@ -1,32 +1,57 @@
 //! The cache manager: owns the forest + paged store and enforces the
-//! retention / eviction / admission policies described in
-//! [`crate::cache`].
+//! retention / tiering / eviction / admission policies described in
+//! [`crate::cache`]. It is the *only* component that may consume the
+//! forest's two frontiers ([`Forest::coldest_leaves`],
+//! [`Forest::coldest_swapped`]) or flip a node's page state — the
+//! engine reaches storage exclusively through this type, so every
+//! allocation, demotion, restore, and eviction passes one accounting
+//! point.
 //!
-//! Accounting model. The page budget is a *total* across layers. Three
-//! quantities are tracked against it:
+//! # Accounting model
+//!
+//! The device page budget is a *total* across layers. Three quantities
+//! are tracked against it:
 //!
 //! * `allocated` — pages currently referenced by block tables
 //!   ([`crate::kvforest::KvStore::allocated_pages`]);
 //! * `reserved` — pages an admitted request is still going to allocate:
 //!   at admission, `ceil(novel/page) + ceil(max_new/page)` pages per
 //!   layer (prefill and decode counted separately because a shared leaf
-//!   forks a fresh private node at the first decode append), counted
-//!   down as rows are actually appended;
+//!   forks a fresh private node at the first decode append), plus the
+//!   pages needed to restore any swapped matched prefix, counted down
+//!   as rows are actually appended;
 //! * `headroom` — one page per layer kept aside for the transient +1
 //!   page a radix split can cost.
 //!
 //! Admission requires `allocated + reserved + headroom + need ≤ budget`
-//! after evicting cold entries; the engine additionally gates every
-//! allocation burst (a node fill, a decode step's appends) with the
-//! *exact* page count through [`CacheManager::prepare_pages`], and
-//! preempts the youngest active request back to pending if eviction
-//! alone cannot cover it. The budget is therefore an invariant of the
-//! allocation sites, not a hope: `max_allocated_pages()` (the pool
-//! high-water mark) must never exceed it.
+//! after reclaiming cold entries; the engine additionally gates every
+//! allocation burst (a node fill, a decode step's appends, a restore)
+//! with the *exact* page count through
+//! [`CacheManager::prepare_pages`] / [`CacheManager::try_restore_matched`],
+//! and preempts the youngest active request back to pending if
+//! reclaiming alone cannot cover it. The budget is therefore an
+//! invariant of the allocation sites, not a hope: `max_allocated_pages()`
+//! (the pool high-water mark) must never exceed it. The host tier has
+//! its own budget with the same posture: `max_swapped_pages()` never
+//! exceeds `swap_budget`.
+//!
+//! # Two-level pressure policy
+//!
+//! With a swap budget configured, device pressure **demotes** the
+//! coldest frontier entry to the host tier instead of destroying it
+//! (the rows move, the node stays matchable); the host tier, when *it*
+//! fills, **truly evicts** its own LRU — so the cheap-to-reverse action
+//! is always taken first and destruction only happens at the end of the
+//! two-level LRU chain. A prompt that later matches a swapped prefix
+//! restores it with a memcpy ([`CacheManager::try_restore_matched`]),
+//! not a re-prefill; admission pins swapped-but-matched prefixes so the
+//! reclaim loop cannot steal them before the restore commits.
 
+use crate::engine::metrics::TimeStat;
 use crate::kvforest::forest::{InsertOutcome, StorageEvent};
 use crate::kvforest::{Forest, KvStore, NodeId, RequestId};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
 /// Cache policy knobs (engine-facing: `EngineConfig::cache`).
 #[derive(Debug, Clone)]
@@ -35,9 +60,15 @@ pub struct CacheConfig {
     /// or prune them immediately as the pre-cache engine did (`false`).
     pub retain: bool,
     /// Total page budget across all layers (`None` = unbounded). With a
-    /// budget set, admission defers and cold entries are evicted to stay
-    /// under it.
+    /// budget set, admission defers and cold entries are reclaimed
+    /// (demoted to the host tier, or evicted) to stay under it.
     pub page_budget: Option<usize>,
+    /// Host-tier (swap) budget in pages across all layers (`None` =
+    /// swap disabled: device pressure evicts destructively, the
+    /// pre-tiering behavior). With a swap budget set, device pressure
+    /// *demotes* cold entries to the host tier first and only the host
+    /// tier's own LRU overflow is truly evicted.
+    pub swap_budget: Option<usize>,
     /// After evictions, also release freed pages' backing memory down to
     /// the budget (see [`crate::kvforest::PagedPool::shrink_to`]).
     pub shrink_resident: bool,
@@ -48,6 +79,7 @@ impl Default for CacheConfig {
         CacheConfig {
             retain: true,
             page_budget: None,
+            swap_budget: None,
             shrink_resident: true,
         }
     }
@@ -78,16 +110,41 @@ pub struct CacheStats {
     /// old full re-scan was O(alive nodes) per eviction — quadratic over
     /// an eviction burst. `benches/sched.rs` asserts on this counter.
     pub eviction_scan_steps: usize,
+    /// Nodes demoted device → host (swap-outs).
+    pub swap_outs: usize,
+    /// Device pages freed by demotion.
+    pub swap_out_pages: usize,
+    /// Nodes restored host → device on a prefix hit (swap-ins).
+    pub swap_ins: usize,
+    /// Device pages re-allocated by restores.
+    pub swap_in_pages: usize,
+    /// Swapped nodes truly evicted from the host tier (its own LRU
+    /// overflow, or dying with a truly evicted resident ancestor).
+    pub host_evictions: usize,
+    /// Host pages released by those evictions.
+    pub host_evicted_pages: usize,
+    /// Wall time of host→device restores (one sample per restored
+    /// node); mirrored into `engine::Metrics::swap_restore_times`.
+    pub restore_times: TimeStat,
+    /// Radix walks performed by the admission scorer — the memoized
+    /// [`CacheManager::admission_score_cached`] re-walks only when the
+    /// forest generation moved, so under a stable forest this stays at
+    /// one walk per pending request instead of one per request per
+    /// engine step.
+    pub score_walks: usize,
 }
 
 /// Pages a request is still expected to allocate, in tokens. Prefill
 /// and decode are tracked separately: decode rows may land in a fresh
 /// private node (page-aligned from zero), so
 /// `ceil(p/page) + ceil(d/page)` is the safe per-layer bound.
+/// `restore_pages` holds the device pages a swapped matched prefix will
+/// re-allocate, already in pages (zeroed once the restore commits).
 #[derive(Debug, Clone, Copy)]
 struct Reservation {
     prefill_tokens: usize,
     decode_tokens: usize,
+    restore_pages: usize,
 }
 
 /// The KV cache manager. See the module docs for the accounting model.
@@ -103,6 +160,10 @@ pub struct CacheManager {
     /// keeps the cold-leaf frontier key exact.
     clock: u64,
     reserved: BTreeMap<RequestId, Reservation>,
+    /// Admission-score memo: request → (forest generation, matched
+    /// tokens). Valid while the generation matches; entries are dropped
+    /// on admission ([`CacheManager::forget_score`] covers rejection).
+    score_memo: HashMap<RequestId, (u64, usize)>,
     pub stats: CacheStats,
 }
 
@@ -116,6 +177,7 @@ impl CacheManager {
     ) -> CacheManager {
         let mut store = KvStore::new(n_layers, page_tokens, n_kv_heads, d_head);
         store.set_page_budget(cfg.page_budget);
+        store.set_swap_budget(cfg.swap_budget);
         CacheManager {
             forest: Forest::new(),
             store,
@@ -124,6 +186,7 @@ impl CacheManager {
             page_tokens,
             clock: 0,
             reserved: BTreeMap::new(),
+            score_memo: HashMap::new(),
             stats: CacheStats::default(),
         }
     }
@@ -152,6 +215,11 @@ impl CacheManager {
         self.cfg.page_budget
     }
 
+    /// Host-tier (swap) budget in pages (`None` = swap disabled).
+    pub fn swap_budget_pages(&self) -> Option<usize> {
+        self.cfg.swap_budget
+    }
+
     /// Fraction of the budget currently allocated (`None` if unbounded).
     pub fn occupancy(&self) -> Option<f64> {
         self.cfg
@@ -178,7 +246,9 @@ impl CacheManager {
     fn reserved_pages(&self) -> usize {
         self.reserved
             .values()
-            .map(|r| self.pages_for(r.prefill_tokens) + self.pages_for(r.decode_tokens))
+            .map(|r| {
+                self.pages_for(r.prefill_tokens) + self.pages_for(r.decode_tokens) + r.restore_pages
+            })
             .sum()
     }
 
@@ -192,10 +262,47 @@ impl CacheManager {
     /// minus the pages its cached prefix hit re-uses. Small warm
     /// requests score lowest, large cold ones highest. Read-only — the
     /// engine ranks a scan window of pending requests with this before
-    /// committing [`CacheManager::try_admit`].
+    /// committing [`CacheManager::try_admit`]. Prefer
+    /// [`CacheManager::admission_score_cached`] on a hot path: this
+    /// variant re-walks the radix tree on every call.
     pub fn admission_score(&self, prompt: &[u32], max_new: usize) -> i64 {
-        let matched = self.forest.match_len(prompt);
-        let novel = prompt.len() - matched;
+        self.score_from_match(prompt.len(), self.forest.match_len(prompt), max_new)
+    }
+
+    /// [`CacheManager::admission_score`] with the radix walk memoized
+    /// per request, keyed by the forest generation: under a stable
+    /// forest the scan window stops re-walking the tree per candidate
+    /// per engine step (the ROADMAP "window scoring cost" item). Any
+    /// forest mutation bumps the generation and invalidates every memo
+    /// entry at its next lookup; `stats.score_walks` counts the real
+    /// walks for the regression test.
+    pub fn admission_score_cached(
+        &mut self,
+        rid: RequestId,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> i64 {
+        let generation = self.forest.generation();
+        let matched = match self.score_memo.get(&rid) {
+            Some(&(g, m)) if g == generation => m,
+            _ => {
+                self.stats.score_walks += 1;
+                let m = self.forest.match_len(prompt);
+                self.score_memo.insert(rid, (generation, m));
+                m
+            }
+        };
+        self.score_from_match(prompt.len(), matched, max_new)
+    }
+
+    /// Drop `rid`'s admission-score memo entry (called when the request
+    /// leaves the pending queue for good: admitted or rejected).
+    pub fn forget_score(&mut self, rid: RequestId) {
+        self.score_memo.remove(&rid);
+    }
+
+    fn score_from_match(&self, prompt_len: usize, matched: usize, max_new: usize) -> i64 {
+        let novel = prompt_len - matched;
         (self.pages_for(novel) + self.pages_for(max_new)) as i64 - self.pages_for(matched) as i64
     }
 
@@ -204,17 +311,40 @@ impl CacheManager {
     // -----------------------------------------------------------------
 
     /// Memory-aware admission gate. Estimates the pages the request will
-    /// need (non-cached prompt suffix + `max_new_tokens`), evicts cold
-    /// entries to make room, and reserves the estimate against the
-    /// budget. Returns `false` — admission must be deferred — when the
-    /// reservation cannot fit even after eviction.
+    /// need (non-cached prompt suffix + `max_new_tokens` + restoring any
+    /// swapped matched prefix), reclaims cold entries (demote first,
+    /// evict as a last resort) to make room, and reserves the estimate
+    /// against the budget. Returns `false` — admission must be deferred
+    /// — when the reservation cannot fit even after reclaiming.
     ///
-    /// The matched prefix is *pinned* for the attempt: evicting the very
-    /// nodes the reservation was sized against would silently turn the
-    /// hit into an unaccounted cold prefill. If the pinned attempt
-    /// cannot fit, a fallback attempt re-costs the request as a fully
-    /// cold prefill and may evict anything — losing the hit is better
-    /// than deferring a request the drained budget could serve.
+    /// The matched prefix is *pinned* for the attempt — resident matched
+    /// nodes against demotion/eviction, swapped matched nodes against
+    /// host-tier eviction until [`CacheManager::try_restore_matched`]
+    /// brings them back — because losing the very nodes the reservation
+    /// was sized against would silently turn the hit into an unaccounted
+    /// cold prefill. If the pinned attempt cannot fit, a fallback
+    /// attempt re-costs the prompt as a fully cold prefill and may
+    /// reclaim anything (losing the resident hit is better than
+    /// deferring a request the drained budget could serve) — but it
+    /// still reserves restore pages for swapped matches: whatever
+    /// swapped prefix survives the reclaim *will* be restored at insert
+    /// time (active paths must be resident), so those pages are never
+    /// unaccounted.
+    ///
+    /// ```
+    /// use codec::cache::{CacheConfig, CacheManager};
+    ///
+    /// // 2 layers × 4-token pages; admit within a 12-page budget.
+    /// let mut m = CacheManager::new(2, 4, 2, 4, CacheConfig {
+    ///     page_budget: Some(12),
+    ///     ..Default::default()
+    /// });
+    /// let prompt: Vec<u32> = (10..18).collect(); // 8 tokens = 2 pages/layer
+    /// // prefill 4 + decode 2 + headroom 2 = 8 ≤ 12: admitted.
+    /// assert!(m.try_admit(1, &prompt, 4));
+    /// // A second identical reservation would need 8 + 6 > 12: deferred.
+    /// assert!(!m.try_admit(2, &prompt, 4));
+    /// ```
     pub fn try_admit(&mut self, rid: RequestId, prompt: &[u32], max_new: usize) -> bool {
         self.try_admit_inner(rid, prompt, max_new, true)
             || self.try_admit_inner(rid, prompt, max_new, false)
@@ -236,37 +366,48 @@ impl CacheManager {
         protect_match: bool,
     ) -> bool {
         let (matched_nodes, matched) = self.forest.match_path(prompt);
+        // Restoring a swapped matched prefix re-allocates its device
+        // pages, so it counts toward the reservation (per node: a
+        // restored node is page-aligned from zero, like a fresh fill).
+        let restore_pages = self.restore_pages_for(&matched_nodes);
         let (novel, protect) = if protect_match {
             (prompt.len() - matched, matched_nodes)
         } else {
             // Cold costing: assume the whole prompt must be prefilled
-            // (conservative if part of the prefix survives eviction).
+            // (conservative if part of the prefix survives reclaim).
+            // The restore reservation stays even here: a swapped match
+            // that survives is *not* optional — active paths must be
+            // resident, so prefill will restore it, and those pages
+            // must be accounted no matter how the hit was costed.
             (prompt.len(), Vec::new())
         };
         let res = Reservation {
             prefill_tokens: novel,
             decode_tokens: max_new,
+            restore_pages,
         };
         let Some(budget) = self.cfg.page_budget else {
             self.reserved.insert(rid, res);
+            self.forget_score(rid);
             return true;
         };
-        // Touch the pinned prefix so LRU eviction prefers other entries
+        // Touch the pinned prefix so LRU reclaim prefers other entries
         // beyond this attempt too. `Forest::touch` re-keys any frontier
         // entry atomically — the pin must not leave a stale cold key.
         let now = self.tick();
         for &nid in &protect {
             self.forest.touch(nid, now);
         }
-        let need = self.pages_for(novel) + self.pages_for(max_new);
+        let need = self.pages_for(novel) + self.pages_for(max_new) + restore_pages;
         let evictions_before = self.stats.evictions;
         let admitted = loop {
             let used = self.store.allocated_pages() + self.reserved_pages() + self.headroom();
             if used + need <= budget {
                 self.reserved.insert(rid, res);
+                self.forget_score(rid);
                 break true;
             }
-            if self.evict_one_excluding(&protect).is_none() {
+            if self.reclaim_one_excluding(&protect).is_none() {
                 break false;
             }
         };
@@ -276,11 +417,114 @@ impl CacheManager {
         admitted
     }
 
+    /// Device pages restoring the swapped nodes among `nodes` would
+    /// re-allocate — the single source of restore costing shared by
+    /// admission reservations and [`CacheManager::restore_pages_needed`].
+    fn restore_pages_for(&self, nodes: &[NodeId]) -> usize {
+        nodes
+            .iter()
+            .filter(|&&n| self.forest.node(n).is_swapped())
+            .map(|&n| self.pages_for(self.forest.node(n).len))
+            .sum()
+    }
+
     /// Count down a reservation as prefill rows are appended.
     pub fn consume_prefill(&mut self, rid: RequestId, tokens: usize) {
         if let Some(r) = self.reserved.get_mut(&rid) {
             r.prefill_tokens = r.prefill_tokens.saturating_sub(tokens);
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Restore (swap-in).
+    // -----------------------------------------------------------------
+
+    /// Device pages restoring `prompt`'s swapped matched prefix would
+    /// re-allocate (0 when nothing matched is swapped).
+    pub fn restore_pages_needed(&self, prompt: &[u32]) -> usize {
+        let (nodes, _) = self.forest.match_path(prompt);
+        self.restore_pages_for(&nodes)
+    }
+
+    /// Restore every swapped node on `prompt`'s matched path — root to
+    /// leaf, each one a host→device memcpy, never a re-prefill —
+    /// reclaiming device pages from *other* subtrees as needed (the
+    /// whole matched path is pinned). Must run before
+    /// [`CacheManager::apply_insert`] commits the radix insert: active
+    /// paths are never swapped. Returns `false` when the device budget
+    /// cannot cover a restore even after reclaiming everything unpinned
+    /// (the engine then preempts an active request and retries).
+    ///
+    /// ```
+    /// use codec::cache::{CacheConfig, CacheManager};
+    ///
+    /// let mut m = CacheManager::new(1, 4, 1, 2, CacheConfig {
+    ///     page_budget: Some(4),
+    ///     swap_budget: Some(4),
+    ///     ..Default::default()
+    /// });
+    /// let doc: Vec<u32> = (10..18).collect();
+    /// assert!(m.try_admit(1, &doc, 1));
+    /// let out = m.apply_insert(1, &doc);
+    /// # let row = vec![0.5f32; 2];
+    /// # for ev in &out.events {
+    /// #     if let codec::kvforest::forest::StorageEvent::NeedFill { node, len } = *ev {
+    /// #         for _ in 0..len { m.store_mut().append(0, node, &row, &row); }
+    /// #     }
+    /// # }
+    /// m.on_retire(1);
+    /// // Pressure demotes the cold document to the host tier…
+    /// assert!(m.prepare_pages(4));
+    /// assert_eq!(m.stats.swap_outs, 1);
+    /// // …and the next prompt over it restores with a memcpy: the
+    /// // insert produces no NeedFill, so nothing is re-prefilled.
+    /// assert!(m.try_admit(2, &doc, 1));
+    /// assert!(m.try_restore_matched(2, &doc));
+    /// assert_eq!(m.stats.swap_ins, 1);
+    /// let out2 = m.apply_insert(2, &doc);
+    /// assert!(out2.events.is_empty());
+    /// ```
+    pub fn try_restore_matched(&mut self, rid: RequestId, prompt: &[u32]) -> bool {
+        let (nodes, _) = self.forest.match_path(prompt);
+        if !nodes.iter().any(|&n| self.forest.node(n).is_swapped()) {
+            return true;
+        }
+        let now = self.tick();
+        for &nid in &nodes {
+            self.forest.touch(nid, now);
+        }
+        let evictions_before = self.stats.evictions;
+        for &nid in &nodes {
+            if !self.forest.node(nid).is_swapped() {
+                continue;
+            }
+            let pages = self.pages_for(self.forest.node(nid).len);
+            if let Some(budget) = self.cfg.page_budget {
+                loop {
+                    if self.store.allocated_pages() + pages <= budget {
+                        break;
+                    }
+                    if self.reclaim_one_excluding(&nodes).is_none() {
+                        return false;
+                    }
+                }
+            }
+            let t0 = Instant::now();
+            self.forest.mark_resident(nid);
+            let restored = self.store.restore_node(nid);
+            self.stats.restore_times.record(t0.elapsed());
+            self.stats.swap_ins += 1;
+            self.stats.swap_in_pages += restored;
+        }
+        // The restore-page share of the reservation has materialized as
+        // allocated pages; stop double-counting it.
+        if let Some(r) = self.reserved.get_mut(&rid) {
+            r.restore_pages = 0;
+        }
+        if self.stats.evictions > evictions_before {
+            self.maybe_shrink();
+        }
+        true
     }
 
     // -----------------------------------------------------------------
@@ -364,12 +608,14 @@ impl CacheManager {
     }
 
     // -----------------------------------------------------------------
-    // Eviction.
+    // Reclaim: demote-first under device pressure, true-evict on the
+    // host tier's own overflow.
     // -----------------------------------------------------------------
 
-    /// Exact-need allocation gate: evict cold entries until `pages` more
-    /// pages fit under the budget. Returns `false` if eviction alone
-    /// cannot make room (the engine then preempts or defers).
+    /// Exact-need allocation gate: reclaim cold entries (demote to the
+    /// host tier when one is configured, evict otherwise) until `pages`
+    /// more pages fit under the budget. Returns `false` if reclaiming
+    /// alone cannot make room (the engine then preempts or defers).
     pub fn prepare_pages(&mut self, pages: usize) -> bool {
         let Some(budget) = self.cfg.page_budget else {
             return true;
@@ -379,7 +625,7 @@ impl CacheManager {
             if self.store.allocated_pages() + pages <= budget {
                 break true;
             }
-            if self.evict_one().is_none() {
+            if self.reclaim_one_excluding(&[]).is_none() {
                 break false;
             }
         };
@@ -389,26 +635,45 @@ impl CacheManager {
         ok
     }
 
-    /// Evict the coldest zero-refcount leaf; returns the pages freed.
-    /// Cascades naturally: once a subtree's leaves go, its interior
-    /// nodes become the cold-leaf frontier for subsequent calls.
-    /// Freed pages go to the free list; the backing memory is released
-    /// once per eviction *burst* by the gates (`try_admit`,
-    /// `prepare_pages`, `clear_cold`), not per leaf — shrinking scans
-    /// the page table, so per-leaf shrinking would be quadratic.
-    pub fn evict_one(&mut self) -> Option<usize> {
-        self.evict_one_excluding(&[])
-    }
-
-    /// [`CacheManager::evict_one`] with a pin list: nodes in `protect`
-    /// are never chosen (used by admission to keep the matched prefix
-    /// alive while sizing its reservation).
+    /// Reclaim device pages from the coldest unpinned frontier entry:
+    /// **demote** it to the host tier when the swap budget can take it
+    /// (making host room by truly evicting the host tier's own LRU
+    /// first), **evict** it destructively otherwise — the two-level
+    /// pressure policy. Returns the device pages freed, or `None` when
+    /// nothing unpinned is reclaimable.
     ///
     /// The victim is the head of the forest's incrementally maintained
-    /// cold-leaf frontier — O(pinned) per eviction instead of the old
-    /// full re-scan of every alive node (quadratic over a burst).
+    /// cold-leaf frontier — O(pinned) per reclaim instead of a full
+    /// re-scan of every alive node (quadratic over a burst).
     /// `stats.eviction_scan_steps` counts the frontier entries examined.
-    fn evict_one_excluding(&mut self, protect: &[NodeId]) -> Option<usize> {
+    fn reclaim_one_excluding(&mut self, protect: &[NodeId]) -> Option<usize> {
+        let victim = self.frontier_victim(protect)?;
+        if let Some(host_budget) = self.cfg.swap_budget {
+            let need = self.pages_for(self.forest.node(victim).len);
+            if need <= host_budget {
+                // Make host room: the host tier's overflow is where true
+                // eviction happens (its own LRU, coldest first).
+                while self.store.swapped_pages() + need > host_budget {
+                    let Some(h) = self.forest.coldest_swapped().find(|n| !protect.contains(n))
+                    else {
+                        break;
+                    };
+                    self.evict_one_swapped(h);
+                }
+                if self.store.swapped_pages() + need <= host_budget {
+                    return Some(self.demote(victim));
+                }
+            }
+            // The victim cannot fit the host tier (bigger than the whole
+            // swap budget, or only pinned entries left to displace):
+            // fall through to destructive eviction.
+        }
+        Some(self.true_evict(victim))
+    }
+
+    /// Head of the cold-leaf frontier skipping pinned nodes, counting
+    /// scan work.
+    fn frontier_victim(&mut self, protect: &[NodeId]) -> Option<NodeId> {
         let mut scanned = 0usize;
         let mut victim = None;
         for nid in self.forest.coldest_leaves() {
@@ -419,22 +684,76 @@ impl CacheManager {
             }
         }
         self.stats.eviction_scan_steps += scanned;
-        let victim = victim?;
-        self.forest.evict_leaf(victim);
-        let freed = self.store.free_node(victim);
-        self.stats.evictions += 1;
-        self.stats.evicted_pages += freed;
-        Some(freed)
+        victim
     }
 
-    /// Evict every cold entry (drains the retained cache; active
-    /// requests' storage is untouched).
+    /// Demote one frontier node: rows move device → host (compacted),
+    /// the node stays alive and matchable. Returns device pages freed.
+    fn demote(&mut self, nid: NodeId) -> usize {
+        self.forest.mark_swapped(nid);
+        let (freed, _charged) = self.store.demote_node(nid);
+        self.stats.swap_outs += 1;
+        self.stats.swap_out_pages += freed;
+        freed
+    }
+
+    /// Truly evict one swapped node from the host tier.
+    fn evict_one_swapped(&mut self, nid: NodeId) {
+        self.forest.evict_swapped(nid);
+        let freed = self.store.evict_swapped_node(nid);
+        self.stats.host_evictions += 1;
+        self.stats.host_evicted_pages += freed;
+    }
+
+
+    /// Destructively evict a frontier node. Its children — all swapped,
+    /// or it would not be on the frontier — die with it (their radix
+    /// path breaks), deepest-first so each is childless when dropped.
+    fn true_evict(&mut self, nid: NodeId) -> usize {
+        let mut order: Vec<NodeId> = Vec::new();
+        let mut stack: Vec<NodeId> = self.forest.node(nid).children.to_vec();
+        while let Some(c) = stack.pop() {
+            stack.extend(self.forest.node(c).children.iter().copied());
+            order.push(c);
+        }
+        for &c in order.iter().rev() {
+            self.evict_one_swapped(c);
+        }
+        self.forest.evict_leaf(nid);
+        let freed = self.store.free_node(nid);
+        self.stats.evictions += 1;
+        self.stats.evicted_pages += freed;
+        freed
+    }
+
+    /// Evict the coldest zero-refcount frontier entry *destructively*
+    /// (never demotes); returns the pages freed. Cascades naturally:
+    /// once a subtree's leaves go, its interior nodes become the
+    /// cold-leaf frontier for subsequent calls. Freed pages go to the
+    /// free list; the backing memory is released once per eviction
+    /// *burst* by the gates (`try_admit`, `prepare_pages`,
+    /// `clear_cold`), not per leaf — shrinking scans the page table, so
+    /// per-leaf shrinking would be quadratic.
+    pub fn evict_one(&mut self) -> Option<usize> {
+        let victim = self.frontier_victim(&[])?;
+        Some(self.true_evict(victim))
+    }
+
+    /// Evict every cold entry from *both* tiers (drains the retained
+    /// cache; active requests' storage is untouched).
     pub fn clear_cold(&mut self) -> usize {
         let mut freed = 0;
         while let Some(f) = self.evict_one() {
             freed += f;
         }
-        if freed > 0 {
+        // Swapped subtrees hanging under still-active interior nodes
+        // are not below any frontier entry; drain them directly.
+        let mut drained = 0usize;
+        while let Some(nid) = self.forest.coldest_swapped().next() {
+            self.evict_one_swapped(nid);
+            drained += 1;
+        }
+        if freed > 0 || drained > 0 {
             self.maybe_shrink();
         }
         freed
@@ -619,6 +938,125 @@ mod tests {
         assert!(m.try_admit(3, &toks("shared-x"), 8));
         m.apply_insert(3, &toks("shared-x"));
         assert_eq!(m.decode_pages_needed(&[2, 3]), 2 * L);
+    }
+
+    /// Append `len` deterministic rows (distinct per token/layer) for
+    /// every NeedFill node; returns nothing — read back via `node_kv`.
+    fn fill_distinct(m: &mut CacheManager, out: &InsertOutcome, base: f32) {
+        for ev in &out.events {
+            if let StorageEvent::NeedFill { node, len } = *ev {
+                for layer in 0..L {
+                    for t in 0..len {
+                        let k: Vec<f32> = (0..H * D)
+                            .map(|i| base + layer as f32 * 10.0 + t as f32 + i as f32 * 0.01)
+                            .collect();
+                        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+                        m.store_mut().append(layer, node, &k, &v);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_policy_demotes_then_host_lru_evicts() {
+        let mut m = CacheManager::new(
+            L,
+            PT,
+            H,
+            D,
+            CacheConfig {
+                page_budget: Some(8),
+                swap_budget: Some(4),
+                ..Default::default()
+            },
+        );
+        // Request 1 fills 4 pages, goes cold.
+        assert!(m.try_admit(1, &toks("aaaaaaaa"), 0));
+        let out = m.apply_insert(1, &toks("aaaaaaaa"));
+        let a_node = out.path[0];
+        fill_distinct(&mut m, &out, 100.0);
+        m.on_retire(1);
+        // Request 2 forces reclaim: "a" is DEMOTED, not evicted.
+        assert!(m.try_admit(2, &toks("bbbbbbbb"), 0));
+        assert_eq!(m.stats.swap_outs, 1);
+        assert_eq!(m.stats.evictions, 0, "demote-first: nothing destroyed");
+        assert!(m.store().node_swapped(a_node));
+        assert_eq!(m.forest().match_len(&toks("aaaaaaaa")), 8, "still matchable");
+        let out2 = m.apply_insert(2, &toks("bbbbbbbb"));
+        fill_distinct(&mut m, &out2, 200.0);
+        m.on_retire(2);
+        // Request 3: the host tier is full ("a"), so demoting "b" first
+        // truly evicts the host LRU — destruction at the end of the
+        // two-level chain only.
+        assert!(m.try_admit(3, &toks("cccccccc"), 0));
+        assert_eq!(m.stats.swap_outs, 2);
+        assert_eq!(m.stats.host_evictions, 1);
+        assert_eq!(m.forest().match_len(&toks("aaaaaaaa")), 0, "a truly gone");
+        assert_eq!(m.forest().match_len(&toks("bbbbbbbb")), 8, "b swapped");
+        let out3 = m.apply_insert(3, &toks("cccccccc"));
+        fill_distinct(&mut m, &out3, 300.0);
+        let b_node = m.forest().match_path(&toks("bbbbbbbb")).0[0];
+        m.on_retire(3);
+        // Request 4 hits the swapped "b": admission pins it (the host
+        // eviction to make room for "c" must pick something else — here
+        // nothing, so "c" is truly evicted), restore is a memcpy and the
+        // insert needs no prefill.
+        assert!(m.try_admit(4, &toks("bbbbbbbb"), 0));
+        assert!(m.try_restore_matched(4, &toks("bbbbbbbb")));
+        assert_eq!(m.stats.swap_ins, 1);
+        assert!(!m.store().node_swapped(b_node));
+        assert!(m.stats.restore_times.count() >= 1);
+        let out4 = m.apply_insert(4, &toks("bbbbbbbb"));
+        assert!(
+            out4.events.is_empty(),
+            "restored prefix must need no NeedFill/split"
+        );
+        // Restored rows are bit-identical to what was demoted.
+        let (k, v) = m.store().node_kv(0, b_node, 0, 0, 8);
+        for t in 0..8 {
+            for i in 0..D {
+                let want = 200.0 + t as f32 + (i as f32) * 0.01;
+                assert_eq!(k.at(t, i), want);
+                assert_eq!(v.at(t, i), want + 0.5);
+            }
+        }
+        // Both budgets' high-water marks held the whole way.
+        assert!(m.store().max_allocated_pages() <= 8);
+        assert!(m.store().max_swapped_pages() <= 4);
+        m.forest().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_score_memo_avoids_rewalks_on_stable_forest() {
+        let mut m = mgr(None);
+        assert!(m.try_admit(1, &toks("document-head"), 2));
+        let out = m.apply_insert(1, &toks("document-head"));
+        fill_all(&mut m, &out);
+        m.on_retire(1);
+        let prompt = toks("document-tail");
+        let walks0 = m.stats.score_walks;
+        let s1 = m.admission_score_cached(77, &prompt, 4);
+        assert_eq!(s1, m.admission_score(&prompt, 4), "memo must not change the score");
+        assert_eq!(m.stats.score_walks, walks0 + 1);
+        for _ in 0..50 {
+            assert_eq!(m.admission_score_cached(77, &prompt, 4), s1);
+        }
+        assert_eq!(
+            m.stats.score_walks,
+            walks0 + 1,
+            "stable forest: one walk total, not one per call"
+        );
+        // A forest mutation invalidates the memo at the next lookup…
+        assert!(m.try_admit(2, &toks("other"), 2));
+        let out2 = m.apply_insert(2, &toks("other"));
+        fill_all(&mut m, &out2);
+        m.admission_score_cached(77, &prompt, 4);
+        assert_eq!(m.stats.score_walks, walks0 + 2);
+        // …and admitting a request drops its memo entry outright.
+        assert!(m.try_admit(77, &prompt, 4));
+        m.admission_score_cached(77, &prompt, 4);
+        assert_eq!(m.stats.score_walks, walks0 + 3);
     }
 
     #[test]

@@ -21,16 +21,26 @@
 //!   request whose prompt walks a cached path skips prefill for the
 //!   matched tokens (cache-hit prefill is bit-identical to a cold run:
 //!   the matched rows *are* the rows a cold prefill would recompute).
-//! * **Page-budgeted eviction** — under a configured page budget the
-//!   manager evicts cold zero-refcount leaves (leaf-first LRU, cascading
-//!   up subtrees as parents go cold); pages on an active request's path
-//!   are never touched, by construction (every ancestor of an active
-//!   node has a non-empty query set).
+//! * **Two-level reclaim (demote, then evict)** — under a configured
+//!   page budget the manager reclaims cold zero-refcount frontier
+//!   entries (leaf-first LRU, cascading up subtrees as parents go
+//!   cold); pages on an active request's path are never touched, by
+//!   construction (every ancestor of an active node has a non-empty
+//!   query set). With a *swap budget* also configured, reclaim
+//!   **demotes** the victim's pages to a host-side tier instead of
+//!   destroying them — the node stays matchable, and a later prompt
+//!   over the same prefix **restores** it with a memcpy instead of a
+//!   re-prefill (greedy outputs identical to an all-resident run). Only
+//!   the host tier's own LRU overflow is truly evicted, so destruction
+//!   happens at the end of the two-level chain.
 //! * **Memory-aware admission** — the engine consults
 //!   [`CacheManager::try_admit`] before admitting: the estimated pages
-//!   for the non-cached prompt suffix plus `max_new_tokens` are reserved
-//!   against the budget, so admission defers (and decode preempts to
-//!   pending as a last resort) instead of the pool OOMing.
+//!   for the non-cached prompt suffix, `max_new_tokens`, and any
+//!   swapped-prefix restore are reserved against the budget, so
+//!   admission defers (and decode preempts to pending as a last resort)
+//!   instead of the pool OOMing. A swapped-but-matched prefix is pinned
+//!   from admission through [`CacheManager::try_restore_matched`] so
+//!   the reclaim loop cannot steal the hit it was costed on.
 
 pub mod manager;
 

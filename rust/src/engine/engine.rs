@@ -298,14 +298,20 @@ impl Engine {
                 return Ok(());
             }
             // Rank the scan window by admission score; ties fall back to
-            // queue order, so equal-cost requests stay FIFO.
+            // queue order, so equal-cost requests stay FIFO. The score's
+            // radix walk is memoized per request keyed by the forest
+            // generation, so a stable forest is walked once per request
+            // across engine steps, not once per candidate per step.
             let (w, k) = (self.cfg.admit_window, self.cfg.admit_max_bypass);
-            let mut ranked: Vec<(i64, usize)> = self
-                .batcher
-                .scan_window(w, k)
-                .into_iter()
-                .map(|(i, r)| (self.cache.admission_score(&r.prompt, r.max_new_tokens), i))
-                .collect();
+            let window = self.batcher.scan_window(w, k);
+            let mut ranked: Vec<(i64, usize)> = Vec::with_capacity(window.len());
+            for (i, r) in window {
+                ranked.push((
+                    self.cache
+                        .admission_score_cached(r.id, &r.prompt, r.max_new_tokens),
+                    i,
+                ));
+            }
             ranked.sort_unstable();
             let mut admitted = None;
             for &(_, idx) in &ranked {
@@ -323,6 +329,7 @@ impl Engine {
                     // never fit. Reject it alone; the rest of the queue
                     // may well fit once it is out of the way.
                     let req = self.batcher.reject_front().expect("pending checked");
+                    self.cache.forget_score(req.id);
                     let msg = format!(
                         "request {} ({} prompt tokens, max_new {}) cannot fit the \
                          KV page budget of {:?} pages even with the cache drained",
@@ -450,6 +457,32 @@ impl Engine {
             .expect("admitted request missing")
             .req
             .clone();
+        // Any swapped prefix the prompt matches is restored first — a
+        // host→device memcpy, never a re-prefill — because active paths
+        // must be resident before the radix insert commits. The restore
+        // reclaims from other subtrees; if even that cannot make room,
+        // preempt the youngest other active request and retry.
+        loop {
+            if self.cache.try_restore_matched(rid, &req.prompt) {
+                break;
+            }
+            let victim = self
+                .batcher
+                .active()
+                .iter()
+                .rev()
+                .map(|a| a.req.id)
+                .find(|&id| id != rid);
+            match victim {
+                Some(v) => self.preempt(v),
+                None => anyhow::bail!(
+                    "KV page budget {:?} cannot cover restoring a swapped prefix \
+                     ({} pages; nothing reclaimable or preemptable)",
+                    self.cache.budget_pages(),
+                    self.cache.restore_pages_needed(&req.prompt)
+                ),
+            }
+        }
         // The manager mirrors splits into the store, stamps the path for
         // LRU, and counts hit/miss tokens; NeedFill events come back for
         // the engine to fill.

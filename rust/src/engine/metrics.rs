@@ -1,4 +1,25 @@
-//! Serving metrics: TPOT, TTFT, throughput, plan-cache stats.
+//! Serving metrics: TPOT, TTFT, throughput, plan-cache and KV-tier
+//! stats.
+//!
+//! # Ownership
+//!
+//! [`Metrics`] is owned by the engine and is strictly an *observer*: it
+//! never drives policy. Counters that originate elsewhere — the cache
+//! manager's eviction/swap/admission stats, the pools' page accounting
+//! — are mirrored in by [`Metrics::observe_cache`] once per engine step
+//! (and at shutdown), so a metrics snapshot is coherent: every gauge in
+//! it was read at the same step boundary. The authoritative copies stay
+//! in `crate::cache::CacheStats` and the pools; tests may assert either
+//! side (the cache suite asserts they agree).
+//!
+//! # Invariants worth asserting against
+//!
+//! * `kv_max_allocated_pages ≤ kv_budget_pages` and
+//!   `kv_max_swapped_pages ≤ kv_swap_budget_pages` — the budgets are
+//!   enforced at allocation sites, so the *high-water marks* (not just
+//!   the current values) stay under them;
+//! * `kv_resident_bytes ≥ kv_in_use_bytes` — freed-but-unshrunk backing
+//!   memory is counted, never hidden.
 //!
 //! Timing streams (`step_times`, `attn_times`, …) are [`TimeStat`]s:
 //! bounded running statistics, not grow-forever vectors. A long-running
@@ -209,6 +230,30 @@ pub struct Metrics {
     /// Cold-leaf frontier entries examined across all evictions (the
     /// eviction work counter `benches/sched.rs` asserts on).
     pub eviction_scan_steps: usize,
+
+    // --- swap-tier gauges (see `crate::cache` two-level policy) ---
+    /// Nodes demoted device → host under memory pressure (swap-outs).
+    pub swap_outs: usize,
+    /// Device pages freed by demotion.
+    pub swap_out_pages: usize,
+    /// Nodes restored host → device on a prefix hit (swap-ins).
+    pub swap_ins: usize,
+    /// Device pages re-allocated by restores.
+    pub swap_in_pages: usize,
+    /// Swapped nodes truly evicted from the host tier.
+    pub host_evictions: usize,
+    /// Pages currently charged to the host tier.
+    pub kv_swapped_pages: usize,
+    /// High-water mark of host-tier pages — the "never exceeds the swap
+    /// budget" invariant is checked against this.
+    pub kv_max_swapped_pages: usize,
+    /// Configured host-tier budget (`None` = swap disabled).
+    pub kv_swap_budget_pages: Option<usize>,
+    /// Bytes of compacted host-tier buffers currently held.
+    pub kv_swapped_bytes: usize,
+    /// Wall time of host→device restores, one sample per restored node
+    /// (the cost a prefix hit pays instead of a re-prefill).
+    pub swap_restore_times: TimeStat,
 }
 
 /// Latency targets for SLO-attainment reporting: a request meets its SLO
@@ -355,6 +400,16 @@ impl Metrics {
         self.preemptions = cm.stats.preemptions;
         self.admission_reorders = cm.stats.admission_reorders;
         self.eviction_scan_steps = cm.stats.eviction_scan_steps;
+        self.swap_outs = cm.stats.swap_outs;
+        self.swap_out_pages = cm.stats.swap_out_pages;
+        self.swap_ins = cm.stats.swap_ins;
+        self.swap_in_pages = cm.stats.swap_in_pages;
+        self.host_evictions = cm.stats.host_evictions;
+        self.kv_swapped_pages = store.swapped_pages();
+        self.kv_max_swapped_pages = store.max_swapped_pages();
+        self.kv_swap_budget_pages = cm.swap_budget_pages();
+        self.kv_swapped_bytes = store.swapped_bytes();
+        self.swap_restore_times = cm.stats.restore_times.clone();
     }
 
     /// SLO attainment + goodput over the finished requests. `None` when

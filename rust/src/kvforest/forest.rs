@@ -1,10 +1,66 @@
 //! Prefix-forest topology: radix-tree insert/split/prune plus the
 //! query-set / prefix-path indexes (§4.1, Fig. 4).
+//!
+//! # Ownership and invariants
+//!
+//! The forest owns the *topology* only — which chunks exist, who shares
+//! them, and what storage tier each one occupies ([`PageState`]). The
+//! paged rows themselves live in [`super::paged::KvStore`], and the
+//! *policy* deciding when to demote/restore/evict lives a layer up in
+//! `crate::cache::CacheManager`, which is the only component that may
+//! consume the two eviction frontiers:
+//!
+//! * the **cold-leaf frontier** ([`Forest::coldest_leaves`]) — resident
+//!   nodes with no requests and no resident children, i.e. the nodes
+//!   whose device pages can be reclaimed (demoted or evicted) without
+//!   touching any active path;
+//! * the **swap frontier** ([`Forest::coldest_swapped`]) — swapped
+//!   nodes with no children at all, i.e. the host-tier entries that can
+//!   be dropped without orphaning a swapped descendant.
+//!
+//! Both frontiers are keyed `(stamp, node)` and maintained incrementally
+//! (O(log n) per structural change); all stamp mutation goes through
+//! [`Forest::touch`] so a re-referenced node can never be evicted out of
+//! LRU order through a stale key. The page-state machine per node is
+//!
+//! ```text
+//!   free ──NeedFill/append──▶ Resident ──mark_swapped──▶ Swapped
+//!             ▲                  │  ▲                       │
+//!             └──evict_leaf──────┘  └────mark_resident──────┤
+//!                                        (prefix hit)       │
+//!                                   evict_swapped ──▶ dead ─┘
+//! ```
+//!
+//! with the cross-node invariants (checked by
+//! [`Forest::check_invariants`]):
+//!
+//! * a node with a non-empty query set is `Resident` — active paths are
+//!   never swapped;
+//! * every child of a `Swapped` node is `Swapped` — residency is
+//!   prefix-closed, so a request path is restorable root-to-leaf;
+//! * swapped nodes stay matchable ([`Forest::match_path`] walks them),
+//!   which is exactly what makes demotion reversible: a later prompt
+//!   over the same prefix restores instead of re-prefilling.
 
 use std::collections::BTreeMap;
 
 pub type NodeId = usize;
 pub type RequestId = u64;
+
+/// Storage tier of a node's KV rows (the page-state machine above).
+///
+/// `Resident` rows live in the device-side paged pool and are directly
+/// gatherable for attention; `Swapped` rows were demoted to the
+/// host-side tier (`super::paged::HostPool`) — the node stays alive and
+/// matchable, but must be restored (a memcpy, not a re-prefill) before
+/// any request may include it on its path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageState {
+    /// KV rows are in the device paged pool.
+    Resident,
+    /// KV rows were demoted to the host tier; restore before use.
+    Swapped,
+}
 
 /// Node 0 is the virtual root (∅): it holds no tokens and exists so that
 /// requests with entirely distinct prefixes still live in one forest —
@@ -30,6 +86,10 @@ pub struct Node {
     /// cold-leaf frontier key, so it is only mutated through
     /// [`Forest::touch`], which keeps the frontier key in sync.
     stamp: u64,
+    /// Storage tier of this node's KV rows (see [`PageState`]). Only
+    /// mutated through [`Forest::mark_swapped`] /
+    /// [`Forest::mark_resident`], which keep both frontiers in sync.
+    state: PageState,
 }
 
 impl Node {
@@ -42,12 +102,23 @@ impl Node {
             requests: Vec::new(),
             alive: true,
             stamp: 0,
+            state: PageState::Resident,
         }
     }
 
     /// Last-use LRU stamp (see [`Forest::touch`]).
     pub fn stamp(&self) -> u64 {
         self.stamp
+    }
+
+    /// Storage tier of this node's KV rows.
+    pub fn state(&self) -> PageState {
+        self.state
+    }
+
+    /// Whether this node's rows were demoted to the host tier.
+    pub fn is_swapped(&self) -> bool {
+        self.state == PageState::Swapped
     }
 
     /// Sharing degree n_q of this node.
@@ -101,15 +172,34 @@ pub struct Forest {
     /// J_r: request → prefix path (node ids, root-to-leaf, no virtual root).
     paths: BTreeMap<RequestId, Vec<NodeId>>,
     /// The cold-leaf frontier, ordered coldest-first: `(stamp, node)` for
-    /// every alive node with an empty query set and no children.
-    /// Maintained incrementally on release / evict / re-reference / split
-    /// so eviction never re-scans all alive nodes (the full-scan
-    /// [`Forest::cold_leaves`] is kept as the test oracle). Membership
-    /// changes route through [`Forest::refresh_frontier`]; stamp changes
-    /// through [`Forest::touch`] — both keep the `(stamp, node)` key
-    /// exact, closing the stale-stamp hazard where a re-referenced node's
-    /// old key would linger and evict it out of LRU order.
+    /// every alive *resident* node with an empty query set and no
+    /// resident children (a node whose children are all swapped is
+    /// device-reclaimable: its own rows are the only resident storage in
+    /// its subtree). Maintained incrementally on release / evict /
+    /// re-reference / split / demote / restore so eviction never
+    /// re-scans all alive nodes (the full-scan [`Forest::cold_leaves`]
+    /// is kept as the test oracle). Membership changes route through
+    /// `refresh_frontier`; stamp changes through [`Forest::touch`] —
+    /// both keep the `(stamp, node)` key exact, closing the stale-stamp
+    /// hazard where a re-referenced node's old key would linger and
+    /// evict it out of LRU order.
     frontier: BTreeMap<(u64, NodeId), ()>,
+    /// The swap frontier, ordered coldest-first: `(stamp, node)` for
+    /// every alive *swapped* node with no children. These are the
+    /// host-tier entries that can be truly evicted without orphaning a
+    /// swapped descendant (evicting an interior swapped node would break
+    /// the radix path of everything below it). Maintained exactly like
+    /// `frontier`; [`Forest::cold_swapped`] is the full-scan oracle.
+    swap_frontier: BTreeMap<(u64, NodeId), ()>,
+    /// Bumped on every mutation that can *shrink or restructure*
+    /// prefix-match results (insert/split/evict/prune). Decode appends
+    /// ([`Forest::append_token`]) deliberately do **not** bump it: they
+    /// only lengthen a private leaf, so a memoized match length can at
+    /// worst be slightly stale-low — fine for admission *ranking*, and
+    /// exact admission costing re-walks the tree anyway. Bumping per
+    /// appended token would invalidate the memo every decode step,
+    /// which is precisely the re-walk cost the memo exists to remove.
+    generation: u64,
 }
 
 impl Forest {
@@ -118,7 +208,17 @@ impl Forest {
             nodes: vec![Node::new(VIRTUAL_ROOT)],
             paths: BTreeMap::new(),
             frontier: BTreeMap::new(),
+            swap_frontier: BTreeMap::new(),
+            generation: 0,
         }
+    }
+
+    /// Current topology generation (see the `generation` field): equal
+    /// generations guarantee [`Forest::match_len`] results have not
+    /// shrunk or been restructured (decode appends may have lengthened
+    /// a private leaf's match — deliberately untracked).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn node(&self, id: NodeId) -> &Node {
@@ -191,30 +291,55 @@ impl Forest {
     }
 
     // ---------------------------------------------------------------
-    // Cold-leaf frontier (incremental LRU eviction index).
+    // Cold-leaf + swap frontiers (incremental LRU eviction indexes).
     // ---------------------------------------------------------------
 
-    /// Re-derive `nid`'s frontier membership from its current state:
-    /// present iff alive ∧ no requests ∧ no children. Called after every
-    /// mutation that can change eligibility (request add/remove, child
-    /// add/remove, split, evict). Uses the node's *current* stamp, so any
-    /// stamp change must go through [`Forest::touch`] first.
+    /// Whether `nid` belongs on the cold-leaf (device-reclaim) frontier:
+    /// alive ∧ resident ∧ no requests ∧ no resident children.
+    fn frontier_eligible(&self, nid: NodeId) -> bool {
+        let n = &self.nodes[nid];
+        n.alive
+            && n.state == PageState::Resident
+            && n.requests.is_empty()
+            && !n
+                .children
+                .iter()
+                .any(|&c| self.nodes[c].alive && self.nodes[c].state == PageState::Resident)
+    }
+
+    /// Whether `nid` belongs on the swap (host-evict) frontier: alive ∧
+    /// swapped ∧ no children (children of a dead node are detached, so
+    /// the child list only ever holds alive nodes).
+    fn swap_frontier_eligible(&self, nid: NodeId) -> bool {
+        let n = &self.nodes[nid];
+        n.alive && n.state == PageState::Swapped && n.children.is_empty()
+    }
+
+    /// Re-derive `nid`'s membership in both frontiers from its current
+    /// state. Called after every mutation that can change eligibility
+    /// (request add/remove, child add/remove, split, evict, demote,
+    /// restore). Uses the node's *current* stamp, so any stamp change
+    /// must go through [`Forest::touch`] first.
     fn refresh_frontier(&mut self, nid: NodeId) {
         if nid == VIRTUAL_ROOT {
             return;
         }
-        let n = &self.nodes[nid];
-        let key = (n.stamp, nid);
-        if n.alive && n.requests.is_empty() && n.children.is_empty() {
+        let key = (self.nodes[nid].stamp, nid);
+        if self.frontier_eligible(nid) {
             self.frontier.insert(key, ());
         } else {
             self.frontier.remove(&key);
         }
+        if self.swap_frontier_eligible(nid) {
+            self.swap_frontier.insert(key, ());
+        } else {
+            self.swap_frontier.remove(&key);
+        }
     }
 
-    /// Update `nid`'s LRU stamp. If the node sits on the cold-leaf
-    /// frontier its `(stamp, node)` key is re-keyed atomically — removing
-    /// the old entry *before* writing the new stamp is what prevents the
+    /// Update `nid`'s LRU stamp. If the node sits on either frontier its
+    /// `(stamp, node)` key is re-keyed atomically — removing the old
+    /// entry *before* writing the new stamp is what prevents the
     /// stale-stamp hazard (a re-referenced node evicted out of LRU order
     /// through its leftover cold key).
     pub fn touch(&mut self, nid: NodeId, stamp: u64) {
@@ -223,9 +348,13 @@ impl Forest {
             return;
         }
         let was_cold = self.frontier.remove(&(old, nid)).is_some();
+        let was_swap = self.swap_frontier.remove(&(old, nid)).is_some();
         self.nodes[nid].stamp = stamp;
         if was_cold {
             self.frontier.insert((stamp, nid), ());
+        }
+        if was_swap {
+            self.swap_frontier.insert((stamp, nid), ());
         }
     }
 
@@ -241,18 +370,35 @@ impl Forest {
         self.frontier.len()
     }
 
+    /// Host-evictable swapped nodes in LRU order (coldest first). The
+    /// incremental counterpart of [`Forest::cold_swapped`].
+    pub fn coldest_swapped(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.swap_frontier.keys().map(|&(_, nid)| nid)
+    }
+
+    /// Number of entries on the swap frontier.
+    pub fn swap_frontier_len(&self) -> usize {
+        self.swap_frontier.len()
+    }
+
     // ---------------------------------------------------------------
     // Radix insert over token sequences (engine path).
     // ---------------------------------------------------------------
 
     /// Insert request `rid` with prompt `tokens`, sharing any existing
     /// prefix. Returns the path and the storage events (splits + fills).
+    ///
+    /// Every node the prompt matches into must already be `Resident`:
+    /// active paths are never swapped, so the caller (the cache manager)
+    /// restores any swapped matched prefix — see
+    /// [`Forest::mark_resident`] — *before* committing the insert.
     pub fn insert_request(&mut self, rid: RequestId, tokens: &[u32]) -> InsertOutcome {
         assert!(
             !self.paths.contains_key(&rid),
             "request {rid} already inserted"
         );
         assert!(!tokens.is_empty(), "empty prompt");
+        self.generation += 1;
         let mut events = Vec::new();
         let mut path = Vec::new();
         let mut cur = VIRTUAL_ROOT;
@@ -282,6 +428,11 @@ impl Forest {
                     i = tokens.len();
                 }
                 Some(c) => {
+                    assert!(
+                        self.nodes[c].state == PageState::Resident,
+                        "insert_request({rid}) matched swapped node {c}: \
+                         restore the matched prefix before inserting"
+                    );
                     let common = common_prefix_len(&self.nodes[c].tokens, &tokens[i..]);
                     debug_assert!(common > 0);
                     if common < self.nodes[c].tokens.len() {
@@ -353,6 +504,9 @@ impl Forest {
     /// Returns (node, offset_in_node) where the KV row must be stored,
     /// plus an optional NeedFill-free creation event.
     pub fn append_token(&mut self, rid: RequestId, token: u32) -> (NodeId, usize) {
+        // No generation bump: an append can only lengthen matches (see
+        // the `generation` field docs), and bumping here would defeat
+        // the admission-score memo on every decode step.
         let path = self.paths.get(&rid).expect("unknown request").clone();
         let leaf = *path.last().expect("empty path");
         let private = self.nodes[leaf].degree() == 1 && self.nodes[leaf].children.is_empty();
@@ -425,34 +579,114 @@ impl Forest {
         path
     }
 
-    /// Evictable frontier by *full scan*: alive nodes with an empty
-    /// query set and no children. Any ancestor of an active request's
-    /// node has a non-empty query set (paths are root-to-leaf), so
-    /// evicting a cold leaf can never free storage an active request
-    /// references. Eviction uses the incrementally maintained
-    /// [`Forest::coldest_leaves`] instead (O(log n) per update); this
-    /// scan is the oracle the invariant checks and property tests
-    /// compare it against.
+    /// Device-reclaimable frontier by *full scan*: alive resident nodes
+    /// with an empty query set and no resident children. Any ancestor of
+    /// an active request's node has a non-empty query set (paths are
+    /// root-to-leaf), so reclaiming a frontier node can never free
+    /// storage an active request references. Reclaim uses the
+    /// incrementally maintained [`Forest::coldest_leaves`] instead
+    /// (O(log n) per update); this scan is the oracle the invariant
+    /// checks and property tests compare it against.
     pub fn cold_leaves(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.alive_nodes()
-            .filter(|(_, n)| n.degree() == 0 && n.children.is_empty())
+            .filter(|(_, n)| {
+                n.state == PageState::Resident
+                    && n.degree() == 0
+                    && !n
+                        .children
+                        .iter()
+                        .any(|&c| self.nodes[c].alive && self.nodes[c].state == PageState::Resident)
+            })
             .map(|(id, _)| id)
     }
 
-    /// Evict one cold leaf (see [`Forest::cold_leaves`]); the caller
-    /// frees its storage. Returns the parent, which may itself have
-    /// become a cold leaf.
+    /// Host-evictable swapped nodes by *full scan*: alive swapped nodes
+    /// with no children. The oracle for [`Forest::coldest_swapped`].
+    pub fn cold_swapped(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.alive_nodes()
+            .filter(|(_, n)| n.state == PageState::Swapped && n.children.is_empty())
+            .map(|(id, _)| id)
+    }
+
+    /// Demote `nid` to the host tier (the caller moves its rows — see
+    /// `KvStore::demote_node`). The node must be on the cold-leaf
+    /// frontier: resident, no requests, no resident children. It leaves
+    /// the device frontier but stays alive and matchable; its parent may
+    /// have just become the new frontier (cascade — this is what lets a
+    /// whole cold subtree demote leaf-upward).
+    pub fn mark_swapped(&mut self, nid: NodeId) {
+        assert!(
+            nid != VIRTUAL_ROOT && self.frontier_eligible(nid),
+            "mark_swapped({nid}): not a cold resident frontier node"
+        );
+        self.nodes[nid].state = PageState::Swapped;
+        let parent = self.nodes[nid].parent;
+        self.refresh_frontier(nid);
+        self.refresh_frontier(parent);
+    }
+
+    /// Restore `nid` from the host tier (the caller moves its rows back
+    /// — see `KvStore::restore_node`). Restores proceed root-to-leaf:
+    /// the parent must already be resident, keeping residency
+    /// prefix-closed at every step.
+    pub fn mark_resident(&mut self, nid: NodeId) {
+        let n = &self.nodes[nid];
+        assert!(
+            n.alive && n.state == PageState::Swapped,
+            "mark_resident({nid}): not an alive swapped node"
+        );
+        let parent = n.parent;
+        assert!(
+            parent == VIRTUAL_ROOT || self.nodes[parent].state == PageState::Resident,
+            "mark_resident({nid}): parent {parent} still swapped (restore root-to-leaf)"
+        );
+        self.nodes[nid].state = PageState::Resident;
+        self.refresh_frontier(nid);
+        self.refresh_frontier(parent);
+    }
+
+    /// Evict one cold *resident* leaf (see [`Forest::cold_leaves`]); the
+    /// caller frees its storage. The node must have no children at all —
+    /// truly evicting a node above swapped children would orphan them,
+    /// so the caller drains the swapped subtree (via
+    /// [`Forest::evict_swapped`]) first. Returns the parent, which may
+    /// itself have become a cold leaf.
     pub fn evict_leaf(&mut self, nid: NodeId) -> NodeId {
         let n = &self.nodes[nid];
         assert!(
-            nid != VIRTUAL_ROOT && n.alive && n.degree() == 0 && n.children.is_empty(),
-            "evict_leaf({nid}): not a cold leaf"
+            nid != VIRTUAL_ROOT
+                && n.alive
+                && n.state == PageState::Resident
+                && n.degree() == 0
+                && n.children.is_empty(),
+            "evict_leaf({nid}): not a childless cold resident leaf"
         );
+        self.generation += 1;
         self.nodes[nid].alive = false;
         let parent = self.nodes[nid].parent;
         self.nodes[parent].children.retain(|&c| c != nid);
         // Victim leaves the frontier; the parent may have just become
         // the new cold-leaf frontier (cascade).
+        self.refresh_frontier(nid);
+        self.refresh_frontier(parent);
+        parent
+    }
+
+    /// Truly evict one swapped node from the host tier (see
+    /// [`Forest::cold_swapped`]); the caller drops its host buffer. The
+    /// node dies and detaches; the parent — resident *or* swapped — may
+    /// have just joined its respective frontier. Returns the parent.
+    pub fn evict_swapped(&mut self, nid: NodeId) -> NodeId {
+        assert!(
+            nid != VIRTUAL_ROOT
+                && self.swap_frontier_eligible(nid)
+                && self.nodes[nid].degree() == 0,
+            "evict_swapped({nid}): not a childless swapped node"
+        );
+        self.generation += 1;
+        self.nodes[nid].alive = false;
+        let parent = self.nodes[nid].parent;
+        self.nodes[parent].children.retain(|&c| c != nid);
         self.refresh_frontier(nid);
         self.refresh_frontier(parent);
         parent
@@ -465,6 +699,7 @@ impl Forest {
         let Some(path) = self.paths.remove(&rid) else {
             return events;
         };
+        self.generation += 1;
         for &nid in path.iter().rev() {
             self.nodes[nid].remove_request(rid);
             if self.nodes[nid].requests.is_empty() && self.nodes[nid].children.is_empty() {
@@ -485,6 +720,7 @@ impl Forest {
     /// Add a synthetic node of `len` tokens under `parent` (no token ids,
     /// no storage).
     pub fn add_synthetic(&mut self, parent: NodeId, len: usize) -> NodeId {
+        self.generation += 1;
         let id = self.alloc(parent);
         self.nodes[id].len = len;
         self.nodes[parent].children.push(id);
@@ -515,7 +751,12 @@ impl Forest {
     /// Consistency checks used by tests and debug assertions:
     /// * every path is parent-linked and ends at a leaf-ward node;
     /// * I_n equals the set of requests whose path contains n;
-    /// * children's parent pointers are correct.
+    /// * children's parent pointers are correct;
+    /// * page states are consistent: active paths are never swapped, and
+    ///   every child of a swapped node is swapped (residency is
+    ///   prefix-closed);
+    /// * both incremental frontiers equal their full-scan oracles with
+    ///   exact `(stamp, node)` keys.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (rid, path) in &self.paths {
             let mut prev = VIRTUAL_ROOT;
@@ -554,9 +795,26 @@ impl Forest {
                     return Err(format!("child {c} of {nid} has parent {}", self.nodes[c].parent));
                 }
             }
+            // Page-state machine invariants.
+            if n.state == PageState::Swapped {
+                if !n.requests.is_empty() {
+                    return Err(format!(
+                        "swapped node {nid} is on an active path ({:?})",
+                        n.requests
+                    ));
+                }
+                for &c in &n.children {
+                    if self.nodes[c].alive && self.nodes[c].state == PageState::Resident {
+                        return Err(format!(
+                            "swapped node {nid} has resident child {c} \
+                             (residency must be prefix-closed)"
+                        ));
+                    }
+                }
+            }
         }
-        // The incremental frontier must equal the full-scan oracle, with
-        // every key's stamp matching its node's current stamp (the
+        // Each incremental frontier must equal its full-scan oracle,
+        // with every key's stamp matching its node's current stamp (the
         // stale-stamp hazard).
         let oracle: std::collections::BTreeSet<NodeId> = self.cold_leaves().collect();
         let frontier: std::collections::BTreeSet<NodeId> =
@@ -564,12 +822,22 @@ impl Forest {
         if oracle != frontier {
             return Err(format!("frontier {frontier:?} != cold-leaf oracle {oracle:?}"));
         }
-        for &(stamp, nid) in self.frontier.keys() {
-            if self.nodes[nid].stamp != stamp {
-                return Err(format!(
-                    "frontier key ({stamp}, {nid}) is stale: node stamp is {}",
-                    self.nodes[nid].stamp
-                ));
+        let swap_oracle: std::collections::BTreeSet<NodeId> = self.cold_swapped().collect();
+        let swap_frontier: std::collections::BTreeSet<NodeId> =
+            self.swap_frontier.keys().map(|&(_, nid)| nid).collect();
+        if swap_oracle != swap_frontier {
+            return Err(format!(
+                "swap frontier {swap_frontier:?} != cold-swapped oracle {swap_oracle:?}"
+            ));
+        }
+        for (map, name) in [(&self.frontier, "frontier"), (&self.swap_frontier, "swap frontier")] {
+            for &(stamp, nid) in map.keys() {
+                if self.nodes[nid].stamp != stamp {
+                    return Err(format!(
+                        "{name} key ({stamp}, {nid}) is stale: node stamp is {}",
+                        self.nodes[nid].stamp
+                    ));
+                }
             }
         }
         Ok(())
@@ -840,12 +1108,13 @@ mod tests {
     }
 
     /// Randomized property test: under arbitrary interleavings of
-    /// insert / release / touch / evict / prune, the incremental
-    /// frontier equals the full-scan `cold_leaves` oracle with exact
-    /// stamps (checked by `check_invariants` after every op). This is
-    /// the migration guard for the stale-stamp hazard: a node
-    /// re-referenced (or re-stamped during admission pinning) must not
-    /// keep its old `(stamp, node)` key.
+    /// insert / release / touch / evict / prune / demote / restore /
+    /// host-evict, both incremental frontiers equal their full-scan
+    /// oracles with exact stamps and the page-state invariants hold
+    /// (checked by `check_invariants` after every op). This is the
+    /// migration guard for the stale-stamp hazard: a node re-referenced
+    /// (or re-stamped during admission pinning) must not keep its old
+    /// `(stamp, node)` key.
     #[test]
     fn randomized_frontier_matches_full_scan_oracle() {
         use crate::util::prng::Rng;
@@ -855,12 +1124,20 @@ mod tests {
         let mut active: Vec<RequestId> = Vec::new();
         let mut next_rid: RequestId = 1;
         let mut clock = 0u64;
-        for _ in 0..600 {
-            match rng.below(6) {
+        for _ in 0..900 {
+            match rng.below(9) {
                 0 | 1 => {
                     let mut p = toks(docs[rng.below(docs.len())]);
                     for _ in 0..1 + rng.below(4) {
                         p.push(b'a' as u32 + rng.below(4) as u32);
+                    }
+                    // Restore any swapped matched prefix first, exactly
+                    // as the cache manager does before committing.
+                    let (matched, _) = f.match_path(&p);
+                    for nid in matched {
+                        if f.node(nid).is_swapped() {
+                            f.mark_resident(nid);
+                        }
                     }
                     f.insert_request(next_rid, &p);
                     active.push(next_rid);
@@ -880,9 +1157,42 @@ mod tests {
                     }
                 }
                 4 => {
-                    let victim = f.coldest_leaves().next();
+                    // True eviction requires a childless victim (the
+                    // manager drains swapped subtrees first; here we
+                    // just pick a victim that needs no draining).
+                    let victim = f
+                        .coldest_leaves()
+                        .find(|&v| f.node(v).children.is_empty());
                     if let Some(v) = victim {
                         f.evict_leaf(v);
+                    }
+                }
+                5 => {
+                    // Demote the coldest device-frontier node.
+                    if let Some(v) = f.coldest_leaves().next() {
+                        f.mark_swapped(v);
+                    }
+                }
+                6 => {
+                    // Restore a random swapped node whose parent is
+                    // resident (the root-to-leaf restore order).
+                    let restorable: Vec<NodeId> = f
+                        .alive_nodes()
+                        .filter(|&(id, n)| {
+                            n.is_swapped()
+                                && (n.parent == VIRTUAL_ROOT || !f.node(n.parent).is_swapped())
+                                && id != VIRTUAL_ROOT
+                        })
+                        .map(|(id, _)| id)
+                        .collect();
+                    if !restorable.is_empty() {
+                        f.mark_resident(restorable[rng.below(restorable.len())]);
+                    }
+                }
+                7 => {
+                    // Host-tier pressure: evict the coldest swapped node.
+                    if let Some(v) = f.coldest_swapped().next() {
+                        f.evict_swapped(v);
                     }
                 }
                 _ => {
@@ -892,7 +1202,111 @@ mod tests {
                 }
             }
             f.check_invariants()
-                .expect("frontier must match the full-scan oracle");
+                .expect("frontiers must match the full-scan oracles");
         }
+    }
+
+    #[test]
+    fn swap_state_machine_and_frontiers() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-alpha"));
+        f.insert_request(2, &toks("doc-beta"));
+        f.release_request(1);
+        f.release_request(2);
+        // Two cold leaves ("alpha", "beta") under the shared "doc-".
+        let cold: Vec<NodeId> = f.coldest_leaves().collect();
+        assert_eq!(cold.len(), 2);
+        // Demote one leaf: off the device frontier, onto the swap
+        // frontier, still matchable in full.
+        f.mark_swapped(cold[0]);
+        f.check_invariants().unwrap();
+        assert_eq!(f.frontier_len(), 1);
+        assert_eq!(f.swap_frontier_len(), 1);
+        assert_eq!(f.match_len(&toks("doc-alpha")), "doc-alpha".len());
+        // Demote the second leaf; the shared parent now has no resident
+        // children and becomes the device frontier (subtree cascade).
+        f.mark_swapped(cold[1]);
+        f.check_invariants().unwrap();
+        let parent = f.coldest_leaves().next().expect("parent joins frontier");
+        f.mark_swapped(parent);
+        f.check_invariants().unwrap();
+        assert_eq!(f.frontier_len(), 0, "whole subtree demoted");
+        // Only childless swapped nodes are host-evictable: the interior
+        // "doc-" stays off the swap frontier while its children live.
+        assert_eq!(f.swap_frontier_len(), 2);
+        assert!(!f.coldest_swapped().any(|n| n == parent));
+        // Restore root-to-leaf for a prefix hit: the insert then needs
+        // no NeedFill — demotion was reversible.
+        f.mark_resident(parent);
+        f.mark_resident(cold[0]);
+        f.check_invariants().unwrap();
+        let out = f.insert_request(3, &toks("doc-alpha"));
+        assert!(out
+            .events
+            .iter()
+            .all(|e| !matches!(e, StorageEvent::NeedFill { .. })));
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_swapped_detaches_and_bumps_generation() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-a"));
+        f.release_request(1);
+        let leaf = f.coldest_leaves().next().unwrap();
+        f.mark_swapped(leaf);
+        assert_eq!(f.swap_frontier_len(), 1);
+        let gen = f.generation();
+        f.evict_swapped(leaf);
+        assert!(f.generation() > gen, "eviction changes match results");
+        assert_eq!(f.match_len(&toks("doc-a")), 0);
+        assert_eq!(f.swap_frontier_len(), 0);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_into_swapped_prefix_without_restore_panics() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("shared"));
+        f.release_request(1);
+        let leaf = f.coldest_leaves().next().unwrap();
+        f.mark_swapped(leaf);
+        f.insert_request(2, &toks("shared-more"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn restore_below_swapped_parent_panics() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("doc-alpha"));
+        f.insert_request(2, &toks("doc-beta"));
+        f.release_request(1);
+        f.release_request(2);
+        let cold: Vec<NodeId> = f.coldest_leaves().collect();
+        f.mark_swapped(cold[0]);
+        f.mark_swapped(cold[1]);
+        let parent = f.coldest_leaves().next().unwrap();
+        f.mark_swapped(parent);
+        // Leaf before parent: violates the root-to-leaf restore order.
+        f.mark_resident(cold[0]);
+    }
+
+    #[test]
+    fn generation_tracks_matching_mutations_only() {
+        let mut f = Forest::new();
+        let g0 = f.generation();
+        f.insert_request(1, &toks("abc"));
+        assert!(f.generation() > g0);
+        let g1 = f.generation();
+        f.touch(1, 5); // stamp-only: match results unchanged
+        assert_eq!(f.generation(), g1);
+        f.append_token(1, 99); // decode append: can only lengthen a match
+        assert_eq!(f.generation(), g1);
+        f.release_request(1); // refcount-only: match results unchanged
+        assert_eq!(f.generation(), g1);
+        let leaf = f.coldest_leaves().next().unwrap();
+        f.evict_leaf(leaf);
+        assert!(f.generation() > g1);
     }
 }

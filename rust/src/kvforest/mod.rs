@@ -21,15 +21,21 @@
 //!   layout vLLM uses, so CoDec "follows the same paged KV-cache layout
 //!   as PagedAttention" (§6) holds structurally here too.
 //!
-//! Lifecycle policy (prefix retention, LRU eviction under a page
-//! budget, admission gating) lives a layer up in [`crate::cache`]; this
-//! module only provides the mechanisms it builds on: release-without-
-//! prune ([`Forest::release_request`]), the cold-leaf eviction frontier
-//! ([`Forest::cold_leaves`]), prefix matching ([`Forest::match_path`]),
-//! and the pool's budget/high-water/resident accounting.
+//! Lifecycle policy (prefix retention, demote-don't-evict tiering, LRU
+//! eviction under per-tier page budgets, admission gating) lives a
+//! layer up in [`crate::cache`]; this module only provides the
+//! mechanisms it builds on: release-without-prune
+//! ([`Forest::release_request`]), the cold-leaf and swap frontiers
+//! ([`Forest::cold_leaves`], [`Forest::cold_swapped`]), the per-node
+//! page-state machine ([`forest::PageState`]: free → resident ⇄ swapped
+//! → evicted), prefix matching ([`Forest::match_path`] — swapped nodes
+//! stay matchable, which is what makes demotion reversible), the
+//! host-tier byte mover ([`KvStore::demote_node`] /
+//! [`KvStore::restore_node`]), and both pools'
+//! budget/high-water/resident accounting.
 
 pub mod forest;
 pub mod paged;
 
-pub use forest::{Forest, InsertOutcome, Node, NodeId, RequestId, VIRTUAL_ROOT};
-pub use paged::{KvStore, PagedPool};
+pub use forest::{Forest, InsertOutcome, Node, NodeId, PageState, RequestId, VIRTUAL_ROOT};
+pub use paged::{HostPool, KvStore, PagedPool};

@@ -1,4 +1,5 @@
-//! Paged KV storage beneath the forest — the PagedAttention layout (§6).
+//! Paged KV storage beneath the forest — the PagedAttention layout (§6)
+//! — plus the host-side swap tier.
 //!
 //! Physical storage is a pool of fixed-size pages, each holding
 //! `page_tokens` token slots × `n_kv_heads` heads × `d_head` floats for K
@@ -9,6 +10,20 @@
 //! `node_kv` materializes a node's (K, V) for one head as contiguous
 //! matrices — this is the gather the CUDA kernel does HBM→SMEM when it
 //! assembles a PAC operand, and the PJRT runtime does pool→literal.
+//!
+//! # Two storage tiers
+//!
+//! Beside the device-side paged pool each layer owns a [`HostPool`]: a
+//! separately budgeted map of *compacted* per-node buffers (exactly
+//! `len` rows each, page slack dropped) modeling host DRAM behind the
+//! device. [`KvStore::demote_node`] moves a node's rows device→host and
+//! frees its pages; [`KvStore::restore_node`] moves them back — both
+//! are straight row copies, bit-identical round trip, so a restored
+//! prefix hit costs a memcpy instead of a re-prefill. Which nodes may
+//! demote/restore/die is the forest's page-state machine
+//! ([`super::forest::PageState`]); *when* is the cache manager's
+//! two-level pressure policy (`crate::cache`). This module only moves
+//! bytes and keeps the per-tier accounting honest.
 
 use super::forest::{NodeId, StorageEvent};
 use crate::tensor::Mat;
@@ -160,10 +175,63 @@ struct BlockList {
     len: usize,
 }
 
+/// One node's KV rows compacted out of the paged pool: exactly `len`
+/// rows in `[token][head][d]·2` (K then V) layout, page slack dropped.
+#[derive(Debug)]
+struct SwappedKv {
+    len: usize,
+    /// Device pages the node occupied at demotion time — the amount
+    /// charged against the host budget and re-allocated on restore.
+    pages: usize,
+    data: Vec<f32>,
+}
+
+/// Host-side storage tier for one layer: demoted nodes' compacted
+/// buffers, with page-denominated usage accounting mirroring
+/// [`PagedPool`] (used/high-water in pages, so `--swap-budget` and
+/// `--kv-budget` speak the same unit). The budget itself is a *total*
+/// held by [`KvStore`] — per-layer splitting would only distort it,
+/// since enforcement (who to demote, when to host-evict) lives in the
+/// cache manager and compares whole-store sums.
+///
+/// The pool holds bytes only. Whether a node may be demoted (cold,
+/// zero-refcount, no resident children) or restored (parent resident)
+/// is the forest's page-state machine; when either happens is the cache
+/// manager's two-level pressure policy.
+#[derive(Debug, Default)]
+pub struct HostPool {
+    swapped: BTreeMap<NodeId, SwappedKv>,
+    used_pages: usize,
+    max_used: usize,
+}
+
+impl HostPool {
+    /// Pages currently charged by swapped nodes.
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    /// High-water mark of [`HostPool::used_pages`].
+    pub fn max_used_pages(&self) -> usize {
+        self.max_used
+    }
+
+    /// Number of nodes currently swapped into this pool.
+    pub fn swapped_nodes(&self) -> usize {
+        self.swapped.len()
+    }
+
+    /// Bytes of compacted host buffers currently held.
+    pub fn bytes(&self) -> usize {
+        self.swapped.values().map(|s| s.data.len() * 4).sum()
+    }
+}
+
 /// Per-layer paged storage for a whole forest.
 #[derive(Debug)]
 pub struct LayerStore {
     pool: PagedPool,
+    host: HostPool,
     blocks: BTreeMap<NodeId, BlockList>,
 }
 
@@ -171,6 +239,7 @@ impl LayerStore {
     fn new(page_tokens: usize, n_kv_heads: usize, d_head: usize) -> LayerStore {
         LayerStore {
             pool: PagedPool::new(page_tokens, n_kv_heads, d_head),
+            host: HostPool::default(),
             blocks: BTreeMap::new(),
         }
     }
@@ -266,12 +335,95 @@ impl LayerStore {
             0
         }
     }
+
+    /// Demote `node` to the host tier: compact its rows (page slack
+    /// dropped), free its device pages. Returns `(device pages freed,
+    /// host pages charged)` — equal, since the charge is the node's
+    /// page footprint. No-op `(0, 0)` for nodes without storage
+    /// (synthetic shapes).
+    fn demote(&mut self, node: NodeId) -> (usize, usize) {
+        let Some(bl) = self.blocks.remove(&node) else {
+            return (0, 0);
+        };
+        assert!(
+            !self.host.swapped.contains_key(&node),
+            "demote({node}): already swapped"
+        );
+        let row_f = self.pool.n_kv_heads * self.pool.d_head * 2;
+        let pt = self.pool.page_tokens;
+        let mut data = Vec::with_capacity(bl.len * row_f);
+        for tok in 0..bl.len {
+            let page = bl.pages[tok / pt];
+            let base = (tok % pt) * row_f;
+            data.extend_from_slice(&self.pool.pages[page][base..base + row_f]);
+        }
+        let freed = bl.pages.len();
+        for p in bl.pages {
+            self.pool.free_page(p);
+        }
+        self.host.used_pages += freed;
+        self.host.max_used = self.host.max_used.max(self.host.used_pages);
+        self.host.swapped.insert(
+            node,
+            SwappedKv {
+                len: bl.len,
+                pages: freed,
+                data,
+            },
+        );
+        (freed, freed)
+    }
+
+    /// Restore `node` from the host tier back into freshly allocated
+    /// device pages — a straight row memcpy, bit-identical to the rows
+    /// demoted. Returns the device pages allocated (0 for nodes that
+    /// were demoted without storage).
+    fn restore(&mut self, node: NodeId) -> usize {
+        let Some(s) = self.host.swapped.remove(&node) else {
+            return 0;
+        };
+        self.host.used_pages -= s.pages;
+        let row_f = self.pool.n_kv_heads * self.pool.d_head * 2;
+        let pt = self.pool.page_tokens;
+        let mut bl = BlockList {
+            pages: Vec::with_capacity(s.pages),
+            len: s.len,
+        };
+        for tok in 0..s.len {
+            if tok % pt == 0 {
+                bl.pages.push(self.pool.alloc_page());
+            }
+            let page = *bl.pages.last().expect("page just pushed");
+            let base = (tok % pt) * row_f;
+            self.pool.pages[page][base..base + row_f]
+                .copy_from_slice(&s.data[tok * row_f..(tok + 1) * row_f]);
+        }
+        let allocated = bl.pages.len();
+        self.blocks.insert(node, bl);
+        allocated
+    }
+
+    /// Drop `node`'s host-tier buffer (true eviction of a swapped
+    /// node). Returns the host pages released.
+    fn evict_swapped(&mut self, node: NodeId) -> usize {
+        if let Some(s) = self.host.swapped.remove(&node) {
+            self.host.used_pages -= s.pages;
+            s.pages
+        } else {
+            0
+        }
+    }
 }
 
 /// Multi-layer KV store mirroring one [`super::Forest`].
 #[derive(Debug)]
 pub struct KvStore {
     layers: Vec<LayerStore>,
+    /// Host-tier budget target in pages, total across layers (`None` =
+    /// swap disabled). Enforcement lives in the cache manager; the
+    /// store records it so accounting and configuration read back from
+    /// one place.
+    swap_budget: Option<usize>,
 }
 
 impl KvStore {
@@ -280,6 +432,7 @@ impl KvStore {
             layers: (0..n_layers)
                 .map(|_| LayerStore::new(page_tokens, n_kv_heads, d_head))
                 .collect(),
+            swap_budget: None,
         }
     }
 
@@ -322,6 +475,39 @@ impl KvStore {
         self.layers.iter_mut().map(|l| l.free_node(node)).sum()
     }
 
+    /// Demote `node` to the host tier in every layer (see
+    /// [`KvStore::restore_node`] for the way back). Returns `(device
+    /// pages freed, host pages charged)` summed over layers.
+    pub fn demote_node(&mut self, node: NodeId) -> (usize, usize) {
+        let (mut freed, mut charged) = (0, 0);
+        for l in &mut self.layers {
+            let (f, c) = l.demote(node);
+            freed += f;
+            charged += c;
+        }
+        (freed, charged)
+    }
+
+    /// Restore `node` from the host tier into fresh device pages in
+    /// every layer — a memcpy, bit-identical to the demoted rows.
+    /// Returns the device pages allocated. The caller gates device
+    /// capacity first (the pool allocates unconditionally).
+    pub fn restore_node(&mut self, node: NodeId) -> usize {
+        self.layers.iter_mut().map(|l| l.restore(node)).sum()
+    }
+
+    /// Drop `node`'s host-tier buffers in every layer (true eviction of
+    /// a swapped node); returns the host pages released.
+    pub fn evict_swapped_node(&mut self, node: NodeId) -> usize {
+        self.layers.iter_mut().map(|l| l.evict_swapped(node)).sum()
+    }
+
+    /// Whether `node` currently has host-tier buffers (checked in layer
+    /// 0; appends are layer-symmetric).
+    pub fn node_swapped(&self, node: NodeId) -> bool {
+        self.layers[0].host.swapped.contains_key(&node)
+    }
+
     pub fn page_tokens(&self) -> usize {
         self.layers[0].pool.page_tokens
     }
@@ -334,6 +520,42 @@ impl KvStore {
         for l in &mut self.layers {
             l.pool.page_budget = total.map(|t| (t / n).max(1));
         }
+    }
+
+    /// Set the *total* host-tier (swap) budget in pages across layers.
+    /// `None` disables the swap tier. Stored verbatim (no per-layer
+    /// split — host buffers are exact-size, so there is no per-pool
+    /// residency target to shrink toward).
+    pub fn set_swap_budget(&mut self, total: Option<usize>) {
+        self.swap_budget = total;
+    }
+
+    /// Total host-tier budget across layers (`None` = swap disabled),
+    /// exactly as configured by [`KvStore::set_swap_budget`].
+    pub fn swap_budget(&self) -> Option<usize> {
+        self.swap_budget
+    }
+
+    /// Pages currently charged to the host tier across layers.
+    pub fn swapped_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.host.used_pages()).sum()
+    }
+
+    /// Sum of per-layer host-tier high-water marks (the budget
+    /// invariant is asserted against this, as with
+    /// [`KvStore::max_allocated_pages`]).
+    pub fn max_swapped_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.host.max_used_pages()).sum()
+    }
+
+    /// Bytes of compacted host buffers across layers.
+    pub fn swapped_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.host.bytes()).sum()
+    }
+
+    /// Nodes currently swapped (counted in layer 0; layer-symmetric).
+    pub fn swapped_nodes(&self) -> usize {
+        self.layers[0].host.swapped_nodes()
     }
 
     pub fn allocated_pages(&self) -> usize {
@@ -561,6 +783,74 @@ mod tests {
         s.free_node(1);
         assert_eq!(s.allocated_pages(), 0);
         assert_eq!(s.max_allocated_pages(), 6, "peak must persist");
+    }
+
+    #[test]
+    fn demote_restore_roundtrip_is_bit_identical() {
+        let mut s = KvStore::new(2, 4, 2, 3);
+        s.set_swap_budget(Some(8));
+        for layer in 0..2 {
+            for t in 0..10 {
+                s.append(layer, 5, &row(2, 3, t as f32), &row(2, 3, 100.0 + t as f32));
+            }
+        }
+        let before: Vec<(Mat, Mat)> = (0..2)
+            .flat_map(|layer| (0..2).map(move |h| (layer, h)))
+            .map(|(layer, h)| s.node_kv(layer, 5, h, 0, 10))
+            .collect();
+        let in_use = s.allocated_pages();
+        assert_eq!(in_use, 6); // ceil(10/4) × 2 layers
+
+        let (freed, charged) = s.demote_node(5);
+        assert_eq!(freed, in_use);
+        assert_eq!(charged, in_use);
+        assert_eq!(s.allocated_pages(), 0);
+        assert_eq!(s.swapped_pages(), in_use);
+        assert_eq!(s.max_swapped_pages(), in_use);
+        assert!(s.node_swapped(5));
+        // Compacted: 10 rows × 2 heads × 3 d × 2 (K,V) × 4 B × 2 layers,
+        // page slack dropped.
+        assert_eq!(s.swapped_bytes(), 10 * 2 * 3 * 2 * 4 * 2);
+        assert_eq!(s.len(0, 5), 0, "no device rows while swapped");
+
+        let restored = s.restore_node(5);
+        assert_eq!(restored, in_use);
+        assert_eq!(s.swapped_pages(), 0);
+        assert!(!s.node_swapped(5));
+        assert_eq!(s.len(0, 5), 10);
+        for (i, (layer, h)) in (0..2)
+            .flat_map(|layer| (0..2).map(move |h| (layer, h)))
+            .enumerate()
+        {
+            let (k, v) = s.node_kv(layer, 5, h, 0, 10);
+            assert_eq!(k.data, before[i].0.data, "K layer {layer} head {h}");
+            assert_eq!(v.data, before[i].1.data, "V layer {layer} head {h}");
+        }
+        // Appends continue where the restored rows left off.
+        s.append(0, 5, &row(2, 3, 10.0), &row(2, 3, 110.0));
+        let (k, _) = s.node_kv(0, 5, 0, 0, 11);
+        assert!((k.at(10, 0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evict_swapped_releases_host_pages() {
+        let mut s = KvStore::new(1, 2, 1, 2);
+        s.set_swap_budget(Some(4));
+        for t in 0..6 {
+            s.append(0, 1, &row(1, 2, t as f32), &row(1, 2, t as f32));
+        }
+        s.demote_node(1);
+        assert_eq!(s.swapped_pages(), 3);
+        assert_eq!(s.evict_swapped_node(1), 3);
+        assert_eq!(s.swapped_pages(), 0);
+        assert!(!s.node_swapped(1));
+        // High-water persists; restore of an evicted node is a no-op.
+        assert_eq!(s.max_swapped_pages(), 3);
+        assert_eq!(s.restore_node(1), 0);
+        // Budget bookkeeping: totals spread per layer and sum back.
+        assert_eq!(s.swap_budget(), Some(4));
+        s.set_swap_budget(None);
+        assert_eq!(s.swap_budget(), None);
     }
 
     #[test]

@@ -27,8 +27,8 @@
 //! |---|---|
 //! | [`util`] | substrates built in-repo: JSON, PRNG, CLI, stats, thread pool |
 //! | [`tensor`] | row-major f32 tensors + the math kernels the CPU executors use |
-//! | [`kvforest`] | the prefix-tree KV cache (§4.1): radix forest, indexes, paging |
-//! | [`cache`] | KV cache manager: retained prefixes, page-budgeted LRU eviction, memory-aware admission |
+//! | [`kvforest`] | the prefix-tree KV cache (§4.1): radix forest, indexes, two-tier paging (device + host swap) |
+//! | [`cache`] | KV cache manager: retained prefixes, demote-don't-evict tiering, page-budgeted LRU reclaim, memory-aware admission |
 //! | [`attention`] | PAC/POR primitives, the chunked causal prefill kernel, and the CoDec / baseline executors (§4.2-4.3) |
 //! | [`cost`] | profile-based cost estimator + GPU spec registry (§5.2, Table 2) |
 //! | [`sched`] | task division and greedy scheduling (§5.1) |
@@ -41,7 +41,9 @@
 //! | [`bench`] | the measurement harness behind every figure/table bench |
 //!
 //! See the repo-root `README.md` for build/test instructions, feature
-//! flags, and the artifact-free quickstart.
+//! flags, and the artifact-free quickstart, and `docs/ARCHITECTURE.md`
+//! for the end-to-end request lifecycle, the module map, and the
+//! page-state machine with its invariants.
 
 pub mod attention;
 pub mod bench;

@@ -28,8 +28,13 @@ commands:
   serve        --requests N --docs D --max-new M --backend codec|codec-pjrt|flash
                [--artifacts DIR] [--batch B] [--scale-down K]
                [--kv-budget PAGES]  (0 = unbounded; with a budget the
-                retained prefix cache evicts LRU to stay under it —
+                retained prefix cache reclaims LRU to stay under it —
                 recommended for long-running servers)
+               [--swap-budget PAGES] (0 = swap disabled; with a swap
+                budget, device pressure demotes cold prefixes to a
+                host-side tier instead of evicting them, and a later
+                prefix hit restores them with a memcpy instead of a
+                re-prefill; the host tier true-evicts LRU when it fills)
                [--poisson RPS]      (open-loop timed replay: requests
                 arrive as a seeded Poisson process at RPS req/s instead
                 of all at once; reports SLO attainment + goodput.
@@ -181,6 +186,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.usize_or("batch", 8).map_err(anyhow::Error::msg)?;
     let scale_down = args.usize_or("scale-down", 100).map_err(anyhow::Error::msg)?;
     let kv_budget = args.usize_or("kv-budget", 0).map_err(anyhow::Error::msg)?;
+    let swap_budget = args.usize_or("swap-budget", 0).map_err(anyhow::Error::msg)?;
     let poisson_rps = args.f64_or("poisson", 0.0).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(
         poisson_rps.is_finite() && poisson_rps >= 0.0,
@@ -211,8 +217,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache: CacheConfig {
             // 0 = unbounded: the retained cache grows with the corpus.
             // Long-running servers should set a budget so cold prefixes
-            // are evicted LRU instead of accumulating forever.
+            // are reclaimed LRU instead of accumulating forever.
             page_budget: (kv_budget > 0).then_some(kv_budget),
+            // 0 = no swap tier: device pressure evicts destructively.
+            // With a swap budget, cold prefixes demote to host memory
+            // and restore on a prefix hit (memcpy, not re-prefill).
+            swap_budget: (swap_budget > 0).then_some(swap_budget),
             ..Default::default()
         },
         ..Default::default()
@@ -313,6 +323,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             m.cache_evictions, m.cache_evicted_pages, m.admissions_deferred, m.preemptions,
             m.admission_reorders
         );
+    }
+    if m.swap_outs + m.swap_ins + m.host_evictions > 0 {
+        println!(
+            "kv swap tier:       {} pages held (peak {}, budget {}), {} swap-outs \
+             ({} pages), {} swap-ins ({} pages), {} host evictions",
+            m.kv_swapped_pages,
+            m.kv_max_swapped_pages,
+            m.kv_swap_budget_pages
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "∞".to_string()),
+            m.swap_outs,
+            m.swap_out_pages,
+            m.swap_ins,
+            m.swap_in_pages,
+            m.host_evictions
+        );
+        if let Some(s) = m.swap_restore_times.summary_ms() {
+            println!(
+                "restore latency:    mean {:.3} ms p50 {:.3} p99 {:.3} (per node)",
+                s.mean, s.p50, s.p99
+            );
+        }
     }
     if let Some(rep) = m.slo_report(slo) {
         println!("{}", rep.render());

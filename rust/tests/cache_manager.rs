@@ -1,6 +1,7 @@
 //! Acceptance suite for the KV cache manager subsystem
-//! (`codec::cache`): retained prefixes, page-budgeted eviction,
-//! memory-aware admission, preemption, the timed replay driver, and
+//! (`codec::cache`): retained prefixes, the two-tier (device + swap)
+//! page machine, page-budgeted eviction, memory-aware admission,
+//! preemption, the timed replay driver, and
 //! `SubmitHandle::wait_timeout`.
 //!
 //! Fully hermetic: everything runs on the native transformer backend.
@@ -244,6 +245,243 @@ fn eviction_never_frees_pages_of_active_paths() {
             }
         }
     }
+}
+
+/// Property test for the three-state page machine (free → resident ⇄
+/// swapped → evicted): across randomized insert/fill/retire/pressure
+/// traffic with a swap tier configured,
+/// * resident + swapped + free accounting balances and both budgets'
+///   high-water marks hold,
+/// * no active path ever contains a swapped node,
+/// * every resident node's rows equal the deterministic function of its
+///   tokens — so a swapped-then-hit prefix provably round-tripped
+///   bit-identical KV through the host tier.
+#[test]
+fn three_state_page_machine_balances_and_roundtrips() {
+    const L: usize = 2;
+    const H: usize = 2;
+    const D: usize = 4;
+    const PT: usize = 4;
+    // ≤ 3 concurrent actives × ≤ 6 pages each, + one ≤ 6-page fill,
+    // stays under 32 even before reclaiming — so every gate below must
+    // succeed (the engine's preemption fallback isn't modeled here).
+    let (budget, swap) = (32, 16);
+    let mut m = CacheManager::new(
+        L,
+        PT,
+        H,
+        D,
+        CacheConfig {
+            page_budget: Some(budget),
+            swap_budget: Some(swap),
+            ..Default::default()
+        },
+    );
+    // Rows are a pure function of (token, layer): splits move rows with
+    // their tokens and demote/restore must preserve them, so checking
+    // rows == f(tokens) for every resident node at every step subsumes
+    // the swap round-trip check.
+    let kv_row = |token: u32, layer: usize| -> (Vec<f32>, Vec<f32>) {
+        let k: Vec<f32> = (0..H * D)
+            .map(|i| token as f32 * 0.01 + layer as f32 + i as f32 * 0.001)
+            .collect();
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        (k, v)
+    };
+    let mut rng = Rng::new(0x5A9_11E5);
+    let docs: Vec<Vec<u32>> = (0..3)
+        .map(|d| (0..(6 + d)).map(|t| (10 + d * 50 + t) as u32).collect())
+        .collect();
+    let mut active: Vec<u64> = Vec::new();
+    let mut next_rid = 1u64;
+
+    for _ in 0..400 {
+        match rng.below(5) {
+            // Submit: admit → restore swapped matched prefix → insert →
+            // gated fill (the engine's exact sequence).
+            0 | 1 => {
+                if active.len() >= 3 {
+                    m.on_retire(active.remove(0));
+                }
+                let mut prompt = docs[rng.below(3)].clone();
+                for _ in 0..1 + rng.below(3) {
+                    prompt.push(200 + rng.below(8) as u32);
+                }
+                let rid = next_rid;
+                next_rid += 1;
+                if m.try_admit(rid, &prompt, 4) {
+                    if !m.try_restore_matched(rid, &prompt) {
+                        m.on_retire(rid); // drop the reservation; defer
+                        continue;
+                    }
+                    let out = m.apply_insert(rid, &prompt);
+                    for ev in &out.events {
+                        if let StorageEvent::NeedFill { node, len } = *ev {
+                            assert!(m.prepare_pages(m.pages_for(len)));
+                            let tokens = m.forest().node(node).tokens.clone();
+                            assert_eq!(tokens.len(), len);
+                            for layer in 0..L {
+                                for &t in &tokens {
+                                    let (k, v) = kv_row(t, layer);
+                                    m.store_mut().append(layer, node, &k, &v);
+                                }
+                            }
+                        }
+                    }
+                    active.push(rid);
+                }
+            }
+            // Retire a random active request (its KV goes cold).
+            2 => {
+                if !active.is_empty() {
+                    let i = rng.below(active.len());
+                    m.on_retire(active.swap_remove(i));
+                }
+            }
+            // Device pressure: demote-first reclaim.
+            3 => {
+                m.prepare_pages(2 + rng.below(6));
+            }
+            // Destructive pressure (the no-swap path stays exercised).
+            _ => {
+                m.evict_one();
+            }
+        }
+
+        // --- invariants after every operation ---
+        m.forest().check_invariants().expect("forest invariants");
+        // Budgets hold at the high-water mark, not just now.
+        assert!(m.store().max_allocated_pages() <= budget);
+        assert!(m.store().max_swapped_pages() <= swap);
+        // Accounting balances: block tables of alive resident nodes are
+        // exactly the allocated pages; swapped charges are exactly the
+        // alive swapped nodes' page footprints.
+        let mut resident_pages = 0usize;
+        let mut swapped_pages = 0usize;
+        for (nid, n) in m.forest().alive_nodes() {
+            if n.is_swapped() {
+                swapped_pages += m.pages_for(n.len);
+                for layer in 0..L {
+                    assert_eq!(
+                        m.store().len(layer, nid),
+                        0,
+                        "swapped node {nid} must hold no device rows"
+                    );
+                }
+            } else {
+                for layer in 0..L {
+                    resident_pages += m.store().node_page_ids(layer, nid).len();
+                }
+            }
+        }
+        assert_eq!(resident_pages, m.store().allocated_pages(), "device balance");
+        assert_eq!(swapped_pages, m.store().swapped_pages(), "host balance");
+        // Active paths are never swapped.
+        for &rid in &active {
+            for &nid in m.forest().path(rid).expect("active path") {
+                assert!(
+                    !m.forest().node(nid).is_swapped(),
+                    "active path of {rid} contains swapped node {nid}"
+                );
+            }
+        }
+        // Every resident node's rows equal f(tokens): restored nodes
+        // round-tripped bit-identical through the host tier.
+        for (nid, n) in m.forest().alive_nodes() {
+            if n.is_swapped() || n.tokens.is_empty() {
+                continue;
+            }
+            for layer in 0..L {
+                let len = m.store().len(layer, nid);
+                assert_eq!(len, n.len, "node {nid} layer {layer} row count");
+                for head in 0..H {
+                    let (k, v) = m.store().node_kv(layer, nid, head, 0, len);
+                    for (t, &tok) in n.tokens.iter().enumerate() {
+                        let (wk, wv) = kv_row(tok, layer);
+                        assert_eq!(k.row(t), &wk[head * D..(head + 1) * D]);
+                        assert_eq!(v.row(t), &wv[head * D..(head + 1) * D]);
+                    }
+                }
+            }
+        }
+    }
+    // The run actually exercised the tier transitions.
+    assert!(m.stats.swap_outs > 0, "no demotion happened");
+}
+
+/// End-to-end swap acceptance: under a device budget that cannot hold
+/// both documents, wave 1 of a multi-wave workload re-prefills evicted
+/// documents without a swap tier but *restores* them (no re-prefill of
+/// swapped tokens, per the prefill work counter) with one — and greedy
+/// outputs match an unconstrained-budget run exactly in all cases.
+#[test]
+fn swap_tier_restores_instead_of_reprefilling_with_identical_outputs() {
+    let gen = MultiWaveGen {
+        num_docs: 2,
+        doc_tokens: 96,
+        waves: 2,
+        questions_per_doc: 3,
+        question_tokens: 4,
+        max_new_tokens: 6,
+        ..Default::default()
+    };
+    // 24 pages: one 96-token document (6 pages × 2 layers) plus one
+    // request's working set, but never both documents at once — so the
+    // second document's admission must reclaim the first, within wave 0
+    // already. (A single cold request needs ≤ 18 pages incl. headroom,
+    // so everything stays individually feasible.)
+    let budget = 24;
+
+    let run = |cache: CacheConfig| {
+        let mut e = engine(cache);
+        let w0 = run_wave(&mut e, &gen.wave_prompts(0), 0, gen.max_new_tokens);
+        let w0_novel = e.metrics.prefill_tokens;
+        let w1 = run_wave(&mut e, &gen.wave_prompts(1), 100, gen.max_new_tokens);
+        let w1_novel = e.metrics.prefill_tokens - w0_novel;
+        (w0, w1, w0_novel, w1_novel, e)
+    };
+
+    let (warm_w0, warm_w1, warm_n0, warm_n1, _warm) = run(CacheConfig::default());
+    let (evict_w0, evict_w1, evict_n0, evict_n1, evict_e) = run(CacheConfig {
+        page_budget: Some(budget),
+        ..Default::default()
+    });
+    let (swap_w0, swap_w1, swap_n0, swap_n1, swap_e) = run(CacheConfig {
+        page_budget: Some(budget),
+        swap_budget: Some(1024),
+        ..Default::default()
+    });
+
+    // Greedy outputs are identical across all three memory regimes.
+    assert_eq!(warm_w0, evict_w0);
+    assert_eq!(warm_w0, swap_w0);
+    assert_eq!(warm_w1, evict_w1);
+    assert_eq!(warm_w1, swap_w1);
+    // Wave 0 is cold in the swap run too: demotion never destroys, so
+    // even preempted reruns re-match their prefix instead of
+    // re-prefilling. (The evict run may legitimately prefill *more* in
+    // wave 0 if pressure destroys a preempted request's prefix.)
+    assert_eq!(warm_n0, swap_n0);
+    assert!(evict_n0 >= warm_n0);
+    // Without swap, budget pressure destroyed document KV that wave 1
+    // then re-prefilled; with swap it was demoted and restored instead —
+    // the prefill work counter shows *no* re-prefill of swapped tokens.
+    assert!(
+        evict_n1 > warm_n1,
+        "eviction should force re-prefill: evict {evict_n1} vs warm {warm_n1}"
+    );
+    assert_eq!(
+        swap_n1, warm_n1,
+        "swap tier must make wave 1 prefill exactly what an unconstrained run does"
+    );
+    assert!(swap_e.metrics.swap_outs > 0, "nothing was demoted");
+    assert!(swap_e.metrics.swap_ins > 0, "nothing was restored");
+    assert!(swap_e.metrics.swap_restore_times.count() > 0);
+    assert!(evict_e.metrics.cache_evictions > 0);
+    // Both budgets' high-water marks held.
+    assert!(swap_e.cache().store().max_allocated_pages() <= budget);
+    assert!(swap_e.cache().store().max_swapped_pages() <= 1024);
+    assert_eq!(swap_e.metrics.kv_swap_budget_pages, Some(1024));
 }
 
 /// Preemption mechanics: a preempted request restarts from its prompt,
