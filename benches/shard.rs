@@ -1,0 +1,179 @@
+//! Sharded-server scaling bench: 1/2/4 engine shards under a contested
+//! open-loop Poisson multiwave replay, affinity routing vs round-robin.
+//!
+//! The trace is 4 question waves over 8 shared 128-token documents
+//! (96 requests, Poisson arrivals fast enough that the run is
+//! compute-bound, not arrival-bound). Every shard runs the same seed, so
+//! greedy outputs are shard-count-invariant — asserted across all runs.
+//! The headline numbers:
+//!
+//! * **scaling** — 4 affinity-routed shards must reach ≥ 2.5× the
+//!   completed-request throughput of 1 shard (each shard is one engine
+//!   thread; the trace parallelizes across documents);
+//! * **affinity vs balance** — affinity routing pins each document's
+//!   question stream to the shard that prefilled it, so its aggregate
+//!   prefix-hit rate must beat round-robin's (which spreads each hot
+//!   document over every shard and re-prefills it per shard).
+//!
+//! Run: `cargo bench --bench shard`.
+
+use codec::engine::{
+    AttentionBackend, EngineConfig, RouterConfig, RoutingPolicy, Server, SloTargets,
+};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::workload::MultiWaveGen;
+
+fn model() -> ModelInfo {
+    ModelInfo {
+        name: "shard-bench".to_string(),
+        vocab: 256,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+/// One engine thread per shard (`workers: 1`), so the shard count is
+/// the parallelism knob the scaling assertion measures.
+fn config() -> EngineConfig {
+    EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: model(),
+        max_batch: 8,
+        sampler: Sampler::Greedy,
+        seed: 3,
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+/// 4 waves × 3 questions over 8 shared 128-token documents: 96 requests,
+/// Poisson arrivals at 2000 req/s (≈ 48 ms of arrivals — the run is
+/// compute-bound even for 4 shards).
+fn contested_trace() -> codec::workload::Trace {
+    let gen = MultiWaveGen {
+        num_docs: 8,
+        doc_tokens: 128,
+        waves: 4,
+        questions_per_doc: 3,
+        question_tokens: 8,
+        max_new_tokens: 16,
+        ..Default::default()
+    };
+    gen.build_poisson_trace(2000.0)
+}
+
+struct RunResult {
+    outputs: Vec<Vec<u32>>,
+    rps: f64,
+    hit_rate: f64,
+    affinity_hits: usize,
+    guard_overrides: usize,
+    max_skew: usize,
+    per_shard: Vec<usize>,
+    wall_s: f64,
+}
+
+fn run(shards: usize, policy: RoutingPolicy) -> RunResult {
+    let trace = contested_trace();
+    let rcfg = RouterConfig {
+        policy,
+        ..Default::default()
+    };
+    let server = Server::start_sharded(config(), shards, rcfg).expect("server start");
+    let t0 = std::time::Instant::now();
+    let outputs: Vec<Vec<u32>> = server
+        .replay(&trace)
+        .into_iter()
+        .map(|h| h.wait().expect("request must complete"))
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = server.shutdown_report();
+    assert!(report.failures.is_empty(), "no shard may panic: {:?}", report.failures);
+    let m = &report.metrics;
+    let rep = m.slo_report(SloTargets::default()).expect("finished requests");
+    let per_shard: Vec<usize> = report
+        .shard_metrics
+        .iter()
+        .map(|s| s.as_ref().map_or(0, |sm| sm.requests.len()))
+        .collect();
+    RunResult {
+        outputs,
+        rps: rep.throughput_rps,
+        hit_rate: m.prefill_share_rate(),
+        affinity_hits: m.router_affinity_hits,
+        guard_overrides: m.router_guard_overrides,
+        max_skew: m.router_max_queue_skew,
+        per_shard,
+        wall_s,
+    }
+}
+
+fn main() {
+    println!("shard scaling bench: contested Poisson multiwave replay, 96 requests\n");
+    let s1 = run(1, RoutingPolicy::Affinity);
+    let s2 = run(2, RoutingPolicy::Affinity);
+    let s4 = run(4, RoutingPolicy::Affinity);
+    let rr4 = run(4, RoutingPolicy::RoundRobin);
+
+    // Same weights on every shard ⇒ same greedy tokens no matter how
+    // many shards serve the trace or how it is routed.
+    for (name, r) in [("2-shard", &s2), ("4-shard", &s4), ("4-shard rr", &rr4)] {
+        assert_eq!(
+            s1.outputs, r.outputs,
+            "{name} greedy outputs must match the single-shard run"
+        );
+    }
+    println!("✓ greedy outputs identical across 1/2/4 shards and both policies\n");
+
+    println!(
+        "{:<16} {:>8} {:>8} {:>10} {:>8} {:>8} {:>8}   {}",
+        "config", "req/s", "hit%", "aff.hits", "guards", "skew", "wall(s)", "req/shard"
+    );
+    let rows = [
+        ("1 × affinity", &s1),
+        ("2 × affinity", &s2),
+        ("4 × affinity", &s4),
+        ("4 × round-robin", &rr4),
+    ];
+    for (name, r) in rows {
+        println!(
+            "{:<16} {:>8.1} {:>7.0}% {:>10} {:>8} {:>8} {:>8.2}   {:?}",
+            name,
+            r.rps,
+            r.hit_rate * 100.0,
+            r.affinity_hits,
+            r.guard_overrides,
+            r.max_skew,
+            r.wall_s,
+            r.per_shard
+        );
+    }
+
+    assert!(
+        s4.rps >= 2.5 * s1.rps,
+        "4 affinity shards must scale ≥ 2.5× over 1 shard: {:.1} vs {:.1} req/s",
+        s4.rps,
+        s1.rps
+    );
+    assert!(
+        s4.hit_rate > rr4.hit_rate,
+        "affinity routing must keep a higher prefix-hit rate than round-robin: \
+         {:.3} vs {:.3}",
+        s4.hit_rate,
+        rr4.hit_rate
+    );
+    assert!(s4.affinity_hits > 0, "the warm trace must produce affinity hits");
+    println!(
+        "\nSCALING: {:.2}x @ 2 shards, {:.2}x @ 4 shards; \
+         affinity hit rate {:.0}% vs round-robin {:.0}%\n",
+        s2.rps / s1.rps,
+        s4.rps / s1.rps,
+        s4.hit_rate * 100.0,
+        rr4.hit_rate * 100.0
+    );
+}

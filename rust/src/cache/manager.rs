@@ -147,6 +147,21 @@ struct Reservation {
     restore_pages: usize,
 }
 
+/// Admission-score units per page of prefill work (re-prefilling a
+/// page from scratch, or reserving a fresh one). The scale exists so
+/// a *swapped* cache hit can be priced between a resident hit and a
+/// miss with integer arithmetic: restoring a swapped page is a
+/// host→device memcpy — far cheaper than re-prefilling it, but not
+/// free like reading a resident page.
+pub const SCORE_PAGE_COST: i64 = 8;
+
+/// Admission-score surcharge per swapped matched page (its
+/// memcpy-restore cost). Must stay in `1..SCORE_PAGE_COST` so that for
+/// otherwise-identical requests the ordering cold > swapped > resident
+/// holds: a swapped hit is worth `SCORE_PAGE_COST − SCORE_RESTORE_COST`
+/// per page, a resident hit the full `SCORE_PAGE_COST`.
+pub const SCORE_RESTORE_COST: i64 = 1;
+
 /// The KV cache manager. See the module docs for the accounting model.
 #[derive(Debug)]
 pub struct CacheManager {
@@ -161,9 +176,10 @@ pub struct CacheManager {
     clock: u64,
     reserved: BTreeMap<RequestId, Reservation>,
     /// Admission-score memo: request → (forest generation, matched
-    /// tokens). Valid while the generation matches; entries are dropped
-    /// on admission ([`CacheManager::forget_score`] covers rejection).
-    score_memo: HashMap<RequestId, (u64, usize)>,
+    /// tokens, restore pages of the swapped part of that match). Valid
+    /// while the generation matches; entries are dropped on admission
+    /// ([`CacheManager::forget_score`] covers rejection).
+    score_memo: HashMap<RequestId, (u64, usize, usize)>,
     pub stats: CacheStats,
 }
 
@@ -259,14 +275,22 @@ impl CacheManager {
 
     /// Cost-ranked admission score (lower admits first): the pages the
     /// request would *reserve* (novel prompt suffix + decode budget)
-    /// minus the pages its cached prefix hit re-uses. Small warm
-    /// requests score lowest, large cold ones highest. Read-only — the
-    /// engine ranks a scan window of pending requests with this before
-    /// committing [`CacheManager::try_admit`]. Prefer
+    /// minus the pages its cached prefix hit re-uses — both in
+    /// [`SCORE_PAGE_COST`] units — with the *swapped* part of the hit
+    /// discounted less than the resident part by [`SCORE_RESTORE_COST`]
+    /// per page: a swapped prefix still spares the prefill compute, but
+    /// the hit pays a host→device memcpy a resident hit does not. For
+    /// otherwise-identical requests the ordering is therefore
+    /// cold > swapped > resident. Small warm requests score lowest,
+    /// large cold ones highest. Read-only — the engine ranks a scan
+    /// window of pending requests with this before committing
+    /// [`CacheManager::try_admit`]. Prefer
     /// [`CacheManager::admission_score_cached`] on a hot path: this
     /// variant re-walks the radix tree on every call.
     pub fn admission_score(&self, prompt: &[u32], max_new: usize) -> i64 {
-        self.score_from_match(prompt.len(), self.forest.match_len(prompt), max_new)
+        let (nodes, matched) = self.forest.match_path(prompt);
+        let restore_pages = self.restore_pages_for(&nodes);
+        self.score_from_match(prompt.len(), matched, restore_pages, max_new)
     }
 
     /// [`CacheManager::admission_score`] with the radix walk memoized
@@ -283,16 +307,17 @@ impl CacheManager {
         max_new: usize,
     ) -> i64 {
         let generation = self.forest.generation();
-        let matched = match self.score_memo.get(&rid) {
-            Some(&(g, m)) if g == generation => m,
+        let (matched, restore_pages) = match self.score_memo.get(&rid) {
+            Some(&(g, m, rp)) if g == generation => (m, rp),
             _ => {
                 self.stats.score_walks += 1;
-                let m = self.forest.match_len(prompt);
-                self.score_memo.insert(rid, (generation, m));
-                m
+                let (nodes, m) = self.forest.match_path(prompt);
+                let rp = self.restore_pages_for(&nodes);
+                self.score_memo.insert(rid, (generation, m, rp));
+                (m, rp)
             }
         };
-        self.score_from_match(prompt.len(), matched, max_new)
+        self.score_from_match(prompt.len(), matched, restore_pages, max_new)
     }
 
     /// Drop `rid`'s admission-score memo entry (called when the request
@@ -301,9 +326,20 @@ impl CacheManager {
         self.score_memo.remove(&rid);
     }
 
-    fn score_from_match(&self, prompt_len: usize, matched: usize, max_new: usize) -> i64 {
+    fn score_from_match(
+        &self,
+        prompt_len: usize,
+        matched: usize,
+        restore_pages: usize,
+        max_new: usize,
+    ) -> i64 {
         let novel = prompt_len - matched;
-        (self.pages_for(novel) + self.pages_for(max_new)) as i64 - self.pages_for(matched) as i64
+        let reserve = (self.pages_for(novel) + self.pages_for(max_new)) as i64 * SCORE_PAGE_COST;
+        // A matched page is worth a full page of spared prefill, less
+        // the restore surcharge if it currently lives in the host tier.
+        let hit = self.pages_for(matched) as i64 * SCORE_PAGE_COST
+            - restore_pages as i64 * SCORE_RESTORE_COST;
+        reserve - hit
     }
 
     // -----------------------------------------------------------------
@@ -1025,6 +1061,53 @@ mod tests {
         assert!(m.store().max_allocated_pages() <= 8);
         assert!(m.store().max_swapped_pages() <= 4);
         m.forest().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_score_prices_cold_above_swapped_above_resident() {
+        let mut m = CacheManager::new(
+            L,
+            PT,
+            H,
+            D,
+            CacheConfig {
+                page_budget: Some(8),
+                swap_budget: Some(8),
+                ..Default::default()
+            },
+        );
+        // Doc "a" fills 4 pages and goes cold; admitting doc "b" then
+        // demotes "a" to the host tier (same pressure shape as the
+        // two-level test). End state: "b" resident, "a" swapped.
+        assert!(m.try_admit(1, &toks("aaaaaaaa"), 0));
+        let out = m.apply_insert(1, &toks("aaaaaaaa"));
+        fill_all(&mut m, &out);
+        m.on_retire(1);
+        assert!(m.try_admit(2, &toks("bbbbbbbb"), 0));
+        assert_eq!(m.stats.swap_outs, 1, "a must be swapped, not resident");
+        let out2 = m.apply_insert(2, &toks("bbbbbbbb"));
+        fill_all(&mut m, &out2);
+        m.on_retire(2);
+
+        // Identical shape (8 prompt tokens, 4 new) against a resident
+        // hit, a swapped hit, and a miss.
+        let resident = m.admission_score(&toks("bbbbbbbb"), 4);
+        let swapped = m.admission_score(&toks("aaaaaaaa"), 4);
+        let cold = m.admission_score(&toks("cccccccc"), 4);
+        assert!(
+            cold > swapped && swapped > resident,
+            "ordering must be cold > swapped > resident: \
+             cold={cold} swapped={swapped} resident={resident}"
+        );
+        // The swapped hit's penalty is exactly the memcpy-restore
+        // surcharge on its 4 matched pages — far less than the
+        // re-prefill the cold request pays for the same pages.
+        assert_eq!(swapped - resident, m.pages_for(8) as i64 * SCORE_RESTORE_COST);
+        assert!(cold - swapped > swapped - resident);
+
+        // The memoized path agrees, including the restore surcharge.
+        assert_eq!(m.admission_score_cached(91, &toks("aaaaaaaa"), 4), swapped);
+        assert_eq!(m.admission_score_cached(92, &toks("bbbbbbbb"), 4), resident);
     }
 
     #[test]

@@ -44,4 +44,4 @@
 
 pub mod manager;
 
-pub use manager::{CacheConfig, CacheManager, CacheStats};
+pub use manager::{CacheConfig, CacheManager, CacheStats, SCORE_PAGE_COST, SCORE_RESTORE_COST};

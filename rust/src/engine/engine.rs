@@ -100,6 +100,12 @@ pub struct EngineConfig {
     /// KV cache policy: prefix retention, page budget, eviction (see
     /// [`crate::cache`]).
     pub cache: CacheConfig,
+    /// Which shard of a sharded server this engine is (0 for a
+    /// single-engine server). Informational: it tags log lines and lets
+    /// tests identify shards; it must NOT perturb seeds — identical
+    /// weights across shards are what make greedy outputs
+    /// shard-count-invariant.
+    pub shard_id: usize,
 }
 
 impl Default for EngineConfig {
@@ -118,6 +124,7 @@ impl Default for EngineConfig {
             admit_window: 8,
             admit_max_bypass: 4,
             cache: CacheConfig::default(),
+            shard_id: 0,
         }
     }
 }
@@ -141,6 +148,9 @@ pub struct Engine {
     /// [`Engine::take_rejected`]; the server resolves their waiters with
     /// the error while the engine keeps serving everyone else.
     rejected: Vec<(u64, String)>,
+    /// Test hook: when set, the next [`Engine::step`] panics. See
+    /// [`Engine::debug_panic_next_step`].
+    panic_next_step: bool,
 }
 
 impl Engine {
@@ -177,6 +187,7 @@ impl Engine {
             step_count: 0,
             cached_divisions: BTreeMap::new(),
             rejected: Vec::new(),
+            panic_next_step: false,
             cfg,
         })
     }
@@ -245,10 +256,27 @@ impl Engine {
         std::mem::take(&mut self.rejected)
     }
 
+    /// Which shard of a sharded server this engine is (0 when unsharded).
+    pub fn shard_id(&self) -> usize {
+        self.cfg.shard_id
+    }
+
+    /// Arm the engine to panic on its next [`Engine::step`] — a worker
+    /// thread *panic* (not a clean `Err`), which is the failure mode
+    /// `Server::shutdown_report` must survive and report. Test-only by
+    /// intent; hidden from docs.
+    #[doc(hidden)]
+    pub fn debug_panic_next_step(&mut self) {
+        self.panic_next_step = true;
+    }
+
     /// One engine iteration: memory-aware admit → prefill new → one
     /// decode step (preempting under page pressure) → retire finished.
     /// Returns finished (id, generated tokens).
     pub fn step(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
+        if self.panic_next_step {
+            panic!("injected engine panic (debug_panic_next_step)");
+        }
         self.admit_requests()?;
         let decoding: Vec<u64> = self
             .batcher

@@ -130,6 +130,52 @@ impl TimeStat {
         self.reservoir.len()
     }
 
+    /// Merge another stream's statistics into this one. The exact
+    /// moments (count/sum/sum-of-squares/min/max) add losslessly; the
+    /// percentile reservoir is rebuilt by drawing each slot from the
+    /// two source reservoirs in proportion to their *true* sample
+    /// counts (deterministic xorshift, sampling with replacement), so
+    /// the merged reservoir remains an unweighted sample of the union
+    /// stream in expectation — merging a 10k-sample shard with a
+    /// 10-sample shard must not give the small shard half the slots.
+    pub fn merge(&mut self, other: &TimeStat) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let total = self.count + other.count;
+        if self.reservoir.len() + other.reservoir.len() <= TIMESTAT_RESERVOIR {
+            self.reservoir.extend_from_slice(&other.reservoir);
+        } else {
+            let mut rng = (self.rng ^ other.rng.rotate_left(31)) | 1;
+            let mut step = move || {
+                rng ^= rng << 13;
+                rng ^= rng >> 7;
+                rng ^= rng << 17;
+                rng
+            };
+            let mut merged = Vec::with_capacity(TIMESTAT_RESERVOIR);
+            for _ in 0..TIMESTAT_RESERVOIR {
+                let src = if step() % total < self.count {
+                    &self.reservoir
+                } else {
+                    &other.reservoir
+                };
+                merged.push(src[(step() % src.len() as u64) as usize]);
+            }
+            self.rng = step();
+            self.reservoir = merged;
+        }
+        self.count = total;
+        self.sum_s += other.sum_s;
+        self.sum_sq_s += other.sum_sq_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+
     /// Summary in milliseconds: n/mean/std/min/max are exact over the
     /// whole stream; percentiles come from the reservoir sample.
     pub fn summary_ms(&self) -> Option<Summary> {
@@ -180,7 +226,7 @@ impl RequestMetrics {
 }
 
 /// Engine-wide metrics.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub requests: BTreeMap<u64, RequestMetrics>,
     /// Wall time of each decode step (all layers).
@@ -254,6 +300,30 @@ pub struct Metrics {
     /// Wall time of host→device restores, one sample per restored node
     /// (the cost a prefix hit pays instead of a re-prefill).
     pub swap_restore_times: TimeStat,
+
+    // --- sharding / router gauges (a single-engine snapshot leaves
+    // them zero; `Server::shutdown` fills them from the router and sets
+    // `shards` to the number of shards that exited cleanly) ---
+    /// Engine shards whose metrics were merged into this snapshot
+    /// (0 for a raw per-engine snapshot, ≥ 1 after a server shutdown).
+    pub shards: usize,
+    /// Submits routed to a shard holding a matching cached prefix.
+    pub router_affinity_hits: usize,
+    /// Cold submits routed by the power-of-two-choices fallback.
+    pub router_cold_routes: usize,
+    /// Affine routes overridden by the load-imbalance guard.
+    pub router_guard_overrides: usize,
+    /// Largest per-shard queue-depth skew (max − min) the router saw.
+    pub router_max_queue_skew: usize,
+}
+
+/// Budgets merge as a sum only when every shard is bounded; one
+/// unbounded shard makes the aggregate unbounded.
+fn sum_budgets(a: Option<usize>, b: Option<usize>) -> Option<usize> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a + b),
+        _ => None,
+    }
 }
 
 /// Latency targets for SLO-attainment reporting: a request meets its SLO
@@ -334,6 +404,70 @@ impl SloReport {
 }
 
 impl Metrics {
+    /// Merge another engine shard's snapshot into this one, so
+    /// [`Metrics::slo_report`] and every gauge aggregate across shards:
+    ///
+    /// * request records union (the server allocates globally unique
+    ///   ids, so the maps are disjoint) — attainment, TTFT/TPOT
+    ///   percentiles, and the throughput span are then recomputed over
+    ///   the union by `slo_report` itself;
+    /// * timing streams combine via [`TimeStat::merge`] (exact moments
+    ///   add, reservoirs recombine weighted by true counts);
+    /// * work counters and page gauges add; budgets add only while
+    ///   every side is bounded; high-water marks add too, making the
+    ///   merged mark a *sum of per-shard peaks* — an upper bound on the
+    ///   true simultaneous peak, so the `high-water ≤ budget` invariant
+    ///   survives merging;
+    /// * `min_plan_lower_bound_ms` takes the minimum over shards,
+    ///   `router_max_queue_skew` the maximum, `shards` the sum.
+    ///
+    /// The merge is associative and commutative (up to reservoir
+    /// sampling noise), so fold order across shards does not matter.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests.extend(other.requests.iter().map(|(k, v)| (*k, v.clone())));
+        self.step_times.merge(&other.step_times);
+        self.attn_times.merge(&other.attn_times);
+        self.prefill_attn_times.merge(&other.prefill_attn_times);
+        self.plan_times.merge(&other.plan_times);
+        self.swap_restore_times.merge(&other.swap_restore_times);
+        self.plans_computed += other.plans_computed;
+        self.plans_reused += other.plans_reused;
+        let (a, b) = (self.min_plan_lower_bound_ms, other.min_plan_lower_bound_ms);
+        self.min_plan_lower_bound_ms = match (a, b) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            _ => a.or(b),
+        };
+        self.tokens_generated += other.tokens_generated;
+        self.prefill_tokens += other.prefill_tokens;
+        self.prefill_tokens_shared += other.prefill_tokens_shared;
+        self.kv_allocated_pages += other.kv_allocated_pages;
+        self.kv_max_allocated_pages += other.kv_max_allocated_pages;
+        self.kv_budget_pages = sum_budgets(self.kv_budget_pages, other.kv_budget_pages);
+        self.kv_in_use_bytes += other.kv_in_use_bytes;
+        self.kv_resident_bytes += other.kv_resident_bytes;
+        self.cache_evictions += other.cache_evictions;
+        self.cache_evicted_pages += other.cache_evicted_pages;
+        self.admissions_deferred += other.admissions_deferred;
+        self.preemptions += other.preemptions;
+        self.admission_reorders += other.admission_reorders;
+        self.eviction_scan_steps += other.eviction_scan_steps;
+        self.swap_outs += other.swap_outs;
+        self.swap_out_pages += other.swap_out_pages;
+        self.swap_ins += other.swap_ins;
+        self.swap_in_pages += other.swap_in_pages;
+        self.host_evictions += other.host_evictions;
+        self.kv_swapped_pages += other.kv_swapped_pages;
+        self.kv_max_swapped_pages += other.kv_max_swapped_pages;
+        self.kv_swap_budget_pages =
+            sum_budgets(self.kv_swap_budget_pages, other.kv_swap_budget_pages);
+        self.kv_swapped_bytes += other.kv_swapped_bytes;
+        self.shards += other.shards;
+        self.router_affinity_hits += other.router_affinity_hits;
+        self.router_cold_routes += other.router_cold_routes;
+        self.router_guard_overrides += other.router_guard_overrides;
+        self.router_max_queue_skew = self.router_max_queue_skew.max(other.router_max_queue_skew);
+    }
+
     pub fn on_submit(&mut self, rid: u64) {
         self.requests.insert(
             rid,
@@ -718,6 +852,128 @@ mod tests {
         assert!(strict.render().contains("SLO attainment: 0.0%"));
         // Nothing finished → no report.
         assert!(Metrics::default().slo_report(targets).is_none());
+    }
+
+    #[test]
+    fn timestat_merge_combines_moments_and_reservoirs() {
+        let mut a = TimeStat::default();
+        let mut b = TimeStat::default();
+        for _ in 0..1000 {
+            a.record_secs(0.001);
+        }
+        for _ in 0..1000 {
+            b.record_secs(0.005);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 2000);
+        assert!((m.total_secs() - (a.total_secs() + b.total_secs())).abs() < 1e-9);
+        assert!(m.reservoir_len() <= TIMESTAT_RESERVOIR);
+        let s = m.summary_ms().unwrap();
+        assert_eq!(s.n, 2000);
+        assert!((s.mean - 3.0).abs() < 1e-9, "moments are exact");
+        assert!((s.min - 1.0).abs() < 1e-9 && (s.max - 5.0).abs() < 1e-9);
+        // Percentiles come from the recombined reservoir: with equal
+        // stream weights both values must be represented, so the spread
+        // p10..p99 spans both modes (each slot misses a mode with
+        // probability 2^-512-ish — deterministic rng, stable outcome).
+        assert!((s.p50 - 1.0).abs() < 1e-9 || (s.p50 - 5.0).abs() < 1e-9);
+        assert!((s.p99 - 5.0).abs() < 1e-9, "slow mode must survive the merge");
+
+        // Merging an empty stat is the identity, both ways.
+        let mut id = m.clone();
+        id.merge(&TimeStat::default());
+        assert_eq!(id.count(), m.count());
+        let mut from_empty = TimeStat::default();
+        from_empty.merge(&m);
+        assert_eq!(from_empty.count(), m.count());
+        assert!((from_empty.total_secs() - m.total_secs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timestat_merge_weights_reservoir_by_true_counts() {
+        // 10k fast samples vs 10 slow ones: the merged reservoir must
+        // not give the tiny stream half the slots — its share should be
+        // near 10/10010, so the p50 stays on the dominant mode.
+        let mut big = TimeStat::default();
+        for _ in 0..10_000 {
+            big.record_secs(0.001);
+        }
+        let mut small = TimeStat::default();
+        for _ in 0..10 {
+            small.record_secs(0.100);
+        }
+        big.merge(&small);
+        let s = big.summary_ms().unwrap();
+        assert_eq!(s.n, 10_010);
+        assert!((s.p50 - 1.0).abs() < 1e-9, "p50 = {}", s.p50);
+        assert!((s.max - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_merge_sums_counts_and_unions_requests() {
+        let mut a = Metrics::default();
+        a.on_submit(1);
+        a.on_token(1);
+        a.on_token(1);
+        a.on_finish(1);
+        a.prefill_tokens = 10;
+        a.prefill_tokens_shared = 90;
+        a.plans_computed = 3;
+        a.kv_budget_pages = Some(64);
+        a.kv_max_allocated_pages = 40;
+        a.min_plan_lower_bound_ms = Some(0.5);
+        a.step_times.record(Duration::from_millis(2));
+        a.shards = 1;
+
+        let mut b = Metrics::default();
+        b.on_submit(2);
+        std::thread::sleep(Duration::from_millis(3));
+        b.on_token(2);
+        b.on_token(2);
+        b.on_finish(2);
+        b.prefill_tokens = 30;
+        b.prefill_tokens_shared = 10;
+        b.plans_computed = 4;
+        b.kv_budget_pages = Some(64);
+        b.kv_max_allocated_pages = 50;
+        b.min_plan_lower_bound_ms = Some(0.2);
+        b.step_times.record(Duration::from_millis(4));
+        b.router_max_queue_skew = 7;
+        b.shards = 1;
+
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.requests.len(), 2, "request records union");
+        assert_eq!(m.tokens_generated, 4);
+        assert_eq!(m.prefill_tokens, 40);
+        assert_eq!(m.prefill_tokens_shared, 100);
+        assert_eq!(m.plans_computed, 7);
+        assert_eq!(m.kv_budget_pages, Some(128), "budgets sum when bounded");
+        assert_eq!(m.kv_max_allocated_pages, 90, "peaks sum (upper bound)");
+        assert_eq!(m.min_plan_lower_bound_ms, Some(0.2), "min over shards");
+        assert_eq!(m.step_times.count(), 2);
+        assert_eq!(m.shards, 2);
+        assert_eq!(m.router_max_queue_skew, 7, "max over shards");
+
+        // Attainment recomputes over the union: both requests finished,
+        // so generous targets give 2 finished at 100% attainment, and
+        // the throughput span covers a's submit → b's finish.
+        let rep = m
+            .slo_report(SloTargets {
+                ttft_ms: 60_000.0,
+                tpot_ms: 60_000.0,
+            })
+            .expect("two finished requests");
+        assert_eq!(rep.finished, 2);
+        assert!((rep.slo_attainment - 1.0).abs() < 1e-12);
+        let span_s = 2.0 / rep.throughput_rps;
+        assert!(span_s >= 0.003, "span must cover both shards: {span_s}s");
+
+        // One unbounded shard makes the aggregate unbounded.
+        let unbounded = Metrics::default();
+        m.merge(&unbounded);
+        assert_eq!(m.kv_budget_pages, None);
     }
 
     #[test]

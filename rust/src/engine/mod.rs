@@ -14,14 +14,22 @@
 //! * `CodecPjrt` — CoDec plan + the AOT Pallas PAC/POR kernels,
 //! * `FlashNative` — per-request FlashDecoding (the vLLM-like baseline
 //!   for the Fig. 7 TPOT comparison).
+//!
+//! Horizontal scale comes from the [`server`] + [`router`] pair: the
+//! server can run N engine *shards* (one engine loop per thread, each
+//! with its own forest and a slice of the page/swap budgets) behind a
+//! prefix-affinity router that keeps requests sharing a prompt prefix
+//! on the same shard's KV forest.
 
 pub mod batch;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod server;
 
 pub use engine::{AttentionBackend, Engine, EngineConfig};
 pub use metrics::{Metrics, SloReport, SloTargets};
 pub use request::{Request, RequestId, RequestState};
-pub use server::{Server, SubmitHandle, WaitError};
+pub use router::{PrefixIndex, RouterConfig, RouterCore, RouterStats, RoutingPolicy};
+pub use server::{EngineMake, Server, ShardFailure, ShutdownReport, SubmitHandle, WaitError};

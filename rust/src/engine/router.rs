@@ -1,0 +1,483 @@
+//! Prefix-affinity request router for the sharded server.
+//!
+//! Sharding the engine only pays if requests that share a prompt prefix
+//! land on the *same* shard: each shard owns a private KV forest, so a
+//! shared document prefilled on shard 0 is invisible to shard 1, and
+//! naive round-robin re-prefills every hot prefix once per shard. The
+//! router therefore keeps a **shard-local radix prefix index** — a
+//! compressed token trie recording which prompts each shard has seen —
+//! and routes every submit to the shard with the longest cached-prefix
+//! match. Two mechanisms keep affinity from collapsing into a single
+//! hot shard:
+//!
+//! * **power-of-two-choices fallback** for cold prompts (no shard
+//!   matches any prefix): sample two shards, send to the shallower
+//!   queue — the classic load-balancing result that two random choices
+//!   give exponentially better max-load than one;
+//! * an **imbalance guard**: when the affine shard's queue is more than
+//!   `max_skew` deeper than the shallowest queue, the request is
+//!   redirected to the least-loaded shard (which then indexes the
+//!   prefix, so the hot prefix is *replicated* rather than pinned).
+//!
+//! The router is policy only: it sees prompts and queue depths and
+//! returns a shard index. It never touches engines, channels, or
+//! forests — [`crate::engine::Server`] owns those and consults the
+//! router under a mutex on each submit.
+
+use std::collections::HashMap;
+
+/// How the server spreads submits across engine shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Longest cached-prefix match wins; power-of-two-choices for cold
+    /// prompts; imbalance guard caps queue skew. The default.
+    Affinity,
+    /// Pure power-of-two-choices on queue depth (prefix-blind).
+    PowerOfTwo,
+    /// Strict rotation (prefix- and load-blind; the baseline the shard
+    /// bench compares affinity against).
+    RoundRobin,
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<RoutingPolicy, String> {
+        match s {
+            "affinity" => Ok(RoutingPolicy::Affinity),
+            "p2c" | "power-of-two" => Ok(RoutingPolicy::PowerOfTwo),
+            "round-robin" | "rr" => Ok(RoutingPolicy::RoundRobin),
+            other => Err(format!(
+                "unknown routing policy '{other}' (expected affinity | p2c | round-robin)"
+            )),
+        }
+    }
+}
+
+/// Router tuning knobs (shard *count* is fixed by the server at start).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    pub policy: RoutingPolicy,
+    /// Imbalance guard: an affine route is overridden to the
+    /// least-loaded shard when the target queue is more than this many
+    /// requests deeper than the shallowest queue. Clamped to ≥ 1 (a
+    /// guard of 0 would defeat affinity entirely).
+    pub max_skew: usize,
+    /// Seed for the power-of-two-choices sampler (deterministic
+    /// xorshift — routing decisions are replayable for a fixed arrival
+    /// order and depth sequence).
+    pub seed: u64,
+    /// Per-shard prefix-index size cap in tokens. The index tracks every
+    /// distinct prompt path; a long-running server would otherwise grow
+    /// it without bound. On overflow the shard's index is reset — a
+    /// brief affinity cold-start, bounded memory forever.
+    pub max_index_tokens: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: RoutingPolicy::Affinity,
+            max_skew: 8,
+            seed: 0x5EED_0C0D_EC00_0001,
+            max_index_tokens: 1 << 20,
+        }
+    }
+}
+
+/// Routing counters, mirrored into the merged [`super::Metrics`] at
+/// shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// Total routing decisions.
+    pub routed: usize,
+    /// Submits routed to a shard holding a matching prefix.
+    pub affinity_hits: usize,
+    /// Cold submits (no shard matched) routed by power-of-two-choices.
+    pub cold_routes: usize,
+    /// Affine routes overridden by the imbalance guard.
+    pub guard_overrides: usize,
+    /// Largest queue-depth skew (max − min) observed at any decision.
+    pub max_queue_skew: usize,
+    /// Routing decisions per shard (quantifies load spread).
+    pub routed_per_shard: Vec<usize>,
+}
+
+/// Compressed radix trie over token sequences: the router's model of
+/// which prompt prefixes a shard's forest has absorbed. Edges carry
+/// token *fragments* (not single tokens), so memory scales with
+/// distinct branch points, not total tokens — mirroring the KV forest's
+/// own radix structure without holding any KV.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    nodes: Vec<TrieNode>,
+    tokens: usize,
+}
+
+#[derive(Debug)]
+struct TrieNode {
+    /// Tokens on the edge from the parent to this node.
+    frag: Vec<u32>,
+    /// Children keyed by their fragment's first token.
+    children: HashMap<u32, usize>,
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: vec![TrieNode {
+                frag: Vec::new(),
+                children: HashMap::new(),
+            }],
+            tokens: 0,
+        }
+    }
+
+    /// Distinct tokens indexed (deduplicated across shared prefixes).
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Length of the longest prefix of `prompt` present in the index.
+    pub fn match_len(&self, prompt: &[u32]) -> usize {
+        let mut matched = 0usize;
+        let mut node = 0usize;
+        while matched < prompt.len() {
+            let Some(&child) = self.nodes[node].children.get(&prompt[matched]) else {
+                break;
+            };
+            let frag = &self.nodes[child].frag;
+            let common = frag
+                .iter()
+                .zip(&prompt[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < frag.len() {
+                break;
+            }
+            node = child;
+        }
+        matched
+    }
+
+    /// Record `prompt`'s full path (idempotent for already-indexed
+    /// prefixes; splits an edge at the first divergence).
+    pub fn insert(&mut self, prompt: &[u32]) {
+        let mut pos = 0usize;
+        let mut node = 0usize;
+        while pos < prompt.len() {
+            match self.nodes[node].children.get(&prompt[pos]).copied() {
+                None => {
+                    let frag = prompt[pos..].to_vec();
+                    self.tokens += frag.len();
+                    let id = self.nodes.len();
+                    self.nodes.push(TrieNode {
+                        frag,
+                        children: HashMap::new(),
+                    });
+                    self.nodes[node].children.insert(prompt[pos], id);
+                    return;
+                }
+                Some(child) => {
+                    let common = self.nodes[child]
+                        .frag
+                        .iter()
+                        .zip(&prompt[pos..])
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    if common < self.nodes[child].frag.len() {
+                        // Split the edge: `child` keeps the common head,
+                        // a new node takes the old tail (and children).
+                        let tail = self.nodes[child].frag.split_off(common);
+                        let tail_first = tail[0];
+                        let moved_children = std::mem::take(&mut self.nodes[child].children);
+                        let tail_id = self.nodes.len();
+                        self.nodes.push(TrieNode {
+                            frag: tail,
+                            children: moved_children,
+                        });
+                        self.nodes[child].children.insert(tail_first, tail_id);
+                    }
+                    pos += common;
+                    node = child;
+                }
+            }
+        }
+    }
+}
+
+/// The routing state machine: one prefix index per shard plus the
+/// policy knobs and counters. Pure — callers pass current queue depths
+/// in and get a shard index out.
+#[derive(Debug)]
+pub struct RouterCore {
+    policy: RoutingPolicy,
+    max_skew: usize,
+    max_index_tokens: usize,
+    rng: u64,
+    rr_next: usize,
+    indexes: Vec<PrefixIndex>,
+    stats: RouterStats,
+}
+
+impl RouterCore {
+    pub fn new(shards: usize, cfg: RouterConfig) -> RouterCore {
+        assert!(shards >= 1, "router needs at least one shard");
+        RouterCore {
+            policy: cfg.policy,
+            max_skew: cfg.max_skew.max(1),
+            max_index_tokens: cfg.max_index_tokens.max(1),
+            rng: cfg.seed | 1,
+            rr_next: 0,
+            indexes: (0..shards).map(|_| PrefixIndex::new()).collect(),
+            stats: RouterStats {
+                routed_per_shard: vec![0; shards],
+                ..RouterStats::default()
+            },
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.indexes.len()
+    }
+
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        self.rng
+    }
+
+    /// Least-loaded shard (ties break to the lowest index).
+    fn least_loaded(depths: &[usize]) -> usize {
+        let mut best = 0usize;
+        for (i, &d) in depths.iter().enumerate() {
+            if d < depths[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Power-of-two-choices: sample two distinct shards, pick the
+    /// shallower queue (ties break to the lower index).
+    fn p2c(&mut self, depths: &[usize]) -> usize {
+        let n = depths.len();
+        if n == 1 {
+            return 0;
+        }
+        let a = (self.next_rand() % n as u64) as usize;
+        let mut b = (self.next_rand() % (n as u64 - 1)) as usize;
+        if b >= a {
+            b += 1;
+        }
+        match depths[a].cmp(&depths[b]) {
+            std::cmp::Ordering::Less => a,
+            std::cmp::Ordering::Greater => b,
+            std::cmp::Ordering::Equal => a.min(b),
+        }
+    }
+
+    /// Route one submit given the current per-shard queue depths
+    /// (`depths[i]` = requests submitted to shard `i` and not yet
+    /// resolved). Returns the chosen shard and records `prompt` into
+    /// that shard's prefix index.
+    pub fn route(&mut self, prompt: &[u32], depths: &[usize]) -> usize {
+        let n = self.indexes.len();
+        assert_eq!(depths.len(), n, "one queue depth per shard");
+        let min_depth = *depths.iter().min().expect("at least one shard");
+        let max_depth = *depths.iter().max().expect("at least one shard");
+        self.stats.routed += 1;
+        self.stats.max_queue_skew = self.stats.max_queue_skew.max(max_depth - min_depth);
+        let shard = match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let s = self.rr_next % n;
+                self.rr_next = (s + 1) % n;
+                s
+            }
+            RoutingPolicy::PowerOfTwo => self.p2c(depths),
+            RoutingPolicy::Affinity => {
+                // Longest cached-prefix match wins; ties prefer the
+                // shallower queue, then the lower index.
+                let mut best = 0usize;
+                let mut best_len = self.indexes[0].match_len(prompt);
+                for (i, index) in self.indexes.iter().enumerate().skip(1) {
+                    let len = index.match_len(prompt);
+                    if len > best_len || (len == best_len && depths[i] < depths[best]) {
+                        best = i;
+                        best_len = len;
+                    }
+                }
+                if best_len == 0 {
+                    self.stats.cold_routes += 1;
+                    self.p2c(depths)
+                } else if depths[best] > min_depth + self.max_skew {
+                    self.stats.guard_overrides += 1;
+                    Self::least_loaded(depths)
+                } else {
+                    self.stats.affinity_hits += 1;
+                    best
+                }
+            }
+        };
+        if self.indexes[shard].tokens() > self.max_index_tokens {
+            self.indexes[shard] = PrefixIndex::new();
+        }
+        self.indexes[shard].insert(prompt);
+        self.stats.routed_per_shard[shard] += 1;
+        shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(doc: u32, q: u32) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..32).map(|t| doc * 1000 + t).collect();
+        p.extend((0..4).map(|t| 500_000 + doc * 100 + q * 10 + t));
+        p
+    }
+
+    #[test]
+    fn prefix_index_matches_and_splits() {
+        let mut ix = PrefixIndex::new();
+        assert_eq!(ix.match_len(&[1, 2, 3]), 0);
+        ix.insert(&[1, 2, 3, 4]);
+        assert_eq!(ix.tokens(), 4);
+        assert_eq!(ix.match_len(&[1, 2, 3, 4, 5]), 4);
+        assert_eq!(ix.match_len(&[1, 2, 9]), 2);
+        // Diverging suffix splits the edge; shared tokens not recounted.
+        ix.insert(&[1, 2, 7, 8]);
+        assert_eq!(ix.tokens(), 6);
+        assert_eq!(ix.match_len(&[1, 2, 7, 8]), 4);
+        assert_eq!(ix.match_len(&[1, 2, 3, 4]), 4);
+        // Re-inserting an indexed path is a no-op.
+        ix.insert(&[1, 2, 3, 4]);
+        assert_eq!(ix.tokens(), 6);
+        // Extending an existing path only adds the novel tail.
+        ix.insert(&[1, 2, 3, 4, 5, 6]);
+        assert_eq!(ix.tokens(), 8);
+        assert_eq!(ix.match_len(&[1, 2, 3, 4, 5, 6, 7]), 6);
+    }
+
+    #[test]
+    fn prefix_index_interior_split_keeps_old_children() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(&[1, 2, 3, 4, 5]);
+        ix.insert(&[1, 2, 3, 4, 6]);
+        // Split mid-edge: both old tails still reachable.
+        ix.insert(&[1, 2, 9]);
+        assert_eq!(ix.match_len(&[1, 2, 3, 4, 5]), 5);
+        assert_eq!(ix.match_len(&[1, 2, 3, 4, 6]), 5);
+        assert_eq!(ix.match_len(&[1, 2, 9]), 3);
+    }
+
+    #[test]
+    fn affinity_longest_prefix_match_wins() {
+        let mut r = RouterCore::new(4, RouterConfig::default());
+        let depths = [0usize; 4];
+        // Cold: doc 1 lands somewhere; remember where.
+        let s1 = r.route(&prompt(1, 0), &depths);
+        // Same doc, new question: must follow the prefix even though
+        // every other shard is equally idle.
+        for q in 1..6 {
+            assert_eq!(r.route(&prompt(1, q), &depths), s1);
+        }
+        // A different doc must not be dragged to s1 by accident once
+        // another shard holds *its* prefix.
+        let s2 = r.route(&prompt(2, 0), &depths);
+        assert_eq!(r.route(&prompt(2, 1), &depths), s2);
+        assert_eq!(r.route(&prompt(1, 6), &depths), s1);
+        assert_eq!(r.stats().affinity_hits, 7);
+        assert_eq!(r.stats().cold_routes, 2);
+    }
+
+    #[test]
+    fn cold_requests_fall_back_to_shallower_of_two_choices() {
+        let mut r = RouterCore::new(2, RouterConfig::default());
+        // With 2 shards, p2c always compares both: the deep queue never
+        // receives a cold route.
+        for doc in 0..20 {
+            assert_eq!(r.route(&prompt(100 + doc, 0), &[5, 0]), 1);
+        }
+        assert_eq!(r.stats().cold_routes, 20);
+        assert_eq!(r.stats().affinity_hits, 0);
+        assert_eq!(r.stats().max_queue_skew, 5);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_power_of_two_prefers_shallow() {
+        let cfg = RouterConfig {
+            policy: RoutingPolicy::RoundRobin,
+            ..RouterConfig::default()
+        };
+        let mut rr = RouterCore::new(3, cfg);
+        let picks: Vec<usize> = (0..6).map(|i| rr.route(&prompt(i, 0), &[0; 3])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+
+        let cfg = RouterConfig {
+            policy: RoutingPolicy::PowerOfTwo,
+            ..RouterConfig::default()
+        };
+        let mut p2c = RouterCore::new(2, cfg);
+        for i in 0..10 {
+            assert_eq!(p2c.route(&prompt(i, 0), &[0, 9]), 0);
+        }
+    }
+
+    #[test]
+    fn imbalance_guard_bounds_queue_skew() {
+        let cfg = RouterConfig {
+            max_skew: 3,
+            ..RouterConfig::default()
+        };
+        let mut r = RouterCore::new(4, cfg);
+        // Adversarial stream: every request shares one hot document and
+        // queues never drain. Pure affinity would pile all 100 on one
+        // shard; the guard must cap the skew near `max_skew`.
+        let mut depths = [0usize; 4];
+        for q in 0..100 {
+            let s = r.route(&prompt(7, q), &depths);
+            depths[s] += 1;
+        }
+        let max = *depths.iter().max().unwrap();
+        let min = *depths.iter().min().unwrap();
+        assert!(max - min <= 3 + 1, "guard must bound skew: depths {depths:?}");
+        assert!(r.stats().guard_overrides > 0);
+        assert_eq!(depths.iter().sum::<usize>(), 100);
+        assert_eq!(r.stats().routed_per_shard.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn index_cap_resets_instead_of_growing() {
+        let cfg = RouterConfig {
+            max_index_tokens: 64,
+            ..RouterConfig::default()
+        };
+        let mut r = RouterCore::new(1, cfg);
+        for doc in 0..50 {
+            r.route(&prompt(doc, 0), &[0]);
+            assert!(r.indexes[0].tokens() <= 64 + 36, "index must stay near the cap");
+        }
+    }
+
+    #[test]
+    fn routing_policy_parses() {
+        assert_eq!("affinity".parse(), Ok(RoutingPolicy::Affinity));
+        assert_eq!("p2c".parse(), Ok(RoutingPolicy::PowerOfTwo));
+        assert_eq!("round-robin".parse(), Ok(RoutingPolicy::RoundRobin));
+        assert!("banana".parse::<RoutingPolicy>().is_err());
+    }
+}

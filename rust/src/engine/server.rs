@@ -1,31 +1,49 @@
-//! Thread-based serving front-end: a request queue feeding the engine
-//! loop on a worker thread, with per-request completion channels.
-//! (tokio is unavailable offline; the event loop is a dedicated thread +
-//! mpsc channels, which for a CPU-bound engine is the honest design.)
+//! Thread-based serving front-end: a prefix-affinity router fanning
+//! requests out to N engine shards, each an engine loop on its own
+//! worker thread with per-request completion channels. (tokio is
+//! unavailable offline; the event loop is dedicated threads + mpsc
+//! channels, which for a CPU-bound engine is the honest design.)
 //!
-//! Backend handles (PJRT in particular) are not `Send`, so the engine is
-//! *created on* the worker thread and never leaves it; `shutdown()`
-//! returns a plain [`Metrics`] snapshot sent back over a channel.
+//! Each shard owns a full engine — forest, cache manager with a
+//! per-shard slice of the page/swap budgets, metrics — so shards never
+//! contend on KV state. The [`super::router::RouterCore`] decides which
+//! shard each submit lands on (longest cached-prefix match by default,
+//! see the router module docs); the server only moves messages. With
+//! one shard (the [`Server::start`] default) the behavior is exactly
+//! the pre-sharding single-engine server.
+//!
+//! Backend handles (PJRT in particular) are not `Send`, so each engine
+//! is *created on* its worker thread and never leaves it; `shutdown()`
+//! returns a merged [`Metrics`] snapshot sent back over channels.
 //!
 //! Completion contract: every [`SubmitHandle`] resolves — to the
 //! generated tokens, or to a clean error naming the cause. Submits
-//! already queued in the channel when `Shutdown` arrives are drained and
-//! served, and an engine failure notifies every outstanding waiter
-//! instead of silently dropping their channels.
+//! already queued in a shard's channel when `Shutdown` arrives are
+//! drained and served, an engine failure notifies every outstanding
+//! waiter on that shard instead of silently dropping their channels,
+//! and one shard panicking is reported as a typed
+//! [`ShardFailure`] while the remaining shards still drain
+//! ([`Server::shutdown_report`]).
 
 use super::engine::{AttentionBackend, Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::Request;
+use super::router::{RouterConfig, RouterCore};
 use crate::workload::trace::Trace;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Per-request completion payload: tokens, or a human-readable failure.
 type SubmitResult = std::result::Result<Vec<u32>, String>;
+
+/// Engine constructor run on a shard's worker thread — the seam the
+/// regression tests use to inject failing or panicking engines.
+pub type EngineMake = Box<dyn FnOnce() -> Result<Engine> + Send>;
 
 enum Msg {
     Submit(Request, Sender<SubmitResult>),
@@ -87,17 +105,56 @@ impl SubmitHandle {
     }
 }
 
-/// A running engine server.
-pub struct Server {
+/// One engine shard as the server sees it: its message queue, worker
+/// thread, and live queue depth (submits routed to it minus requests
+/// resolved), which the router reads for load balancing.
+struct Shard {
     tx: Sender<Msg>,
-    next_id: AtomicU64,
     worker: Option<JoinHandle<Metrics>>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// A shard whose worker thread panicked, with the panic payload's
+/// message — the typed replacement for the old
+/// `.expect("engine thread panicked")` crash on join.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardFailure {
+    pub shard: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ShardFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} panicked: {}", self.shard, self.message)
+    }
+}
+
+/// Outcome of [`Server::shutdown_report`]: metrics merged across every
+/// shard that exited cleanly, per-shard snapshots, and the shards that
+/// did not make it.
+#[derive(Debug)]
+pub struct ShutdownReport {
+    /// [`Metrics::merge`] over the clean shards, with the router's
+    /// counters mirrored in; `metrics.shards` counts the clean shards.
+    pub metrics: Metrics,
+    /// Each shard's own snapshot (`None` for a panicked shard) — the
+    /// per-shard affinity/imbalance view the shard bench reports.
+    pub shard_metrics: Vec<Option<Metrics>>,
+    /// Shards whose worker panicked, with the panic message.
+    pub failures: Vec<ShardFailure>,
+}
+
+/// A running engine server: router + N engine shards.
+pub struct Server {
+    shards: Vec<Shard>,
+    router: Mutex<RouterCore>,
+    next_id: AtomicU64,
 }
 
 impl Server {
-    /// Start a hermetic engine loop (native transformer backend, no
-    /// artifacts directory) on a background thread. Blocks until the
-    /// engine (weights + backend) is ready or failed.
+    /// Start a hermetic single-shard engine loop (native transformer
+    /// backend, no artifacts directory) on a background thread. Blocks
+    /// until the engine (weights + backend) is ready or failed.
     pub fn start(cfg: EngineConfig) -> Result<Server> {
         Self::start_with(move || Engine::new(cfg))
     }
@@ -132,38 +189,120 @@ impl Server {
         )
     }
 
-    /// Start over an engine built by an arbitrary constructor closure —
-    /// the seam the regression tests use to inject failing backends.
-    /// The engine is constructed *on* the worker thread (backend handles
-    /// may not be `Send`) and the serve loop runs there.
-    pub fn start_with(
-        make: impl FnOnce() -> Result<Engine> + Send + 'static,
-    ) -> Result<Server> {
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-        let worker = std::thread::spawn(move || serve_loop(make, rx, ready_tx));
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Server {
-                tx,
-                next_id: AtomicU64::new(1),
-                worker: Some(worker),
-            }),
-            Ok(Err(msg)) => {
-                let _ = worker.join();
-                anyhow::bail!("engine init failed: {msg}")
-            }
-            Err(_) => anyhow::bail!("engine thread died during init"),
+    /// Start a single shard over an engine built by an arbitrary
+    /// constructor closure. The engine is constructed *on* the worker
+    /// thread (backend handles may not be `Send`) and the serve loop
+    /// runs there.
+    pub fn start_with(make: impl FnOnce() -> Result<Engine> + Send + 'static) -> Result<Server> {
+        Self::start_sharded_with(vec![Box::new(make)], RouterConfig::default())
+    }
+
+    /// Start `shards` engine shards routed by `rcfg.policy`. Every
+    /// shard runs `cfg` with the same seed (identical weights — greedy
+    /// outputs are therefore invariant to which shard serves a request)
+    /// and a per-shard slice of the page/swap budgets: shard `i` of `n`
+    /// gets `budget/n` pages plus one of the `budget % n` remainder
+    /// pages, so no page is lost to rounding. A budget smaller than the
+    /// shard count is rejected.
+    pub fn start_sharded(cfg: EngineConfig, shards: usize, rcfg: RouterConfig) -> Result<Server> {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        if cfg.backend == AttentionBackend::CodecPjrt && shards > 1 {
+            anyhow::bail!(
+                "sharded serving requires a hermetic backend (codec | flash): \
+                 the PJRT artifact path is single-shard (use --shards 1)"
+            );
         }
+        let makes = shard_configs(&cfg, shards)?
+            .into_iter()
+            .map(|scfg| -> EngineMake { Box::new(move || Engine::new(scfg)) })
+            .collect();
+        Self::start_sharded_with(makes, rcfg)
+    }
+
+    /// Start one shard per constructor in `makes` (the injection seam
+    /// the shutdown-robustness tests use). Shard `i` runs `makes[i]` on
+    /// its own worker thread; engines initialize concurrently and this
+    /// blocks until every shard is ready or one failed (in which case
+    /// the already-started shards are torn down before returning).
+    pub fn start_sharded_with(makes: Vec<EngineMake>, rcfg: RouterConfig) -> Result<Server> {
+        let n = makes.len();
+        anyhow::ensure!(n >= 1, "need at least one engine shard");
+        let mut shards = Vec::with_capacity(n);
+        let mut ready_rxs = Vec::with_capacity(n);
+        for (shard_id, make) in makes.into_iter().enumerate() {
+            let (tx, rx) = channel::<Msg>();
+            let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let loop_depth = Arc::clone(&depth);
+            let worker =
+                std::thread::spawn(move || serve_loop(shard_id, make, rx, ready_tx, loop_depth));
+            shards.push(Shard {
+                tx,
+                worker: Some(worker),
+                depth,
+            });
+            ready_rxs.push(ready_rx);
+        }
+        let mut init_err = None;
+        for (shard_id, ready_rx) in ready_rxs.iter().enumerate() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    init_err = Some(anyhow::anyhow!("shard {shard_id} engine init failed: {msg}"));
+                    break;
+                }
+                Err(_) => {
+                    init_err =
+                        Some(anyhow::anyhow!("shard {shard_id} engine thread died during init"));
+                    break;
+                }
+            }
+        }
+        if let Some(err) = init_err {
+            for shard in &shards {
+                let _ = shard.tx.send(Msg::Shutdown);
+            }
+            for shard in &mut shards {
+                if let Some(worker) = shard.worker.take() {
+                    let _ = worker.join();
+                }
+            }
+            return Err(err);
+        }
+        Ok(Server {
+            router: Mutex::new(RouterCore::new(n, rcfg)),
+            shards,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Shard count (1 for the single-engine constructors).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
     /// Submit a prompt; returns a handle resolving to generated tokens.
-    /// If the engine thread already exited (fatal step error), the
-    /// handle resolves to a clean error instead of panicking here.
+    /// The router picks the shard (longest cached-prefix match under
+    /// the default policy). If the chosen shard's thread already exited
+    /// (fatal step error), the handle resolves to a clean error instead
+    /// of panicking here.
     pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize) -> SubmitHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = channel();
         let req = Request::new(id, prompt, max_new_tokens);
-        if let Err(std::sync::mpsc::SendError(msg)) = self.tx.send(Msg::Submit(req, done_tx)) {
+        let shard = {
+            let depths: Vec<usize> = self
+                .shards
+                .iter()
+                .map(|s| s.depth.load(Ordering::Relaxed))
+                .collect();
+            let mut router = self.router.lock().expect("router lock poisoned");
+            router.route(&req.prompt, &depths)
+        };
+        let shard = &self.shards[shard];
+        shard.depth.fetch_add(1, Ordering::Relaxed);
+        if let Err(std::sync::mpsc::SendError(msg)) = shard.tx.send(Msg::Submit(req, done_tx)) {
+            shard.depth.fetch_sub(1, Ordering::Relaxed);
             if let Msg::Submit(_, done_tx) = msg {
                 let _ = done_tx.send(Err("engine is no longer running".to_string()));
             }
@@ -204,24 +343,122 @@ impl Server {
     }
 
     /// Stop accepting requests, finish in-flight *and already-queued*
-    /// work, return the final metrics snapshot. No handle is stranded:
-    /// every request submitted before this call resolves to tokens or a
-    /// clean error.
-    pub fn shutdown(mut self) -> Metrics {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.worker
-            .take()
-            .expect("shutdown twice")
-            .join()
-            .expect("engine thread panicked")
+    /// work on every shard, return the merged metrics snapshot. No
+    /// handle is stranded: every request submitted before this call
+    /// resolves to tokens or a clean error. A panicked shard is logged
+    /// and skipped — callers that need the typed failure list use
+    /// [`Server::shutdown_report`].
+    pub fn shutdown(self) -> Metrics {
+        let report = self.shutdown_report();
+        for failure in &report.failures {
+            log::error!("{failure}");
+        }
+        report.metrics
+    }
+
+    /// [`Server::shutdown`] with the full per-shard outcome: merged
+    /// metrics over the shards that exited cleanly, each shard's own
+    /// snapshot, and a typed [`ShardFailure`] (panic payload message
+    /// included) for each shard whose thread panicked. Surviving shards
+    /// drain normally regardless of how many siblings died.
+    pub fn shutdown_report(mut self) -> ShutdownReport {
+        for shard in &self.shards {
+            let _ = shard.tx.send(Msg::Shutdown);
+        }
+        let mut shard_metrics = Vec::with_capacity(self.shards.len());
+        let mut failures = Vec::new();
+        for (shard_id, shard) in self.shards.iter_mut().enumerate() {
+            match shard.worker.take().expect("shutdown twice").join() {
+                Ok(metrics) => shard_metrics.push(Some(metrics)),
+                Err(payload) => {
+                    failures.push(ShardFailure {
+                        shard: shard_id,
+                        message: panic_message(payload.as_ref()),
+                    });
+                    shard_metrics.push(None);
+                }
+            }
+        }
+        let mut clean = shard_metrics.iter().flatten();
+        let mut metrics = match clean.next() {
+            Some(first) => {
+                let mut merged = first.clone();
+                for m in clean {
+                    merged.merge(m);
+                }
+                merged
+            }
+            None => Metrics::default(),
+        };
+        metrics.shards = shard_metrics.len() - failures.len();
+        let stats = self.router.lock().expect("router lock poisoned");
+        let stats = stats.stats();
+        metrics.router_affinity_hits = stats.affinity_hits;
+        metrics.router_cold_routes = stats.cold_routes;
+        metrics.router_guard_overrides = stats.guard_overrides;
+        metrics.router_max_queue_skew = stats.max_queue_skew;
+        ShutdownReport {
+            metrics,
+            shard_metrics,
+            failures,
+        }
     }
 }
 
-/// The worker-thread event loop.
+/// Render a worker thread's panic payload (`&str` and `String` payloads
+/// cover `panic!`/`assert!`/`expect`; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "engine thread panicked with a non-string payload".to_string()
+    }
+}
+
+/// Slice one engine config into per-shard configs: shard ids assigned,
+/// page and swap budgets divided with the remainder spread over the
+/// first shards. Seeds are *not* perturbed — identical weights across
+/// shards are what make greedy outputs shard-count-invariant.
+fn shard_configs(cfg: &EngineConfig, n: usize) -> Result<Vec<EngineConfig>> {
+    let slice = |budget: Option<usize>, what: &str| -> Result<Vec<Option<usize>>> {
+        match budget {
+            None => Ok(vec![None; n]),
+            Some(b) => {
+                anyhow::ensure!(
+                    b >= n,
+                    "{what} budget of {b} pages cannot be split across {n} shards \
+                     (every shard needs at least one page)"
+                );
+                Ok((0..n).map(|i| Some(b / n + usize::from(i < b % n))).collect())
+            }
+        }
+    };
+    let page_slices = slice(cfg.cache.page_budget, "KV page")?;
+    let swap_slices = slice(cfg.cache.swap_budget, "swap")?;
+    Ok((0..n)
+        .map(|i| {
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.shard_id = i;
+            shard_cfg.cache.page_budget = page_slices[i];
+            shard_cfg.cache.swap_budget = swap_slices[i];
+            shard_cfg
+        })
+        .collect())
+}
+
+/// The worker-thread event loop for one shard. `depth` mirrors the
+/// number of unresolved requests routed here: the server increments it
+/// on submit, this loop decrements it whenever a waiter is resolved
+/// (tokens, rejection, failure, or shutdown-drain), and the router
+/// reads it for load balancing.
 fn serve_loop(
+    shard_id: usize,
     make: impl FnOnce() -> Result<Engine>,
     rx: Receiver<Msg>,
     ready_tx: Sender<std::result::Result<(), String>>,
+    depth: Arc<AtomicUsize>,
 ) -> Metrics {
     let mut engine = match make() {
         Ok(e) => {
@@ -234,6 +471,14 @@ fn serve_loop(
         }
     };
     let mut waiters: HashMap<u64, Sender<SubmitResult>> = HashMap::new();
+    let resolve = |waiters: &mut HashMap<u64, Sender<SubmitResult>>,
+                   rid: u64,
+                   result: SubmitResult| {
+        if let Some(done_tx) = waiters.remove(&rid) {
+            let _ = done_tx.send(result);
+            depth.fetch_sub(1, Ordering::Relaxed);
+        }
+    };
     let mut open = true;
     loop {
         // Drain the queue: block only when idle.
@@ -273,10 +518,13 @@ fn serve_loop(
                 // Nothing left to run. Any waiter still registered here
                 // (a request the engine lost track of) gets an explicit
                 // error rather than a dropped channel.
-                for (_, done_tx) in waiters.drain() {
-                    let _ = done_tx.send(Err(
-                        "engine shut down before the request completed".to_string(),
-                    ));
+                let stranded: Vec<u64> = waiters.keys().copied().collect();
+                for rid in stranded {
+                    resolve(
+                        &mut waiters,
+                        rid,
+                        Err("engine shut down before the request completed".to_string()),
+                    );
                 }
                 return std::mem::take(&mut engine.metrics);
             }
@@ -285,20 +533,16 @@ fn serve_loop(
         match engine.step() {
             Ok(finished) => {
                 for (rid, tokens) in finished {
-                    if let Some(done_tx) = waiters.remove(&rid) {
-                        let _ = done_tx.send(Ok(tokens));
-                    }
+                    resolve(&mut waiters, rid, Ok(tokens));
                 }
                 // Admission-rejected requests (infeasible for the page
                 // budget) fail individually; the engine keeps serving.
                 for (rid, msg) in engine.take_rejected() {
-                    if let Some(done_tx) = waiters.remove(&rid) {
-                        let _ = done_tx.send(Err(msg));
-                    }
+                    resolve(&mut waiters, rid, Err(msg));
                 }
             }
             Err(e) => {
-                let msg = format!("engine step failed: {e:#}");
+                let msg = format!("shard {shard_id}: engine step failed: {e:#}");
                 log::error!("{msg}");
                 // Pick up submits still sitting in the channel so their
                 // waiters hear about the failure too, then notify every
@@ -308,8 +552,9 @@ fn serve_loop(
                         waiters.insert(req.id, done_tx);
                     }
                 }
-                for (_, done_tx) in waiters.drain() {
-                    let _ = done_tx.send(Err(msg.clone()));
+                let stranded: Vec<u64> = waiters.keys().copied().collect();
+                for rid in stranded {
+                    resolve(&mut waiters, rid, Err(msg.clone()));
                 }
                 return std::mem::take(&mut engine.metrics);
             }

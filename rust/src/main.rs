@@ -13,7 +13,7 @@
 use codec::bench::figures;
 use codec::cache::CacheConfig;
 use codec::cost::Profile;
-use codec::engine::{AttentionBackend, EngineConfig, Server};
+use codec::engine::{AttentionBackend, EngineConfig, RouterConfig, RoutingPolicy, Server};
 use codec::model::Sampler;
 use codec::runtime::artifacts_dir;
 use codec::util::cli::Args;
@@ -45,8 +45,19 @@ commands:
                [--admit-window N]   (pressure-aware admission: rank the
                 first N pending by cost; 1 = strict FIFO)
                [--admit-max-bypass K] (anti-starvation bound)
+               [--shards N]         (engine shards, each an engine loop
+                on its own thread with a 1/N slice of the page/swap
+                budgets; 1 = the single-engine server)
+               [--routing affinity|p2c|round-robin] (how submits spread
+                across shards: longest cached-prefix match with
+                power-of-two-choices fallback (default), pure
+                power-of-two-choices, or strict rotation)
+               [--router-max-skew S] (affinity imbalance guard: redirect
+                when the affine shard's queue is > S deeper than the
+                shallowest)
                (codec|flash run hermetically; codec-pjrt needs a build
-                with --features pjrt plus AOT artifacts)
+                with --features pjrt plus AOT artifacts, and is
+                single-shard only)
   bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
   bench-all
   table2       [--profile FILE]
@@ -206,6 +217,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let admit_max_bypass = args
         .usize_or("admit-max-bypass", 4)
         .map_err(anyhow::Error::msg)?;
+    let shards = args.usize_or("shards", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(shards >= 1, "--shards must be ≥ 1");
+    let router_cfg = RouterConfig {
+        policy: args
+            .str_or("routing", "affinity")
+            .parse::<RoutingPolicy>()
+            .map_err(anyhow::Error::msg)?,
+        max_skew: args.usize_or("router-max-skew", 8).map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
     let dir = args.str_or("artifacts", &artifacts_dir()).to_string();
 
     let cfg = EngineConfig {
@@ -228,7 +249,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let server = Server::start_for(&dir, cfg)?;
+    let server = if shards > 1 {
+        // start_sharded slices the page/swap budgets 1/N per shard and
+        // rejects the PJRT backend (single-shard only).
+        Server::start_sharded(cfg, shards, router_cfg)?
+    } else {
+        Server::start_for(&dir, cfg)?
+    };
     if poisson_rps > 0.0 {
         // Open-loop Poisson timed replay over the multi-wave
         // shared-prefix workload: arrivals keep coming at the configured
@@ -345,6 +372,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 s.mean, s.p50, s.p99
             );
         }
+    }
+    if m.shards > 1 {
+        println!(
+            "shards:             {} ({} affinity hits, {} cold routes, {} guard overrides, \
+             max queue skew {})",
+            m.shards,
+            m.router_affinity_hits,
+            m.router_cold_routes,
+            m.router_guard_overrides,
+            m.router_max_queue_skew
+        );
     }
     if let Some(rep) = m.slo_report(slo) {
         println!("{}", rep.render());

@@ -1,0 +1,210 @@
+//! Sharded-server acceptance suite:
+//!
+//! * **shard-count invariance** — per-request greedy outputs are pinned
+//!   by the weights and the prompt, not by which shard (or how many)
+//!   serves them: every shard builds identical `NativePieces` weights
+//!   from the same seed, so `--shards 1` and `--shards 4` must emit
+//!   identical tokens for every request of a shared-prefix multi-wave
+//!   trace, under every routing policy;
+//! * **budget slicing** — per-shard page budgets sum to the configured
+//!   total and a budget smaller than the shard count is rejected;
+//! * **shutdown robustness** — one shard's worker panicking surfaces as
+//!   a typed [`ShardFailure`] carrying the panic message, while the
+//!   surviving shards drain and their metrics merge.
+
+use codec::cache::CacheConfig;
+use codec::engine::{
+    AttentionBackend, Engine, EngineConfig, EngineMake, RouterConfig, RoutingPolicy, Server,
+};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::workload::MultiWaveGen;
+
+fn tiny_model() -> ModelInfo {
+    ModelInfo {
+        name: "shard-test".to_string(),
+        vocab: 128,
+        n_layers: 2,
+        n_q_heads: 2,
+        n_kv_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn config() -> EngineConfig {
+    EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: tiny_model(),
+        max_batch: 4,
+        sampler: Sampler::Greedy,
+        seed: 5,
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+/// Shared-prefix multi-wave trace (3 docs × 2 waves × 2 questions),
+/// submitted in deterministic arrival order (untimed).
+fn trace_prompts() -> Vec<(Vec<u32>, usize)> {
+    let gen = MultiWaveGen {
+        num_docs: 3,
+        doc_tokens: 24,
+        waves: 2,
+        questions_per_doc: 2,
+        question_tokens: 4,
+        max_new_tokens: 4,
+        ..Default::default()
+    };
+    gen.build_trace()
+        .entries
+        .into_iter()
+        .map(|e| (e.prompt, e.max_new_tokens))
+        .collect()
+}
+
+fn outputs_with(shards: usize, policy: RoutingPolicy) -> Vec<Vec<u32>> {
+    let rcfg = RouterConfig {
+        policy,
+        ..Default::default()
+    };
+    let server = Server::start_sharded(config(), shards, rcfg).expect("server start");
+    assert_eq!(server.shards(), shards);
+    let prompts = trace_prompts();
+    let n = prompts.len();
+    let handles: Vec<_> = prompts
+        .into_iter()
+        .map(|(p, max_new)| server.submit(p, max_new))
+        .collect();
+    let outputs: Vec<Vec<u32>> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("request must complete"))
+        .collect();
+    let m = server.shutdown();
+    assert_eq!(m.requests.len(), n, "merged metrics must cover all requests");
+    assert_eq!(m.shards, shards);
+    outputs
+}
+
+#[test]
+fn greedy_outputs_invariant_across_shard_counts_and_policies() {
+    let baseline = outputs_with(1, RoutingPolicy::Affinity);
+    assert!(baseline.iter().all(|o| !o.is_empty()));
+    for (shards, policy) in [
+        (4, RoutingPolicy::Affinity),
+        (4, RoutingPolicy::RoundRobin),
+        (2, RoutingPolicy::PowerOfTwo),
+    ] {
+        let sharded = outputs_with(shards, policy);
+        assert_eq!(
+            baseline, sharded,
+            "greedy outputs must be identical under shards={shards}, {policy:?}"
+        );
+    }
+}
+
+#[test]
+fn affinity_routing_keeps_prefixes_warm_across_shards() {
+    // 4 shards, warm trace: affinity must route repeat questions to the
+    // shard holding the document, so the aggregate share rate stays
+    // well above zero and the router records hits.
+    let rcfg = RouterConfig {
+        policy: RoutingPolicy::Affinity,
+        ..Default::default()
+    };
+    let server = Server::start_sharded(config(), 4, rcfg).expect("server start");
+    let handles: Vec<_> = trace_prompts()
+        .into_iter()
+        .map(|(p, max_new)| server.submit(p, max_new))
+        .collect();
+    for h in handles {
+        h.wait().expect("request must complete");
+    }
+    let m = server.shutdown();
+    assert!(m.router_affinity_hits > 0, "warm trace must hit the prefix index");
+    assert!(
+        m.prefill_tokens_shared > 0,
+        "affinity routing must land repeat questions on warm forests"
+    );
+}
+
+#[test]
+fn per_shard_budgets_slice_the_total() {
+    let mut cfg = config();
+    cfg.cache = CacheConfig {
+        page_budget: Some(102), // 102 = 4·25 + 2: remainder spread over shards 0..2
+        swap_budget: Some(8),
+        ..Default::default()
+    };
+    let server = Server::start_sharded(cfg, 4, RouterConfig::default()).expect("server start");
+    let h = server.submit((1..20).collect(), 2);
+    h.wait().expect("request must complete");
+    let report = server.shutdown_report();
+    assert!(report.failures.is_empty());
+    let budgets: Vec<usize> = report
+        .shard_metrics
+        .iter()
+        .map(|m| m.as_ref().unwrap().kv_budget_pages.unwrap())
+        .collect();
+    let mut sorted = budgets.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![25, 25, 26, 26], "remainder spread first");
+    assert_eq!(report.metrics.kv_budget_pages, Some(102), "budget gauge re-sums the slices");
+    assert_eq!(report.metrics.kv_swap_budget_pages, Some(8));
+}
+
+#[test]
+fn budget_smaller_than_shard_count_is_rejected() {
+    let mut cfg = config();
+    cfg.cache = CacheConfig {
+        page_budget: Some(2),
+        ..Default::default()
+    };
+    let Err(err) = Server::start_sharded(cfg, 4, RouterConfig::default()) else {
+        panic!("a 2-page budget must not be splittable across 4 shards");
+    };
+    assert!(err.to_string().contains("cannot be split"), "{err:#}");
+}
+
+#[test]
+fn panicking_shard_reports_typed_failure_and_survivors_drain() {
+    let healthy_cfg = config();
+    let panicking_cfg = config();
+    let makes: Vec<EngineMake> = vec![
+        Box::new(move || Engine::new(healthy_cfg)),
+        Box::new(move || {
+            let mut e = Engine::new(panicking_cfg)?;
+            e.debug_panic_next_step();
+            Ok(e)
+        }),
+    ];
+    let rcfg = RouterConfig {
+        policy: RoutingPolicy::RoundRobin, // shard 0 then shard 1, deterministically
+        ..Default::default()
+    };
+    let server = Server::start_sharded_with(makes, rcfg).expect("server start");
+    let healthy = server.submit((1..12).collect(), 2);
+    let doomed = server.submit((100..112).collect(), 2);
+    let tokens = healthy.wait().expect("healthy shard must keep serving");
+    assert!(!tokens.is_empty());
+    assert!(
+        doomed.wait().is_err(),
+        "the panicked shard's waiter must resolve to an error, not hang"
+    );
+
+    let report = server.shutdown_report();
+    assert_eq!(report.failures.len(), 1, "exactly one shard died");
+    assert_eq!(report.failures[0].shard, 1);
+    assert!(
+        report.failures[0].message.contains("injected engine panic"),
+        "panic payload must be reported: {:?}",
+        report.failures[0].message
+    );
+    assert!(report.shard_metrics[0].is_some());
+    assert!(report.shard_metrics[1].is_none());
+    // The survivor's work is present in the merged metrics.
+    assert_eq!(report.metrics.shards, 1, "one clean shard");
+    assert!(report.metrics.tokens_generated >= 2);
+    assert!(!report.metrics.requests.is_empty());
+}
