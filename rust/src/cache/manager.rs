@@ -49,7 +49,7 @@
 
 use crate::engine::metrics::TimeStat;
 use crate::kvforest::forest::{InsertOutcome, StorageEvent};
-use crate::kvforest::{Forest, KvStore, NodeId, RequestId};
+use crate::kvforest::{Forest, KvStore, NodeId, PageState, RequestId};
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
@@ -817,6 +817,7 @@ impl CacheManager {
             let Some(path) = self.forest.path(rid) else {
                 continue;
             };
+            // lint: allow(no-unwrap, reason = "forest paths always contain at least the request's first node; an empty path is never stored")
             let leaf = *path.last().expect("empty path");
             let n = self.forest.node(leaf);
             let private = n.degree() == 1 && n.children.is_empty();
@@ -830,6 +831,108 @@ impl CacheManager {
             }
         }
         pages
+    }
+
+    // -----------------------------------------------------------------
+    // Runtime invariant audit.
+    // -----------------------------------------------------------------
+
+    /// Full soundness audit of the cache: the forest's structural
+    /// invariants ([`Forest::check_invariants`]) plus the accounting
+    /// balance between the forest's view of each node and the paged
+    /// store's ledgers:
+    ///
+    /// * a *resident* node is unknown to the host tier, and the device
+    ///   pages its block tables reference (summed over layers) are part
+    ///   of the pool's `allocated_pages()` total — every allocated page
+    ///   is reachable from exactly one alive node, so the sums match;
+    /// * a *swapped* node has a host-tier buffer and **no** device
+    ///   pages in any layer, and the number of swapped alive nodes
+    ///   equals the store's `swapped_nodes()` ledger;
+    /// * the pool high-water marks never exceeded the configured
+    ///   budgets (`max_allocated_pages() ≤ page_budget`,
+    ///   `max_swapped_pages() ≤ swap_budget`).
+    ///
+    /// O(alive nodes × layers) — strictly a debugging/verification
+    /// mode; the engine runs it after every mutation stage when
+    /// `EngineConfig::audit` is set and surfaces the violation as a
+    /// step error.
+    pub fn audit(&self) -> Result<(), String> {
+        self.forest.check_invariants()?;
+        let mut device_pages = 0usize;
+        let mut swapped_alive = 0usize;
+        for (nid, n) in self.forest.alive_nodes() {
+            match n.state() {
+                PageState::Resident => {
+                    if self.store.node_swapped(nid) {
+                        return Err(format!(
+                            "accounting: resident node {nid} has a host-tier buffer"
+                        ));
+                    }
+                    for layer in 0..self.n_layers {
+                        device_pages += self.store.node_page_ids(layer, nid).len();
+                    }
+                }
+                PageState::Swapped => {
+                    swapped_alive += 1;
+                    if !self.store.node_swapped(nid) {
+                        return Err(format!(
+                            "accounting: swapped node {nid} has no host-tier buffer"
+                        ));
+                    }
+                    for layer in 0..self.n_layers {
+                        let pages = self.store.node_page_ids(layer, nid);
+                        if !pages.is_empty() {
+                            return Err(format!(
+                                "accounting: swapped node {nid} still holds {} \
+                                 device pages in layer {layer}",
+                                pages.len()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let allocated = self.store.allocated_pages();
+        if device_pages != allocated {
+            return Err(format!(
+                "accounting: alive nodes reference {device_pages} device pages \
+                 but the pool has {allocated} allocated (leak or orphan)"
+            ));
+        }
+        let swapped = self.store.swapped_nodes();
+        if swapped_alive != swapped {
+            return Err(format!(
+                "accounting: {swapped_alive} alive nodes are swapped but the \
+                 host tier holds {swapped} buffers"
+            ));
+        }
+        if let Some(budget) = self.cfg.page_budget {
+            let peak = self.store.max_allocated_pages();
+            if peak > budget {
+                return Err(format!(
+                    "accounting: device high-water mark {peak} pages exceeds \
+                     budget {budget}"
+                ));
+            }
+        }
+        if let Some(budget) = self.cfg.swap_budget {
+            let peak = self.store.max_swapped_pages();
+            if peak > budget {
+                return Err(format!(
+                    "accounting: host-tier high-water mark {peak} pages \
+                     exceeds swap budget {budget}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Test hook: corrupt the forest so the next [`CacheManager::audit`]
+    /// fails (see [`Forest::debug_corrupt_for_audit`]).
+    #[doc(hidden)]
+    pub fn debug_corrupt_forest(&mut self) {
+        self.forest.debug_corrupt_for_audit();
     }
 }
 

@@ -27,10 +27,12 @@ impl ActiveRequest {
     /// The token consumed by the next decode step: the last sampled
     /// token, or the last prompt token right after prefill.
     pub fn last_token(&self) -> u32 {
-        *self
-            .generated
+        self.generated
             .last()
-            .unwrap_or_else(|| self.req.prompt.last().unwrap())
+            .or_else(|| self.req.prompt.last())
+            .copied()
+            // lint: allow(no-unwrap, reason = "Request::new rejects empty prompts, so prompt.last() always exists")
+            .expect("request with an empty prompt")
     }
 
     pub fn done(&self) -> bool {
@@ -114,6 +116,7 @@ impl Batcher {
         for skipped in self.pending.iter().take(idx) {
             *self.bypasses.entry(skipped.id).or_insert(0) += 1;
         }
+        // lint: allow(no-unwrap, reason = "idx < pending.len() checked at function entry")
         let req = self.pending.remove(idx).expect("idx bounds checked");
         let id = req.id;
         let bypassed = self.bypasses.remove(&id).unwrap_or(0);

@@ -106,6 +106,16 @@ pub struct EngineConfig {
     /// weights across shards are what make greedy outputs
     /// shard-count-invariant.
     pub shard_id: usize,
+    /// Run the full invariant auditor ([`CacheManager::audit`]: forest
+    /// `check_invariants` + paged/host-pool accounting balance) at every
+    /// step boundary — step entry, after admission (which covers the
+    /// evict/demote/restore bursts inside it), after decode, and after
+    /// retirement. A violation fails the step with a typed error (the
+    /// shard-failure path), so corruption is caught at the step that
+    /// caused it instead of as a wrong answer later. Costs one full
+    /// forest walk per checkpoint (`Metrics::audit_times`); off by
+    /// default, on in the property tests and the CI audit smoke run.
+    pub audit: bool,
 }
 
 impl Default for EngineConfig {
@@ -125,6 +135,7 @@ impl Default for EngineConfig {
             admit_max_bypass: 4,
             cache: CacheConfig::default(),
             shard_id: 0,
+            audit: false,
         }
     }
 }
@@ -275,9 +286,15 @@ impl Engine {
     /// Returns finished (id, generated tokens).
     pub fn step(&mut self) -> Result<Vec<(u64, Vec<u32>)>> {
         if self.panic_next_step {
+            // lint: allow(no-unwrap, reason = "deliberate test-only failure injection armed by debug_panic_next_step")
             panic!("injected engine panic (debug_panic_next_step)");
         }
+        // Audited at entry (not only after mutations) so corruption from
+        // outside the step loop — or from a previous step racing a debug
+        // hook — is caught before admission walks the damaged structures.
+        self.audit_check("step entry")?;
         self.admit_requests()?;
+        self.audit_check("admission (incl. evict/demote/restore)")?;
         let decoding: Vec<u64> = self
             .batcher
             .active()
@@ -290,6 +307,7 @@ impl Engine {
             let t0 = Instant::now();
             self.decode_step(&decoding)?;
             self.metrics.step_times.record(t0.elapsed());
+            self.audit_check("decode")?;
         }
         let done = self.batcher.retire_done();
         let mut finished = Vec::new();
@@ -301,8 +319,42 @@ impl Engine {
             self.cached_divisions.clear(); // structure changed
             finished.push((a.req.id, a.generated));
         }
+        if !finished.is_empty() {
+            self.audit_check("retire")?;
+        }
         self.metrics.observe_cache(&self.cache);
         Ok(finished)
+    }
+
+    /// Run the full invariant audit when [`EngineConfig::audit`] is on.
+    /// `stage` names the step boundary for the error message; a failed
+    /// audit is a typed step error, which the server surfaces through
+    /// the shard-failure path like any other fatal step error.
+    fn audit_check(&mut self, stage: &str) -> Result<()> {
+        if !self.cfg.audit {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let result = self.cache.audit();
+        self.metrics.audit_times.record(t0.elapsed());
+        self.metrics.audit_checks += 1;
+        result.map_err(|violation| {
+            anyhow::anyhow!(
+                "invariant audit failed at {stage} (shard {}, step {}): {violation}",
+                self.cfg.shard_id,
+                self.step_count
+            )
+        })
+    }
+
+    /// Test hook: deliberately corrupt the forest so the audit-mode
+    /// property tests can prove [`EngineConfig::audit`] catches real
+    /// invariant violations (not just that it runs). Routed through the
+    /// cache manager — the engine still never touches the forest
+    /// directly.
+    #[doc(hidden)]
+    pub fn debug_corrupt_forest(&mut self) {
+        self.cache.debug_corrupt_forest();
     }
 
     /// Pressure-aware admission behind the manager's memory gate. A
@@ -343,7 +395,12 @@ impl Engine {
             ranked.sort_unstable();
             let mut admitted = None;
             for &(_, idx) in &ranked {
-                let req = self.batcher.pending_at(idx).expect("window index in range");
+                // Window indices come from scan_window over the same
+                // queue; a missing entry would be a batcher bug, and
+                // skipping it degrades to considering fewer candidates.
+                let Some(req) = self.batcher.pending_at(idx) else {
+                    continue;
+                };
                 if self.cache.try_admit(req.id, &req.prompt, req.max_new_tokens) {
                     admitted = Some((idx, req.id));
                     break;
@@ -356,7 +413,11 @@ impl Engine {
                     // window candidate fits — the head in particular can
                     // never fit. Reject it alone; the rest of the queue
                     // may well fit once it is out of the way.
-                    let req = self.batcher.reject_front().expect("pending checked");
+                    // pending_len() > 0 held at loop entry; an empty
+                    // queue here means nothing to reject after all.
+                    let Some(req) = self.batcher.reject_front() else {
+                        return Ok(());
+                    };
                     self.cache.forget_score(req.id);
                     let msg = format!(
                         "request {} ({} prompt tokens, max_new {}) cannot fit the \
@@ -378,7 +439,11 @@ impl Engine {
             if idx > 0 {
                 self.cache.stats.admission_reorders += 1;
             }
-            self.batcher.admit_at(idx).expect("slot + index checked");
+            anyhow::ensure!(
+                self.batcher.admit_at(idx).is_some(),
+                "admission invariant: slot or window index {idx} vanished between \
+                 scan and admit"
+            );
             let preemptions_before = self.cache.stats.preemptions;
             self.prefill(rid)?;
             if self.cache.stats.preemptions > preemptions_before {
@@ -412,7 +477,11 @@ impl Engine {
                     need
                 );
             }
-            let victim = *rids.last().expect("non-empty");
+            // rids.is_empty() returned above, so a last element exists;
+            // an empty list here just means nothing left to decode.
+            let Some(&victim) = rids.last() else {
+                return Ok(rids);
+            };
             self.preempt(victim);
             rids.pop();
         }
@@ -479,12 +548,10 @@ impl Engine {
     // -----------------------------------------------------------------
 
     fn prefill(&mut self, rid: u64) -> Result<()> {
-        let req = self
-            .batcher
-            .get_mut(rid)
-            .expect("admitted request missing")
-            .req
-            .clone();
+        let Some(active) = self.batcher.get_mut(rid) else {
+            anyhow::bail!("prefill: admitted request {rid} missing from the active set");
+        };
+        let req = active.req.clone();
         // Any swapped prefix the prompt matches is restored first — a
         // host→device memcpy, never a re-prefill — because active paths
         // must be resident before the radix insert commits. The restore
@@ -536,10 +603,17 @@ impl Engine {
         // Fully-shared prompts (novel == 0) recompute it without appends.
         let x = match x_last {
             Some(x) => x,
-            None => self.token_pass_no_append(rid, *req.prompt.last().unwrap())?,
+            None => {
+                let Some(&last) = req.prompt.last() else {
+                    anyhow::bail!("prefill: request {rid} has an empty prompt");
+                };
+                self.token_pass_no_append(rid, last)?
+            }
         };
         let first = self.sample_rows(&x)?[0];
-        let a = self.batcher.get_mut(rid).unwrap();
+        let Some(a) = self.batcher.get_mut(rid) else {
+            anyhow::bail!("prefill: request {rid} vanished from the active set");
+        };
         a.generated.push(first);
         a.prefilled = true;
         self.metrics.on_token(rid);
@@ -572,7 +646,10 @@ impl Engine {
     fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
         let mi = self.pieces.model().clone();
         let forest = self.cache.forest();
-        let path = forest.path(rid).expect("path").to_vec();
+        let Some(path) = forest.path(rid) else {
+            anyhow::bail!("fill: request {rid} has no path in the forest");
+        };
+        let path = path.to_vec();
         let ctx_total: usize = path.iter().map(|&n| forest.node(n).len).sum();
         let start = ctx_total - len; // global position of the leaf's first token
         let tokens: Vec<u32> = forest.node(node).tokens.clone();
@@ -618,6 +695,7 @@ impl Engine {
                 // padding) to the paged store and the in-memory gathers.
                 for i in 0..chunk {
                     self.cache
+                        // lint: allow(forest-mutation, reason = "sanctioned append seam: the manager reserved these pages (ensure_pages_or_preempt) and accounts them")
                         .store_mut()
                         .append(layer, node, &ks[i].data, &vs[i].data);
                 }
@@ -693,7 +771,10 @@ impl Engine {
     fn token_pass_no_append(&mut self, rid: u64, token: u32) -> Result<Mat> {
         let mi = self.pieces.model().clone();
         let forest = self.cache.forest();
-        let path = forest.path(rid).expect("path").to_vec();
+        let Some(path) = forest.path(rid) else {
+            anyhow::bail!("token pass: request {rid} has no path in the forest");
+        };
+        let path = path.to_vec();
         let ctx: usize = path.iter().map(|&n| forest.node(n).len).sum();
         let b = self.pieces.batch_bucket(1)?;
         let mut toks = vec![token as i32];
@@ -751,7 +832,9 @@ impl Engine {
         let mut positions = Vec::with_capacity(bs);
         let mut nodes = Vec::with_capacity(bs);
         for &rid in rids {
-            let a = self.batcher.get_mut(rid).unwrap();
+            let Some(a) = self.batcher.get_mut(rid) else {
+                anyhow::bail!("decode: request {rid} missing from the active set");
+            };
             let tok = a.last_token();
             let pos = a.next_pos() - 1; // position of `tok`
             tokens.push(tok);
@@ -776,6 +859,7 @@ impl Engine {
             // token attends to itself).
             for (ri, &node) in nodes.iter().enumerate() {
                 self.cache
+                    // lint: allow(forest-mutation, reason = "sanctioned append seam: the manager reserved these pages (reclaim_for_decode) and accounts them")
                     .store_mut()
                     .append(layer, node, &ks[ri].data, &vs[ri].data);
             }
@@ -817,7 +901,10 @@ impl Engine {
         }
         let sampled = self.sample_rows(&x)?;
         for (ri, &rid) in rids.iter().enumerate() {
-            self.batcher.get_mut(rid).unwrap().generated.push(sampled[ri]);
+            let Some(a) = self.batcher.get_mut(rid) else {
+                anyhow::bail!("decode: request {rid} vanished from the active set");
+            };
+            a.generated.push(sampled[ri]);
             self.metrics.on_token(rid);
         }
         self.step_count += 1;

@@ -301,6 +301,14 @@ pub struct Metrics {
     /// (the cost a prefix hit pays instead of a re-prefill).
     pub swap_restore_times: TimeStat,
 
+    // --- invariant auditor (see `EngineConfig::audit`) ---
+    /// Full cache audits run (`CacheManager::audit`: forest invariants
+    /// + accounting balance). Zero when auditing is off.
+    pub audit_checks: usize,
+    /// Wall time per audit — the observability cost of the audit mode,
+    /// so its overhead is measurable rather than folded into step time.
+    pub audit_times: TimeStat,
+
     // --- sharding / router gauges (a single-engine snapshot leaves
     // them zero; `Server::shutdown` fills them from the router and sets
     // `shards` to the number of shards that exited cleanly) ---
@@ -430,6 +438,8 @@ impl Metrics {
         self.prefill_attn_times.merge(&other.prefill_attn_times);
         self.plan_times.merge(&other.plan_times);
         self.swap_restore_times.merge(&other.swap_restore_times);
+        self.audit_checks += other.audit_checks;
+        self.audit_times.merge(&other.audit_times);
         self.plans_computed += other.plans_computed;
         self.plans_reused += other.plans_reused;
         let (a, b) = (self.min_plan_lower_bound_ms, other.min_plan_lower_bound_ms);

@@ -507,7 +507,9 @@ impl Forest {
         // No generation bump: an append can only lengthen matches (see
         // the `generation` field docs), and bumping here would defeat
         // the admission-score memo on every decode step.
+        // lint: allow(no-unwrap, reason = "caller contract: rid was inserted and not released; paths are never empty (insert_request seeds at least one node)")
         let path = self.paths.get(&rid).expect("unknown request").clone();
+        // lint: allow(no-unwrap, reason = "paths are never empty: insert_request seeds at least one node")
         let leaf = *path.last().expect("empty path");
         let private = self.nodes[leaf].degree() == 1 && self.nodes[leaf].children.is_empty();
         let target = if private {
@@ -516,7 +518,8 @@ impl Forest {
             let nn = self.alloc(leaf);
             self.nodes[leaf].children.push(nn);
             self.nodes[nn].add_request(rid);
-            self.paths.get_mut(&rid).unwrap().push(nn);
+            // lint: allow(no-unwrap, reason = "same rid just read from paths a few lines up")
+            self.paths.get_mut(&rid).expect("unknown request").push(nn);
             // A *cold* shared leaf cannot fork (degree 0 requests never
             // append), but refresh anyway to keep the invariant local.
             self.refresh_frontier(leaf);
@@ -841,6 +844,29 @@ impl Forest {
             }
         }
         Ok(())
+    }
+
+    /// Deliberately corrupt the forest so [`Forest::check_invariants`]
+    /// fails — a test hook for proving the runtime invariant auditor
+    /// actually fires (see `EngineConfig::audit`). Prefers the
+    /// stale-stamp hazard (an incremental-frontier key whose stamp no
+    /// longer matches its node's), the exact class of bug the frontier
+    /// bookkeeping exists to prevent; falls back to registering an
+    /// unknown request on an alive node when the frontier is empty.
+    /// Never call outside tests: the forest is unusable afterwards.
+    #[doc(hidden)]
+    pub fn debug_corrupt_for_audit(&mut self) {
+        if let Some(&(stamp, nid)) = self.frontier.keys().next() {
+            // Bump the node's stamp without re-keying the frontier
+            // entry: the (stamp, node) key is now stale.
+            self.nodes[nid].stamp = stamp + 1;
+            return;
+        }
+        if let Some(nid) = (1..self.nodes.len()).find(|&i| self.nodes[i].alive) {
+            // No frontier entry to stale-stamp (every node is on an
+            // active path): claim a request that does not exist.
+            self.nodes[nid].requests.push(RequestId::MAX);
+        }
     }
 }
 

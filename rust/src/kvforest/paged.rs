@@ -256,7 +256,8 @@ impl LayerStore {
             let p = self.pool.alloc_page();
             bl.pages.push(p);
         }
-        let page = *bl.pages.last().unwrap();
+        // lint: allow(no-unwrap, reason = "slot 0 pushed a page just above; otherwise len % page_tokens != 0 implies pages is non-empty")
+        let page = *bl.pages.last().expect("block list has a page");
         bl.len += 1;
         for head in 0..h {
             self.pool
@@ -270,6 +271,7 @@ impl LayerStore {
 
     /// Materialize rows [lo, hi) of `node` for `head` as (K, V) matrices.
     fn node_kv(&self, node: NodeId, head: usize, lo: usize, hi: usize) -> (Mat, Mat) {
+        // lint: allow(no-unwrap, reason = "caller contract: reads target filled nodes; the forest's NeedFill discipline guarantees storage exists")
         let bl = self.blocks.get(&node).expect("node has no storage");
         assert!(lo <= hi && hi <= bl.len, "range {lo}..{hi} of {}", bl.len);
         let d = self.pool.d_head;
@@ -312,7 +314,8 @@ impl LayerStore {
             }
         }
         // Truncate the head node: drop now-unused whole pages.
-        let bl = self.blocks.get_mut(&node).unwrap();
+        // lint: allow(no-unwrap, reason = "same key read immutably at function entry (early-returned when absent)")
+        let bl = self.blocks.get_mut(&node).expect("node storage checked");
         bl.len = at;
         let pages_needed = at.div_ceil(self.pool.page_tokens);
         let freed: Vec<usize> = bl.pages.split_off(pages_needed);
@@ -393,6 +396,7 @@ impl LayerStore {
             if tok % pt == 0 {
                 bl.pages.push(self.pool.alloc_page());
             }
+            // lint: allow(no-unwrap, reason = "tok 0 pushed a page just above, so the block list is non-empty from the first iteration")
             let page = *bl.pages.last().expect("page just pushed");
             let base = (tok % pt) * row_f;
             self.pool.pages[page][base..base + row_f]

@@ -47,10 +47,18 @@
 
 pub mod attention;
 pub mod bench;
+// The serving path (engine + cache + kvforest) is panic-free by policy:
+// `.unwrap()` is denied by clippy here (mirroring `cargo xtask lint`'s
+// no-unwrap rule; `clippy.toml` exempts test code), and the remaining
+// `.expect(...)` sites each carry a `// lint: allow(no-unwrap, ...)`
+// annotation stating why the invariant cannot fail.
+#[deny(clippy::unwrap_used)]
 pub mod cache;
 pub mod cost;
+#[deny(clippy::unwrap_used)]
 pub mod engine;
 pub mod gpusim;
+#[deny(clippy::unwrap_used)]
 pub mod kvforest;
 pub mod model;
 pub mod reduction;

@@ -42,6 +42,11 @@ commands:
                [--waves W]          (question waves over the corpus in
                 Poisson mode; later waves hit the retained cache)
                [--slo-ttft MS] [--slo-tpot MS]
+               [--audit]            (run the full invariant auditor —
+                forest structure + page accounting balance — after every
+                engine mutation stage; a violation aborts the step with
+                a diagnostic. Expensive: for verification runs, not
+                production serving)
                [--admit-window N]   (pressure-aware admission: rank the
                 first N pending by cost; 1 = strict FIFO)
                [--admit-max-bypass K] (anti-starvation bound)
@@ -74,7 +79,7 @@ fn main() {
     let Some(cmd) = argv.first().cloned() else {
         usage()
     };
-    let args = match Args::parse(argv[1..].iter().cloned(), &["verbose"]) {
+    let args = match Args::parse(argv[1..].iter().cloned(), &["verbose", "audit"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -246,6 +251,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             swap_budget: (swap_budget > 0).then_some(swap_budget),
             ..Default::default()
         },
+        audit: args.flag("audit"),
         ..Default::default()
     };
     let t0 = Instant::now();
@@ -372,6 +378,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 s.mean, s.p50, s.p99
             );
         }
+    }
+    if m.audit_checks > 0 {
+        let per_check = m
+            .audit_times
+            .summary_ms()
+            .map(|s| format!(" ({:.3} ms/check mean)", s.mean))
+            .unwrap_or_default();
+        println!(
+            "invariant audit:    {} checks passed{per_check}",
+            m.audit_checks
+        );
     }
     if m.shards > 1 {
         println!(

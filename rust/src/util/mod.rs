@@ -10,10 +10,12 @@
 //! * [`stats`] — summary statistics used by the bench harness
 //! * [`threadpool`] — a scoped worker pool for the parallel executors
 //! * [`logging`] — a leveled stderr logger
+//! * [`sync`] — std-vs-loom concurrency shims for the serving layer
 
 pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

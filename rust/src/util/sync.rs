@@ -1,0 +1,62 @@
+//! Concurrency-primitive shims: std by default, `loom` under `--cfg loom`.
+//!
+//! Everything concurrency-sensitive in the serving layer
+//! (`engine::server`'s router lock, shard queue-depth counters, worker
+//! spawning) imports its primitives from here instead of `std::sync`,
+//! so the same code compiles against the [loom] model checker's
+//! instrumented types when built with `RUSTFLAGS="--cfg loom"`. The
+//! in-tree `rust/loom-stub` keeps that build hermetic (it re-exports
+//! std under loom's paths and runs models on real threads); patching in
+//! the real loom crate upgrades the model tests in
+//! `rust/tests/loom_sync.rs` to exhaustive interleaving exploration
+//! with no source change.
+//!
+//! mpsc channels intentionally stay `std::sync::mpsc` in both builds:
+//! loom models them poorly and the repo treats channel transfer as a
+//! trusted primitive; the properties under test are the lock/atomic
+//! protocols *around* the channels.
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Run a concurrency model test body.
+///
+/// Under `--cfg loom` this is `loom::model(f)` — with the real loom
+/// patched in, every legal interleaving of the body's loom-typed
+/// operations is explored. In the default build the body simply runs
+/// once on real threads, so the model tests double as live regression
+/// tests in plain `cargo test`.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    #[cfg(loom)]
+    loom::model(f);
+    #[cfg(not(loom))]
+    f();
+}

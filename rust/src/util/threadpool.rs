@@ -48,6 +48,7 @@ where
             s.spawn(|| {
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
+                    // lint: allow(relaxed-ordering, reason = "advisory work-claim index: only the fetch_add's atomicity matters, and scope join provides the final happens-before for the results")
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;

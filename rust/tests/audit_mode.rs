@@ -1,0 +1,200 @@
+//! Acceptance suite for the runtime invariant auditor
+//! (`EngineConfig::audit` → `CacheManager::audit`): a clean run under
+//! memory pressure passes every checkpoint, the audit provably catches
+//! a corrupted forest, auditing never changes outputs, and the
+//! default-off path costs zero checks.
+//!
+//! Fully hermetic: everything runs on the native transformer backend.
+
+use codec::cache::CacheConfig;
+use codec::engine::{AttentionBackend, Engine, EngineConfig, Request};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::util::prng::Rng;
+use codec::workload::MultiWaveGen;
+
+fn small_model() -> ModelInfo {
+    ModelInfo {
+        name: "audit-small".to_string(),
+        vocab: 256,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn engine(cache: CacheConfig, audit: bool) -> Engine {
+    Engine::new(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: small_model(),
+        max_batch: 8,
+        sampler: Sampler::Greedy,
+        seed: 5,
+        workers: 2,
+        cache,
+        audit,
+        ..Default::default()
+    })
+    .expect("engine init")
+}
+
+fn run_wave(e: &mut Engine, prompts: &[Vec<u32>], base_id: u64, max_new: usize) -> Vec<Vec<u32>> {
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(Request::new(base_id + i as u64, p.clone(), max_new));
+    }
+    let mut out = e.run_to_completion().unwrap();
+    out.sort_by_key(|(id, _)| *id);
+    out.into_iter().map(|(_, toks)| toks).collect()
+}
+
+/// The pressure workload from the swap acceptance suite: a 24-page
+/// device budget cannot hold both documents, so wave 0 already demotes,
+/// and wave 1's prefix hits restore from the host tier — every
+/// admission / evict / demote / restore / decode checkpoint fires.
+fn pressure_gen() -> MultiWaveGen {
+    MultiWaveGen {
+        num_docs: 2,
+        doc_tokens: 96,
+        waves: 2,
+        questions_per_doc: 3,
+        question_tokens: 4,
+        max_new_tokens: 6,
+        ..Default::default()
+    }
+}
+
+/// A clean run under full two-tier memory pressure passes every audit
+/// checkpoint, actually exercised the demote/restore paths it claims to
+/// audit, and recorded the audit cost in the metrics.
+#[test]
+fn audit_passes_clean_run_under_two_tier_pressure() {
+    let gen = pressure_gen();
+    let mut e = engine(
+        CacheConfig {
+            page_budget: Some(24),
+            swap_budget: Some(1024),
+            ..Default::default()
+        },
+        true,
+    );
+    let w0 = run_wave(&mut e, &gen.wave_prompts(0), 0, gen.max_new_tokens);
+    let w1 = run_wave(&mut e, &gen.wave_prompts(1), 100, gen.max_new_tokens);
+    assert_eq!(w0.len() + w1.len(), 12, "audited run must still complete");
+
+    assert!(e.metrics.swap_outs > 0, "the workload must demote (else the audit proved nothing)");
+    assert!(e.metrics.swap_ins > 0, "the workload must restore");
+    assert!(
+        e.metrics.audit_checks > 0,
+        "audit mode must actually run checks"
+    );
+    assert_eq!(
+        e.metrics.audit_times.count(),
+        e.metrics.audit_checks,
+        "every audit check records one timing sample"
+    );
+}
+
+/// Auditing is observability, not behavior: greedy outputs with the
+/// auditor on are bit-identical to the same run with it off.
+#[test]
+fn audit_mode_never_changes_outputs() {
+    let gen = pressure_gen();
+    let cache = || CacheConfig {
+        page_budget: Some(24),
+        swap_budget: Some(1024),
+        ..Default::default()
+    };
+    let run = |audit: bool| {
+        let mut e = engine(cache(), audit);
+        let w0 = run_wave(&mut e, &gen.wave_prompts(0), 0, gen.max_new_tokens);
+        let w1 = run_wave(&mut e, &gen.wave_prompts(1), 100, gen.max_new_tokens);
+        (w0, w1)
+    };
+    assert_eq!(run(true), run(false), "the auditor must be a pure observer");
+}
+
+/// Off by default, and the off path is genuinely free: zero checks,
+/// zero timing samples.
+#[test]
+fn audit_is_off_by_default_and_costs_nothing_when_off() {
+    assert!(!EngineConfig::default().audit, "audit must be opt-in");
+    let mut e = engine(CacheConfig::default(), false);
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|r| (0..24).map(|t| (10 + r * 40 + t) as u32).collect())
+        .collect();
+    run_wave(&mut e, &prompts, 0, 4);
+    assert_eq!(e.metrics.audit_checks, 0);
+    assert_eq!(e.metrics.audit_times.count(), 0);
+}
+
+/// The teeth: corrupt the forest through the debug hook and the next
+/// step must fail with an audit diagnostic — not serve from damaged
+/// structures, and not panic.
+#[test]
+fn audit_catches_deliberate_forest_corruption() {
+    let mut e = engine(CacheConfig::default(), true);
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|r| (0..24).map(|t| (10 + r * 40 + t) as u32).collect())
+        .collect();
+    run_wave(&mut e, &prompts, 0, 4);
+    assert!(e.metrics.audit_checks > 0, "the clean prefix of the run was audited");
+
+    e.debug_corrupt_forest();
+    let err = e.step().expect_err("a corrupted forest must fail the audit");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("invariant audit failed"),
+        "the step error must carry the audit diagnostic, got: {msg}"
+    );
+}
+
+/// Randomized property: across seeds and budget shapes, interleaved
+/// submit/step schedules with the auditor on never trip a checkpoint,
+/// and corruption injected at a random point is always caught by the
+/// next step.
+#[test]
+fn audit_randomized_schedules_clean_then_corrupted() {
+    for seed in [3u64, 17, 1999] {
+        let mut rng = Rng::new(seed);
+        // Budget shape varies per seed: unbounded, evict-only, two-tier.
+        let cache = match seed % 3 {
+            0 => CacheConfig::default(),
+            1 => CacheConfig {
+                page_budget: Some(24),
+                ..Default::default()
+            },
+            _ => CacheConfig {
+                page_budget: Some(24),
+                swap_budget: Some(64),
+                ..Default::default()
+            },
+        };
+        let mut e = engine(cache, true);
+        let doc: Vec<u32> = (10..10 + 40).collect();
+        let mut next_id = 0u64;
+        // Interleave submits with single steps so audits run against
+        // every intermediate state, not just quiescent ones.
+        for _ in 0..20 {
+            if rng.next_u64() % 2 == 0 {
+                let mut p = doc.clone();
+                let tag = 128 + (next_id as u32 % 64);
+                p.extend([tag, tag + 1, tag + 2]);
+                e.submit(Request::new(next_id, p, 3));
+                next_id += 1;
+            }
+            e.step().expect("audited step on a clean engine");
+        }
+        e.run_to_completion().expect("audited drain on a clean engine");
+        assert!(e.metrics.audit_checks > 0);
+
+        e.debug_corrupt_forest();
+        let err = e.step().expect_err("corruption must be caught at the next step");
+        assert!(
+            format!("{err:#}").contains("invariant audit failed"),
+            "seed {seed}: wrong error: {err:#}"
+        );
+    }
+}

@@ -1,0 +1,38 @@
+// Fully-annotated twin of the seeded-violation fixtures: every pattern
+// the linter denies appears here either with the allowlist annotation or
+// in the sound structure, so this file must produce zero violations.
+
+fn annotated_unwrap(x: Option<u32>) -> u32 {
+    // lint: allow(no-unwrap, reason = "fixture: the invariant is documented here")
+    x.unwrap()
+}
+
+fn annotated_mutation(cache: &mut CacheManager) {
+    // lint: allow(forest-mutation, reason = "fixture: sanctioned append seam")
+    cache.store_mut().append(0, 1, &[0.0]);
+}
+
+fn annotated_relaxed(counter: &AtomicUsize) {
+    counter.fetch_add(1, Ordering::Relaxed); // lint: allow(relaxed-ordering, reason = "advisory counter")
+}
+
+fn guard_scoped_before_send(m: &Mutex<u32>, tx: &Sender<u32>) {
+    let v = {
+        let guard = m.lock();
+        *guard
+    };
+    tx.send(v);
+}
+
+fn string_contents_never_fire() -> &'static str {
+    "mentions .unwrap() and Ordering::Relaxed and .send( harmlessly"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        Some(1).unwrap();
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,6 @@
+// Seeded violation for the `forest-mutation` rule: engine-scope code
+// reaching past the cache manager straight into the paged store.
+
+fn bypass_the_manager(cache: &mut CacheManager) {
+    cache.store_mut().append(0, 1, &[0.0]);
+}

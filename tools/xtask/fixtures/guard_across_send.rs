@@ -1,0 +1,7 @@
+// Seeded violation for the `guard-across-send` rule: a Mutex guard
+// still live at a channel send (the send blocks while the lock is held).
+
+fn hold_guard_over_send(m: &Mutex<u32>, tx: &Sender<u32>) {
+    let guard = m.lock();
+    tx.send(*guard);
+}

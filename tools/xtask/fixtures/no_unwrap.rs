@@ -1,0 +1,7 @@
+// Seeded violation for the `no-unwrap` rule: a naked unwrap in
+// "production" engine-scope code. The xtask self-test asserts the rule
+// fires here (and nowhere else in this file).
+
+fn production_path(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

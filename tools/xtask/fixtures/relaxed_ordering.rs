@@ -1,0 +1,6 @@
+// Seeded violation for the `relaxed-ordering` rule: a Relaxed atomic op
+// with no justification annotation.
+
+fn bump(counter: &AtomicUsize) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,710 @@
+//! `cargo xtask lint` — the repo-specific architectural lint pass.
+//!
+//! Scans `rust/src/**` and enforces the architecture as deny-by-default
+//! rules. Every rule can be waived per-site with an explicit in-source
+//! annotation that names the rule and carries a non-empty reason:
+//!
+//! ```text
+//! // lint: allow(<rule>, reason = "why this site is sound")
+//! ```
+//!
+//! The annotation applies to its own line when trailing, or to the next
+//! code line when it stands alone on a comment line. The whole
+//! annotation — including the closing quote and paren — must sit on one
+//! comment line.
+//!
+//! Rules:
+//!
+//! * `forest-mutation` — no direct `Forest` / `KvStore` mutation outside
+//!   `cache::manager`. The serving path (`engine/`, `cache/`) must route
+//!   every structural cache mutation through the manager, the single
+//!   accounting point; standalone forests built by workload generators,
+//!   benches, or the GPU simulator are out of scope (they never carry
+//!   served traffic).
+//! * `no-unwrap` — no `.unwrap()` / `.expect()` / `panic!` in non-test
+//!   code under `engine/`, `cache/`, `kvforest/`. Use typed errors (or
+//!   the `ShardFailure` path); annotate the few deliberate sites.
+//! * `guard-across-send` — no `Mutex` guard held across a channel
+//!   `.send(` / `.recv(`. Tracked lexically: a `let <name> = ….lock()…`
+//!   binding is live until its block closes or an explicit
+//!   `drop(<name>)`.
+//! * `relaxed-ordering` — every `Ordering::Relaxed` atomic op carries a
+//!   justification annotation or is upgraded to Acquire/Release.
+//!
+//! Implementation note: this is a lexical scanner (comment/string-aware
+//! line scan with brace-depth and `#[cfg(test)]`-region tracking), not a
+//! syn AST walk — the offline hermetic build cannot vendor registry
+//! crates, and the rules above are all expressible on the token stream.
+//! The scanner strips string-literal contents and comments before
+//! matching, so message text never false-positives a rule.
+//!
+//! Self-tests: `tools/xtask/fixtures/` holds one seeded violation per
+//! rule plus a fully-annotated clean file; `cargo test -p xtask` asserts
+//! each rule fires on its fixture and stays quiet on the clean one.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const RULE_FOREST: &str = "forest-mutation";
+const RULE_UNWRAP: &str = "no-unwrap";
+const RULE_GUARD: &str = "guard-across-send";
+const RULE_RELAXED: &str = "relaxed-ordering";
+/// Meta-rule: a `lint: allow` annotation that is malformed or carries an
+/// empty reason is itself a violation (otherwise the allowlist rots).
+const RULE_ANNOTATION: &str = "annotation";
+
+/// Constructor / method tokens that structurally mutate `Forest` or
+/// `KvStore` state. `CacheManager`'s own engine-facing API (`try_admit`,
+/// `on_retire`, `append_token`, …) is deliberately absent: calling the
+/// manager is the sanctioned path.
+const MUTATION_TOKENS: &[&str] = &[
+    "Forest::new(",
+    "KvStore::new(",
+    ".store_mut()",
+    ".insert_request(",
+    ".release_request(",
+    ".remove_request(",
+    ".evict_leaf(",
+    ".evict_swapped(",
+    ".mark_swapped(",
+    ".mark_resident(",
+    ".demote_node(",
+    ".restore_node(",
+    ".free_node(",
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Which rules apply to a file, derived from its path under `rust/src`.
+#[derive(Debug, Clone, Copy)]
+struct Scope {
+    forest_rule: bool,
+    unwrap_rule: bool,
+}
+
+fn scope_for(rel: &str) -> Scope {
+    let rel = rel.replace('\\', "/");
+    let in_engine = rel.starts_with("engine/");
+    let in_cache = rel.starts_with("cache/");
+    let in_kvforest = rel.starts_with("kvforest/");
+    let is_manager = rel == "cache/manager.rs";
+    Scope {
+        forest_rule: (in_engine || in_cache) && !is_manager,
+        unwrap_rule: in_engine || in_cache || in_kvforest,
+    }
+}
+
+/// Splits source lines into (code, comment), blanking string-literal
+/// contents from the code part. State carries across lines for block
+/// comments and multi-line string literals (including raw strings).
+#[derive(Default)]
+struct Stripper {
+    in_block_comment: bool,
+    in_string: bool,
+    /// `Some(n)` while inside a raw string delimited by `n` hashes.
+    raw_hashes: Option<usize>,
+}
+
+impl Stripper {
+    fn strip(&mut self, line: &str) -> (String, String) {
+        let mut code = String::new();
+        let mut comment = String::new();
+        let b: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < b.len() {
+            if self.in_block_comment {
+                if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    self.in_block_comment = false;
+                    i += 2;
+                } else {
+                    comment.push(b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            if let Some(h) = self.raw_hashes {
+                if b[i] == '"' && b[i + 1..].iter().take(h).all(|c| *c == '#') && b[i + 1..].len() >= h
+                {
+                    self.raw_hashes = None;
+                    code.push('"');
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if self.in_string {
+                match b[i] {
+                    '\\' => i += 2, // escape: skip the escaped char (or the line break)
+                    '"' => {
+                        self.in_string = false;
+                        code.push('"');
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+                continue;
+            }
+            match b[i] {
+                '/' if b.get(i + 1) == Some(&'/') => {
+                    comment.extend(&b[i + 2..]);
+                    break;
+                }
+                '/' if b.get(i + 1) == Some(&'*') => {
+                    self.in_block_comment = true;
+                    i += 2;
+                }
+                '"' => {
+                    self.in_string = true;
+                    code.push('"');
+                    i += 1;
+                }
+                'r' | 'b' if self.raw_string_starts(&code, &b, i) => {
+                    let mut j = i + 1;
+                    if b[i] == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let hashes = b[j..].iter().take_while(|c| **c == '#').count();
+                    self.raw_hashes = Some(hashes);
+                    code.push('"');
+                    i = j + hashes + 1; // past the opening quote
+                }
+                '\'' => {
+                    // Char literal vs lifetime.
+                    if b.get(i + 1) == Some(&'\\') {
+                        // `'\x'` escape literal: skip to the closing quote.
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != '\'' {
+                            j += 1;
+                        }
+                        i = j + 1;
+                    } else if b.get(i + 2) == Some(&'\'') {
+                        i += 3; // `'x'`
+                    } else {
+                        code.push('\'');
+                        i += 1; // lifetime
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        (code, comment)
+    }
+
+    /// True when position `i` starts a raw (byte) string literal:
+    /// `r"`, `r#…#"`, `br"`, … and the previous code char is not part of
+    /// an identifier (so `for r in …` never matches).
+    fn raw_string_starts(&self, code: &str, b: &[char], i: usize) -> bool {
+        let prev_is_ident = code
+            .chars()
+            .last()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if prev_is_ident {
+            return false;
+        }
+        let mut j = i + 1;
+        if b[i] == 'b' {
+            if b.get(j) != Some(&'r') {
+                return false;
+            }
+            j += 1;
+        }
+        while b.get(j) == Some(&'#') {
+            j += 1;
+        }
+        b.get(j) == Some(&'"')
+    }
+}
+
+/// Parses every `lint: allow(<rule>, reason = "…")` annotation in a
+/// comment. Returns (allowed rules, malformed-annotation messages).
+fn parse_allows(comment: &str) -> (Vec<String>, Vec<String>) {
+    const NEEDLE: &str = "lint: allow(";
+    let mut allows = Vec::new();
+    let mut errors = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(NEEDLE) {
+        let after = &rest[pos + NEEDLE.len()..];
+        rest = after;
+        let Some((rule, after_rule)) = after.split_once(',') else {
+            errors.push("`lint: allow(…)` needs `, reason = \"…\"`".to_string());
+            continue;
+        };
+        let rule = rule.trim().to_string();
+        let reason_ok = after_rule
+            .trim_start()
+            .strip_prefix("reason")
+            .map(str::trim_start)
+            .and_then(|s| s.strip_prefix('='))
+            .map(str::trim_start)
+            .and_then(|s| s.strip_prefix('"'))
+            .and_then(|s| s.split_once('"'))
+            .is_some_and(|(reason, tail)| {
+                !reason.trim().is_empty() && tail.trim_start().starts_with(')')
+            });
+        if reason_ok {
+            allows.push(rule);
+        } else {
+            errors.push(format!(
+                "allow({rule}) annotation requires a non-empty `reason = \"…\"` \
+                 closed on the same line"
+            ));
+        }
+    }
+    (allows, errors)
+}
+
+fn binding_name(code_trim: &str) -> Option<String> {
+    let rest = code_trim.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut stripper = Stripper::default();
+    let mut depth: i32 = 0;
+    // `#[cfg(test)]` / `#[test]` region tracking: armed by the attribute,
+    // engaged at the item's opening brace, disengaged when its block
+    // closes. Rules do not run inside test regions.
+    let mut test_armed = false;
+    let mut test_skip_depth: Option<i32> = None;
+    // Allows from standalone comment lines, pending until the next code
+    // line consumes them.
+    let mut pending_allows: BTreeSet<String> = BTreeSet::new();
+    // Live `let <name> = ….lock()…` guard bindings: (name, decl depth).
+    let mut guards: Vec<(String, i32)> = Vec::new();
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let (code, comment) = stripper.strip(raw);
+        let code_trim = code.trim();
+
+        let (line_allows, ann_errors) = parse_allows(&comment);
+        if test_skip_depth.is_none() {
+            for msg in ann_errors {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: lineno,
+                    rule: RULE_ANNOTATION,
+                    msg,
+                });
+            }
+        }
+
+        let mut allowed: BTreeSet<String> = line_allows.into_iter().collect();
+        if code_trim.is_empty() {
+            pending_allows.extend(allowed);
+            continue;
+        }
+        allowed.append(&mut pending_allows);
+
+        if test_skip_depth.is_none() {
+            if code_trim.starts_with("#[")
+                && (code.contains("cfg(test)") || code.contains("#[test]"))
+            {
+                test_armed = true;
+            }
+            if test_armed {
+                if code.contains('{') {
+                    test_skip_depth = Some(depth);
+                    test_armed = false;
+                } else if !code_trim.starts_with("#[") && code.contains(';') {
+                    // Attribute landed on a braceless item (`#[cfg(test)] use …;`).
+                    test_armed = false;
+                }
+            }
+        }
+        let in_test = test_skip_depth.is_some();
+
+        if !in_test {
+            let mut push = |rule: &'static str, msg: String| {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: lineno,
+                    rule,
+                    msg,
+                });
+            };
+            if scope.unwrap_rule
+                && (code.contains(".unwrap()")
+                    || code.contains(".expect(")
+                    || code.contains("panic!("))
+                && !allowed.contains(RULE_UNWRAP)
+            {
+                push(
+                    RULE_UNWRAP,
+                    "`.unwrap()` / `.expect()` / `panic!` in production \
+                     engine/cache/kvforest code — return a typed error, or annotate"
+                        .to_string(),
+                );
+            }
+            if code.contains("Ordering::Relaxed") && !allowed.contains(RULE_RELAXED) {
+                push(
+                    RULE_RELAXED,
+                    "`Ordering::Relaxed` needs a justification annotation or an \
+                     Acquire/Release upgrade"
+                        .to_string(),
+                );
+            }
+            if scope.forest_rule && !allowed.contains(RULE_FOREST) {
+                if let Some(tok) = MUTATION_TOKENS.iter().find(|t| code.contains(**t)) {
+                    push(
+                        RULE_FOREST,
+                        format!("direct Forest/KvStore mutation (`{tok}`) outside cache::manager"),
+                    );
+                }
+            }
+            if (code.contains(".send(") || code.contains(".recv("))
+                && !allowed.contains(RULE_GUARD)
+            {
+                if let Some((name, _)) = guards.first() {
+                    push(
+                        RULE_GUARD,
+                        format!(
+                            "channel op while Mutex guard `{name}` is live — drop the \
+                             guard (or close its scope) before blocking"
+                        ),
+                    );
+                }
+            }
+        }
+
+        if code.contains(".lock()") && code_trim.starts_with("let ") {
+            if let Some(name) = binding_name(code_trim) {
+                guards.push((name, depth));
+            }
+        }
+        if code.contains("drop(") {
+            guards.retain(|(n, _)| !code.contains(&format!("drop({n})")));
+        }
+
+        let opens = code.matches('{').count() as i32;
+        let closes = code.matches('}').count() as i32;
+        depth += opens - closes;
+        guards.retain(|(_, d)| *d <= depth);
+        if test_skip_depth.is_some_and(|d| depth <= d) {
+            test_skip_depth = None;
+        }
+    }
+    out
+}
+
+fn repo_root() -> PathBuf {
+    // tools/xtask/ → the repo root is two levels up.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask lives two levels below the repo root")
+        .to_path_buf()
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn run_lint() -> ExitCode {
+    let src_root = repo_root().join("rust").join("src");
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&src_root, &mut files) {
+        eprintln!("xtask lint: cannot walk {}: {e}", src_root.display());
+        return ExitCode::FAILURE;
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let display = format!("rust/src/{rel}");
+        violations.extend(lint_source(&display, &src, scope_for(&rel)));
+    }
+    if violations.is_empty() {
+        println!(
+            "xtask lint: {} files clean (rules: {RULE_FOREST}, {RULE_UNWRAP}, \
+             {RULE_GUARD}, {RULE_RELAXED})",
+            files.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!(
+            "xtask lint: {} violation(s) across {} files",
+            violations.len(),
+            files.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ENGINE_SCOPE: Scope = Scope {
+        forest_rule: true,
+        unwrap_rule: true,
+    };
+
+    fn fixture(name: &str) -> String {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("fixtures")
+            .join(name);
+        fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+    }
+
+    fn rules_fired(name: &str) -> Vec<&'static str> {
+        lint_source(name, &fixture(name), ENGINE_SCOPE)
+            .into_iter()
+            .map(|v| v.rule)
+            .collect()
+    }
+
+    // --- one seeded violation per rule, each must fire -----------------
+
+    #[test]
+    fn fixture_forest_mutation_fires() {
+        assert_eq!(rules_fired("forest_mutation.rs"), vec![RULE_FOREST]);
+    }
+
+    #[test]
+    fn fixture_no_unwrap_fires() {
+        assert_eq!(rules_fired("no_unwrap.rs"), vec![RULE_UNWRAP]);
+    }
+
+    #[test]
+    fn fixture_guard_across_send_fires() {
+        assert_eq!(rules_fired("guard_across_send.rs"), vec![RULE_GUARD]);
+    }
+
+    #[test]
+    fn fixture_relaxed_ordering_fires() {
+        assert_eq!(rules_fired("relaxed_ordering.rs"), vec![RULE_RELAXED]);
+    }
+
+    #[test]
+    fn fixture_clean_annotated_file_passes() {
+        let v = lint_source("clean.rs", &fixture("clean.rs"), ENGINE_SCOPE);
+        assert!(v.is_empty(), "clean fixture flagged: {v:?}");
+    }
+
+    // --- scanner unit tests --------------------------------------------
+
+    fn lint(src: &str) -> Vec<&'static str> {
+        lint_source("t.rs", src, ENGINE_SCOPE)
+            .into_iter()
+            .map(|v| v.rule)
+            .collect()
+    }
+
+    #[test]
+    fn string_and_comment_contents_are_ignored() {
+        let src = r#"
+fn f() {
+    let msg = "please .unwrap() the Ordering::Relaxed .send( thing";
+    // and .expect( this comment mentions panic!( too
+    log(msg);
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = "
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        x.unwrap();
+        y.fetch_add(1, Ordering::Relaxed);
+    }
+}
+";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn code_after_a_test_module_is_linted_again() {
+        let src = "
+#[cfg(test)]
+mod tests {
+    fn t() { x.unwrap(); }
+}
+fn prod() { y.unwrap(); }
+";
+        assert_eq!(lint(src), vec![RULE_UNWRAP]);
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_its_line() {
+        let src = "fn f() { x.unwrap(); } // lint: allow(no-unwrap, reason = \"test hook\")\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn standalone_allow_applies_to_next_code_line_only() {
+        let src = "
+// lint: allow(no-unwrap, reason = \"checked above\")
+fn f() { x.unwrap(); }
+fn g() { y.unwrap(); }
+";
+        assert_eq!(lint(src), vec![RULE_UNWRAP]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_itself_a_violation() {
+        let src = "fn f() { y.fetch_add(1, Ordering::Relaxed); } // lint: allow(relaxed-ordering)\n";
+        let fired = lint(src);
+        assert!(fired.contains(&RULE_ANNOTATION), "fired: {fired:?}");
+        assert!(fired.contains(&RULE_RELAXED), "fired: {fired:?}");
+    }
+
+    #[test]
+    fn allow_with_empty_reason_is_rejected() {
+        let src =
+            "fn f() { x.unwrap(); } // lint: allow(no-unwrap, reason = \"  \")\n";
+        assert!(lint(src).contains(&RULE_ANNOTATION));
+    }
+
+    #[test]
+    fn guard_dropped_before_send_is_clean() {
+        let src = "
+fn f() {
+    let g = m.lock();
+    drop(g);
+    tx.send(1);
+}
+";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn guard_scope_closed_before_send_is_clean() {
+        let src = "
+fn f() {
+    let shard = {
+        let g = m.lock();
+        g.pick()
+    };
+    tx.send(shard);
+}
+";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn guard_live_across_send_fires() {
+        let src = "
+fn f() {
+    let g = m.lock();
+    tx.send(1);
+}
+";
+        assert_eq!(lint(src), vec![RULE_GUARD]);
+    }
+
+    #[test]
+    fn forest_rule_respects_scope() {
+        let src = "fn f(c: &mut M) { c.store_mut().append(1); }\n";
+        assert_eq!(lint(src), vec![RULE_FOREST]);
+        let manager = scope_for("cache/manager.rs");
+        assert!(lint_source("m.rs", src, manager).is_empty());
+        let kvforest = scope_for("kvforest/forest.rs");
+        assert!(lint_source("f.rs", src, kvforest).is_empty());
+    }
+
+    #[test]
+    fn unwrap_like_names_do_not_fire() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(g); z.expect_err_helper(); }\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn multi_line_string_literals_do_not_leak_into_code() {
+        let src = "
+fn f() {
+    let s = \"first line .unwrap()
+        still inside the literal Ordering::Relaxed
+        done\";
+    use_it(s);
+}
+";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "fn f() { let s = r#\"json .unwrap() \"quoted\" panic!(\"#; use_it(s); }\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn scope_mapping_matches_the_layout() {
+        assert!(scope_for("engine/server.rs").forest_rule);
+        assert!(scope_for("engine/server.rs").unwrap_rule);
+        assert!(!scope_for("cache/manager.rs").forest_rule);
+        assert!(scope_for("cache/manager.rs").unwrap_rule);
+        assert!(!scope_for("kvforest/forest.rs").forest_rule);
+        assert!(scope_for("kvforest/forest.rs").unwrap_rule);
+        assert!(!scope_for("util/threadpool.rs").forest_rule);
+        assert!(!scope_for("util/threadpool.rs").unwrap_rule);
+    }
+}
