@@ -45,6 +45,11 @@ pub struct FigureReport {
     pub rows: Vec<Vec<String>>,
     /// Free-form notes (expected shape vs paper).
     pub notes: Vec<String>,
+    /// Optional machine-readable metrics snapshot backing the table
+    /// (e.g. `Metrics::to_json` from a serve run): emitted under a
+    /// `"metrics"` key in [`FigureReport::to_json`] so CI can assert on
+    /// exact counters instead of parsing the rendered cells.
+    pub metrics: Option<Json>,
 }
 
 impl FigureReport {
@@ -55,6 +60,7 @@ impl FigureReport {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             notes: Vec::new(),
+            metrics: None,
         }
     }
 
@@ -104,7 +110,7 @@ impl FigureReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs([
+        let mut j = Json::from_pairs([
             ("name", Json::from(self.name.clone())),
             ("description", Json::from(self.description.clone())),
             (
@@ -124,7 +130,11 @@ impl FigureReport {
                 "notes",
                 Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
             ),
-        ])
+        ]);
+        if let (Json::Obj(map), Some(m)) = (&mut j, &self.metrics) {
+            map.insert("metrics".to_string(), m.clone());
+        }
+        j
     }
 
     /// Persist under target/bench_results/<name>.json (best effort).
@@ -192,6 +202,17 @@ mod tests {
     fn row_width_checked() {
         let mut r = FigureReport::new("t", "d", &["a", "b"]);
         r.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn metrics_snapshot_round_trips_through_json() {
+        let mut r = FigureReport::new("t", "d", &["a"]);
+        r.row(vec!["1".into()]);
+        assert!(r.to_json().get("metrics").is_none());
+        r.metrics = Some(Json::from_pairs([("kv_bytes_read", Json::from(42.0))]));
+        let j = r.to_json();
+        let m = j.get("metrics").expect("metrics key present");
+        assert_eq!(m.get("kv_bytes_read").and_then(Json::as_f64), Some(42.0));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::cost::Estimator;
 use crate::kvforest::forest::StorageEvent;
 use crate::kvforest::{Forest, NodeId};
 use crate::model::Sampler;
+use crate::obs::{account_plan, now_us, EventKind, TraceRing};
 use crate::runtime::{ModelInfo, NativePieces, Pieces};
 use crate::sched::plan::{lower_bound_from_costs, materialize_subtasks};
 use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
@@ -116,6 +117,13 @@ pub struct EngineConfig {
     /// forest walk per checkpoint (`Metrics::audit_times`); off by
     /// default, on in the property tests and the CI audit smoke run.
     pub audit: bool,
+    /// Capacity of the request-lifecycle trace ring in events
+    /// ([`crate::obs::TraceRing`]). `0` (the default) disables tracing
+    /// entirely: the ring never allocates and every record site in the
+    /// serving path costs one branch. `codec serve --trace-out` turns
+    /// it on; the ring is bounded, so a long run drops oldest events
+    /// rather than growing.
+    pub trace_events: usize,
 }
 
 impl Default for EngineConfig {
@@ -136,6 +144,7 @@ impl Default for EngineConfig {
             cache: CacheConfig::default(),
             shard_id: 0,
             audit: false,
+            trace_events: 0,
         }
     }
 }
@@ -188,13 +197,23 @@ impl Engine {
             mi.d_head,
             cfg.cache.clone(),
         );
+        let mut metrics = Metrics {
+            trace: TraceRing::with_capacity(cfg.trace_events),
+            ..Metrics::default()
+        };
+        // Mirror the cache gauges once at construction: an idle shard
+        // never steps, and without this its snapshot would report the
+        // default `None` budgets — which makes the *merged* budget of a
+        // sharded server unbounded (`sum_budgets`) even when every
+        // shard was configured with a slice.
+        metrics.observe_cache(&cache);
         Ok(Engine {
             pieces,
             est: Estimator::table2(),
             cache,
             batcher: Batcher::new(cfg.max_batch),
             rng: Rng::new(cfg.seed ^ 0xC0DEC),
-            metrics: Metrics::default(),
+            metrics,
             step_count: 0,
             cached_divisions: BTreeMap::new(),
             rejected: Vec::new(),
@@ -237,6 +256,31 @@ impl Engine {
     /// The KV cache manager (stats, occupancy, store accounting).
     pub fn cache(&self) -> &CacheManager {
         &self.cache
+    }
+
+    /// Re-mirror the cache gauges into `metrics` now. [`Engine::step`]
+    /// does this at every *successful* step end, but a failed step
+    /// `?`-returns past it — callers taking a final snapshot (the
+    /// server's serve loop, on both the clean and the error path) call
+    /// this first so counters mutated by the failing step (evictions,
+    /// swap traffic during admission) are not lost from the report.
+    pub fn sync_metrics(&mut self) {
+        self.metrics.observe_cache(&self.cache);
+    }
+
+    /// Record an instant lifecycle event on this shard's trace track.
+    /// A single branch when tracing is disabled.
+    fn trace_event(&mut self, kind: EventKind, rid: u64, a: u64, b: u64) {
+        let shard = self.cfg.shard_id as u32;
+        self.metrics.trace.record(kind, shard, rid, a, b);
+    }
+
+    /// Record a span that started at `start` — a [`now_us`] stamp the
+    /// caller took behind [`TraceRing::enabled`], so disabled tracing
+    /// never reads the clock.
+    fn trace_span(&mut self, kind: EventKind, rid: u64, start: u64, a: u64, b: u64) {
+        let shard = self.cfg.shard_id as u32;
+        self.metrics.trace.record_span(kind, shard, rid, start, a, b);
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -304,14 +348,20 @@ impl Engine {
             .collect();
         let decoding = self.reclaim_for_decode(decoding)?;
         if !decoding.is_empty() {
+            let span0 = self.metrics.trace.enabled().then(now_us);
             let t0 = Instant::now();
             self.decode_step(&decoding)?;
             self.metrics.step_times.record(t0.elapsed());
+            if let Some(s) = span0 {
+                let (bs, step) = (decoding.len() as u64, self.step_count as u64);
+                self.trace_span(EventKind::DecodeStep, 0, s, bs, step);
+            }
             self.audit_check("decode")?;
         }
         let done = self.batcher.retire_done();
         let mut finished = Vec::new();
         for a in done {
+            self.trace_event(EventKind::Retire, a.req.id, a.generated.len() as u64, 0);
             self.metrics.on_finish(a.req.id);
             // Retention policy lives in the manager: release (keep KV
             // warm) by default, prune when `cache.retain` is off.
@@ -428,22 +478,29 @@ impl Engine {
                         self.cache.budget_pages()
                     );
                     log::warn!("{msg}");
+                    self.trace_event(EventKind::Rejected, req.id, 0, 0);
                     self.rejected.push((req.id, msg));
                     continue;
                 }
                 // Defer: active work will free pages. (Counted here, not
                 // in try_admit, so rejections don't inflate the gauge.)
                 self.cache.note_deferral();
+                let pending = self.batcher.pending_len() as u64;
+                self.trace_event(EventKind::Deferred, 0, pending, 0);
                 return Ok(());
             };
             if idx > 0 {
                 self.cache.stats.admission_reorders += 1;
+                // `idx` pending requests older than the winner were
+                // passed over this round.
+                self.trace_event(EventKind::Bypassed, 0, idx as u64, 0);
             }
             anyhow::ensure!(
                 self.batcher.admit_at(idx).is_some(),
                 "admission invariant: slot or window index {idx} vanished between \
                  scan and admit"
             );
+            self.trace_event(EventKind::Admitted, rid, idx as u64, 0);
             let preemptions_before = self.cache.stats.preemptions;
             self.prefill(rid)?;
             if self.cache.stats.preemptions > preemptions_before {
@@ -491,6 +548,7 @@ impl Engine {
     /// warm for the rerun), its reservation is released, and the request
     /// restarts from its prompt at the queue front.
     fn preempt(&mut self, rid: u64) {
+        self.trace_event(EventKind::Preempted, rid, 0, 0);
         self.cache.on_preempt(rid);
         self.batcher.preempt_to_pending(rid);
         // The discarded generation must not feed TTFT/TPOT: the first
@@ -557,6 +615,8 @@ impl Engine {
         // must be resident before the radix insert commits. The restore
         // reclaims from other subtrees; if even that cannot make room,
         // preempt the youngest other active request and retry.
+        let restore_span0 = self.metrics.trace.enabled().then(now_us);
+        let swap_ins_before = self.cache.stats.swap_ins;
         loop {
             if self.cache.try_restore_matched(rid, &req.prompt) {
                 break;
@@ -576,6 +636,12 @@ impl Engine {
                     self.cache.budget_pages(),
                     self.cache.restore_pages_needed(&req.prompt)
                 ),
+            }
+        }
+        if let Some(s) = restore_span0 {
+            let restored = self.cache.stats.swap_ins - swap_ins_before;
+            if restored > 0 {
+                self.trace_span(EventKind::SwapRestore, rid, s, restored as u64, 0);
             }
         }
         // The manager mirrors splits into the store, stamps the path for
@@ -678,6 +744,7 @@ impl Engine {
         while lo < len {
             let hi = (lo + max_chunk).min(len);
             let chunk = hi - lo;
+            let chunk_span0 = self.metrics.trace.enabled().then(now_us);
             let b = self.pieces.batch_bucket(chunk)?;
             let mut toks: Vec<i32> = tokens[lo..hi].iter().map(|&t| t as i32).collect();
             toks.resize(b, 0);
@@ -740,6 +807,9 @@ impl Engine {
             }
             if hi == len {
                 x_last = Some(x.rows_slice(chunk - 1, chunk));
+            }
+            if let Some(s) = chunk_span0 {
+                self.trace_span(EventKind::PrefillChunk, rid, s, lo as u64, hi as u64);
             }
             lo = hi;
         }
@@ -851,6 +921,12 @@ impl Engine {
         let t_plan = Instant::now();
         let plan = self.plan_attention(&mi)?;
         self.metrics.plan_times.record(t_plan.elapsed());
+        // Per-step analytic KV traffic: the plan geometry prices both
+        // CoDec (each KV range read once) and the FlashDecoding
+        // baseline (each range re-read per attached request), identical
+        // across layers — so account once and scale by `n_layers`.
+        let traffic = account_plan(&plan, mi.group_size(), mi.d_head);
+        self.metrics.on_decode_traffic(&traffic, mi.n_layers);
 
         let mut x = self.piecewise_embed(&tokens)?;
         for layer in 0..mi.n_layers {

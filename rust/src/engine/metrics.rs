@@ -27,6 +27,8 @@
 //! `Vec<Duration>`s were a memory leak measured in entries-per-token.
 
 use crate::cache::CacheManager;
+use crate::obs::{PlanTraffic, TraceRing};
+use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, summarize, Summary};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -323,6 +325,32 @@ pub struct Metrics {
     pub router_guard_overrides: usize,
     /// Largest per-shard queue-depth skew (max − min) the router saw.
     pub router_max_queue_skew: usize,
+
+    // --- kernel memory-traffic counters (`crate::obs::traffic`) ---
+    /// KV bytes actually gathered by the kernels through
+    /// `KvStore::node_kv` (mirrored by [`Metrics::observe_cache`]).
+    pub kv_bytes_read: u64,
+    /// KV bytes written through `KvStore::append` (mirrored likewise).
+    pub kv_bytes_written: u64,
+    /// Analytic decode-read bytes attributed to shared-prefix nodes
+    /// (sharing degree ≥ 2), all layers, accumulated per decode step by
+    /// [`Metrics::on_decode_traffic`].
+    pub decode_shared_bytes: u64,
+    /// Analytic decode-read bytes from degree-1 (unique-suffix) nodes.
+    pub decode_unique_bytes: u64,
+    /// Bytes a FlashDecoding-style per-request kernel would have read
+    /// for the same plans — the baseline of the paper's
+    /// memory-access-reduction ratio.
+    pub flash_baseline_bytes: u64,
+    /// sharing degree → forest-node task observations at that degree,
+    /// accumulated once per node per decode step (so long-lived shared
+    /// nodes weigh proportionally to how long they were served).
+    pub sharing_degree_hist: BTreeMap<usize, u64>,
+
+    // --- request-lifecycle trace ring (`crate::obs::trace`; disabled
+    // (capacity 0, no allocation) unless `EngineConfig::trace_events`
+    // asks for it) ---
+    pub trace: TraceRing,
 }
 
 /// Budgets merge as a sum only when every shard is bounded; one
@@ -476,6 +504,15 @@ impl Metrics {
         self.router_cold_routes += other.router_cold_routes;
         self.router_guard_overrides += other.router_guard_overrides;
         self.router_max_queue_skew = self.router_max_queue_skew.max(other.router_max_queue_skew);
+        self.kv_bytes_read += other.kv_bytes_read;
+        self.kv_bytes_written += other.kv_bytes_written;
+        self.decode_shared_bytes += other.decode_shared_bytes;
+        self.decode_unique_bytes += other.decode_unique_bytes;
+        self.flash_baseline_bytes += other.flash_baseline_bytes;
+        for (d, c) in &other.sharing_degree_hist {
+            *self.sharing_degree_hist.entry(*d).or_insert(0) += c;
+        }
+        self.trace.merge(&other.trace);
     }
 
     pub fn on_submit(&mut self, rid: u64) {
@@ -554,6 +591,30 @@ impl Metrics {
         self.kv_swap_budget_pages = cm.swap_budget_pages();
         self.kv_swapped_bytes = store.swapped_bytes();
         self.swap_restore_times = cm.stats.restore_times.clone();
+        self.kv_bytes_read = store.bytes_read();
+        self.kv_bytes_written = store.bytes_written();
+    }
+
+    /// Accumulate one decode step's analytic KV traffic
+    /// ([`crate::obs::account_plan`] prices a single layer; every layer
+    /// reads the same geometry, so the step total is `× n_layers`).
+    pub fn on_decode_traffic(&mut self, t: &PlanTraffic, n_layers: usize) {
+        let l = n_layers.max(1) as u64;
+        self.decode_shared_bytes += t.shared_bytes * l;
+        self.decode_unique_bytes += t.unique_bytes * l;
+        self.flash_baseline_bytes += t.flash_bytes * l;
+        for (d, c) in &t.degree_hist {
+            *self.sharing_degree_hist.entry(*d).or_insert(0) += c;
+        }
+    }
+
+    /// The paper's memory-access-reduction ratio over the whole run:
+    /// FlashDecoding-baseline bytes / CoDec bytes for the same decode
+    /// geometry. `None` before any decode step. > 1 whenever any prefix
+    /// was shared; → 1 with no sharing.
+    pub fn memory_access_reduction(&self) -> Option<f64> {
+        let codec = self.decode_shared_bytes + self.decode_unique_bytes;
+        (codec > 0).then(|| self.flash_baseline_bytes as f64 / codec as f64)
     }
 
     /// SLO attainment + goodput over the finished requests. `None` when
@@ -682,6 +743,201 @@ impl Metrics {
             self.tokens_generated as f64 / total
         }
     }
+
+    /// Machine-readable snapshot of every counter, gauge, timing
+    /// summary, and traffic metric — the payload behind
+    /// `codec serve --metrics-json` and the bench harness's
+    /// `BENCH_*.json` files. Safe on an empty `Metrics` (summaries and
+    /// ratios render as `null`, never NaN — every percentile path goes
+    /// through the `Option`-returning summaries). When `slo` targets
+    /// are given and requests finished, the report is embedded under
+    /// `"slo"`. `"schema_version"` is bumped on breaking shape changes;
+    /// CI validates the shape (see `.github/workflows/ci.yml`).
+    pub fn to_json(&self, slo: Option<SloTargets>) -> Json {
+        let hist: BTreeMap<String, Json> = self
+            .sharing_degree_hist
+            .iter()
+            .map(|(d, c)| (d.to_string(), num_u64(*c)))
+            .collect();
+        Json::from_pairs([
+            ("schema_version", Json::from(1usize)),
+            (
+                "counters",
+                Json::from_pairs([
+                    ("tokens_generated", Json::from(self.tokens_generated)),
+                    ("prefill_tokens", Json::from(self.prefill_tokens)),
+                    (
+                        "prefill_tokens_shared",
+                        Json::from(self.prefill_tokens_shared),
+                    ),
+                    ("plans_computed", Json::from(self.plans_computed)),
+                    ("plans_reused", Json::from(self.plans_reused)),
+                    ("requests", Json::from(self.requests.len())),
+                    ("shards", Json::from(self.shards)),
+                    ("audit_checks", Json::from(self.audit_checks)),
+                ]),
+            ),
+            (
+                "timings_ms",
+                Json::from_pairs([
+                    ("step", summary_json(self.step_times.summary_ms())),
+                    ("attn", summary_json(self.attn_times.summary_ms())),
+                    (
+                        "prefill_attn",
+                        summary_json(self.prefill_attn_times.summary_ms()),
+                    ),
+                    ("plan", summary_json(self.plan_times.summary_ms())),
+                    (
+                        "swap_restore",
+                        summary_json(self.swap_restore_times.summary_ms()),
+                    ),
+                    ("audit", summary_json(self.audit_times.summary_ms())),
+                    ("ttft", summary_json(self.ttft_summary_ms())),
+                    ("tpot", summary_json(self.tpot_summary_ms())),
+                ]),
+            ),
+            (
+                "kv",
+                Json::from_pairs([
+                    ("allocated_pages", Json::from(self.kv_allocated_pages)),
+                    (
+                        "max_allocated_pages",
+                        Json::from(self.kv_max_allocated_pages),
+                    ),
+                    ("budget_pages", opt_usize(self.kv_budget_pages)),
+                    ("in_use_bytes", Json::from(self.kv_in_use_bytes)),
+                    ("resident_bytes", Json::from(self.kv_resident_bytes)),
+                    ("occupancy", opt_f64(self.kv_occupancy())),
+                    ("bytes_read", num_u64(self.kv_bytes_read)),
+                    ("bytes_written", num_u64(self.kv_bytes_written)),
+                ]),
+            ),
+            (
+                "cache",
+                Json::from_pairs([
+                    ("evictions", Json::from(self.cache_evictions)),
+                    ("evicted_pages", Json::from(self.cache_evicted_pages)),
+                    (
+                        "admissions_deferred",
+                        Json::from(self.admissions_deferred),
+                    ),
+                    ("preemptions", Json::from(self.preemptions)),
+                    ("admission_reorders", Json::from(self.admission_reorders)),
+                    ("eviction_scan_steps", Json::from(self.eviction_scan_steps)),
+                    ("hit_rate", Json::from(self.cache_hit_rate())),
+                ]),
+            ),
+            (
+                "swap",
+                Json::from_pairs([
+                    ("outs", Json::from(self.swap_outs)),
+                    ("out_pages", Json::from(self.swap_out_pages)),
+                    ("ins", Json::from(self.swap_ins)),
+                    ("in_pages", Json::from(self.swap_in_pages)),
+                    ("host_evictions", Json::from(self.host_evictions)),
+                    ("swapped_pages", Json::from(self.kv_swapped_pages)),
+                    ("max_swapped_pages", Json::from(self.kv_max_swapped_pages)),
+                    ("budget_pages", opt_usize(self.kv_swap_budget_pages)),
+                    ("swapped_bytes", Json::from(self.kv_swapped_bytes)),
+                ]),
+            ),
+            (
+                "router",
+                Json::from_pairs([
+                    ("affinity_hits", Json::from(self.router_affinity_hits)),
+                    ("cold_routes", Json::from(self.router_cold_routes)),
+                    ("guard_overrides", Json::from(self.router_guard_overrides)),
+                    ("max_queue_skew", Json::from(self.router_max_queue_skew)),
+                ]),
+            ),
+            (
+                "traffic",
+                Json::from_pairs([
+                    ("decode_shared_bytes", num_u64(self.decode_shared_bytes)),
+                    ("decode_unique_bytes", num_u64(self.decode_unique_bytes)),
+                    (
+                        "codec_bytes",
+                        num_u64(self.decode_shared_bytes + self.decode_unique_bytes),
+                    ),
+                    (
+                        "flash_baseline_bytes",
+                        num_u64(self.flash_baseline_bytes),
+                    ),
+                    (
+                        "memory_access_reduction",
+                        opt_f64(self.memory_access_reduction()),
+                    ),
+                    ("sharing_degree_hist", Json::Obj(hist)),
+                ]),
+            ),
+            (
+                "trace",
+                Json::from_pairs([
+                    ("events", Json::from(self.trace.len())),
+                    ("dropped", num_u64(self.trace.dropped())),
+                    ("capacity", Json::from(self.trace.capacity())),
+                ]),
+            ),
+            (
+                "min_plan_lower_bound_ms",
+                opt_f64(self.min_plan_lower_bound_ms),
+            ),
+            (
+                "decode_throughput_tps",
+                Json::from(self.decode_throughput()),
+            ),
+            (
+                "slo",
+                match slo.and_then(|t| self.slo_report(t)) {
+                    Some(r) => slo_json(&r),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+fn num_u64(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn opt_usize(x: Option<usize>) -> Json {
+    x.map_or(Json::Null, Json::from)
+}
+
+fn opt_f64(x: Option<f64>) -> Json {
+    x.map_or(Json::Null, Json::from)
+}
+
+fn summary_json(s: Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => Json::from_pairs([
+            ("n", Json::from(s.n)),
+            ("mean", Json::from(s.mean)),
+            ("std", Json::from(s.std)),
+            ("min", Json::from(s.min)),
+            ("max", Json::from(s.max)),
+            ("p50", Json::from(s.p50)),
+            ("p90", Json::from(s.p90)),
+            ("p99", Json::from(s.p99)),
+        ]),
+    }
+}
+
+fn slo_json(r: &SloReport) -> Json {
+    Json::from_pairs([
+        ("ttft_target_ms", Json::from(r.targets.ttft_ms)),
+        ("tpot_target_ms", Json::from(r.targets.tpot_ms)),
+        ("finished", Json::from(r.finished)),
+        ("ttft_ms", summary_json(r.ttft.clone())),
+        ("tpot_ms", summary_json(r.tpot.clone())),
+        ("ttft_attainment", Json::from(r.ttft_attainment)),
+        ("tpot_attainment", Json::from(r.tpot_attainment)),
+        ("slo_attainment", Json::from(r.slo_attainment)),
+        ("throughput_rps", Json::from(r.throughput_rps)),
+        ("goodput_rps", Json::from(r.goodput_rps)),
+    ])
 }
 
 #[cfg(test)]
@@ -993,5 +1249,141 @@ mod tests {
         m.on_plan_lower_bound(0.3, 4);
         m.on_plan_lower_bound(0.0, 0); // empty forest: ignored
         assert_eq!(m.min_plan_lower_bound_ms, Some(0.3));
+    }
+
+    fn sample_traffic() -> PlanTraffic {
+        PlanTraffic {
+            shared_bytes: 800,
+            unique_bytes: 200,
+            flash_bytes: 3400,
+            degree_hist: BTreeMap::from([(1, 4), (4, 1)]),
+        }
+    }
+
+    #[test]
+    fn decode_traffic_scales_by_layers_and_accumulates_hist() {
+        let mut m = Metrics::default();
+        assert!(m.memory_access_reduction().is_none(), "no decode yet");
+        m.on_decode_traffic(&sample_traffic(), 2);
+        m.on_decode_traffic(&sample_traffic(), 2);
+        assert_eq!(m.decode_shared_bytes, 2 * 2 * 800);
+        assert_eq!(m.decode_unique_bytes, 2 * 2 * 200);
+        assert_eq!(m.flash_baseline_bytes, 2 * 2 * 3400);
+        // Hist counts node observations per step, not per layer.
+        assert_eq!(m.sharing_degree_hist, BTreeMap::from([(1, 8), (4, 2)]));
+        let r = m.memory_access_reduction().expect("decode happened");
+        assert!((r - 3.4).abs() < 1e-12, "ratio = {r}");
+    }
+
+    #[test]
+    fn merging_empty_snapshot_is_identity() {
+        // The satellite pin: an idle shard contributes a zero-count
+        // snapshot; merging it must not skew percentiles, drop traffic
+        // gauges, or disturb the trace ring.
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        m.on_token(1);
+        m.on_finish(1);
+        for _ in 0..100 {
+            m.step_times.record(Duration::from_millis(2));
+        }
+        m.on_decode_traffic(&sample_traffic(), 2);
+        m.trace = TraceRing::with_capacity(8);
+        m.trace.record(crate::obs::EventKind::Submit, 0, 1, 0, 0);
+        let before_step = m.step_times.summary_ms().expect("samples");
+        let snapshot = m.clone();
+
+        m.merge(&Metrics::default());
+        let after_step = m.step_times.summary_ms().expect("samples");
+        assert_eq!(before_step, after_step, "percentiles must not move");
+        assert_eq!(m.requests.len(), 1);
+        assert_eq!(m.decode_shared_bytes, snapshot.decode_shared_bytes);
+        assert_eq!(m.flash_baseline_bytes, snapshot.flash_baseline_bytes);
+        assert_eq!(m.sharing_degree_hist, snapshot.sharing_degree_hist);
+        assert_eq!(m.memory_access_reduction(), snapshot.memory_access_reduction());
+        assert_eq!(m.trace.len(), 1, "trace events survive the merge");
+        assert_eq!(m.trace.dropped(), 0);
+
+        // And the other way: an empty aggregate absorbing a live shard.
+        let mut agg = Metrics::default();
+        agg.merge(&snapshot);
+        assert_eq!(agg.step_times.count(), snapshot.step_times.count());
+        assert_eq!(agg.sharing_degree_hist, snapshot.sharing_degree_hist);
+        assert_eq!(agg.trace.len(), 1);
+    }
+
+    #[test]
+    fn merge_sums_traffic_counters() {
+        let mut a = Metrics::default();
+        a.on_decode_traffic(&sample_traffic(), 1);
+        a.kv_bytes_read = 100;
+        a.kv_bytes_written = 10;
+        let mut b = Metrics::default();
+        b.on_decode_traffic(&sample_traffic(), 3);
+        b.kv_bytes_read = 50;
+        b.kv_bytes_written = 5;
+        a.merge(&b);
+        assert_eq!(a.kv_bytes_read, 150);
+        assert_eq!(a.kv_bytes_written, 15);
+        assert_eq!(a.decode_shared_bytes, 800 + 3 * 800);
+        assert_eq!(a.flash_baseline_bytes, 3400 + 3 * 3400);
+        assert_eq!(a.sharing_degree_hist, BTreeMap::from([(1, 8), (4, 2)]));
+    }
+
+    #[test]
+    fn empty_metrics_to_json_has_no_nans() {
+        // Zero-sample guard: every summary/ratio renders as null, and
+        // the whole snapshot survives an emit→parse round trip.
+        let j = Metrics::default().to_json(Some(SloTargets::default()));
+        let text = crate::util::json::emit(&j);
+        assert!(!text.contains("NaN") && !text.contains("nan"));
+        let back = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(back.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert!(matches!(back.get("slo"), Some(Json::Null)));
+        let timings = back.get("timings_ms").expect("timings object");
+        assert!(matches!(timings.get("step"), Some(Json::Null)));
+        let traffic = back.get("traffic").expect("traffic object");
+        assert!(matches!(
+            traffic.get("memory_access_reduction"),
+            Some(Json::Null)
+        ));
+    }
+
+    #[test]
+    fn to_json_exposes_traffic_and_slo() {
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        m.on_token(1);
+        m.on_finish(1);
+        m.step_times.record(Duration::from_millis(2));
+        m.on_decode_traffic(&sample_traffic(), 2);
+        m.kv_bytes_read = 1234;
+        let j = m.to_json(Some(SloTargets {
+            ttft_ms: 60_000.0,
+            tpot_ms: 60_000.0,
+        }));
+        let text = crate::util::json::emit(&j);
+        let back = crate::util::json::parse(&text).expect("valid JSON");
+        let traffic = back.get("traffic").expect("traffic");
+        assert_eq!(
+            traffic.get("codec_bytes").and_then(Json::as_f64),
+            Some(2000.0)
+        );
+        let r = traffic
+            .get("memory_access_reduction")
+            .and_then(Json::as_f64)
+            .expect("ratio present");
+        assert!((r - 3.4).abs() < 1e-9);
+        let hist = traffic.get("sharing_degree_hist").expect("hist");
+        assert_eq!(hist.get("4").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            back.get("kv").and_then(|k| k.get("bytes_read")).and_then(Json::as_f64),
+            Some(1234.0)
+        );
+        let slo = back.get("slo").expect("slo report");
+        assert_eq!(slo.get("finished").and_then(Json::as_usize), Some(1));
+        assert_eq!(slo.get("slo_attainment").and_then(Json::as_f64), Some(1.0));
     }
 }

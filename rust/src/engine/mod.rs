@@ -31,5 +31,5 @@ pub mod server;
 pub use engine::{AttentionBackend, Engine, EngineConfig};
 pub use metrics::{Metrics, SloReport, SloTargets};
 pub use request::{Request, RequestId, RequestState};
-pub use router::{PrefixIndex, RouterConfig, RouterCore, RouterStats, RoutingPolicy};
+pub use router::{PrefixIndex, RouteKind, RouterConfig, RouterCore, RouterStats, RoutingPolicy};
 pub use server::{EngineMake, Server, ShardFailure, ShutdownReport, SubmitHandle, WaitError};

@@ -85,6 +85,36 @@ impl Default for RouterConfig {
     }
 }
 
+/// Which mechanism picked the shard for one routing decision. Carried
+/// in the `routed` trace event so a Perfetto timeline shows *why* each
+/// request landed where it did, not just where. The discriminants are
+/// stable (they are serialized into trace JSON as `args.kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RouteKind {
+    /// Longest cached-prefix match won.
+    Affinity = 0,
+    /// Cold prompt (no shard matched): power-of-two-choices on depth.
+    Cold = 1,
+    /// Affine target was too deep; imbalance guard redirected to the
+    /// least-loaded shard.
+    Guard = 2,
+    /// Strict rotation (the `RoundRobin` policy).
+    RoundRobin = 3,
+}
+
+impl RouteKind {
+    /// Lowercase label used in trace-event args.
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteKind::Affinity => "affinity",
+            RouteKind::Cold => "cold",
+            RouteKind::Guard => "guard",
+            RouteKind::RoundRobin => "round-robin",
+        }
+    }
+}
+
 /// Routing counters, mirrored into the merged [`super::Metrics`] at
 /// shutdown.
 #[derive(Debug, Clone, Default)]
@@ -294,6 +324,13 @@ impl RouterCore {
     /// resolved). Returns the chosen shard and records `prompt` into
     /// that shard's prefix index.
     pub fn route(&mut self, prompt: &[u32], depths: &[usize]) -> usize {
+        self.route_explained(prompt, depths).0
+    }
+
+    /// [`RouterCore::route`], also reporting *which* mechanism chose
+    /// the shard — the server feeds the kind into the `routed` trace
+    /// event. Counters and index updates are identical to `route`.
+    pub fn route_explained(&mut self, prompt: &[u32], depths: &[usize]) -> (usize, RouteKind) {
         let n = self.indexes.len();
         assert_eq!(depths.len(), n, "one queue depth per shard");
         // `RouterCore::new` guarantees at least one shard, so the
@@ -303,13 +340,13 @@ impl RouterCore {
         let max_depth = depths.iter().copied().max().unwrap_or(0);
         self.stats.routed += 1;
         self.stats.max_queue_skew = self.stats.max_queue_skew.max(max_depth - min_depth);
-        let shard = match self.policy {
+        let (shard, kind) = match self.policy {
             RoutingPolicy::RoundRobin => {
                 let s = self.rr_next % n;
                 self.rr_next = (s + 1) % n;
-                s
+                (s, RouteKind::RoundRobin)
             }
-            RoutingPolicy::PowerOfTwo => self.p2c(depths),
+            RoutingPolicy::PowerOfTwo => (self.p2c(depths), RouteKind::Cold),
             RoutingPolicy::Affinity => {
                 // Longest cached-prefix match wins; ties prefer the
                 // shallower queue, then the lower index.
@@ -324,13 +361,13 @@ impl RouterCore {
                 }
                 if best_len == 0 {
                     self.stats.cold_routes += 1;
-                    self.p2c(depths)
+                    (self.p2c(depths), RouteKind::Cold)
                 } else if depths[best] > min_depth + self.max_skew {
                     self.stats.guard_overrides += 1;
-                    Self::least_loaded(depths)
+                    (Self::least_loaded(depths), RouteKind::Guard)
                 } else {
                     self.stats.affinity_hits += 1;
-                    best
+                    (best, RouteKind::Affinity)
                 }
             }
         };
@@ -339,7 +376,7 @@ impl RouterCore {
         }
         self.indexes[shard].insert(prompt);
         self.stats.routed_per_shard[shard] += 1;
-        shard
+        (shard, kind)
     }
 }
 
@@ -474,6 +511,37 @@ mod tests {
             r.route(&prompt(doc, 0), &[0]);
             assert!(r.indexes[0].tokens() <= 64 + 36, "index must stay near the cap");
         }
+    }
+
+    #[test]
+    fn route_explained_reports_mechanism() {
+        let cfg = RouterConfig {
+            max_skew: 3,
+            ..RouterConfig::default()
+        };
+        let mut r = RouterCore::new(2, cfg);
+        let depths = [0usize; 2];
+        let (s1, k1) = r.route_explained(&prompt(1, 0), &depths);
+        assert_eq!(k1, RouteKind::Cold);
+        let (s2, k2) = r.route_explained(&prompt(1, 1), &depths);
+        assert_eq!((s2, k2), (s1, RouteKind::Affinity));
+        // Affine shard too deep → the imbalance guard redirects.
+        let mut deep = [0usize; 2];
+        deep[s1] = 10;
+        let (s3, k3) = r.route_explained(&prompt(1, 2), &deep);
+        assert_eq!(k3, RouteKind::Guard);
+        assert_ne!(s3, s1);
+
+        let cfg = RouterConfig {
+            policy: RoutingPolicy::RoundRobin,
+            ..RouterConfig::default()
+        };
+        let mut rr = RouterCore::new(2, cfg);
+        assert_eq!(
+            rr.route_explained(&prompt(9, 0), &[0, 0]).1,
+            RouteKind::RoundRobin
+        );
+        assert_eq!(RouteKind::Guard.name(), "guard");
     }
 
     #[test]

@@ -29,6 +29,7 @@ use super::engine::{AttentionBackend, Engine, EngineConfig};
 use super::metrics::Metrics;
 use super::request::Request;
 use super::router::{RouterConfig, RouterCore};
+use crate::obs::{EventKind, TraceRing, ROUTER_TRACK};
 use crate::workload::trace::Trace;
 use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::{thread, Arc, Mutex};
@@ -147,6 +148,11 @@ pub struct ShutdownReport {
 pub struct Server {
     shards: Vec<Shard>,
     router: Mutex<RouterCore>,
+    /// Server-side lifecycle events (submit + routing decisions, on the
+    /// router pseudo-track). Shard rings live in each engine's metrics;
+    /// this one is merged with them at shutdown. Disabled (capacity 0)
+    /// unless the engine config asked for tracing.
+    trace: Mutex<TraceRing>,
     next_id: AtomicU64,
 }
 
@@ -155,14 +161,24 @@ impl Server {
     /// backend, no artifacts directory) on a background thread. Blocks
     /// until the engine (weights + backend) is ready or failed.
     pub fn start(cfg: EngineConfig) -> Result<Server> {
-        Self::start_with(move || Engine::new(cfg))
+        let cap = cfg.trace_events;
+        Self::start_sharded_inner(
+            vec![Box::new(move || Engine::new(cfg))],
+            RouterConfig::default(),
+            cap,
+        )
     }
 
     /// Start over the PJRT runtime + AOT artifacts in `artifacts_dir`.
     #[cfg(feature = "pjrt")]
     pub fn start_pjrt(artifacts_dir: &str, cfg: EngineConfig) -> Result<Server> {
         let dir = artifacts_dir.to_string();
-        Self::start_with(move || Engine::from_artifacts(&dir, cfg))
+        let cap = cfg.trace_events;
+        Self::start_sharded_inner(
+            vec![Box::new(move || Engine::from_artifacts(&dir, cfg))],
+            RouterConfig::default(),
+            cap,
+        )
     }
 
     /// Start the right server flavor for `cfg.backend`: the PJRT
@@ -211,11 +227,12 @@ impl Server {
                  the PJRT artifact path is single-shard (use --shards 1)"
             );
         }
+        let cap = cfg.trace_events;
         let makes = shard_configs(&cfg, shards)?
             .into_iter()
             .map(|scfg| -> EngineMake { Box::new(move || Engine::new(scfg)) })
             .collect();
-        Self::start_sharded_with(makes, rcfg)
+        Self::start_sharded_inner(makes, rcfg, cap)
     }
 
     /// Start one shard per constructor in `makes` (the injection seam
@@ -223,7 +240,17 @@ impl Server {
     /// its own worker thread; engines initialize concurrently and this
     /// blocks until every shard is ready or one failed (in which case
     /// the already-started shards are torn down before returning).
+    /// Server-side tracing is off (the engine rings still honor their
+    /// own `trace_events`); the config-taking constructors wire it.
     pub fn start_sharded_with(makes: Vec<EngineMake>, rcfg: RouterConfig) -> Result<Server> {
+        Self::start_sharded_inner(makes, rcfg, 0)
+    }
+
+    fn start_sharded_inner(
+        makes: Vec<EngineMake>,
+        rcfg: RouterConfig,
+        trace_events: usize,
+    ) -> Result<Server> {
         let n = makes.len();
         anyhow::ensure!(n >= 1, "need at least one engine shard");
         let mut shards = Vec::with_capacity(n);
@@ -270,6 +297,7 @@ impl Server {
         }
         Ok(Server {
             router: Mutex::new(RouterCore::new(n, rcfg)),
+            trace: Mutex::new(TraceRing::with_capacity(trace_events)),
             shards,
             next_id: AtomicU64::new(1),
         })
@@ -290,7 +318,7 @@ impl Server {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = channel();
         let req = Request::new(id, prompt, max_new_tokens);
-        let shard = {
+        let (shard, route_kind) = {
             let depths: Vec<usize> = self
                 .shards
                 .iter()
@@ -305,11 +333,23 @@ impl Server {
                 Ok(guard) => guard,
                 Err(poisoned) => poisoned.into_inner(),
             };
-            router.route(&req.prompt, &depths)
+            router.route_explained(&req.prompt, &depths)
             // The guard drops here, before the channel send below —
             // holding it across `tx.send` would serialize submits against
             // a possibly-blocking channel (the guard-across-send lint).
         };
+        {
+            // Separate lock from the router's, taken after it drops:
+            // tracing never extends the routing critical section.
+            let mut trace = match self.trace.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let plen = req.prompt.len() as u64;
+            trace.record(EventKind::Submit, ROUTER_TRACK, id, plen, 0);
+            let (to, kind) = (shard as u64, route_kind as u64);
+            trace.record(EventKind::Routed, ROUTER_TRACK, id, to, kind);
+        }
         let shard = &self.shards[shard];
         // lint: allow(relaxed-ordering, reason = "advisory queue-depth gauge read only for routing decisions; mpsc send/recv carry the data happens-before")
         shard.depth.fetch_add(1, Ordering::Relaxed);
@@ -441,6 +481,15 @@ impl Server {
         metrics.router_cold_routes = stats.cold_routes;
         metrics.router_guard_overrides = stats.guard_overrides;
         metrics.router_max_queue_skew = stats.max_queue_skew;
+        // Fold the server-side submit/route events into the merged
+        // trace: one ring holds the whole timeline (router track + every
+        // clean shard's track) for the Chrome-trace export.
+        let server_trace = match self.trace.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        metrics.trace.merge(&server_trace);
+        drop(server_trace);
         ShutdownReport {
             metrics,
             shard_metrics,
@@ -571,6 +620,9 @@ fn serve_loop(
                         Err("engine shut down before the request completed".to_string()),
                     );
                 }
+                // Final gauge sync before the snapshot leaves the thread
+                // (the in-step sync only runs on successful steps).
+                engine.sync_metrics();
                 return std::mem::take(&mut engine.metrics);
             }
             continue;
@@ -601,6 +653,13 @@ fn serve_loop(
                 for rid in stranded {
                     resolve(&mut waiters, rid, Err(msg.clone()));
                 }
+                let track = shard_id as u32;
+                engine.metrics.trace.record(EventKind::Failure, track, 0, 0, 0);
+                // The failed step `?`-returned past its own sync: without
+                // this, counters the failing step mutated (evictions,
+                // swap traffic during admission) would be missing from
+                // the shard's final snapshot.
+                engine.sync_metrics();
                 return std::mem::take(&mut engine.metrics);
             }
         }

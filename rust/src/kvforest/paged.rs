@@ -28,6 +28,7 @@
 use super::forest::{NodeId, StorageEvent};
 use crate::tensor::Mat;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Fixed-size page pool for one layer.
 ///
@@ -428,6 +429,16 @@ pub struct KvStore {
     /// store records it so accounting and configuration read back from
     /// one place.
     swap_budget: Option<usize>,
+    /// KV bytes gathered through [`KvStore::node_kv`] — the kernel-facing
+    /// HBM read traffic (K + V rows materialized for attention operands).
+    /// Atomic because gathers run from parallel workers through `&self`;
+    /// these are plain `std` atomics, not `util::sync` loom shims — pure
+    /// monotone counters with no ordering relationship to model.
+    bytes_read: AtomicU64,
+    /// KV bytes written through [`KvStore::append`] (new token rows, all
+    /// heads). Swap-tier memcpy traffic is deliberately excluded — it is
+    /// already metered by the swap gauges and restore-latency stats.
+    bytes_written: AtomicU64,
 }
 
 impl KvStore {
@@ -437,6 +448,8 @@ impl KvStore {
                 .map(|_| LayerStore::new(page_tokens, n_kv_heads, d_head))
                 .collect(),
             swap_budget: None,
+            bytes_read: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
         }
     }
 
@@ -447,6 +460,9 @@ impl KvStore {
     /// Append one token's rows in `layer` (k/v: [n_kv_heads * d_head]).
     pub fn append(&mut self, layer: usize, node: NodeId, k: &[f32], v: &[f32]) {
         self.layers[layer].append(node, k, v);
+        let bytes = (k.len() + v.len()) as u64 * 4;
+        // lint: allow(relaxed-ordering, reason = "monotone traffic counter; no ordering dependency, read only at observation points")
+        self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Stored length of `node` in `layer`.
@@ -456,6 +472,10 @@ impl KvStore {
 
     /// Materialize (K, V) of `node` rows [lo, hi) for `head` in `layer`.
     pub fn node_kv(&self, layer: usize, node: NodeId, head: usize, lo: usize, hi: usize) -> (Mat, Mat) {
+        let d = self.layers[layer].pool.d_head;
+        let bytes = (hi - lo) as u64 * d as u64 * 4 * 2;
+        // lint: allow(relaxed-ordering, reason = "monotone traffic counter incremented from parallel gather workers; no ordering dependency")
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
         self.layers[layer].node_kv(node, head, lo, hi)
     }
 
@@ -591,6 +611,20 @@ impl KvStore {
 
     pub fn in_use_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.pool.in_use_bytes()).sum()
+    }
+
+    /// Cumulative KV bytes gathered through [`KvStore::node_kv`] (K + V
+    /// rows materialized for attention operands) since construction.
+    pub fn bytes_read(&self) -> u64 {
+        // lint: allow(relaxed-ordering, reason = "monotone counter read at an observation point; exactness across threads not required mid-step")
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative KV bytes written through [`KvStore::append`] since
+    /// construction (swap-tier memcpys excluded; see the field docs).
+    pub fn bytes_written(&self) -> u64 {
+        // lint: allow(relaxed-ordering, reason = "monotone counter read at an observation point; exactness across threads not required mid-step")
+        self.bytes_written.load(Ordering::Relaxed)
     }
 
     /// Release freed-page backing memory until at most `total_pages`
@@ -855,6 +889,27 @@ mod tests {
         assert_eq!(s.swap_budget(), Some(4));
         s.set_swap_budget(None);
         assert_eq!(s.swap_budget(), None);
+    }
+
+    #[test]
+    fn byte_counters_track_append_and_gather() {
+        let mut s = KvStore::new(1, 4, 2, 3);
+        assert_eq!((s.bytes_read(), s.bytes_written()), (0, 0));
+        for t in 0..10 {
+            s.append(0, 5, &row(2, 3, t as f32), &row(2, 3, t as f32));
+        }
+        // 10 tokens × (K 2·3 + V 2·3) floats × 4 B.
+        assert_eq!(s.bytes_written(), 10 * 12 * 4);
+        let _ = s.node_kv(0, 5, 1, 0, 10);
+        // 10 rows × d_head 3 × 4 B × (K + V).
+        assert_eq!(s.bytes_read(), 10 * 3 * 4 * 2);
+        let _ = s.node_kv(0, 5, 0, 2, 6);
+        assert_eq!(s.bytes_read(), 10 * 3 * 4 * 2 + 4 * 3 * 4 * 2);
+        // Swap round trip leaves the kernel-traffic counters alone.
+        let (r, w) = (s.bytes_read(), s.bytes_written());
+        s.demote_node(5);
+        s.restore_node(5);
+        assert_eq!((s.bytes_read(), s.bytes_written()), (r, w));
     }
 
     #[test]

@@ -37,6 +37,7 @@
 //! | [`runtime`] | the `Pieces` backend seam: native transformer + (pjrt) AOT executor |
 //! | [`model`] | transformer configs, deterministic host weights, sampling |
 //! | [`engine`] | continuous-batching serving engine + vLLM-like baseline |
+//! | [`obs`] | observability: lifecycle trace ring (Chrome-trace export) + KV memory-traffic accounting |
 //! | [`workload`] | synthetic prefix-tree and LooGLE-like workload generators |
 //! | [`bench`] | the measurement harness behind every figure/table bench |
 //!
@@ -61,6 +62,8 @@ pub mod gpusim;
 #[deny(clippy::unwrap_used)]
 pub mod kvforest;
 pub mod model;
+#[deny(clippy::unwrap_used)]
+pub mod obs;
 pub mod reduction;
 pub mod runtime;
 pub mod sched;

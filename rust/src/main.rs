@@ -60,6 +60,13 @@ commands:
                [--router-max-skew S] (affinity imbalance guard: redirect
                 when the affine shard's queue is > S deeper than the
                 shallowest)
+               [--trace-out FILE]   (record the request lifecycle —
+                submit/route/admit/prefill/decode/retire, one track per
+                shard — and write Chrome trace-event JSON, viewable in
+                Perfetto or chrome://tracing)
+               [--metrics-json FILE] (write the full metrics snapshot —
+                counters, latency summaries, KV traffic + the memory-
+                access-reduction ratio, SLO report — as JSON)
                (codec|flash run hermetically; codec-pjrt needs a build
                 with --features pjrt plus AOT artifacts, and is
                 single-shard only)
@@ -233,6 +240,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let dir = args.str_or("artifacts", &artifacts_dir()).to_string();
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_json = args.get("metrics-json").map(str::to_string);
 
     let cfg = EngineConfig {
         backend,
@@ -240,6 +249,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         sampler: Sampler::Temperature(0.8),
         admit_window: admit_window.max(1),
         admit_max_bypass,
+        // Bounded ring per shard (plus one for the router track);
+        // 64k events ≈ 3 MiB/shard, plenty for a smoke-sized run.
+        trace_events: if trace_out.is_some() { 65536 } else { 0 },
         cache: CacheConfig {
             // 0 = unbounded: the retained cache grows with the corpus.
             // Long-running servers should set a budget so cold prefixes
@@ -349,6 +361,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "∞".to_string()),
         (m.cache_hit_rate() * 100.0).round()
     );
+    println!(
+        "kv store traffic:   {:.1} MB read, {:.1} MB written (gathers / appends)",
+        m.kv_bytes_read as f64 / 1e6,
+        m.kv_bytes_written as f64 / 1e6
+    );
+    if let Some(ratio) = m.memory_access_reduction() {
+        println!(
+            "decode kv reads:    {:.1} MB shared-prefix + {:.1} MB unique-suffix; \
+             flash-decoding baseline {:.1} MB → {ratio:.1}× memory-access reduction",
+            m.decode_shared_bytes as f64 / 1e6,
+            m.decode_unique_bytes as f64 / 1e6,
+            m.flash_baseline_bytes as f64 / 1e6
+        );
+    }
+    if !m.sharing_degree_hist.is_empty() {
+        let hist: Vec<String> = m
+            .sharing_degree_hist
+            .iter()
+            .map(|(deg, n)| format!("{deg}:{n}"))
+            .collect();
+        println!("sharing degrees:    {} (degree:node-steps)", hist.join(" "));
+    }
     if m.cache_evictions + m.preemptions + m.admissions_deferred + m.admission_reorders > 0 {
         println!(
             "memory pressure:    {} evictions ({} pages), {} deferrals, {} preemptions, \
@@ -403,6 +437,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(rep) = m.slo_report(slo) {
         println!("{}", rep.render());
+    }
+    if let Some(path) = &metrics_json {
+        let json = codec::util::json::emit(&m.to_json(Some(slo)));
+        std::fs::write(path, json).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("metrics json:       {path}");
+    }
+    if let Some(path) = &trace_out {
+        let json = codec::util::json::emit(&codec::obs::chrome_trace_json(&m.trace));
+        std::fs::write(path, json).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!(
+            "trace:              {path} ({} events, {} dropped)",
+            m.trace.len(),
+            m.trace.dropped()
+        );
     }
     println!("wall time:          {wall:.2} s");
     Ok(())

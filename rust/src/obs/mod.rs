@@ -1,0 +1,32 @@
+//! Observability: request-lifecycle tracing and KV memory-traffic
+//! accounting for the serving stack.
+//!
+//! Two pillars live here; the third (machine-readable metrics export)
+//! is `Metrics::to_json` in [`crate::engine`], which embeds both:
+//!
+//! * [`trace`] — a lock-light, ring-buffered event recorder
+//!   ([`TraceRing`]) capturing every request-lifecycle transition
+//!   (submit → routed → admitted/deferred/… → decode steps → retire)
+//!   with monotonic microsecond timestamps, exportable as Chrome
+//!   trace-event JSON ([`chrome_trace_json`]) viewable in Perfetto:
+//!   one track per shard plus a router track, with per-request flow
+//!   arrows. Disabled (capacity 0) it allocates nothing and each
+//!   record call is a single branch.
+//! * [`traffic`] — analytic KV-byte accounting over a decode plan
+//!   ([`account_plan`]): shared-prefix vs unique-suffix read bytes, a
+//!   FlashDecoding-style per-request baseline priced from the same
+//!   geometry, and the sharing-degree histogram — together yielding
+//!   the paper's memory-access-reduction ratio as a first-class,
+//!   deterministic metric.
+//!
+//! Recording into the engine-owned ring in the serving path must go
+//! through the `enabled`-gated [`TraceRing::record`] /
+//! [`TraceRing::record_span`] API — `cargo xtask lint`'s `trace-gate`
+//! rule rejects raw `push_event` / `TraceEvent` construction under
+//! `engine/` and `cache/`.
+
+pub mod trace;
+pub mod traffic;
+
+pub use trace::{chrome_trace_json, now_us, EventKind, TraceEvent, TraceRing, ROUTER_TRACK};
+pub use traffic::{account_plan, PlanTraffic, KV_ELEM_BYTES};

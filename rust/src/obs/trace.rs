@@ -1,0 +1,508 @@
+//! Request-lifecycle trace recorder: a lock-light, ring-buffered event
+//! log with Chrome trace-event JSON export.
+//!
+//! # Design
+//!
+//! Every shard's engine owns one [`TraceRing`] (inside its `Metrics`),
+//! and the server owns one more for the submit/route stage — so the hot
+//! path never takes a cross-thread lock to record. A ring is created
+//! with a fixed capacity; capacity `0` means **disabled**, and a
+//! disabled ring's [`TraceRing::record`] is a single branch: no
+//! allocation, no timestamp read, no write. An enabled ring
+//! pre-allocates its buffer once and then overwrites the oldest event
+//! when full, counting what it dropped ([`TraceRing::dropped`]) — a
+//! long-running server's trace memory is bounded by construction.
+//!
+//! Events are [`TraceEvent`]s: a fixed-size `Copy` record (no strings,
+//! no heap) with a kind, a request id, a track (shard id or the router
+//! pseudo-track), two kind-specific payload words and microsecond
+//! timestamps on a process-wide monotonic epoch ([`now_us`]) — shared
+//! across threads so per-shard tracks line up in one timeline.
+//!
+//! # Export
+//!
+//! [`chrome_trace_json`] renders a ring as Chrome trace-event JSON
+//! (the `{"traceEvents": [...]}` form), viewable in Perfetto or
+//! `chrome://tracing`: one named track per shard plus a `router`
+//! track, duration events (`ph: "X"`) for spans (decode steps, prefill
+//! chunks, swap restores), instants (`ph: "i"`) for the point events,
+//! and per-request flow arrows (`ph: "s"`/`"f"`) linking a request's
+//! first event to its retirement across tracks. Within a track,
+//! non-flow event timestamps are strictly monotonic (ties are bumped
+//! by 1 µs), which Perfetto's importer and the round-trip tests both
+//! rely on.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide monotonic epoch for trace timestamps: initialized on
+/// first use, shared by every ring so cross-thread events order
+/// correctly on one timeline.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process-wide trace epoch (monotonic).
+pub fn now_us() -> u64 {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_micros() as u64
+}
+
+/// The pseudo-shard id used as the track for server-side events
+/// (submit + routing decisions), which happen before a shard is chosen
+/// or outside any shard.
+pub const ROUTER_TRACK: u32 = u32::MAX;
+
+/// What happened. The payload words `a`/`b` of the carrying
+/// [`TraceEvent`] are kind-specific; the meaning of each is documented
+/// on the variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request entered the server. `a` = prompt length in tokens.
+    Submit,
+    /// The router picked a shard. `a` = chosen shard, `b` = the
+    /// `RouteKind` discriminant (0 affinity, 1 cold/p2c, 2 guard
+    /// override, 3 round-robin).
+    Routed,
+    /// The admission gate admitted the request. `a` = its index in the
+    /// scan window (0 = it was the queue head).
+    Admitted,
+    /// No window candidate fit this step; the queue waits on active
+    /// work. `a` = pending-queue length. (`rid` is 0: the event is
+    /// about the gate, not one request.)
+    Deferred,
+    /// An admission jumped older pending requests. `a` = how many were
+    /// bypassed by this admission.
+    Bypassed,
+    /// The request cannot fit the page budget even with the cache
+    /// drained; its waiter gets an error.
+    Rejected,
+    /// An active request was preempted back to pending under memory
+    /// pressure.
+    Preempted,
+    /// Span: swapped prefix nodes were restored host → device before
+    /// this request's insert. `a` = nodes restored.
+    SwapRestore,
+    /// Span: one prefill chunk (all layers). `a` = chunk start offset
+    /// in the leaf, `b` = chunk end.
+    PrefillChunk,
+    /// Span: one batched decode step (all layers). `a` = batch size,
+    /// `b` = the engine step count. (`rid` is 0: the step serves the
+    /// whole batch.)
+    DecodeStep,
+    /// The request finished and left the batcher. `a` = generated
+    /// tokens.
+    Retire,
+    /// The engine step failed (typed step error → shard failure path).
+    Failure,
+}
+
+impl EventKind {
+    /// Stable lowercase name used in the exported JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Routed => "routed",
+            EventKind::Admitted => "admitted",
+            EventKind::Deferred => "deferred",
+            EventKind::Bypassed => "bypassed",
+            EventKind::Rejected => "rejected",
+            EventKind::Preempted => "preempted",
+            EventKind::SwapRestore => "swap_restore",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::DecodeStep => "decode_step",
+            EventKind::Retire => "retire",
+            EventKind::Failure => "failure",
+        }
+    }
+
+    /// Whether the event is a span (exported as a Chrome `ph: "X"`
+    /// duration event) rather than an instant.
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::SwapRestore | EventKind::PrefillChunk | EventKind::DecodeStep
+        )
+    }
+}
+
+/// One recorded event: fixed-size, `Copy`, no heap — the ring buffer
+/// is a flat `Vec` of these.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Start time, µs since the process trace epoch ([`now_us`]).
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Track: the shard id, or [`ROUTER_TRACK`] for server-side events.
+    pub shard: u32,
+    /// What happened.
+    pub kind: EventKind,
+    /// The request id (0 when the event is not about one request).
+    pub rid: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub a: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub b: u64,
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s. Capacity 0 (the default) is
+/// **disabled**: recording is a branch and nothing is ever allocated.
+/// When full, the oldest event is overwritten and counted in
+/// [`TraceRing::dropped`].
+#[derive(Debug, Clone, Default)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Index of the oldest event once the ring has wrapped (0 before).
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding up to `capacity` events (pre-allocated once);
+    /// `0` = disabled.
+    pub fn with_capacity(capacity: usize) -> TraceRing {
+        TraceRing {
+            buf: Vec::with_capacity(capacity),
+            cap: capacity,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Whether recording is on (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Configured capacity (0 = disabled).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no events are held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Record an instant event, timestamped now. On a disabled ring
+    /// this is a single branch — no timestamp read, no write.
+    pub fn record(&mut self, kind: EventKind, shard: u32, rid: u64, a: u64, b: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        self.push_event(TraceEvent {
+            ts_us: now_us(),
+            dur_us: 0,
+            shard,
+            kind,
+            rid,
+            a,
+            b,
+        });
+    }
+
+    /// Record a span that started at `start_us` (from [`now_us`]) and
+    /// ends now. Disabled rings ignore it; capture `start_us` behind
+    /// [`TraceRing::enabled`] so the disabled path pays nothing.
+    pub fn record_span(
+        &mut self,
+        kind: EventKind,
+        shard: u32,
+        rid: u64,
+        start_us: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if self.cap == 0 {
+            return;
+        }
+        let end = now_us();
+        self.push_event(TraceEvent {
+            ts_us: start_us,
+            dur_us: end.saturating_sub(start_us),
+            shard,
+            kind,
+            rid,
+            a,
+            b,
+        });
+    }
+
+    /// Raw ring insert. Serving-path code must go through
+    /// [`TraceRing::record`] / [`TraceRing::record_span`], which gate
+    /// on the enabled flag — `cargo xtask lint`'s `trace-gate` rule
+    /// enforces that this method (and `TraceEvent` construction) never
+    /// appears under `engine/` or `cache/`.
+    pub fn push_event(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in insertion order (oldest surviving event first).
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (tail, head) = self.buf.split_at(self.head.min(self.buf.len()));
+        head.iter().chain(tail.iter())
+    }
+
+    /// Append every event of `other` (shard rings merging into the
+    /// shutdown snapshot). The capacity grows by `other`'s so a merge
+    /// of N bounded rings is bounded by the sum of their capacities and
+    /// never drops events; drop counters add.
+    pub fn merge(&mut self, other: &TraceRing) {
+        self.dropped += other.dropped;
+        if other.buf.is_empty() {
+            return;
+        }
+        // Linearize self first: push_event appends at the tail, which
+        // is only correct when the ring is not mid-wrap.
+        if self.head != 0 {
+            self.buf = self.iter().copied().collect();
+            self.head = 0;
+        }
+        self.cap += other.cap;
+        self.buf.reserve(other.buf.len());
+        for ev in other.iter() {
+            self.push_event(*ev);
+        }
+    }
+}
+
+/// Chrome tid for an event's track: the router pseudo-track is tid 0,
+/// shard `s` is tid `s + 1`.
+fn track_tid(shard: u32) -> u64 {
+    if shard == ROUTER_TRACK {
+        0
+    } else {
+        shard as u64 + 1
+    }
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Render a ring as Chrome trace-event JSON (`{"traceEvents": [...]}`),
+/// viewable in Perfetto / `chrome://tracing`:
+///
+/// * thread-name metadata gives one named track per shard plus
+///   `router`;
+/// * span kinds export as duration events (`ph: "X"` with `dur`),
+///   point kinds as instants (`ph: "i"`);
+/// * each request with more than one event gets a flow arrow
+///   (`ph: "s"` at its first event, `ph: "f"` at its last) so a
+///   request's hops across tracks are linked;
+/// * within each track the non-flow events' `ts` values are strictly
+///   increasing (equal stamps are bumped by 1 µs in export order).
+pub fn chrome_trace_json(ring: &TraceRing) -> Json {
+    let mut evs: Vec<TraceEvent> = ring.iter().copied().collect();
+    evs.sort_by_key(|e| (track_tid(e.shard), e.ts_us));
+    // Strict per-track monotonicity: Perfetto tolerates ties but the
+    // round-trip tests (and sane flow binding) want a total order.
+    let mut last_ts: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in &mut evs {
+        let tid = track_tid(e.shard);
+        if let Some(prev) = last_ts.get(&tid) {
+            if e.ts_us <= *prev {
+                e.ts_us = prev + 1;
+            }
+        }
+        last_ts.insert(tid, e.ts_us);
+    }
+
+    let mut out: Vec<Json> = Vec::with_capacity(evs.len() + 8);
+    out.push(Json::from_pairs([
+        ("name", Json::from("process_name")),
+        ("ph", Json::from("M")),
+        ("pid", num(1)),
+        ("args", Json::from_pairs([("name", Json::from("codec serve"))])),
+    ]));
+    let tids: std::collections::BTreeSet<u64> = evs.iter().map(|e| track_tid(e.shard)).collect();
+    for tid in &tids {
+        let name = if *tid == 0 {
+            "router".to_string()
+        } else {
+            format!("shard {}", tid - 1)
+        };
+        out.push(Json::from_pairs([
+            ("name", Json::from("thread_name")),
+            ("ph", Json::from("M")),
+            ("pid", num(1)),
+            ("tid", num(*tid)),
+            ("args", Json::from_pairs([("name", Json::from(name))])),
+        ]));
+    }
+
+    for e in &evs {
+        let mut pairs = vec![
+            ("name", Json::from(e.kind.name())),
+            ("cat", Json::from("serve")),
+            ("ph", Json::from(if e.kind.is_span() { "X" } else { "i" })),
+            ("ts", num(e.ts_us)),
+            ("pid", num(1)),
+            ("tid", num(track_tid(e.shard))),
+            (
+                "args",
+                Json::from_pairs([
+                    ("rid", num(e.rid)),
+                    ("a", num(e.a)),
+                    ("b", num(e.b)),
+                ]),
+            ),
+        ];
+        if e.kind.is_span() {
+            pairs.push(("dur", num(e.dur_us)));
+        } else {
+            pairs.push(("s", Json::from("t")));
+        }
+        out.push(Json::from_pairs(pairs));
+    }
+
+    // Flow arrows: first event → last event per request id.
+    let mut per_rid: BTreeMap<u64, (TraceEvent, TraceEvent)> = BTreeMap::new();
+    for e in &evs {
+        if e.rid == 0 {
+            continue;
+        }
+        per_rid
+            .entry(e.rid)
+            .and_modify(|(first, last)| {
+                if e.ts_us < first.ts_us {
+                    *first = *e;
+                }
+                if e.ts_us >= last.ts_us {
+                    *last = *e;
+                }
+            })
+            .or_insert((*e, *e));
+    }
+    for (rid, (first, last)) in &per_rid {
+        if first == last {
+            continue;
+        }
+        for (ph, anchor) in [("s", first), ("f", last)] {
+            let mut pairs = vec![
+                ("name", Json::from("req")),
+                ("cat", Json::from("lifecycle")),
+                ("ph", Json::from(ph)),
+                ("id", num(*rid)),
+                ("ts", num(anchor.ts_us)),
+                ("pid", num(1)),
+                ("tid", num(track_tid(anchor.shard))),
+            ];
+            if ph == "f" {
+                pairs.push(("bp", Json::from("e")));
+            }
+            out.push(Json::from_pairs(pairs));
+        }
+    }
+
+    Json::from_pairs([
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64, shard: u32, rid: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us: ts,
+            dur_us: 0,
+            shard,
+            kind: EventKind::Admitted,
+            rid,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut r = TraceRing::default();
+        assert!(!r.enabled());
+        r.record(EventKind::Submit, 0, 1, 0, 0);
+        r.record_span(EventKind::DecodeStep, 0, 0, 0, 4, 1);
+        r.push_event(ev(1, 0, 1));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.buf.capacity(), 0, "disabled ring never allocates");
+    }
+
+    #[test]
+    fn ring_wraps_bounded_with_drop_counter() {
+        let mut r = TraceRing::with_capacity(4);
+        for i in 0..10u64 {
+            r.push_event(ev(i, 0, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let kept: Vec<u64> = r.iter().map(|e| e.ts_us).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest dropped, order preserved");
+    }
+
+    #[test]
+    fn merge_concatenates_and_sums_drops() {
+        let mut a = TraceRing::with_capacity(2);
+        for i in 0..3u64 {
+            a.push_event(ev(i, 0, i)); // wraps once: holds [1, 2], dropped 1
+        }
+        let mut b = TraceRing::with_capacity(4);
+        b.push_event(ev(10, 1, 7));
+        a.merge(&b);
+        assert_eq!(a.len(), 3, "merge must not drop");
+        assert_eq!(a.dropped(), 1);
+        let ts: Vec<u64> = a.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![1, 2, 10]);
+        // Merging into a disabled (default) ring keeps the events: the
+        // shutdown snapshot starts from Metrics::default.
+        let mut snap = TraceRing::default();
+        snap.merge(&a);
+        assert_eq!(snap.len(), 3);
+    }
+
+    #[test]
+    fn export_bumps_ties_per_track() {
+        let mut r = TraceRing::with_capacity(8);
+        r.push_event(ev(5, 0, 1));
+        r.push_event(ev(5, 0, 2)); // same ts, same track → bumped
+        r.push_event(ev(5, 1, 3)); // same ts, other track → untouched
+        let json = chrome_trace_json(&r);
+        let evs = json.get("traceEvents").and_then(Json::as_arr).expect("array");
+        let mut by_track: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for e in evs {
+            if e.get("cat").and_then(Json::as_str) != Some("serve") {
+                continue;
+            }
+            let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+            let ts = e.get("ts").and_then(Json::as_f64).expect("ts") as u64;
+            by_track.entry(tid).or_default().push(ts);
+        }
+        for (tid, ts) in by_track {
+            for w in ts.windows(2) {
+                assert!(w[1] > w[0], "track {tid} not strictly monotonic: {w:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Analytic KV memory-traffic accounting over a division plan — the
+//! instrumentation behind the paper's headline metric.
+//!
+//! CoDec's central claim is a *memory-access* reduction: decode
+//! attention is bandwidth-bound on KV reads, and a prefix shared by R
+//! requests is read **once** by the prefix-shared kernel where a
+//! per-request kernel (FlashDecoding and its descendants) reads it R
+//! times. This module prices both sides from the *same* plan geometry,
+//! so the ratio is exact and deterministic — no timers involved:
+//!
+//! * **CoDec bytes** — each subtask loads its KV slice `[lo, hi)` of
+//!   `d_head` floats for K and again for V, once, regardless of how
+//!   many requests' queries are stacked on it:
+//!   `Σ_subtasks (hi − lo) · d_head · 4 B · 2`.
+//! * **FlashDecoding baseline bytes** — a per-request kernel re-reads
+//!   that same slice once per attending request:
+//!   `Σ_subtasks (hi − lo) · R_task · d_head · 4 B · 2`, where
+//!   `R_task = nq / group_size` is the task's sharing degree (the
+//!   number of requests whose paths include the node; GQA query rows
+//!   divide out). This is the per-request lower bound: it charges the
+//!   baseline no partition overhead, only the unavoidable re-reads.
+//!
+//! Both sums are per layer — the engine multiplies by `n_layers` when
+//! it accumulates a step (`Metrics::on_decode_traffic`). Bytes from a
+//! subtask whose task has sharing degree ≥ 2 are attributed to the
+//! **shared prefix**; degree-1 bytes are the **unique suffix** (each
+//! request's private tail, where no kernel can save anything). The
+//! ratio `flash / codec` therefore approaches
+//! `mean sharing degree` as shared prefixes dominate, and 1.0 when
+//! nothing is shared — `Forest::mean_sharing_degree` is the same
+//! quantity predicted from topology alone.
+//!
+//! The analytic model is pinned against ground truth: the paged
+//! store's byte counters (`KvStore::bytes_read`) count what the kernel
+//! *actually* gathered, and `rust/tests/obs_trace.rs` asserts the two
+//! agree exactly for a decode plan.
+
+use crate::sched::Plan;
+use std::collections::BTreeMap;
+
+/// Bytes per stored KV element (f32).
+pub const KV_ELEM_BYTES: u64 = 4;
+
+/// Per-layer KV traffic of one decode-attention plan, split by
+/// attribution, plus the sharing-degree histogram of its tasks.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PlanTraffic {
+    /// KV bytes the prefix-shared kernel reads from nodes with sharing
+    /// degree ≥ 2 (the shared-prefix traffic).
+    pub shared_bytes: u64,
+    /// KV bytes read from degree-1 nodes (each request's unique
+    /// suffix).
+    pub unique_bytes: u64,
+    /// KV bytes a per-request FlashDecoding-style kernel would read
+    /// for the same geometry (every node re-read once per attending
+    /// request).
+    pub flash_bytes: u64,
+    /// sharing degree → number of forest-node tasks with that many
+    /// attending requests (counted once per node, at kv-head 0).
+    pub degree_hist: BTreeMap<usize, u64>,
+}
+
+impl PlanTraffic {
+    /// Total KV bytes the prefix-shared kernel reads (shared + unique).
+    pub fn codec_bytes(&self) -> u64 {
+        self.shared_bytes + self.unique_bytes
+    }
+
+    /// The memory-access-reduction ratio `flash / codec` for this plan
+    /// (`None` for an empty plan). ≥ 1 by construction: the baseline
+    /// reads every byte CoDec reads, plus the re-reads.
+    pub fn reduction_ratio(&self) -> Option<f64> {
+        let codec = self.codec_bytes();
+        (codec > 0).then(|| self.flash_bytes as f64 / codec as f64)
+    }
+
+    /// Accumulate another plan's traffic (e.g. summing steps).
+    pub fn add(&mut self, other: &PlanTraffic) {
+        self.shared_bytes += other.shared_bytes;
+        self.unique_bytes += other.unique_bytes;
+        self.flash_bytes += other.flash_bytes;
+        for (d, c) in &other.degree_hist {
+            *self.degree_hist.entry(*d).or_insert(0) += c;
+        }
+    }
+}
+
+/// Price one plan's per-layer KV traffic. `group_size` is the GQA
+/// group (`n_q_heads / n_kv_heads`) the planner used to build task
+/// query counts, `d_head` the head dimension of the stored KV rows.
+pub fn account_plan(plan: &Plan, group_size: usize, d_head: usize) -> PlanTraffic {
+    let g = group_size.max(1) as u64;
+    let row_bytes = d_head as u64 * KV_ELEM_BYTES * 2; // K row + V row
+    let mut out = PlanTraffic::default();
+    for s in &plan.subtasks {
+        let degree = (plan.tasks[s.task].nq as u64 / g).max(1);
+        let bytes = (s.hi - s.lo) as u64 * row_bytes;
+        if degree >= 2 {
+            out.shared_bytes += bytes;
+        } else {
+            out.unique_bytes += bytes;
+        }
+        out.flash_bytes += bytes * degree;
+    }
+    for t in &plan.tasks {
+        if t.kv_head == 0 {
+            let degree = (t.nq / group_size.max(1)).max(1);
+            *out.degree_hist.entry(degree).or_insert(0) += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Estimator;
+    use crate::kvforest::{Forest, VIRTUAL_ROOT};
+    use crate::sched::plan::{materialize_subtasks, tasks_from_forest};
+    use crate::sched::{lpt_schedule, Plan};
+
+    /// R requests sharing a `shared`-token prefix, each with a
+    /// `private`-token suffix, planned at division 1.
+    fn plan_for(r: usize, shared: usize, private: usize, kv_heads: usize, g: usize) -> Plan {
+        let mut f = Forest::new();
+        let root = f.add_synthetic(VIRTUAL_ROOT, shared);
+        for i in 0..r {
+            let leaf = f.add_synthetic(root, private);
+            f.assign_synthetic_request(i as u64, leaf);
+        }
+        let est = Estimator::table2();
+        let tasks = tasks_from_forest(&f, kv_heads, g);
+        let divisions = vec![1; tasks.len()];
+        let subtasks = materialize_subtasks(&tasks, &divisions, &est);
+        let costs: Vec<f64> = subtasks.iter().map(|s| s.cost_ms).collect();
+        let (assignment, makespan_ms) = lpt_schedule(&costs, 4);
+        Plan {
+            tasks,
+            divisions,
+            subtasks,
+            assignment,
+            makespan_ms,
+            lower_bound_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn shared_vs_unique_attribution_is_exact() {
+        // 4 requests share 100 tokens, 10 private each; 2 kv-heads,
+        // d_head 8. Per layer, per kv-head: shared node read = 100
+        // rows, private = 4 × 10 rows.
+        let plan = plan_for(4, 100, 10, 2, 2);
+        let t = account_plan(&plan, 2, 8);
+        let row = 8 * KV_ELEM_BYTES * 2;
+        assert_eq!(t.shared_bytes, 2 * 100 * row);
+        assert_eq!(t.unique_bytes, 2 * 4 * 10 * row);
+        // Baseline re-reads the shared node once per request.
+        assert_eq!(t.flash_bytes, 2 * (4 * 100 + 4 * 10) * row);
+        assert_eq!(t.degree_hist, BTreeMap::from([(4, 1), (1, 4)]));
+        let ratio = t.reduction_ratio().expect("nonzero traffic");
+        // 440 rows baseline / 140 rows codec per kv-head.
+        assert!((ratio - 440.0 / 140.0).abs() < 1e-12, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn ratio_grows_with_sharing_degree() {
+        let geometry = |r| {
+            account_plan(&plan_for(r, 256, 16, 2, 2), 2, 8)
+                .reduction_ratio()
+                .expect("nonzero traffic")
+        };
+        let (r2, r8) = (geometry(2), geometry(8));
+        assert!(r2 > 1.0, "any sharing beats the baseline: {r2}");
+        assert!(r8 > r2, "ratio must grow with R: {r8} vs {r2}");
+    }
+
+    #[test]
+    fn no_sharing_means_ratio_one() {
+        // Single request: every node has degree 1.
+        let plan = plan_for(1, 64, 16, 1, 4);
+        let t = account_plan(&plan, 4, 8);
+        assert_eq!(t.shared_bytes, 0);
+        assert!((t.reduction_ratio().expect("nonzero") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_plan_has_no_ratio() {
+        let t = PlanTraffic::default();
+        assert!(t.reduction_ratio().is_none());
+        assert_eq!(t.codec_bytes(), 0);
+    }
+
+    #[test]
+    fn add_accumulates_and_merges_hist() {
+        let mut a = account_plan(&plan_for(2, 32, 8, 1, 1), 1, 8);
+        let b = account_plan(&plan_for(3, 32, 8, 1, 1), 1, 8);
+        let flash = a.flash_bytes + b.flash_bytes;
+        a.add(&b);
+        assert_eq!(a.flash_bytes, flash);
+        assert_eq!(a.degree_hist[&2], 1);
+        assert_eq!(a.degree_hist[&3], 1);
+        assert_eq!(a.degree_hist[&1], 5);
+    }
+}

@@ -16,6 +16,11 @@ fn annotated_relaxed(counter: &AtomicUsize) {
     counter.fetch_add(1, Ordering::Relaxed); // lint: allow(relaxed-ordering, reason = "advisory counter")
 }
 
+fn annotated_trace_emit(ring: &mut TraceRing, ev: TraceEvent) {
+    // lint: allow(trace-gate, reason = "fixture: replaying an already-gated event")
+    ring.push_event(ev);
+}
+
 fn guard_scoped_before_send(m: &Mutex<u32>, tx: &Sender<u32>) {
     let v = {
         let guard = m.lock();

@@ -1,0 +1,7 @@
+// Seeded violation for the `trace-gate` rule: engine-scope code pushing
+// a raw event into the ring, bypassing the enabled-flag gate that keeps
+// disabled tracing free.
+
+fn bypass_the_gate(ring: &mut TraceRing) {
+    ring.push_event(make_event());
+}

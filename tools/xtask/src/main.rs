@@ -30,6 +30,11 @@
 //!   `drop(<name>)`.
 //! * `relaxed-ordering` — every `Ordering::Relaxed` atomic op carries a
 //!   justification annotation or is upgraded to Acquire/Release.
+//! * `trace-gate` — no raw trace emission (`.push_event(` or a
+//!   `TraceEvent` literal) in the serving path (`engine/`, `cache/`).
+//!   Those bypass the enabled-flag gate; serving code must go through
+//!   `TraceRing::record` / `record_span`, which are no-ops when tracing
+//!   is off — that is what keeps `--trace-out`-disabled runs free.
 //!
 //! Implementation note: this is a lexical scanner (comment/string-aware
 //! line scan with brace-depth and `#[cfg(test)]`-region tracking), not a
@@ -52,6 +57,7 @@ const RULE_FOREST: &str = "forest-mutation";
 const RULE_UNWRAP: &str = "no-unwrap";
 const RULE_GUARD: &str = "guard-across-send";
 const RULE_RELAXED: &str = "relaxed-ordering";
+const RULE_TRACE: &str = "trace-gate";
 /// Meta-rule: a `lint: allow` annotation that is malformed or carries an
 /// empty reason is itself a violation (otherwise the allowlist rots).
 const RULE_ANNOTATION: &str = "annotation";
@@ -76,6 +82,11 @@ const MUTATION_TOKENS: &[&str] = &[
     ".free_node(",
 ];
 
+/// Tokens that emit into a trace ring without the enabled-flag gate.
+/// `TraceRing::record` / `record_span` are absent: they early-return on
+/// a disabled ring, so calling them is the sanctioned path.
+const TRACE_TOKENS: &[&str] = &[".push_event(", "TraceEvent {", "TraceEvent{"];
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Violation {
     file: String,
@@ -95,6 +106,7 @@ impl fmt::Display for Violation {
 struct Scope {
     forest_rule: bool,
     unwrap_rule: bool,
+    trace_rule: bool,
 }
 
 fn scope_for(rel: &str) -> Scope {
@@ -106,6 +118,7 @@ fn scope_for(rel: &str) -> Scope {
     Scope {
         forest_rule: (in_engine || in_cache) && !is_manager,
         unwrap_rule: in_engine || in_cache || in_kvforest,
+        trace_rule: in_engine || in_cache,
     }
 }
 
@@ -381,6 +394,18 @@ fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Violation> {
                     );
                 }
             }
+            if scope.trace_rule && !allowed.contains(RULE_TRACE) {
+                if let Some(tok) = TRACE_TOKENS.iter().find(|t| code.contains(**t)) {
+                    push(
+                        RULE_TRACE,
+                        format!(
+                            "ungated trace emission (`{tok}`) in the serving path — \
+                             use TraceRing::record/record_span, which no-op when \
+                             tracing is disabled"
+                        ),
+                    );
+                }
+            }
             if (code.contains(".send(") || code.contains(".recv("))
                 && !allowed.contains(RULE_GUARD)
             {
@@ -465,7 +490,7 @@ fn run_lint() -> ExitCode {
     if violations.is_empty() {
         println!(
             "xtask lint: {} files clean (rules: {RULE_FOREST}, {RULE_UNWRAP}, \
-             {RULE_GUARD}, {RULE_RELAXED})",
+             {RULE_GUARD}, {RULE_RELAXED}, {RULE_TRACE})",
             files.len()
         );
         ExitCode::SUCCESS
@@ -500,6 +525,7 @@ mod tests {
     const ENGINE_SCOPE: Scope = Scope {
         forest_rule: true,
         unwrap_rule: true,
+        trace_rule: true,
     };
 
     fn fixture(name: &str) -> String {
@@ -536,6 +562,11 @@ mod tests {
     #[test]
     fn fixture_relaxed_ordering_fires() {
         assert_eq!(rules_fired("relaxed_ordering.rs"), vec![RULE_RELAXED]);
+    }
+
+    #[test]
+    fn fixture_trace_gate_fires() {
+        assert_eq!(rules_fired("trace_gate.rs"), vec![RULE_TRACE]);
     }
 
     #[test]
@@ -700,11 +731,17 @@ fn f() {
     fn scope_mapping_matches_the_layout() {
         assert!(scope_for("engine/server.rs").forest_rule);
         assert!(scope_for("engine/server.rs").unwrap_rule);
+        assert!(scope_for("engine/server.rs").trace_rule);
         assert!(!scope_for("cache/manager.rs").forest_rule);
         assert!(scope_for("cache/manager.rs").unwrap_rule);
+        assert!(scope_for("cache/manager.rs").trace_rule);
         assert!(!scope_for("kvforest/forest.rs").forest_rule);
         assert!(scope_for("kvforest/forest.rs").unwrap_rule);
+        assert!(!scope_for("kvforest/forest.rs").trace_rule);
+        // The recorder itself lives in obs/: raw inserts are legal there.
+        assert!(!scope_for("obs/trace.rs").trace_rule);
         assert!(!scope_for("util/threadpool.rs").forest_rule);
         assert!(!scope_for("util/threadpool.rs").unwrap_rule);
+        assert!(!scope_for("util/threadpool.rs").trace_rule);
     }
 }
