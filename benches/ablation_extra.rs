@@ -29,6 +29,7 @@ fn main() {
                 num_blocks: A100.sm_count,
                 min_chunk: mc,
                 max_passes: 3,
+                ..Default::default()
             },
         );
         rep.row(vec![
@@ -55,6 +56,7 @@ fn main() {
                 num_blocks: A100.sm_count,
                 min_chunk: 256,
                 max_passes: passes,
+                ..Default::default()
             },
         );
         rep.row(vec![format!("{passes}"), fmt_ms(plan.makespan_ms)]);

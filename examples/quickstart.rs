@@ -60,13 +60,7 @@ fn main() -> anyhow::Result<()> {
             m
         })
         .collect();
-    let batch = QueryBatch {
-        rids: vec![0, 1, 2],
-        q,
-        n_q_heads,
-        n_kv_heads,
-        d_head: d,
-    };
+    let batch = QueryBatch::from_parts(vec![0, 1, 2], &q, n_q_heads, n_kv_heads, d);
 
     // 3. Divide + schedule (§5), then execute (§4).
     let est = Estimator::table2();
@@ -90,10 +84,16 @@ fn main() -> anyhow::Result<()> {
     // 4. Verify against the exact-attention oracle.
     let g = n_q_heads / n_kv_heads;
     let mut max_err = 0f32;
-    for (ri, &rid) in batch.rids.iter().enumerate() {
+    for (ri, &rid) in batch.rids().iter().enumerate() {
         for kvh in 0..n_kv_heads {
-            let want =
-                request_attention_exact(&forest, &store, 0, rid, kvh, &batch.group_rows(ri, kvh));
+            let want = request_attention_exact(
+                &forest,
+                &store,
+                0,
+                rid,
+                kvh,
+                &batch.group_rows(ri, kvh).to_mat(),
+            );
             for j in 0..g {
                 for c in 0..d {
                     max_err = max_err.max((outs[ri].at(kvh * g + j, c) - want.at(j, c)).abs());

@@ -7,10 +7,10 @@
 //! traffic model and the benches. The serving engine swaps the PAC/POR
 //! calls for the AOT PJRT executables (see `runtime::exec`).
 
-use crate::attention::pac::{pac_streamed, por_merge, Partial};
+use crate::attention::pac::{pac_streamed_view, por_merge, Partial};
 use crate::kvforest::{Forest, KvStore, NodeId, RequestId};
 use crate::sched::Plan;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatView};
 use crate::util::threadpool::parallel_map_indexed;
 use std::collections::BTreeMap;
 
@@ -18,28 +18,183 @@ use std::collections::BTreeMap;
 /// DEFAULT_BLOCK_K).
 pub const BLOCK_K: usize = 256;
 
-/// The decode-step query tensor: one new token per request, all heads.
+/// The decode-step query tensor, held in a persistent per-kv-head stacked
+/// layout: for each kv head, one (R·g × d_head) matrix whose row block
+/// `[ri·g, (ri+1)·g)` is request index `ri`'s GQA head group (g =
+/// n_q_heads / n_kv_heads).
+///
+/// The layout is maintained incrementally across decode steps: requests
+/// [`join`] once when prefill finishes, have their per-step query values
+/// written in place with [`set_queries`], and leave via [`retire`]
+/// (swap-remove, so surviving rows never shift except the one moved
+/// block). Per-(node, kv-head) task stacks then become borrowed row-range
+/// views over this layout whenever a node's requests occupy contiguous
+/// batch rows — the steady-state case — instead of a fresh gather per
+/// task per step.
+///
+/// [`join`]: QueryBatch::join
+/// [`set_queries`]: QueryBatch::set_queries
+/// [`retire`]: QueryBatch::retire
 #[derive(Debug, Clone)]
 pub struct QueryBatch {
-    /// Request order; row blocks of `q` follow this order.
-    pub rids: Vec<RequestId>,
-    /// Per request: (n_q_heads × d_head) query rows.
-    pub q: Vec<Mat>,
-    pub n_q_heads: usize,
-    pub n_kv_heads: usize,
-    pub d_head: usize,
+    /// Request order; row block `ri` of each per-kv-head matrix belongs
+    /// to `rids[ri]`.
+    rids: Vec<RequestId>,
+    /// One stacked (len·g × d_head) matrix per kv head.
+    q: Vec<Mat>,
+    n_q_heads: usize,
+    n_kv_heads: usize,
+    d_head: usize,
+}
+
+/// Stacked queries for one (node, kv-head) task: a zero-copy view into
+/// the [`QueryBatch`] layout when the node's batch rows are contiguous,
+/// an owned gather otherwise.
+#[derive(Debug)]
+pub enum TaskQueries<'a> {
+    View(MatView<'a>),
+    Owned(Mat),
+}
+
+impl TaskQueries<'_> {
+    #[inline]
+    pub fn as_view(&self) -> MatView<'_> {
+        match self {
+            TaskQueries::View(v) => *v,
+            TaskQueries::Owned(m) => m.view(),
+        }
+    }
 }
 
 impl QueryBatch {
+    /// An empty batch with the given head geometry.
+    pub fn new(n_q_heads: usize, n_kv_heads: usize, d_head: usize) -> QueryBatch {
+        assert!(n_kv_heads > 0 && n_q_heads % n_kv_heads == 0);
+        QueryBatch {
+            rids: Vec::new(),
+            q: (0..n_kv_heads).map(|_| Mat::zeros(0, d_head)).collect(),
+            n_q_heads,
+            n_kv_heads,
+            d_head,
+        }
+    }
+
+    /// Build a batch from per-request (n_q_heads × d_head) query
+    /// matrices, in batch order. Convenience for tests and one-shot
+    /// callers; the engine maintains its batch incrementally instead.
+    pub fn from_parts(
+        rids: Vec<RequestId>,
+        per_request: &[Mat],
+        n_q_heads: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+    ) -> QueryBatch {
+        assert_eq!(rids.len(), per_request.len());
+        let mut b = QueryBatch::new(n_q_heads, n_kv_heads, d_head);
+        for (&rid, q) in rids.iter().zip(per_request) {
+            b.join(rid, q);
+        }
+        b
+    }
+
     pub fn group_size(&self) -> usize {
         self.n_q_heads / self.n_kv_heads
     }
 
-    /// The GQA head-group query rows of request index `ri` for `kv_head`:
-    /// a (group_size × d_head) matrix.
-    pub fn group_rows(&self, ri: usize, kv_head: usize) -> Mat {
+    pub fn n_q_heads(&self) -> usize {
+        self.n_q_heads
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.n_kv_heads
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    pub fn len(&self) -> usize {
+        self.rids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rids.is_empty()
+    }
+
+    /// Batch order: row block `ri` of each per-kv-head matrix belongs to
+    /// `rids()[ri]`.
+    pub fn rids(&self) -> &[RequestId] {
+        &self.rids
+    }
+
+    /// Append a request to the batch with its (n_q_heads × d_head)
+    /// queries. Panics if the rid is already present.
+    pub fn join(&mut self, rid: RequestId, q: &Mat) {
+        assert_eq!((q.rows, q.cols), (self.n_q_heads, self.d_head));
+        assert!(self.index_of(rid).is_none(), "rid {rid} already in batch");
         let g = self.group_size();
-        self.q[ri].rows_slice(kv_head * g, (kv_head + 1) * g)
+        for (kvh, stack) in self.q.iter_mut().enumerate() {
+            for j in 0..g {
+                stack.push_row(q.row(kvh * g + j));
+            }
+        }
+        self.rids.push(rid);
+    }
+
+    /// Overwrite request `rid`'s query rows in place (the per-step value
+    /// refresh — membership and layout are untouched). Panics if absent.
+    pub fn set_queries(&mut self, rid: RequestId, q: &Mat) {
+        assert_eq!((q.rows, q.cols), (self.n_q_heads, self.d_head));
+        let ri = self.index_of(rid).expect("rid not in batch");
+        let g = self.group_size();
+        for (kvh, stack) in self.q.iter_mut().enumerate() {
+            for j in 0..g {
+                stack.row_mut(ri * g + j).copy_from_slice(q.row(kvh * g + j));
+            }
+        }
+    }
+
+    /// Remove request `rid` by swap-remove: the last row block moves into
+    /// its slot, every other block stays put. Returns false if absent.
+    pub fn retire(&mut self, rid: RequestId) -> bool {
+        let Some(ri) = self.index_of(rid) else {
+            return false;
+        };
+        let g = self.group_size();
+        let last = self.rids.len() - 1;
+        for stack in &mut self.q {
+            if ri < last {
+                let cols = stack.cols;
+                let src = last * g * cols;
+                stack.data.copy_within(src..src + g * cols, ri * g * cols);
+            }
+            stack.data.truncate(last * g * stack.cols);
+            stack.rows = last * g;
+        }
+        self.rids.swap_remove(ri);
+        true
+    }
+
+    /// The GQA head-group query rows of request index `ri` for `kv_head`:
+    /// a zero-copy (group_size × d_head) view into the stacked layout.
+    pub fn group_rows(&self, ri: usize, kv_head: usize) -> MatView<'_> {
+        let g = self.group_size();
+        self.q[kv_head].view_rows(ri * g, (ri + 1) * g)
+    }
+
+    /// Request index `ri`'s full (n_q_heads × d_head) query matrix,
+    /// re-assembled from the per-kv-head stacks (owned; boundary use
+    /// only — the kernels consume [`QueryBatch::group_rows`] views).
+    pub fn request_queries(&self, ri: usize) -> Mat {
+        let g = self.group_size();
+        let mut out = Mat::zeros(self.n_q_heads, self.d_head);
+        for kvh in 0..self.n_kv_heads {
+            let rows = self.group_rows(ri, kvh);
+            for j in 0..g {
+                out.row_mut(kvh * g + j).copy_from_slice(rows.row(j));
+            }
+        }
+        out
     }
 
     pub fn index_of(&self, rid: RequestId) -> Option<usize> {
@@ -53,37 +208,53 @@ impl QueryBatch {
     pub fn rid_index(&self) -> BTreeMap<RequestId, usize> {
         self.rids.iter().enumerate().map(|(i, &r)| (r, i)).collect()
     }
-}
 
-/// Assemble the stacked per-node query tensor Q^(n) for `(node, kv_head)`:
-/// for each request in I_n (sorted), its head-group rows. (§4.1 "formal
-/// per-node assembly" — on the GPU this gather happens in shared memory.)
-/// `index` is the precomputed rid → batch-row map ([`QueryBatch::rid_index`]).
-pub fn stack_node_queries_indexed(
-    forest: &Forest,
-    batch: &QueryBatch,
-    node: NodeId,
-    kv_head: usize,
-    index: &BTreeMap<RequestId, usize>,
-) -> Mat {
-    let g = batch.group_size();
-    let reqs = &forest.node(node).requests;
-    let mut q = Mat::zeros(reqs.len() * g, batch.d_head);
-    for (i, &rid) in reqs.iter().enumerate() {
-        let ri = *index.get(&rid).expect("request not in batch");
-        let rows = batch.group_rows(ri, kv_head);
-        for j in 0..g {
-            q.row_mut(i * g + j).copy_from_slice(rows.row(j));
+    /// Assemble the stacked query tensor for one (node, kv-head) task
+    /// from the node's batch-row indices (`rows`, ascending). When the
+    /// rows form a contiguous run this is a borrowed view over the
+    /// persistent layout — no copy; otherwise a gathered Mat.
+    pub fn stack_rows(&self, kv_head: usize, rows: &[usize]) -> TaskQueries<'_> {
+        let g = self.group_size();
+        let contiguous = rows.windows(2).all(|w| w[1] == w[0] + 1);
+        if contiguous && !rows.is_empty() {
+            let lo = rows[0];
+            TaskQueries::View(self.q[kv_head].view_rows(lo * g, (lo + rows.len()) * g))
+        } else {
+            let mut m = Mat::zeros(rows.len() * g, self.d_head);
+            for (i, &ri) in rows.iter().enumerate() {
+                let src = self.group_rows(ri, kv_head);
+                for j in 0..g {
+                    m.row_mut(i * g + j).copy_from_slice(src.row(j));
+                }
+            }
+            TaskQueries::Owned(m)
         }
     }
-    q
 }
 
-/// One-off convenience wrapper around [`stack_node_queries_indexed`].
-/// Executors stacking queries for many tasks should build the index once
-/// via [`QueryBatch::rid_index`] instead of calling this per task.
-pub fn stack_node_queries(forest: &Forest, batch: &QueryBatch, node: NodeId, kv_head: usize) -> Mat {
-    stack_node_queries_indexed(forest, batch, node, kv_head, &batch.rid_index())
+/// Per-node batch-row indices for every node named by the plan's tasks,
+/// sorted ascending — the shared stacking order for task assembly and
+/// series extraction. Built once per attention call.
+pub fn plan_node_rows(
+    forest: &Forest,
+    batch: &QueryBatch,
+    plan: &Plan,
+) -> BTreeMap<NodeId, Vec<usize>> {
+    let rid_index = batch.rid_index();
+    let mut node_rows: BTreeMap<NodeId, Vec<usize>> = BTreeMap::new();
+    for t in &plan.tasks {
+        node_rows.entry(t.node).or_insert_with(|| {
+            let mut rows: Vec<usize> = forest
+                .node(t.node)
+                .requests
+                .iter()
+                .map(|r| *rid_index.get(r).expect("request not in batch"))
+                .collect();
+            rows.sort_unstable();
+            rows
+        });
+    }
+    node_rows
 }
 
 /// Run the plan: PAC per subtask (parallel over subtasks — inter-block
@@ -101,22 +272,23 @@ pub fn run_codec_attention(
     let g = batch.group_size();
     let d = batch.d_head;
 
-    // Stage 1: stacked queries per (node, kv_head) task. The rid → row
-    // index is built once for the whole call (not per task).
-    let rid_index = batch.rid_index();
-    let task_queries: Vec<Mat> = plan
+    // Stage 1: stacked queries per (node, kv_head) task — row-range views
+    // over the persistent batch layout when the node's requests sit on
+    // contiguous batch rows (the steady state), gathered copies otherwise.
+    let node_rows = plan_node_rows(forest, batch, plan);
+    let task_queries: Vec<TaskQueries<'_>> = plan
         .tasks
         .iter()
-        .map(|t| stack_node_queries_indexed(forest, batch, t.node, t.kv_head, &rid_index))
+        .map(|t| batch.stack_rows(t.kv_head, &node_rows[&t.node]))
         .collect();
 
     // Stage 2: PAC per subtask, embarrassingly parallel (Alg. 4 line 4).
     let partials: Vec<Partial> = parallel_map_indexed(plan.subtasks.len(), workers, |si| {
         let s = &plan.subtasks[si];
-        let q = &task_queries[s.task];
+        let q = task_queries[s.task].as_view();
         let (k, v) = store.node_kv(layer, s.node, s.kv_head, s.lo, s.hi);
         let n = k.rows;
-        pac_streamed(q, &k, &v, n, BLOCK_K)
+        pac_streamed_view(q, &k, &v, n, BLOCK_K)
     });
 
     // Stage 3: group subtask indices per task, in KV order.
@@ -150,8 +322,9 @@ pub fn run_codec_attention(
             let Some(&ti) = node_task.get(&(nid, kvh)) else {
                 continue; // node without storage/queries (e.g. len 0)
             };
-            // Position of rid inside I_n gives the row block.
-            let pos = forest.node(nid).requests.binary_search(&rid).unwrap();
+            // Rank of ri among the node's batch rows gives the row block
+            // (stacking order is ascending batch index).
+            let pos = node_rows[&nid].binary_search(&ri).expect("row in node");
             for &si in &task_subs[ti] {
                 series.push(extract_rows(&partials[si], pos * g, g));
             }
@@ -242,8 +415,14 @@ mod tests {
         (f, store)
     }
 
-    fn rand_batch(rng: &mut Rng, rids: Vec<RequestId>, hq: usize, hkv: usize, d: usize) -> QueryBatch {
-        let q = rids
+    fn rand_batch(
+        rng: &mut Rng,
+        rids: Vec<RequestId>,
+        hq: usize,
+        hkv: usize,
+        d: usize,
+    ) -> QueryBatch {
+        let per_request: Vec<Mat> = rids
             .iter()
             .map(|_| {
                 let mut m = Mat::zeros(hq, d);
@@ -251,24 +430,18 @@ mod tests {
                 m
             })
             .collect();
-        QueryBatch {
-            rids,
-            q,
-            n_q_heads: hq,
-            n_kv_heads: hkv,
-            d_head: d,
-        }
+        QueryBatch::from_parts(rids, &per_request, hq, hkv, d)
     }
 
     fn check_vs_oracle(f: &Forest, store: &KvStore, batch: &QueryBatch, outs: &[Mat]) {
         let g = batch.group_size();
-        for (ri, &rid) in batch.rids.iter().enumerate() {
-            for kvh in 0..batch.n_kv_heads {
-                let qg = batch.group_rows(ri, kvh);
+        for (ri, &rid) in batch.rids().iter().enumerate() {
+            for kvh in 0..batch.n_kv_heads() {
+                let qg = batch.group_rows(ri, kvh).to_mat();
                 let want = request_attention_exact(f, store, 0, rid, kvh, &qg);
                 for j in 0..g {
                     let got = outs[ri].row(kvh * g + j);
-                    for c in 0..batch.d_head {
+                    for c in 0..batch.d_head() {
                         let diff = (got[c] - want.at(j, c)).abs();
                         assert!(
                             diff < 2e-4,
@@ -322,10 +495,10 @@ mod tests {
         let mut f = Forest::new();
         let mut store = KvStore::new(1, 8, 1, 16);
         let prompts: Vec<Vec<u32>> = vec![
-            (0..200).collect(),                                 // a…
-            (0..150).chain(900..950).collect(),                 // split at 150
+            (0..200).collect(),                                   // a…
+            (0..150).chain(900..950).collect(),                   // split at 150
             (0..150).chain(900..930).chain(2000..2010).collect(), // deeper
-            (5000..5100).collect(),                             // distinct root
+            (5000..5100).collect(),                               // distinct root
         ];
         for (r, toks) in prompts.iter().enumerate() {
             let out = f.insert_request(r as u64, toks);
@@ -360,18 +533,80 @@ mod tests {
     }
 
     #[test]
-    fn stack_node_queries_order_matches_query_sets() {
-        let mut rng = Rng::new(45);
-        let (f, _store) = build_world(&mut rng, 3, 50, 10, 1, 8);
-        let batch = rand_batch(&mut rng, vec![2, 0, 1], 2, 1, 8); // batch order ≠ rid order
-        let shared = f.path(0).unwrap()[0];
-        let q = stack_node_queries(&f, &batch, shared, 0);
-        assert_eq!(q.rows, 3 * 2);
-        // Node query set is sorted by rid; row block i must be rid i.
-        for (i, &rid) in f.node(shared).requests.iter().enumerate() {
-            let ri = batch.index_of(rid).unwrap();
-            let want = batch.group_rows(ri, 0);
-            assert_eq!(q.row(i * 2), want.row(0));
+    fn group_rows_is_zero_copy() {
+        // Satellite pin: group_rows must be a borrowed view over the
+        // stacked layout, not a fresh allocation per call.
+        let mut rng = Rng::new(48);
+        let batch = rand_batch(&mut rng, vec![3, 1, 5], 4, 2, 8);
+        let g = batch.group_size();
+        for ri in 0..batch.len() {
+            for kvh in 0..batch.n_kv_heads() {
+                let v = batch.group_rows(ri, kvh);
+                assert_eq!((v.rows, v.cols), (g, batch.d_head()));
+                // Pointer-aliases the internal per-kv-head stack.
+                assert!(std::ptr::eq(
+                    v.data.as_ptr(),
+                    batch.q[kvh].row(ri * g).as_ptr()
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn stack_rows_views_contiguous_runs() {
+        let mut rng = Rng::new(49);
+        let batch = rand_batch(&mut rng, vec![10, 11, 12, 13], 2, 1, 8);
+        let g = batch.group_size();
+        // Contiguous run → zero-copy view into the kv-head stack.
+        let t = batch.stack_rows(0, &[1, 2, 3]);
+        match &t {
+            TaskQueries::View(v) => {
+                assert_eq!(v.rows, 3 * g);
+                assert!(std::ptr::eq(v.data.as_ptr(), batch.q[0].row(g).as_ptr()));
+            }
+            TaskQueries::Owned(_) => panic!("contiguous rows must not copy"),
+        }
+        // Gap → owned gather with the same values.
+        let t2 = batch.stack_rows(0, &[0, 2]);
+        assert!(matches!(t2, TaskQueries::Owned(_)));
+        let v2 = t2.as_view();
+        assert_eq!(v2.rows, 2 * g);
+        assert_eq!(v2.row(0), batch.group_rows(0, 0).row(0));
+        assert_eq!(v2.row(g), batch.group_rows(2, 0).row(0));
+    }
+
+    #[test]
+    fn join_set_retire_maintain_layout() {
+        let mut rng = Rng::new(50);
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::zeros(4, 8);
+            rng.fill_normal(&mut m.data, 1.0);
+            m
+        };
+        let (qa, qb, qc) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let mut b = QueryBatch::new(4, 2, 8);
+        b.join(7, &qa);
+        b.join(2, &qb);
+        b.join(9, &qc);
+        assert_eq!(b.rids(), &[7, 2, 9]);
+        assert_eq!(b.request_queries(1), qb);
+        // In-place value refresh leaves membership and layout untouched.
+        let qb2 = mk(&mut rng);
+        b.set_queries(2, &qb2);
+        assert_eq!(b.rids(), &[7, 2, 9]);
+        assert_eq!(b.request_queries(1), qb2);
+        assert_eq!(b.request_queries(0), qa);
+        // Swap-remove: last block moves into the vacated slot.
+        assert!(b.retire(7));
+        assert_eq!(b.rids(), &[9, 2]);
+        assert_eq!(b.request_queries(0), qc);
+        assert_eq!(b.request_queries(1), qb2);
+        assert!(!b.retire(7));
+        assert!(b.retire(9));
+        assert!(b.retire(2));
+        assert!(b.is_empty());
+        for kvh in 0..b.n_kv_heads() {
+            assert_eq!(b.q[kvh].rows, 0);
         }
     }
 
@@ -381,7 +616,7 @@ mod tests {
         let batch = rand_batch(&mut rng, vec![7, 2, 31, 0], 2, 1, 8);
         let index = batch.rid_index();
         assert_eq!(index.len(), 4);
-        for &rid in &batch.rids {
+        for &rid in batch.rids() {
             assert_eq!(index.get(&rid).copied(), batch.index_of(rid));
         }
         assert!(!index.contains_key(&99));
@@ -406,6 +641,31 @@ mod tests {
             },
         );
         let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 1);
+        check_vs_oracle(&f, &store, &batch, &outs);
+    }
+
+    #[test]
+    fn retired_batch_still_matches_oracle() {
+        // Decode after a mid-batch retire: the swap-removed layout makes
+        // some node row sets non-contiguous (Owned gather path) — outputs
+        // must be unchanged.
+        let mut rng = Rng::new(51);
+        let (mut f, store) = build_world(&mut rng, 4, 200, 30, 2, 16);
+        let mut batch = rand_batch(&mut rng, (0..4).collect(), 4, 2, 16);
+        batch.retire(1);
+        f.release_request(1);
+        let tasks = tasks_from_forest(&f, 2, 2);
+        let est = Estimator::table2();
+        let plan = divide_and_schedule(
+            tasks,
+            &est,
+            &DividerConfig {
+                num_blocks: 4,
+                min_chunk: 64,
+                ..Default::default()
+            },
+        );
+        let outs = run_codec_attention(&f, &store, 0, &batch, &plan, 2);
         check_vs_oracle(&f, &store, &batch, &outs);
     }
 }

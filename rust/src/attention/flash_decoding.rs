@@ -7,7 +7,7 @@
 //! accounts for. The split heuristic mirrors the real kernel: enough KV
 //! splits to saturate the GPU when batch × heads alone cannot.
 
-use crate::attention::pac::{pac_streamed, por_fold, Partial};
+use crate::attention::pac::{pac_streamed_view, por_fold, Partial};
 use crate::attention::codec_exec::{QueryBatch, BLOCK_K};
 use crate::kvforest::{Forest, KvStore};
 use crate::tensor::Mat;
@@ -37,13 +37,13 @@ pub fn run_flash_decoding(
     workers: usize,
 ) -> Vec<Mat> {
     let g = batch.group_size();
-    let d = batch.d_head;
-    let n_series = batch.rids.len() * batch.n_kv_heads;
+    let d = batch.d_head();
+    let n_series = batch.rids().len() * batch.n_kv_heads();
 
     let reduced: Vec<Partial> = parallel_map_indexed(n_series, workers, |idx| {
-        let ri = idx / batch.n_kv_heads;
-        let kvh = idx % batch.n_kv_heads;
-        let rid = batch.rids[ri];
+        let ri = idx / batch.n_kv_heads();
+        let kvh = idx % batch.n_kv_heads();
+        let rid = batch.rids()[ri];
         // Gather the WHOLE logical KV: this is the duplicated global
         // memory access CoDec eliminates.
         let path = forest.path(rid).expect("request path");
@@ -63,7 +63,7 @@ pub fn run_flash_decoding(
         if n == 0 {
             return Partial::identity(g, d);
         }
-        let splits = flash_splits(n, batch.rids.len(), batch.n_kv_heads, num_blocks);
+        let splits = flash_splits(n, batch.rids().len(), batch.n_kv_heads(), num_blocks);
         let chunk = n.div_ceil(splits);
         let mut parts = Vec::with_capacity(splits);
         let mut lo = 0;
@@ -71,17 +71,17 @@ pub fn run_flash_decoding(
             let hi = (lo + chunk).min(n);
             let ks = k.rows_slice(lo, hi);
             let vs = v.rows_slice(lo, hi);
-            parts.push(pac_streamed(&q, &ks, &vs, hi - lo, BLOCK_K));
+            parts.push(pac_streamed_view(q, &ks, &vs, hi - lo, BLOCK_K));
             lo = hi;
         }
         por_fold(&parts)
     });
 
-    (0..batch.rids.len())
+    (0..batch.rids().len())
         .map(|ri| {
-            let mut out = Mat::zeros(batch.n_q_heads, d);
-            for kvh in 0..batch.n_kv_heads {
-                let part = &reduced[ri * batch.n_kv_heads + kvh];
+            let mut out = Mat::zeros(batch.n_q_heads(), d);
+            for kvh in 0..batch.n_kv_heads() {
+                let part = &reduced[ri * batch.n_kv_heads() + kvh];
                 for j in 0..g {
                     out.row_mut(kvh * g + j).copy_from_slice(part.o.row(j));
                 }
@@ -133,17 +133,11 @@ mod tests {
                 m
             })
             .collect();
-        let batch = QueryBatch {
-            rids: vec![0, 1, 2],
-            q,
-            n_q_heads: 4,
-            n_kv_heads: 2,
-            d_head: 16,
-        };
+        let batch = QueryBatch::from_parts(vec![0, 1, 2], &q, 4, 2, 16);
         let outs = run_flash_decoding(&f, &store, 0, &batch, 32, 2);
-        for (ri, &rid) in batch.rids.iter().enumerate() {
+        for (ri, &rid) in batch.rids().iter().enumerate() {
             for kvh in 0..2 {
-                let qg = batch.group_rows(ri, kvh);
+                let qg = batch.group_rows(ri, kvh).to_mat();
                 let want = request_attention_exact(&f, &store, 0, rid, kvh, &qg);
                 for j in 0..2 {
                     for c in 0..16 {

@@ -6,7 +6,7 @@
 //! (m, s) stats POR needs. Numerical behaviour matches the kernel (f32
 //! accumulation, -inf masking, identity-safe merge).
 
-use crate::tensor::{scores_block, weighted_accum_block, Mat};
+use crate::tensor::{scores_block, weighted_accum_block, Mat, MatView};
 
 pub const NEG_INF: f32 = f32::NEG_INFINITY;
 
@@ -42,6 +42,21 @@ impl Partial {
 /// node whose storage is still empty) is the POR identity, not an
 /// error: the merge absorbs it without contributing mass.
 pub fn pac_streamed(q: &Mat, k: &Mat, v: &Mat, n_valid: usize, block_k: usize) -> Partial {
+    pac_streamed_view(q.view(), k, v, n_valid, block_k)
+}
+
+/// [`pac_streamed`] over a borrowed query view — the decode hot path
+/// hands in row ranges of the persistent [`QueryBatch`] layout without
+/// materializing a per-task copy.
+///
+/// [`QueryBatch`]: crate::attention::codec_exec::QueryBatch
+pub fn pac_streamed_view(
+    q: MatView<'_>,
+    k: &Mat,
+    v: &Mat,
+    n_valid: usize,
+    block_k: usize,
+) -> Partial {
     let (nq, d) = (q.rows, q.cols);
     let n = k.rows;
     assert_eq!(k.cols, d);

@@ -73,7 +73,7 @@ pub fn causal_pac_streamed(q: &Mat, k: &Mat, v: &Mat, q_pos: &[usize], block_k: 
         }
 
         // 1) Scores for the visible rows, register-blocked.
-        scores_block(q, rlo, nq, k, lo, hi, scale, &mut p);
+        scores_block(q.view(), rlo, nq, k, lo, hi, scale, &mut p);
 
         // 2) Streaming-softmax update over each row's visible prefix of
         //    the tile; entries past the causal horizon are zeroed so the

@@ -472,6 +472,28 @@ impl CacheManager {
     }
 
     // -----------------------------------------------------------------
+    // Shared-fill pin lifetime.
+    // -----------------------------------------------------------------
+
+    /// Pin `nid` for the duration of an in-flight (possibly shared)
+    /// fill: the node is excluded from both reclaim frontiers until
+    /// [`CacheManager::unpin_after_fill`]. The hazard is follower
+    /// preemption — a mid-fill preempt can drop the node's refcount to
+    /// zero, and without the pin the reclaim loop could demote or evict
+    /// pages the fill is still writing. Pins count, so overlapping
+    /// waves over the same node compose.
+    pub fn pin_for_fill(&mut self, nid: NodeId) {
+        self.forest.pin_fill(nid);
+    }
+
+    /// Release one fill pin on `nid` (see
+    /// [`CacheManager::pin_for_fill`]); the node becomes reclaimable
+    /// again once every pin is gone and it is otherwise cold.
+    pub fn unpin_after_fill(&mut self, nid: NodeId) {
+        self.forest.unpin_fill(nid);
+    }
+
+    // -----------------------------------------------------------------
     // Restore (swap-in).
     // -----------------------------------------------------------------
 
@@ -1243,6 +1265,25 @@ mod tests {
         assert!(m.try_admit(77, &prompt, 4));
         m.admission_score_cached(77, &prompt, 4);
         assert_eq!(m.stats.score_walks, walks0 + 3);
+    }
+
+    #[test]
+    fn fill_pin_protects_node_from_reclaim() {
+        let mut m = mgr(Some(8));
+        assert!(m.try_admit(1, &toks("aaaaaaaa"), 0));
+        let out = m.apply_insert(1, &toks("aaaaaaaa"));
+        let node = out.path[0];
+        fill_all(&mut m, &out);
+        m.pin_for_fill(node);
+        // The follower-preemption hazard: the only request drops away
+        // mid-fill, leaving the node cold — but pinned.
+        m.on_retire(1);
+        assert!(!m.prepare_pages(5), "pinned node must not be reclaimed");
+        assert_eq!(m.store().allocated_pages(), 4, "fill pages intact");
+        m.unpin_after_fill(node);
+        assert!(m.prepare_pages(5));
+        assert_eq!(m.stats.evictions, 1);
+        m.forest().check_invariants().unwrap();
     }
 
     #[test]

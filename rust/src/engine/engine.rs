@@ -37,10 +37,10 @@ use crate::attention::flash_decoding::run_flash_decoding;
 use crate::attention::prefill::causal_pac_streamed;
 use crate::cache::{CacheConfig, CacheManager};
 use crate::cost::Estimator;
-use crate::kvforest::forest::StorageEvent;
+use crate::kvforest::forest::VIRTUAL_ROOT;
 use crate::kvforest::{Forest, NodeId};
 use crate::model::Sampler;
-use crate::obs::{account_plan, now_us, EventKind, TraceRing};
+use crate::obs::{account_fill, account_plan, now_us, EventKind, TraceRing};
 use crate::runtime::{ModelInfo, NativePieces, Pieces};
 use crate::sched::plan::{lower_bound_from_costs, materialize_subtasks};
 use crate::sched::{divide_and_schedule, lpt_schedule, tasks_from_forest, DividerConfig, Plan};
@@ -163,6 +163,12 @@ pub struct Engine {
     step_count: usize,
     /// Cached divisions from the last full plan: (node, kv_head) → b_k.
     cached_divisions: BTreeMap<(NodeId, usize), usize>,
+    /// The persistent decode query batch, maintained incrementally:
+    /// requests join when their prefill finishes, their per-layer
+    /// queries are overwritten in place each decode step, and they are
+    /// swap-removed on retirement or preemption — the per-kv-head row
+    /// layout survives across steps instead of being rebuilt per layer.
+    qbatch: QueryBatch,
     /// Requests rejected by the admission gate (cannot fit the page
     /// budget even with the cache drained), with the reason. Drained by
     /// [`Engine::take_rejected`]; the server resolves their waiters with
@@ -216,6 +222,7 @@ impl Engine {
             metrics,
             step_count: 0,
             cached_divisions: BTreeMap::new(),
+            qbatch: QueryBatch::new(mi.n_q_heads, mi.n_kv_heads, mi.d_head),
             rejected: Vec::new(),
             panic_next_step: false,
             cfg,
@@ -346,7 +353,13 @@ impl Engine {
             .filter(|a| a.prefilled && !a.done())
             .map(|a| a.req.id)
             .collect();
-        let decoding = self.reclaim_for_decode(decoding)?;
+        // Reclaim preempts in admission order (youngest first); the
+        // survivors then decode in the persistent query batch's row
+        // order, so per-row attention outputs map back to requests
+        // without a permutation.
+        let mut decoding = self.reclaim_for_decode(decoding)?;
+        let order = self.qbatch.rid_index();
+        decoding.sort_by_key(|rid| order.get(rid).copied().unwrap_or(usize::MAX));
         if !decoding.is_empty() {
             let span0 = self.metrics.trace.enabled().then(now_us);
             let t0 = Instant::now();
@@ -363,6 +376,7 @@ impl Engine {
         for a in done {
             self.trace_event(EventKind::Retire, a.req.id, a.generated.len() as u64, 0);
             self.metrics.on_finish(a.req.id);
+            self.qbatch.retire(a.req.id);
             // Retention policy lives in the manager: release (keep KV
             // warm) by default, prune when `cache.retain` is off.
             self.cache.on_retire(a.req.id);
@@ -422,10 +436,17 @@ impl Engine {
     /// nothing is active either, the head can never fit — that one
     /// request is rejected (see [`Engine::take_rejected`]) and the
     /// engine keeps serving the rest of the queue.
+    ///
+    /// Everything admitted in one call forms a *cohort*: the loop only
+    /// commits each request's radix insert ([`Engine::prefill_insert`]),
+    /// and the actual KV fills are coalesced across the whole cohort
+    /// afterwards ([`Engine::execute_shared_fills`]) so concurrent
+    /// requests over the same novel document share one fill.
     fn admit_requests(&mut self) -> Result<()> {
+        let mut cohort: Vec<u64> = Vec::new();
         loop {
             if !self.batcher.has_slot() || self.batcher.pending_len() == 0 {
-                return Ok(());
+                break;
             }
             // Rank the scan window by admission score; ties fall back to
             // queue order, so equal-cost requests stay FIFO. The score's
@@ -487,7 +508,7 @@ impl Engine {
                 self.cache.note_deferral();
                 let pending = self.batcher.pending_len() as u64;
                 self.trace_event(EventKind::Deferred, 0, pending, 0);
-                return Ok(());
+                break;
             };
             if idx > 0 {
                 self.cache.stats.admission_reorders += 1;
@@ -502,15 +523,19 @@ impl Engine {
             );
             self.trace_event(EventKind::Admitted, rid, idx as u64, 0);
             let preemptions_before = self.cache.stats.preemptions;
-            self.prefill(rid)?;
+            self.prefill_insert(rid)?;
+            cohort.push(rid);
             if self.cache.stats.preemptions > preemptions_before {
-                // The fill hit memory pressure hard enough to preempt an
-                // active request; admitting more this step could ping-pong
-                // admissions against preemptions. Let decode make progress
-                // first.
-                return Ok(());
+                // The restore burst hit memory pressure hard enough to
+                // preempt an active request; admitting more this step
+                // could ping-pong admissions against preemptions. Let
+                // decode make progress first. (This also guarantees a
+                // preempted cohort member cannot be re-admitted into the
+                // same cohort.)
+                break;
             }
         }
+        self.execute_shared_fills(&cohort)
     }
 
     /// Make room for one decode step over `rids` (exact page count).
@@ -551,6 +576,8 @@ impl Engine {
         self.trace_event(EventKind::Preempted, rid, 0, 0);
         self.cache.on_preempt(rid);
         self.batcher.preempt_to_pending(rid);
+        // Not joined yet if preempted mid-admission — retire is a no-op.
+        self.qbatch.retire(rid);
         // The discarded generation must not feed TTFT/TPOT: the first
         // *delivered* token comes from the rerun.
         self.metrics.on_preempt(rid);
@@ -605,7 +632,11 @@ impl Engine {
     // Prefill (prefix-shared).
     // -----------------------------------------------------------------
 
-    fn prefill(&mut self, rid: u64) -> Result<()> {
+    /// Stage 1 of admission-time prefill: restore any swapped prefix the
+    /// prompt matches, then commit the radix insert. No KV is computed
+    /// here — fresh nodes stay unfilled until the whole admission
+    /// cohort's fills are coalesced by [`Engine::execute_shared_fills`].
+    fn prefill_insert(&mut self, rid: u64) -> Result<()> {
         let Some(active) = self.batcher.get_mut(rid) else {
             anyhow::bail!("prefill: admitted request {rid} missing from the active set");
         };
@@ -645,44 +676,169 @@ impl Engine {
             }
         }
         // The manager mirrors splits into the store, stamps the path for
-        // LRU, and counts hit/miss tokens; NeedFill events come back for
-        // the engine to fill.
-        let outcome = self.cache.apply_insert(rid, &req.prompt);
+        // LRU, and counts hit/miss tokens. NeedFill events are *not*
+        // consumed here: a later cohort member's insert may split this
+        // one's fresh leaf, so what needs filling is re-derived over the
+        // whole cohort at fill time instead.
+        let _ = self.cache.apply_insert(rid, &req.prompt);
         self.cached_divisions.clear();
-        // Radix property: the only unfilled storage is brand-new leaves.
-        let mut novel = 0usize;
-        let mut x_last: Option<Mat> = None;
-        for ev in &outcome.events {
-            if let StorageEvent::NeedFill { node, len } = ev {
-                // Exact-need capacity gate before the fill allocates.
-                let pages = self.cache.pages_for(*len);
-                self.ensure_pages_or_preempt(pages, rid)?;
-                x_last = self.fill_node(rid, *node, *len)?;
-                self.cache.consume_prefill(rid, *len);
-                novel += len;
+        Ok(())
+    }
+
+    /// Whether `rid` is still in the active set (a cohort member can be
+    /// preempted by a later member's memory pressure before its fill or
+    /// first token happens).
+    fn is_active(&self, rid: u64) -> bool {
+        self.batcher.active().iter().any(|a| a.req.id == rid)
+    }
+
+    /// Stage 2 + 3: the shared-fill planner. Walk the cohort's paths in
+    /// admission order and coalesce every unfilled node into one fill
+    /// task with a fan-out list — N requests prefilling the same novel
+    /// document execute [`Engine::fill_node`] once per (node, layer),
+    /// not N times. The first request whose path contains the node owns
+    /// it: the owner is charged the pages (`consume_prefill`) and is the
+    /// preemption-protected rid while the fill runs; followers ride
+    /// along, and their admission reservations never included the
+    /// deduped pages because their inserts already matched the owner's
+    /// nodes as cached prefix. Stage 3 then fans the first sampled token
+    /// out to every surviving cohort member and joins it to the
+    /// persistent decode query batch.
+    ///
+    /// Failure isolation: a follower preempted mid-wave (by a fill's
+    /// capacity gate) is simply skipped — its nodes stay warm for the
+    /// rerun, and the node being written is pinned
+    /// ([`CacheManager::pin_for_fill`]) so the eviction scan can never
+    /// reclaim it while the fill is in flight.
+    fn execute_shared_fills(&mut self, cohort: &[u64]) -> Result<()> {
+        if cohort.is_empty() {
+            return Ok(());
+        }
+        let mi = self.pieces.model().clone();
+        // (node, fill length, first owner). Within one request the walk
+        // is root → leaf, and a node's ancestors are first seen on the
+        // same walk that first saw it — so first-seen order is
+        // topological, and every fill's ancestor context is already
+        // filled when it runs.
+        let mut tasks: Vec<(NodeId, usize, u64)> = Vec::new();
+        let mut waiters: BTreeMap<NodeId, Vec<u64>> = BTreeMap::new();
+        for &rid in cohort {
+            let Some(path) = self.cache.forest().path(rid) else {
+                continue; // preempted by a later member's restore burst
+            };
+            for nid in path.to_vec() {
+                let need = self.cache.forest().node(nid).len;
+                let have = self.cache.store().len(0, nid);
+                if have >= need {
+                    continue;
+                }
+                let w = waiters.entry(nid).or_default();
+                if w.is_empty() {
+                    tasks.push((nid, need - have, rid));
+                }
+                w.push(rid);
             }
         }
-        self.metrics.prefill_tokens += novel;
-        self.metrics.prefill_tokens_shared += req.prompt.len() - novel;
-
-        // Hidden state of the last prompt token → first sampled token.
-        // Fully-shared prompts (novel == 0) recompute it without appends.
-        let x = match x_last {
-            Some(x) => x,
-            None => {
-                let Some(&last) = req.prompt.last() else {
+        // Execute the coalesced fills. `leaf_hidden` keeps each filled
+        // node's last-token hidden state so stage 3 can fan first tokens
+        // out without recomputation; `owned` feeds the per-request
+        // novel/shared token split.
+        let mut leaf_hidden: BTreeMap<NodeId, Mat> = BTreeMap::new();
+        let mut owned: BTreeMap<u64, usize> = BTreeMap::new();
+        for (nid, len, _first_owner) in tasks {
+            let fan: Vec<u64> = waiters
+                .remove(&nid)
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|&r| self.is_active(r))
+                .collect();
+            // Every waiter was preempted while earlier fills reclaimed
+            // pages: nobody needs this node right now (the reruns will
+            // refill it), and it may even have been evicted already.
+            let Some(&owner) = fan.first() else {
+                continue;
+            };
+            if !self.cache.forest().node(nid).alive {
+                continue;
+            }
+            let span0 = self.metrics.trace.enabled().then(now_us);
+            // Pin across the capacity gate + fill: mid-fill preemption of
+            // the other waiters must not let the eviction scan reclaim a
+            // node whose pages are being written.
+            self.cache.pin_for_fill(nid);
+            let pages = self.cache.pages_for(len);
+            let filled = self
+                .ensure_pages_or_preempt(pages, owner)
+                .and_then(|()| self.fill_node(owner, nid, len));
+            self.cache.unpin_after_fill(nid);
+            let x_last = filled?;
+            self.cache.consume_prefill(owner, len);
+            *owned.entry(owner).or_insert(0) += len;
+            if let Some(x) = x_last {
+                leaf_hidden.insert(nid, x);
+            }
+            // One fill_node execution covers every layer of this node.
+            self.metrics.shared_fill_invocations += mi.n_layers;
+            let ctx = {
+                let forest = self.cache.forest();
+                let mut ctx = 0usize;
+                let mut cur = forest.node(nid).parent;
+                while cur != VIRTUAL_ROOT {
+                    ctx += forest.node(cur).len;
+                    cur = forest.node(cur).parent;
+                }
+                ctx
+            };
+            let traffic =
+                account_fill(len, ctx, fan.len(), mi.n_kv_heads, mi.group_size(), mi.d_head);
+            self.metrics.on_fill_traffic(&traffic, mi.n_layers);
+            if let Some(s) = span0 {
+                self.trace_span(EventKind::SharedFill, owner, s, nid as u64, fan.len() as u64);
+            }
+            for &follower in &fan[1..] {
+                self.trace_event(EventKind::FillJoin, follower, nid as u64, len as u64);
+            }
+        }
+        // Stage 3: first token per surviving member, in admission order.
+        // A request whose leaf was filled this wave reuses the fill's
+        // final hidden state (for a follower whose prompt is a prefix of
+        // the owner's, that is the shared node its prompt ends in);
+        // fully-cached prompts recompute it with a no-append token pass.
+        for &rid in cohort {
+            let (prompt_len, last_tok) = {
+                let Some(a) = self.batcher.get_mut(rid) else {
+                    continue; // preempted mid-wave; it reruns from pending
+                };
+                let Some(&last) = a.req.prompt.last() else {
                     anyhow::bail!("prefill: request {rid} has an empty prompt");
                 };
-                self.token_pass_no_append(rid, last)?
-            }
-        };
-        let first = self.sample_rows(&x)?[0];
-        let Some(a) = self.batcher.get_mut(rid) else {
-            anyhow::bail!("prefill: request {rid} vanished from the active set");
-        };
-        a.generated.push(first);
-        a.prefilled = true;
-        self.metrics.on_token(rid);
+                (a.req.prompt.len(), last)
+            };
+            let leaf = {
+                let Some(path) = self.cache.forest().path(rid) else {
+                    anyhow::bail!("prefill: active request {rid} has no path in the forest");
+                };
+                let Some(&leaf) = path.last() else {
+                    anyhow::bail!("prefill: active request {rid} has an empty path");
+                };
+                leaf
+            };
+            let novel = owned.get(&rid).copied().unwrap_or(0);
+            self.metrics.prefill_tokens += novel;
+            self.metrics.prefill_tokens_shared += prompt_len - novel;
+            let x = match leaf_hidden.get(&leaf) {
+                Some(x) => x.clone(),
+                None => self.token_pass_no_append(rid, last_tok)?,
+            };
+            let first = self.sample_rows(&x)?[0];
+            self.qbatch.join(rid, &Mat::zeros(mi.n_q_heads, mi.d_head));
+            let Some(a) = self.batcher.get_mut(rid) else {
+                anyhow::bail!("prefill: request {rid} vanished from the active set");
+            };
+            a.generated.push(first);
+            a.prefilled = true;
+            self.metrics.on_token(rid);
+        }
         Ok(())
     }
 
@@ -696,13 +852,17 @@ impl Engine {
         }
     }
 
-    /// Compute and append KV rows for the `len` tokens of freshly created
+    /// Compute and append KV rows for the `len` tokens of unfilled
     /// `node`, chunked through the batch-bucketed transformer pieces with
     /// the chunked causal PAC kernel. Returns the final hidden state of
-    /// the last token processed (== last prompt token, since new leaves
-    /// are path suffixes).
+    /// the node's last token (for a request whose prompt ends in this
+    /// node, that is its last prompt token).
     ///
-    /// The request path's KV is gathered from the paged store **once per
+    /// The context is the node's own ancestor chain, not any single
+    /// request's path: a shared fill serves every cohort member waiting
+    /// on the node, and through this node they all share exactly this
+    /// prefix. `rid` (the owning waiter) only attributes trace spans.
+    /// The chain's KV is gathered from the paged store **once per
     /// (layer, kv-head)** and extended in-memory as chunks append their
     /// own rows — the seed re-gathered the full path per (chunk ×
     /// kv-head), making prefix insertion O(n²) in copies. Each chunk's
@@ -712,10 +872,13 @@ impl Engine {
     fn fill_node(&mut self, rid: u64, node: NodeId, len: usize) -> Result<Option<Mat>> {
         let mi = self.pieces.model().clone();
         let forest = self.cache.forest();
-        let Some(path) = forest.path(rid) else {
-            anyhow::bail!("fill: request {rid} has no path in the forest");
-        };
-        let path = path.to_vec();
+        let mut path = vec![node];
+        let mut cur = forest.node(node).parent;
+        while cur != VIRTUAL_ROOT {
+            path.push(cur);
+            cur = forest.node(cur).parent;
+        }
+        path.reverse();
         let ctx_total: usize = path.iter().map(|&n| forest.node(n).len).sum();
         let start = ctx_total - len; // global position of the leaf's first token
         let tokens: Vec<u32> = forest.node(node).tokens.clone();
@@ -898,6 +1061,16 @@ impl Engine {
     fn decode_step(&mut self, rids: &[u64]) -> Result<()> {
         let mi = self.pieces.model().clone();
         let bs = rids.len();
+        // The persistent batch's membership is maintained at prefill /
+        // retire / preempt time; by step() construction `rids` is its
+        // row order exactly, so each layer only overwrites query values
+        // in place — no per-layer batch rebuild, no row permutation.
+        anyhow::ensure!(
+            self.qbatch.rids() == rids,
+            "decode: persistent query batch {:?} diverged from the decoding set {:?}",
+            self.qbatch.rids(),
+            rids
+        );
         let mut tokens = Vec::with_capacity(bs);
         let mut positions = Vec::with_capacity(bs);
         let mut nodes = Vec::with_capacity(bs);
@@ -939,28 +1112,26 @@ impl Engine {
                     .store_mut()
                     .append(layer, node, &ks[ri].data, &vs[ri].data);
             }
-            let batch = QueryBatch {
-                rids: rids.to_vec(),
-                q: qs,
-                n_q_heads: mi.n_q_heads,
-                n_kv_heads: mi.n_kv_heads,
-                d_head: mi.d_head,
-            };
+            for (ri, &rid) in rids.iter().enumerate() {
+                debug_assert_eq!(self.qbatch.index_of(rid), Some(ri));
+                self.qbatch.set_queries(rid, &qs[ri]);
+            }
             let t_attn = Instant::now();
             let (forest, store) = (self.cache.forest(), self.cache.store());
+            let batch = &self.qbatch;
             let outs: Vec<Mat> = match self.cfg.backend {
                 AttentionBackend::CodecNative => {
-                    run_codec_attention(forest, store, layer, &batch, &plan, self.cfg.workers)
+                    run_codec_attention(forest, store, layer, batch, &plan, self.cfg.workers)
                 }
                 AttentionBackend::CodecPjrt => {
                     self.pieces
-                        .codec_attention(forest, store, layer, &batch, &plan)?
+                        .codec_attention(forest, store, layer, batch, &plan)?
                 }
                 AttentionBackend::FlashNative => run_flash_decoding(
                     forest,
                     store,
                     layer,
-                    &batch,
+                    batch,
                     self.cfg.num_blocks,
                     self.cfg.workers,
                 ),
@@ -996,8 +1167,19 @@ impl Engine {
         let full_replan = self.cached_divisions.is_empty()
             || self.step_count % self.cfg.replan_interval == 0;
         if full_replan {
+            // Eviction-aware tie-break: tell the divider which task nodes
+            // are cold (≤ 1 attached request) so makespan-neutral extra
+            // split points land on likely eviction victims, not on hot
+            // shared prefixes.
+            let forest = self.cache.forest();
+            let cold_nodes = tasks
+                .iter()
+                .map(|t| t.node)
+                .filter(|&n| forest.node(n).degree() <= 1)
+                .collect();
             let cfg = DividerConfig {
                 num_blocks: self.cfg.num_blocks,
+                cold_nodes,
                 ..Default::default()
             };
             let plan = divide_and_schedule(tasks, &self.est, &cfg);

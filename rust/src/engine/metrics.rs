@@ -27,7 +27,7 @@
 //! `Vec<Duration>`s were a memory leak measured in entries-per-token.
 
 use crate::cache::CacheManager;
-use crate::obs::{PlanTraffic, TraceRing};
+use crate::obs::{FillTraffic, PlanTraffic, TraceRing};
 use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, summarize, Summary};
 use std::collections::BTreeMap;
@@ -347,6 +347,30 @@ pub struct Metrics {
     /// nodes weigh proportionally to how long they were served).
     pub sharing_degree_hist: BTreeMap<usize, u64>,
 
+    // --- shared-fill (coalesced prefill) counters (`crate::obs::
+    // account_fill`, accumulated by [`Metrics::on_fill_traffic`]) ---
+    /// Distinct fill tasks executed by the shared-fill planner (one per
+    /// coalesced node per wave, regardless of fan-out).
+    pub shared_fill_nodes: usize,
+    /// `fill_node` kernel invocations — exactly one per (node, layer);
+    /// the oracle suite pins `nodes × layers == invocations`.
+    pub shared_fill_invocations: usize,
+    /// Follower requests whose novel prefix rode an in-flight fill
+    /// instead of prefilling it again.
+    pub shared_fill_followers: usize,
+    /// Prompt tokens followers did *not* re-prefill thanks to
+    /// coalescing (Σ fill-len × (fan-out − 1)).
+    pub shared_fill_dedup_tokens: usize,
+    /// Analytic prefill KV bytes actually moved by coalesced fills,
+    /// all layers.
+    pub prefill_deduped_bytes: u64,
+    /// Bytes the same waves would have moved with one independent
+    /// prefill per request — the baseline of the prefill-side
+    /// memory-access-reduction ratio.
+    pub prefill_naive_bytes: u64,
+    /// fan-out degree → fill-task observations at that degree.
+    pub fill_fanout_hist: BTreeMap<usize, u64>,
+
     // --- request-lifecycle trace ring (`crate::obs::trace`; disabled
     // (capacity 0, no allocation) unless `EngineConfig::trace_events`
     // asks for it) ---
@@ -512,6 +536,15 @@ impl Metrics {
         for (d, c) in &other.sharing_degree_hist {
             *self.sharing_degree_hist.entry(*d).or_insert(0) += c;
         }
+        self.shared_fill_nodes += other.shared_fill_nodes;
+        self.shared_fill_invocations += other.shared_fill_invocations;
+        self.shared_fill_followers += other.shared_fill_followers;
+        self.shared_fill_dedup_tokens += other.shared_fill_dedup_tokens;
+        self.prefill_deduped_bytes += other.prefill_deduped_bytes;
+        self.prefill_naive_bytes += other.prefill_naive_bytes;
+        for (d, c) in &other.fill_fanout_hist {
+            *self.fill_fanout_hist.entry(*d).or_insert(0) += c;
+        }
         self.trace.merge(&other.trace);
     }
 
@@ -606,6 +639,32 @@ impl Metrics {
         for (d, c) in &t.degree_hist {
             *self.sharing_degree_hist.entry(*d).or_insert(0) += c;
         }
+    }
+
+    /// Accumulate one coalesced fill wave's analytic KV traffic
+    /// ([`crate::obs::account_fill`] prices a single layer; every layer
+    /// moves the same geometry, so the wave total is `× n_layers`).
+    /// Byte/FLOP totals scale by layers; fill/follower/token counters
+    /// and the fan-out histogram count *waves*, not layers.
+    pub fn on_fill_traffic(&mut self, t: &FillTraffic, n_layers: usize) {
+        let l = n_layers.max(1) as u64;
+        self.prefill_deduped_bytes += t.deduped_bytes * l;
+        self.prefill_naive_bytes += t.naive_bytes * l;
+        self.shared_fill_nodes += t.fills as usize;
+        self.shared_fill_followers += t.follower_joins as usize;
+        self.shared_fill_dedup_tokens += t.dedup_tokens as usize;
+        for (d, c) in &t.fanout_hist {
+            *self.fill_fanout_hist.entry(*d).or_insert(0) += c;
+        }
+    }
+
+    /// Prefill-side memory-access reduction: bytes R independent
+    /// prefills would have moved / bytes the coalesced fills moved.
+    /// `None` before any fill; = 1 with no sharing, → R for an R-way
+    /// shared document wave.
+    pub fn prefill_access_reduction(&self) -> Option<f64> {
+        (self.prefill_deduped_bytes > 0)
+            .then(|| self.prefill_naive_bytes as f64 / self.prefill_deduped_bytes as f64)
     }
 
     /// The paper's memory-access-reduction ratio over the whole run:
@@ -759,6 +818,11 @@ impl Metrics {
             .iter()
             .map(|(d, c)| (d.to_string(), num_u64(*c)))
             .collect();
+        let fanout_hist: BTreeMap<String, Json> = self
+            .fill_fanout_hist
+            .iter()
+            .map(|(d, c)| (d.to_string(), num_u64(*c)))
+            .collect();
         Json::from_pairs([
             ("schema_version", Json::from(1usize)),
             (
@@ -775,6 +839,19 @@ impl Metrics {
                     ("requests", Json::from(self.requests.len())),
                     ("shards", Json::from(self.shards)),
                     ("audit_checks", Json::from(self.audit_checks)),
+                    ("shared_fill_nodes", Json::from(self.shared_fill_nodes)),
+                    (
+                        "shared_fill_invocations",
+                        Json::from(self.shared_fill_invocations),
+                    ),
+                    (
+                        "shared_fill_followers",
+                        Json::from(self.shared_fill_followers),
+                    ),
+                    (
+                        "shared_fill_dedup_tokens",
+                        Json::from(self.shared_fill_dedup_tokens),
+                    ),
                 ]),
             ),
             (
@@ -868,6 +945,16 @@ impl Metrics {
                         opt_f64(self.memory_access_reduction()),
                     ),
                     ("sharing_degree_hist", Json::Obj(hist)),
+                    (
+                        "prefill_deduped_bytes",
+                        num_u64(self.prefill_deduped_bytes),
+                    ),
+                    ("prefill_naive_bytes", num_u64(self.prefill_naive_bytes)),
+                    (
+                        "prefill_access_reduction",
+                        opt_f64(self.prefill_access_reduction()),
+                    ),
+                    ("fill_fanout_hist", Json::Obj(fanout_hist)),
                 ]),
             ),
             (
@@ -1273,6 +1360,107 @@ mod tests {
         assert_eq!(m.sharing_degree_hist, BTreeMap::from([(1, 8), (4, 2)]));
         let r = m.memory_access_reduction().expect("decode happened");
         assert!((r - 3.4).abs() < 1e-12, "ratio = {r}");
+    }
+
+    #[test]
+    fn fill_traffic_scales_bytes_by_layers_not_counters() {
+        let t = FillTraffic {
+            deduped_bytes: 1000,
+            naive_bytes: 4000,
+            deduped_flops: 10,
+            naive_flops: 40,
+            fills: 2,
+            follower_joins: 3,
+            dedup_tokens: 120,
+            fanout_hist: BTreeMap::from([(4, 1), (1, 1)]),
+        };
+        let mut m = Metrics::default();
+        assert!(m.prefill_access_reduction().is_none(), "no fills yet");
+        m.on_fill_traffic(&t, 2);
+        m.on_fill_traffic(&t, 2);
+        assert_eq!(m.prefill_deduped_bytes, 2 * 2 * 1000);
+        assert_eq!(m.prefill_naive_bytes, 2 * 2 * 4000);
+        // Wave-level counters and the histogram do not scale by layers.
+        assert_eq!(m.shared_fill_nodes, 4);
+        assert_eq!(m.shared_fill_followers, 6);
+        assert_eq!(m.shared_fill_dedup_tokens, 240);
+        assert_eq!(m.fill_fanout_hist, BTreeMap::from([(1, 2), (4, 2)]));
+        let r = m.prefill_access_reduction().expect("fills happened");
+        assert!((r - 4.0).abs() < 1e-12, "ratio = {r}");
+    }
+
+    #[test]
+    fn merge_sums_shared_fill_counters() {
+        let mut a = Metrics::default();
+        a.shared_fill_nodes = 2;
+        a.shared_fill_invocations = 4;
+        a.shared_fill_followers = 3;
+        a.shared_fill_dedup_tokens = 100;
+        a.prefill_deduped_bytes = 500;
+        a.prefill_naive_bytes = 1500;
+        a.fill_fanout_hist = BTreeMap::from([(2, 1)]);
+        let mut b = Metrics::default();
+        b.shared_fill_nodes = 1;
+        b.shared_fill_invocations = 2;
+        b.shared_fill_followers = 0;
+        b.shared_fill_dedup_tokens = 7;
+        b.prefill_deduped_bytes = 100;
+        b.prefill_naive_bytes = 100;
+        b.fill_fanout_hist = BTreeMap::from([(2, 2), (8, 1)]);
+        a.merge(&b);
+        assert_eq!(a.shared_fill_nodes, 3);
+        assert_eq!(a.shared_fill_invocations, 6);
+        assert_eq!(a.shared_fill_followers, 3);
+        assert_eq!(a.shared_fill_dedup_tokens, 107);
+        assert_eq!(a.prefill_deduped_bytes, 600);
+        assert_eq!(a.prefill_naive_bytes, 1600);
+        assert_eq!(a.fill_fanout_hist, BTreeMap::from([(2, 3), (8, 1)]));
+    }
+
+    #[test]
+    fn to_json_exposes_shared_fill_counters() {
+        let mut m = Metrics::default();
+        m.shared_fill_nodes = 3;
+        m.shared_fill_invocations = 6;
+        m.shared_fill_followers = 9;
+        m.shared_fill_dedup_tokens = 300;
+        m.prefill_deduped_bytes = 1000;
+        m.prefill_naive_bytes = 4000;
+        m.fill_fanout_hist = BTreeMap::from([(4, 3)]);
+        let text = crate::util::json::emit(&m.to_json(None));
+        let back = crate::util::json::parse(&text).expect("valid JSON");
+        let counters = back.get("counters").expect("counters");
+        assert_eq!(
+            counters.get("shared_fill_nodes").and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            counters
+                .get("shared_fill_invocations")
+                .and_then(Json::as_usize),
+            Some(6)
+        );
+        assert_eq!(
+            counters
+                .get("shared_fill_followers")
+                .and_then(Json::as_usize),
+            Some(9)
+        );
+        assert_eq!(
+            counters
+                .get("shared_fill_dedup_tokens")
+                .and_then(Json::as_usize),
+            Some(300)
+        );
+        let traffic = back.get("traffic").expect("traffic");
+        assert_eq!(
+            traffic
+                .get("prefill_access_reduction")
+                .and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let hist = traffic.get("fill_fanout_hist").expect("fanout hist");
+        assert_eq!(hist.get("4").and_then(Json::as_f64), Some(3.0));
     }
 
     #[test]

@@ -200,6 +200,13 @@ pub struct Forest {
     /// appended token would invalidate the memo every decode step,
     /// which is precisely the re-walk cost the memo exists to remove.
     generation: u64,
+    /// Nodes pinned by in-flight shared fills, with a pin *count*: the
+    /// same node can back several coalesced fill waves. A pinned node is
+    /// excluded from both eviction frontiers regardless of its query
+    /// set — a follower preempted mid-fill can drop a node's refcount
+    /// to zero, and without the pin the cache manager could reclaim
+    /// pages the fill is still writing into.
+    fill_pins: BTreeMap<NodeId, usize>,
 }
 
 impl Forest {
@@ -210,6 +217,7 @@ impl Forest {
             frontier: BTreeMap::new(),
             swap_frontier: BTreeMap::new(),
             generation: 0,
+            fill_pins: BTreeMap::new(),
         }
     }
 
@@ -301,6 +309,7 @@ impl Forest {
         n.alive
             && n.state == PageState::Resident
             && n.requests.is_empty()
+            && !self.fill_pins.contains_key(&nid)
             && !n
                 .children
                 .iter()
@@ -312,7 +321,10 @@ impl Forest {
     /// the child list only ever holds alive nodes).
     fn swap_frontier_eligible(&self, nid: NodeId) -> bool {
         let n = &self.nodes[nid];
-        n.alive && n.state == PageState::Swapped && n.children.is_empty()
+        n.alive
+            && n.state == PageState::Swapped
+            && n.children.is_empty()
+            && !self.fill_pins.contains_key(&nid)
     }
 
     /// Re-derive `nid`'s membership in both frontiers from its current
@@ -379,6 +391,47 @@ impl Forest {
     /// Number of entries on the swap frontier.
     pub fn swap_frontier_len(&self) -> usize {
         self.swap_frontier.len()
+    }
+
+    // ---------------------------------------------------------------
+    // Fill pins (shared-fill lifetime protection).
+    // ---------------------------------------------------------------
+
+    /// Pin `nid` for an in-flight fill: the node leaves both eviction
+    /// frontiers until the matching [`Forest::unpin_fill`]. Pins count,
+    /// so overlapping fill waves over the same node compose; the node
+    /// stays protected until every pin is released.
+    pub fn pin_fill(&mut self, nid: NodeId) {
+        assert!(
+            nid != VIRTUAL_ROOT && self.nodes[nid].alive,
+            "pin_fill({nid}): not an alive node"
+        );
+        *self.fill_pins.entry(nid).or_insert(0) += 1;
+        self.refresh_frontier(nid);
+    }
+
+    /// Release one fill pin on `nid` (see [`Forest::pin_fill`]). When
+    /// the count drops to zero the node re-enters whichever frontier it
+    /// is now eligible for.
+    pub fn unpin_fill(&mut self, nid: NodeId) {
+        match self.fill_pins.get_mut(&nid) {
+            Some(count) if *count > 1 => *count -= 1,
+            Some(_) => {
+                self.fill_pins.remove(&nid);
+            }
+            None => panic!("unpin_fill({nid}): node not pinned"),
+        }
+        self.refresh_frontier(nid);
+    }
+
+    /// Whether `nid` is currently pinned by an in-flight fill.
+    pub fn fill_pinned(&self, nid: NodeId) -> bool {
+        self.fill_pins.contains_key(&nid)
+    }
+
+    /// Number of distinct nodes currently fill-pinned.
+    pub fn fill_pin_count(&self) -> usize {
+        self.fill_pins.len()
     }
 
     // ---------------------------------------------------------------
@@ -592,9 +645,10 @@ impl Forest {
     /// checks and property tests compare it against.
     pub fn cold_leaves(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.alive_nodes()
-            .filter(|(_, n)| {
+            .filter(|(id, n)| {
                 n.state == PageState::Resident
                     && n.degree() == 0
+                    && !self.fill_pins.contains_key(id)
                     && !n
                         .children
                         .iter()
@@ -607,7 +661,11 @@ impl Forest {
     /// with no children. The oracle for [`Forest::coldest_swapped`].
     pub fn cold_swapped(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.alive_nodes()
-            .filter(|(_, n)| n.state == PageState::Swapped && n.children.is_empty())
+            .filter(|(id, n)| {
+                n.state == PageState::Swapped
+                    && n.children.is_empty()
+                    && !self.fill_pins.contains_key(id)
+            })
             .map(|(id, _)| id)
     }
 
@@ -841,6 +899,15 @@ impl Forest {
                         self.nodes[nid].stamp
                     ));
                 }
+            }
+        }
+        // Fill pins only ever reference alive nodes with a positive count.
+        for (&nid, &count) in &self.fill_pins {
+            if !self.nodes[nid].alive {
+                return Err(format!("fill pin on dead node {nid}"));
+            }
+            if count == 0 {
+                return Err(format!("zero-count fill pin on node {nid}"));
             }
         }
         Ok(())
@@ -1316,6 +1383,59 @@ mod tests {
         f.mark_swapped(parent);
         // Leaf before parent: violates the root-to-leaf restore order.
         f.mark_resident(cold[0]);
+    }
+
+    #[test]
+    fn fill_pin_blocks_both_frontiers_until_released() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("shared-doc"));
+        let leaf = f.path(1).unwrap()[0];
+        // Pin while active, then drop the only request mid-fill (the
+        // follower-preemption hazard): the cold leaf must NOT surface
+        // on the eviction frontier while pinned.
+        f.pin_fill(leaf);
+        f.release_request(1);
+        assert_eq!(f.frontier_len(), 0, "pinned node must not be evictable");
+        assert!(f.fill_pinned(leaf));
+        f.check_invariants().unwrap();
+        f.unpin_fill(leaf);
+        assert_eq!(f.frontier_len(), 1, "unpin restores eligibility");
+        f.check_invariants().unwrap();
+        // Swap frontier equally respects pins.
+        f.mark_swapped(leaf);
+        assert_eq!(f.swap_frontier_len(), 1);
+        f.pin_fill(leaf);
+        assert_eq!(f.swap_frontier_len(), 0);
+        f.check_invariants().unwrap();
+        f.unpin_fill(leaf);
+        assert_eq!(f.swap_frontier_len(), 1);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fill_pins_are_counted() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("wave"));
+        let leaf = f.path(1).unwrap()[0];
+        f.pin_fill(leaf);
+        f.pin_fill(leaf); // second overlapping fill wave
+        f.release_request(1);
+        f.unpin_fill(leaf);
+        assert!(f.fill_pinned(leaf), "one wave still in flight");
+        assert_eq!(f.frontier_len(), 0);
+        f.unpin_fill(leaf);
+        assert!(!f.fill_pinned(leaf));
+        assert_eq!(f.frontier_len(), 1);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn unpin_without_pin_panics() {
+        let mut f = Forest::new();
+        f.insert_request(1, &toks("x"));
+        let leaf = f.path(1).unwrap()[0];
+        f.unpin_fill(leaf);
     }
 
     #[test]

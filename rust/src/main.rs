@@ -495,13 +495,7 @@ fn cmd_demo() -> anyhow::Result<()> {
             m
         })
         .collect();
-    let batch = QueryBatch {
-        rids: vec![0, 1, 2],
-        q,
-        n_q_heads: 8,
-        n_kv_heads: 2,
-        d_head: 64,
-    };
+    let batch = QueryBatch::from_parts(vec![0, 1, 2], &q, 8, 2, 64);
     let est = Estimator::table2();
     let plan = divide_and_schedule(
         tasks_from_forest(&forest, 2, 4),
@@ -528,9 +522,9 @@ fn cmd_demo() -> anyhow::Result<()> {
     );
     let outs = run_codec_attention(&forest, &store, 0, &batch, &plan, 4);
     let mut max_err = 0f32;
-    for (ri, &rid) in batch.rids.iter().enumerate() {
+    for (ri, &rid) in batch.rids().iter().enumerate() {
         for kvh in 0..2 {
-            let qg = batch.group_rows(ri, kvh);
+            let qg = batch.group_rows(ri, kvh).to_mat();
             let want = request_attention_exact(&forest, &store, 0, rid, kvh, &qg);
             for j in 0..4 {
                 for c in 0..64 {

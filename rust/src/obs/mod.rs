@@ -17,7 +17,10 @@
 //!   FlashDecoding-style per-request baseline priced from the same
 //!   geometry, and the sharing-degree histogram — together yielding
 //!   the paper's memory-access-reduction ratio as a first-class,
-//!   deterministic metric.
+//!   deterministic metric. The same treatment covers prefill:
+//!   [`account_fill`] prices a coalesced shared fill against the R
+//!   independent prefills it replaced (bytes, FLOPs, fan-out
+//!   histogram).
 //!
 //! Recording into the engine-owned ring in the serving path must go
 //! through the `enabled`-gated [`TraceRing::record`] /
@@ -29,4 +32,4 @@ pub mod trace;
 pub mod traffic;
 
 pub use trace::{chrome_trace_json, now_us, EventKind, TraceEvent, TraceRing, ROUTER_TRACK};
-pub use traffic::{account_plan, PlanTraffic, KV_ELEM_BYTES};
+pub use traffic::{account_fill, account_plan, FillTraffic, PlanTraffic, KV_ELEM_BYTES};

@@ -95,6 +95,15 @@ pub enum EventKind {
     Retire,
     /// The engine step failed (typed step error → shard failure path).
     Failure,
+    /// Span: one coalesced fill of a forest node (all layers), executed
+    /// once and fanned out to every waiting request. `a` = the node id,
+    /// `b` = fan-out degree (requests sharing the fill). `rid` is the
+    /// owning request charged for the pages.
+    SharedFill,
+    /// A follower request joined a fill already executed (or in flight)
+    /// this admission wave instead of re-running it. `a` = the node id,
+    /// `b` = tokens deduplicated for this follower.
+    FillJoin,
 }
 
 impl EventKind {
@@ -113,6 +122,8 @@ impl EventKind {
             EventKind::DecodeStep => "decode_step",
             EventKind::Retire => "retire",
             EventKind::Failure => "failure",
+            EventKind::SharedFill => "shared_fill",
+            EventKind::FillJoin => "fill_join",
         }
     }
 
@@ -121,7 +132,10 @@ impl EventKind {
     pub fn is_span(self) -> bool {
         matches!(
             self,
-            EventKind::SwapRestore | EventKind::PrefillChunk | EventKind::DecodeStep
+            EventKind::SwapRestore
+                | EventKind::PrefillChunk
+                | EventKind::DecodeStep
+                | EventKind::SharedFill
         )
     }
 }
@@ -480,6 +494,29 @@ mod tests {
         let mut snap = TraceRing::default();
         snap.merge(&a);
         assert_eq!(snap.len(), 3);
+    }
+
+    #[test]
+    fn shared_fill_kinds_export_shapes() {
+        // SharedFill is a span (ph "X"), FillJoin an instant (ph "i").
+        assert!(EventKind::SharedFill.is_span());
+        assert!(!EventKind::FillJoin.is_span());
+        assert_eq!(EventKind::SharedFill.name(), "shared_fill");
+        assert_eq!(EventKind::FillJoin.name(), "fill_join");
+        let mut r = TraceRing::with_capacity(4);
+        r.record_span(EventKind::SharedFill, 0, 1, now_us(), 5, 3);
+        r.record(EventKind::FillJoin, 0, 2, 5, 120);
+        let json = chrome_trace_json(&r);
+        let evs = json.get("traceEvents").and_then(Json::as_arr).expect("array");
+        let ph_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("ph"))
+                .and_then(Json::as_str)
+                .map(str::to_string)
+        };
+        assert_eq!(ph_of("shared_fill").as_deref(), Some("X"));
+        assert_eq!(ph_of("fill_join").as_deref(), Some("i"));
     }
 
     #[test]

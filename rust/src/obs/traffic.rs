@@ -85,6 +85,96 @@ impl PlanTraffic {
     }
 }
 
+/// Per-layer analytic cost of shared-fill prefill: what the coalesced
+/// fill actually does (`deduped_*`) vs what R independent prefills of
+/// the same node would have done (`naive_*`), plus the fan-out
+/// histogram. Same determinism contract as [`PlanTraffic`]: priced from
+/// geometry alone, no timers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FillTraffic {
+    /// KV bytes the coalesced fill touches once: context reads for the
+    /// causal kernel plus the node's own causal triangle, and the new
+    /// K/V rows written.
+    pub deduped_bytes: u64,
+    /// KV bytes R independent per-request prefills of the same node
+    /// would touch (`deduped_bytes × fan-out`).
+    pub naive_bytes: u64,
+    /// Attention FLOPs the coalesced fill spends once.
+    pub deduped_flops: u64,
+    /// Attention FLOPs R independent prefills would spend.
+    pub naive_flops: u64,
+    /// Coalesced `fill_node` executions accounted.
+    pub fills: u64,
+    /// Follower joins: requests that shared a fill instead of running
+    /// their own (`fan-out − 1` per fill).
+    pub follower_joins: u64,
+    /// Token·follower products deduplicated (`len × (fan-out − 1)` per
+    /// fill).
+    pub dedup_tokens: u64,
+    /// fan-out degree → number of fills with that many waiting requests.
+    pub fanout_hist: BTreeMap<usize, u64>,
+}
+
+impl FillTraffic {
+    /// `naive / deduped` byte ratio (`None` when nothing was filled).
+    /// Approaches the mean fan-out as shared documents dominate; 1.0
+    /// when every fill had a single waiter.
+    pub fn reduction_ratio(&self) -> Option<f64> {
+        (self.deduped_bytes > 0).then(|| self.naive_bytes as f64 / self.deduped_bytes as f64)
+    }
+
+    /// Accumulate another fill's traffic (e.g. summing a wave).
+    pub fn add(&mut self, other: &FillTraffic) {
+        self.deduped_bytes += other.deduped_bytes;
+        self.naive_bytes += other.naive_bytes;
+        self.deduped_flops += other.deduped_flops;
+        self.naive_flops += other.naive_flops;
+        self.fills += other.fills;
+        self.follower_joins += other.follower_joins;
+        self.dedup_tokens += other.dedup_tokens;
+        for (d, c) in &other.fanout_hist {
+            *self.fanout_hist.entry(*d).or_insert(0) += c;
+        }
+    }
+}
+
+/// Price one coalesced node fill, per layer. `len` is the node's novel
+/// token count, `ctx` the tokens on the path above it (already filled),
+/// `fan_out` the number of admitted requests waiting on the node;
+/// `group_size` is the GQA group, so q heads = `n_kv_heads ×
+/// group_size`. The causal kernel reads, per kv head, `ctx` rows for
+/// every chunk pass plus the node's causal triangle — priced exactly as
+/// `len·ctx + len(len+1)/2` K/V row reads — and writes `len` new K/V
+/// rows; FLOPs charge 4·d per (query-row, key) pair over all q heads.
+pub fn account_fill(
+    len: usize,
+    ctx: usize,
+    fan_out: usize,
+    n_kv_heads: usize,
+    group_size: usize,
+    d_head: usize,
+) -> FillTraffic {
+    let (len_u, ctx_u) = (len as u64, ctx as u64);
+    let row_bytes = d_head as u64 * KV_ELEM_BYTES * 2; // K row + V row
+    let pairs = len_u * ctx_u + len_u * (len_u + 1) / 2;
+    let read_bytes = n_kv_heads as u64 * pairs * row_bytes;
+    let write_bytes = n_kv_heads as u64 * len_u * row_bytes;
+    let flops = 4 * d_head as u64 * (n_kv_heads * group_size) as u64 * pairs;
+    let r = fan_out.max(1) as u64;
+    let mut out = FillTraffic {
+        deduped_bytes: read_bytes + write_bytes,
+        naive_bytes: (read_bytes + write_bytes) * r,
+        deduped_flops: flops,
+        naive_flops: flops * r,
+        fills: 1,
+        follower_joins: r - 1,
+        dedup_tokens: len_u * (r - 1),
+        ..Default::default()
+    };
+    out.fanout_hist.insert(fan_out.max(1), 1);
+    out
+}
+
 /// Price one plan's per-layer KV traffic. `group_size` is the GQA
 /// group (`n_q_heads / n_kv_heads`) the planner used to build task
 /// query counts, `d_head` the head dimension of the stored KV rows.
@@ -188,6 +278,46 @@ mod tests {
         let t = PlanTraffic::default();
         assert!(t.reduction_ratio().is_none());
         assert_eq!(t.codec_bytes(), 0);
+    }
+
+    #[test]
+    fn fill_accounting_scales_naive_with_fanout() {
+        // One 100-token node under a 50-token context, 2 kv heads,
+        // group 2, d_head 8.
+        let row = 8 * KV_ELEM_BYTES * 2;
+        let pairs = 100 * 50 + 100 * 101 / 2;
+        let solo = account_fill(100, 50, 1, 2, 2, 8);
+        assert_eq!(solo.deduped_bytes, 2 * (pairs + 100) * row);
+        assert_eq!(solo.naive_bytes, solo.deduped_bytes);
+        assert_eq!(solo.follower_joins, 0);
+        assert_eq!(solo.dedup_tokens, 0);
+        assert_eq!(solo.reduction_ratio(), Some(1.0));
+
+        let shared = account_fill(100, 50, 4, 2, 2, 8);
+        // The coalesced fill does exactly the solo work…
+        assert_eq!(shared.deduped_bytes, solo.deduped_bytes);
+        assert_eq!(shared.deduped_flops, solo.deduped_flops);
+        // …while naive grows linearly with fan-out.
+        assert_eq!(shared.naive_bytes, 4 * solo.deduped_bytes);
+        assert_eq!(shared.naive_flops, 4 * solo.deduped_flops);
+        assert_eq!(shared.follower_joins, 3);
+        assert_eq!(shared.dedup_tokens, 300);
+        assert_eq!(shared.reduction_ratio(), Some(4.0));
+        assert_eq!(shared.fanout_hist, BTreeMap::from([(4, 1)]));
+    }
+
+    #[test]
+    fn fill_add_accumulates_wave() {
+        let mut wave = FillTraffic::default();
+        assert!(wave.reduction_ratio().is_none());
+        wave.add(&account_fill(64, 0, 2, 1, 1, 8));
+        wave.add(&account_fill(32, 64, 2, 1, 1, 8));
+        wave.add(&account_fill(16, 0, 1, 1, 1, 8));
+        assert_eq!(wave.fills, 3);
+        assert_eq!(wave.follower_joins, 2);
+        assert_eq!(wave.dedup_tokens, 64 + 32);
+        assert_eq!(wave.fanout_hist, BTreeMap::from([(1, 1), (2, 2)]));
+        assert!(wave.reduction_ratio().expect("nonzero") > 1.0);
     }
 
     #[test]

@@ -14,19 +14,23 @@ use super::pieces::Pieces;
 use crate::attention::pac::Partial;
 use crate::model::weights::device::DeviceWeights;
 use crate::model::Weights;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, MatView};
 use anyhow::{bail, Context, Result};
 
-fn lit_mat(m: &Mat, rows: usize, cols: usize) -> Result<xla::Literal> {
+fn lit_mat_view(m: MatView<'_>, rows: usize, cols: usize) -> Result<xla::Literal> {
     // Pad to (rows, cols) with zeros.
     assert!(m.rows <= rows && m.cols == cols);
     if m.rows == rows {
-        Ok(xla::Literal::vec1(&m.data).reshape(&[rows as i64, cols as i64])?)
+        Ok(xla::Literal::vec1(m.data).reshape(&[rows as i64, cols as i64])?)
     } else {
-        let mut data = m.data.clone();
+        let mut data = m.data.to_vec();
         data.resize(rows * cols, 0.0);
         Ok(xla::Literal::vec1(&data).reshape(&[rows as i64, cols as i64])?)
     }
+}
+
+fn lit_mat(m: &Mat, rows: usize, cols: usize) -> Result<xla::Literal> {
+    lit_mat_view(m.view(), rows, cols)
 }
 
 fn lit_vec_i32(v: &[i32]) -> xla::Literal {
@@ -46,6 +50,20 @@ fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
 /// zero-length KV range is the POR identity (no kernel dispatch), same
 /// as the native `pac_streamed`.
 pub fn run_pac(rt: &Runtime, q: &Mat, k: &Mat, v: &Mat, n_valid: usize) -> Result<Partial> {
+    run_pac_view(rt, q.view(), k, v, n_valid)
+}
+
+/// [`run_pac`] over a borrowed query view — lets the PJRT executor hand
+/// in [`QueryBatch`] row ranges without materializing a per-task copy.
+///
+/// [`QueryBatch`]: crate::attention::codec_exec::QueryBatch
+pub fn run_pac_view(
+    rt: &Runtime,
+    q: MatView<'_>,
+    k: &Mat,
+    v: &Mat,
+    n_valid: usize,
+) -> Result<Partial> {
     let d = q.cols;
     let (nq, n) = (q.rows, k.rows);
     if n_valid == 0 {
@@ -58,7 +76,7 @@ pub fn run_pac(rt: &Runtime, q: &Mat, k: &Mat, v: &Mat, n_valid: usize) -> Resul
     let name = super::manifest::Manifest::pac_name(d, nq_b, n_b);
     let inputs = [
         lit_vec_i32(&[n_valid as i32]),
-        lit_mat(q, nq_b, d)?,
+        lit_mat_view(q, nq_b, d)?,
         lit_mat(k, n_b, d)?,
         lit_mat(v, n_b, d)?,
     ];
@@ -249,24 +267,24 @@ pub fn run_codec_attention_pjrt(
     batch: &crate::attention::codec_exec::QueryBatch,
     plan: &crate::sched::Plan,
 ) -> Result<Vec<Mat>> {
-    use crate::attention::codec_exec::stack_node_queries_indexed;
+    use crate::attention::codec_exec::{plan_node_rows, TaskQueries};
     use std::collections::BTreeMap;
     let g = batch.group_size();
-    let d = batch.d_head;
+    let d = batch.d_head();
 
-    let rid_index = batch.rid_index();
-    let task_queries: Vec<Mat> = plan
+    let node_rows = plan_node_rows(forest, batch, plan);
+    let task_queries: Vec<TaskQueries<'_>> = plan
         .tasks
         .iter()
-        .map(|t| stack_node_queries_indexed(forest, batch, t.node, t.kv_head, &rid_index))
+        .map(|t| batch.stack_rows(t.kv_head, &node_rows[&t.node]))
         .collect();
 
     let mut partials: Vec<Partial> = Vec::with_capacity(plan.subtasks.len());
     for s in &plan.subtasks {
-        let q = &task_queries[s.task];
+        let q = task_queries[s.task].as_view();
         let (k, v) = store.node_kv(layer, s.node, s.kv_head, s.lo, s.hi);
         let n = k.rows;
-        partials.push(run_pac(rt, q, &k, &v, n)?);
+        partials.push(run_pac_view(rt, q, &k, &v, n)?);
     }
 
     let mut task_subs: Vec<Vec<usize>> = vec![Vec::new(); plan.tasks.len()];
@@ -287,17 +305,17 @@ pub fn run_codec_attention_pjrt(
         s: p.s[row0..row0 + g].to_vec(),
     };
 
-    let mut outs = Vec::with_capacity(batch.rids.len());
-    for &rid in batch.rids.iter() {
+    let mut outs = Vec::with_capacity(batch.rids().len());
+    for (ri, &rid) in batch.rids().iter().enumerate() {
         let path = forest.path(rid).expect("request path");
-        let mut out = Mat::zeros(batch.n_q_heads, d);
-        for kvh in 0..batch.n_kv_heads {
+        let mut out = Mat::zeros(batch.n_q_heads(), d);
+        for kvh in 0..batch.n_kv_heads() {
             let mut acc: Option<Partial> = None;
             for &nid in path {
                 let Some(&ti) = node_task.get(&(nid, kvh)) else {
                     continue;
                 };
-                let pos = forest.node(nid).requests.binary_search(&rid).unwrap();
+                let pos = node_rows[&nid].binary_search(&ri).expect("row in node");
                 for &si in &task_subs[ti] {
                     let part = extract(&partials[si], pos * g);
                     acc = Some(match acc {

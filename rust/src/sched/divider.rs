@@ -3,6 +3,8 @@
 use super::plan::{materialize_subtasks, Plan, Task};
 use super::scheduler::{lpt_makespan, lpt_schedule};
 use crate::cost::Estimator;
+use crate::kvforest::NodeId;
+use std::collections::BTreeSet;
 
 /// Divider knobs.
 #[derive(Debug, Clone)]
@@ -16,6 +18,12 @@ pub struct DividerConfig {
     /// utilization floor; the paper's "fine-grained task … insufficient
     /// workload for tensor core in each block").
     pub min_chunk: usize,
+    /// Task nodes the cache considers cold (near-zero refcount — likely
+    /// eviction victims). Pure tie-break: when two divisions land on the
+    /// same makespan, prefer *more* split points on cold nodes, so the
+    /// extra subtask boundaries sit where the cache is likely to evict.
+    /// Never trades makespan for the preference; empty = seed behavior.
+    pub cold_nodes: BTreeSet<NodeId>,
 }
 
 impl Default for DividerConfig {
@@ -24,6 +32,7 @@ impl Default for DividerConfig {
             num_blocks: 108, // A100 SM count
             max_passes: 3,
             min_chunk: 256,
+            cold_nodes: BTreeSet::new(),
         }
     }
 }
@@ -119,6 +128,13 @@ pub fn divide_and_schedule(tasks: Vec<Task>, est: &Estimator, cfg: &DividerConfi
         .iter()
         .zip(&full_costs)
         .map(|(t, &c)| {
+            if cfg.cold_nodes.contains(&t.node) {
+                // Cold nodes may divide up to the tensor-core floor: the
+                // Eq. 5 cap bounds work amplification for makespan's
+                // sake, but cold splits are only ever accepted on
+                // makespan *ties*, so the cap would just hide them.
+                return max_divisions(t, cfg);
+            }
             let eq5 = (c / cost_l).ceil() as usize;
             eq5.clamp(1, max_divisions(t, cfg))
         })
@@ -160,18 +176,24 @@ pub fn divide_and_schedule(tasks: Vec<Task>, est: &Estimator, cfg: &DividerConfi
             if caps[ti] == 1 {
                 continue;
             }
-            let orig = divisions[ti];
-            let mut best_b = orig;
+            let cold = cfg.cold_nodes.contains(&tasks[ti].node);
+            let mut best_b = divisions[ti];
             for b in 1..=caps[ti] {
-                if b == orig {
+                if b == best_b {
                     continue;
                 }
                 divisions[ti] = b;
                 let ms = eval(&divisions);
-                if ms < best - 1e-12 {
-                    best = ms;
+                let improves = ms < best - 1e-12;
+                // Eviction-aware tie-break: at equal makespan, a cold
+                // node drifts toward more split points. Hot nodes move
+                // only on strict improvement (seed behavior).
+                if improves || (cold && b > best_b && ms <= best + 1e-12) {
+                    if improves {
+                        best = ms;
+                        improved = true;
+                    }
                     best_b = b;
-                    improved = true;
                 }
             }
             divisions[ti] = best_b;
@@ -220,6 +242,7 @@ mod tests {
             num_blocks: m,
             max_passes: 3,
             min_chunk: 256,
+            ..Default::default()
         }
     }
 
@@ -294,6 +317,38 @@ mod tests {
         for s in &plan.subtasks {
             assert!(s.len() >= 256 || plan.divisions[0] == 1, "len {}", s.len());
         }
+    }
+
+    #[test]
+    fn tie_break_prefers_splitting_cold_nodes() {
+        use crate::cost::Profile;
+        // A cost grid exactly linear in n (t = n/1000 ms at every point,
+        // flat in nq) makes division makespan-neutral on m = 2 blocks:
+        // LPT packs {512} | {256, 256} and {512} | {512} to the same
+        // 0.512 ms. The tie must break toward splitting the cold node
+        // while the hot one stays whole.
+        let est = Estimator::new(Profile {
+            d: 128,
+            nq_grid: vec![1.0, 2.0],
+            n_grid: vec![256.0, 512.0, 1024.0],
+            t_ms: vec![
+                vec![0.256, 0.256],
+                vec![0.512, 0.512],
+                vec![1.024, 1.024],
+            ],
+            device: "linear-test".into(),
+        });
+        let tasks = || vec![task(7, 1, 512), task(8, 1, 512)];
+        let mut cold_cfg = cfg(2);
+        cold_cfg.cold_nodes.insert(8);
+        let plan = divide_and_schedule(tasks(), &est, &cold_cfg);
+        assert_eq!(plan.divisions, vec![1, 2], "hot stays whole, cold splits");
+        plan.check_invariants().unwrap();
+        // Without the hint nothing moves, and the preference never pays
+        // makespan for the extra split points.
+        let plain = divide_and_schedule(tasks(), &est, &cfg(2));
+        assert_eq!(plain.divisions, vec![1, 1]);
+        assert!((plan.makespan_ms - plain.makespan_ms).abs() < 1e-9);
     }
 
     #[test]

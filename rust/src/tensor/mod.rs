@@ -102,6 +102,63 @@ impl Mat {
         self.data.resize(rows * self.cols, fill);
         self.rows = rows;
     }
+
+    /// Borrow the whole matrix as a zero-copy [`MatView`].
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView {
+            rows: self.rows,
+            cols: self.cols,
+            data: &self.data,
+        }
+    }
+
+    /// Borrow a contiguous row range `[lo, hi)` as a zero-copy
+    /// [`MatView`] — the no-allocation counterpart of
+    /// [`Mat::rows_slice`].
+    #[inline]
+    pub fn view_rows(&self, lo: usize, hi: usize) -> MatView<'_> {
+        assert!(lo <= hi && hi <= self.rows);
+        MatView {
+            rows: hi - lo,
+            cols: self.cols,
+            data: &self.data[lo * self.cols..hi * self.cols],
+        }
+    }
+}
+
+/// Borrowed row-major matrix view: the zero-copy counterpart of [`Mat`]
+/// used on the decode hot path, where per-(node, kv-head) query stacks
+/// are row ranges over one stable batch layout rather than fresh
+/// allocations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Materialize an owned copy (for callers that need a `Mat`, e.g.
+    /// the exact-attention oracles in tests).
+    pub fn to_mat(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.to_vec(),
+        }
+    }
 }
 
 /// Dot product.
@@ -156,7 +213,7 @@ pub fn matmul_nn(a: &Mat, b: &Mat) -> Mat {
 /// >8 GFLOP/s (see EXPERIMENTS §Perf). Rows outside `[rlo, rhi)` and
 /// columns past `khi - klo` are left untouched.
 pub fn scores_block(
-    q: &Mat,
+    q: MatView<'_>,
     rlo: usize,
     rhi: usize,
     k: &Mat,
@@ -360,12 +417,27 @@ mod tests {
     }
 
     #[test]
+    fn views_borrow_without_copying() {
+        let m = Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let v = m.view_rows(1, 3);
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.row(0), m.row(1));
+        assert_eq!(v.at(1, 2), m.at(2, 2));
+        // The view's storage IS the matrix's storage — no allocation.
+        assert!(std::ptr::eq(v.data.as_ptr(), m.row(1).as_ptr()));
+        assert_eq!(v.to_mat(), m.rows_slice(1, 3));
+        let whole = m.view();
+        assert_eq!(whole.rows, 4);
+        assert!(std::ptr::eq(whole.data.as_ptr(), m.data.as_ptr()));
+    }
+
+    #[test]
     fn scores_block_matches_matmul_nt() {
         let q = Mat::from_fn(5, 8, |r, c| (r as f32 - c as f32) * 0.1);
         let k = Mat::from_fn(11, 8, |r, c| (r * 8 + c) as f32 * 0.03);
         let scale = 0.5;
         let mut out = Mat::zeros(5, 4);
-        scores_block(&q, 0, 5, &k, 3, 7, scale, &mut out);
+        scores_block(q.view(), 0, 5, &k, 3, 7, scale, &mut out);
         let full = matmul_nt(&q, &k);
         for r in 0..5 {
             for (jj, j) in (3..7).enumerate() {
@@ -379,7 +451,7 @@ mod tests {
         let q = Mat::from_fn(6, 4, |r, c| (r + c) as f32);
         let k = Mat::from_fn(6, 4, |r, c| (r * c) as f32 * 0.2);
         let mut out = Mat::from_fn(6, 6, |_, _| -7.0);
-        scores_block(&q, 2, 5, &k, 0, 6, 1.0, &mut out);
+        scores_block(q.view(), 2, 5, &k, 0, 6, 1.0, &mut out);
         for c in 0..6 {
             assert_eq!(out.at(0, c), -7.0);
             assert_eq!(out.at(1, c), -7.0);

@@ -50,28 +50,23 @@ fn rand_batch(
     n_kv_heads: usize,
     d: usize,
 ) -> QueryBatch {
-    QueryBatch {
-        rids: (0..bs as u64).collect(),
-        q: (0..bs)
-            .map(|_| {
-                let mut m = Mat::zeros(n_q_heads, d);
-                rng.fill_normal(&mut m.data, 1.0);
-                m
-            })
-            .collect(),
-        n_q_heads,
-        n_kv_heads,
-        d_head: d,
-    }
+    let q: Vec<Mat> = (0..bs)
+        .map(|_| {
+            let mut m = Mat::zeros(n_q_heads, d);
+            rng.fill_normal(&mut m.data, 1.0);
+            m
+        })
+        .collect();
+    QueryBatch::from_parts((0..bs as u64).collect(), &q, n_q_heads, n_kv_heads, d)
 }
 
 fn assert_matches_oracle(f: &Forest, s: &KvStore, b: &QueryBatch, outs: &[Mat], tol: f32) {
     let g = b.group_size();
-    for (ri, &rid) in b.rids.iter().enumerate() {
-        for kvh in 0..b.n_kv_heads {
-            let want = request_attention_exact(f, s, 0, rid, kvh, &b.group_rows(ri, kvh));
+    for (ri, &rid) in b.rids().iter().enumerate() {
+        for kvh in 0..b.n_kv_heads() {
+            let want = request_attention_exact(f, s, 0, rid, kvh, &b.group_rows(ri, kvh).to_mat());
             for j in 0..g {
-                for c in 0..b.d_head {
+                for c in 0..b.d_head() {
                     let got = outs[ri].at(kvh * g + j, c);
                     assert!(
                         (got - want.at(j, c)).abs() < tol,
@@ -217,19 +212,14 @@ fn request_retirement_releases_storage_and_stays_exact() {
     f.check_invariants().unwrap();
     assert!(store.allocated_pages() < pages_before);
     // Remaining requests still compute exactly.
-    let batch = QueryBatch {
-        rids: vec![0, 2],
-        q: (0..2)
-            .map(|_| {
-                let mut m = Mat::zeros(2, 16);
-                rng.fill_normal(&mut m.data, 1.0);
-                m
-            })
-            .collect(),
-        n_q_heads: 2,
-        n_kv_heads: 1,
-        d_head: 16,
-    };
+    let q: Vec<Mat> = (0..2)
+        .map(|_| {
+            let mut m = Mat::zeros(2, 16);
+            rng.fill_normal(&mut m.data, 1.0);
+            m
+        })
+        .collect();
+    let batch = QueryBatch::from_parts(vec![0, 2], &q, 2, 1, 16);
     let est = Estimator::table2();
     let plan = divide_and_schedule(
         tasks_from_forest(&f, 1, 2),

@@ -1,0 +1,355 @@
+//! Oracle suite for the shared-fill planner: coalesced prefill across an
+//! admission cohort must be invisible in the outputs (bit-identical
+//! greedy tokens vs serial, single-request runs) while executing exactly
+//! one `fill_node` per (node, layer) — pinned by the
+//! `shared_fill_invocations` counter — and charging followers zero novel
+//! prefill for the deduped prefix.
+//!
+//! Fully hermetic: native transformer backend, no artifacts.
+
+use codec::attention::codec_exec::QueryBatch;
+use codec::cache::CacheConfig;
+use codec::engine::{AttentionBackend, Engine, EngineConfig, Request};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::tensor::Mat;
+use codec::util::prng::Rng;
+
+fn model(n_kv_heads: usize) -> ModelInfo {
+    ModelInfo {
+        name: format!("sharedfill-{n_kv_heads}kv"),
+        vocab: 256,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn engine(mi: ModelInfo, max_batch: usize, cache: CacheConfig) -> Engine {
+    Engine::new(EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: mi,
+        max_batch,
+        sampler: Sampler::Greedy,
+        seed: 5,
+        workers: 2,
+        cache,
+        ..Default::default()
+    })
+    .expect("engine init")
+}
+
+/// `n` prompts sharing a `doc_len`-token document, each with a distinct
+/// `suffix_len`-token question.
+fn shared_prompts(n: usize, doc_len: usize, suffix_len: usize) -> Vec<Vec<u32>> {
+    let doc: Vec<u32> = (10..10 + doc_len as u32).collect();
+    (0..n)
+        .map(|r| {
+            let mut p = doc.clone();
+            let base = 100 + r as u32 * 16;
+            p.extend(base..base + suffix_len as u32);
+            p
+        })
+        .collect()
+}
+
+/// The serial oracle: each prompt alone in a fresh engine (same seed ⇒
+/// same weights), so nothing is shared and nothing is coalesced.
+fn serial_outputs(mi: &ModelInfo, prompts: &[Vec<u32>], max_new: usize) -> Vec<Vec<u32>> {
+    prompts
+        .iter()
+        .map(|p| {
+            let mut e = engine(mi.clone(), 1, CacheConfig::default());
+            e.submit(Request::new(0, p.clone(), max_new));
+            let out = e.run_to_completion().expect("serial run");
+            assert_eq!(out.len(), 1);
+            out.into_iter().next().map(|(_, t)| t).expect("one output")
+        })
+        .collect()
+}
+
+fn concurrent_outputs(e: &mut Engine, prompts: &[Vec<u32>], max_new: usize) -> Vec<Vec<u32>> {
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(Request::new(i as u64, p.clone(), max_new));
+    }
+    let mut out = e.run_to_completion().expect("concurrent run");
+    out.sort_by_key(|(id, _)| *id);
+    out.into_iter().map(|(_, t)| t).collect()
+}
+
+/// The headline oracle: a 4-way shared-document cohort decodes the exact
+/// tokens of four solo runs, while the planner executes one fill per
+/// (node, layer) — 5 nodes (1 document + 4 suffixes) × 2 layers — and
+/// attributes the document's pages to one owner with 3 follower joins.
+#[test]
+fn cohort_matches_serial_and_fills_each_node_layer_once() {
+    let mi = model(2);
+    let prompts = shared_prompts(4, 32, 4);
+    let serial = serial_outputs(&mi, &prompts, 6);
+
+    let mut e = engine(mi.clone(), 4, CacheConfig::default());
+    let shared = concurrent_outputs(&mut e, &prompts, 6);
+    assert_eq!(shared, serial, "coalesced fills changed greedy outputs");
+
+    // One admission cohort: the document node + 4 suffix leaves.
+    let m = &e.metrics;
+    assert_eq!(m.shared_fill_nodes, 5);
+    assert_eq!(
+        m.shared_fill_invocations,
+        m.shared_fill_nodes * mi.n_layers,
+        "fill_node must run exactly once per (node, layer)"
+    );
+    // The document's fill fans out to all 4 waiters: 3 followers, each
+    // spared the 32 document tokens.
+    assert_eq!(m.shared_fill_followers, 3);
+    assert_eq!(m.shared_fill_dedup_tokens, 3 * 32);
+    // Novel prefill = 1×document + 4×suffix; everything else rode along.
+    assert_eq!(m.prefill_tokens, 32 + 4 * 4);
+    assert_eq!(m.prefill_tokens_shared, 3 * 32);
+    // 4 independent prefills vs one coalesced wave.
+    let r = m.prefill_access_reduction().expect("fills happened");
+    assert!(r > 1.5, "access reduction {r} too small for a 4-way share");
+    assert_eq!(m.fill_fanout_hist.get(&4), Some(&1));
+    assert_eq!(m.fill_fanout_hist.get(&1), Some(&4));
+}
+
+/// The dedup path is GQA-geometry-independent: MHA (4:4), grouped (4:2)
+/// and MQA (4:1) all reproduce their serial outputs from coalesced
+/// fills.
+#[test]
+fn gqa_variants_agree_with_serial() {
+    for n_kv in [4usize, 2, 1] {
+        let mi = model(n_kv);
+        let prompts = shared_prompts(3, 24, 3);
+        let serial = serial_outputs(&mi, &prompts, 4);
+        let mut e = engine(mi.clone(), 3, CacheConfig::default());
+        let shared = concurrent_outputs(&mut e, &prompts, 4);
+        assert_eq!(shared, serial, "divergence at n_kv_heads={n_kv}");
+        assert_eq!(e.metrics.shared_fill_nodes, 4, "n_kv_heads={n_kv}");
+        assert_eq!(
+            e.metrics.shared_fill_invocations,
+            4 * mi.n_layers,
+            "n_kv_heads={n_kv}"
+        );
+    }
+}
+
+/// Identical prompts collapse to a single forest node: one fill task
+/// total, every request but the owner is a follower, and all of them
+/// read their first token from the shared fill's last hidden state.
+#[test]
+fn identical_prompts_share_one_fill() {
+    let mi = model(2);
+    let prompt: Vec<u32> = (10..30).collect();
+    let prompts = vec![prompt.clone(), prompt.clone(), prompt];
+    let serial = serial_outputs(&mi, &prompts[..1], 5);
+
+    let mut e = engine(mi.clone(), 3, CacheConfig::default());
+    let shared = concurrent_outputs(&mut e, &prompts, 5);
+    for out in &shared {
+        assert_eq!(out, &serial[0], "identical prompts must decode identically");
+    }
+    assert_eq!(e.metrics.shared_fill_nodes, 1);
+    assert_eq!(e.metrics.shared_fill_invocations, mi.n_layers);
+    assert_eq!(e.metrics.shared_fill_followers, 2);
+    assert_eq!(e.metrics.shared_fill_dedup_tokens, 2 * 20);
+}
+
+/// A warm second wave fills only its novel suffixes: the retained,
+/// already-filled document node is matched by the radix insert and never
+/// becomes a fill task again.
+#[test]
+fn warm_wave_fills_only_novel_suffixes() {
+    let mi = model(2);
+    let wave1 = shared_prompts(2, 32, 4);
+    let wave2: Vec<Vec<u32>> = shared_prompts(4, 32, 4)[2..].to_vec();
+    let serial2 = serial_outputs(&mi, &wave2, 5);
+
+    let mut e = engine(mi.clone(), 4, CacheConfig::default());
+    concurrent_outputs(&mut e, &wave1, 5);
+    // Wave 1: document + 2 suffixes, one follower on the document.
+    assert_eq!(e.metrics.shared_fill_nodes, 3);
+    assert_eq!(e.metrics.shared_fill_followers, 1);
+
+    for (i, p) in wave2.iter().enumerate() {
+        e.submit(Request::new(100 + i as u64, p.clone(), 5));
+    }
+    let mut out = e.run_to_completion().expect("warm wave");
+    out.sort_by_key(|(id, _)| *id);
+    let shared2: Vec<Vec<u32>> = out.into_iter().map(|(_, t)| t).collect();
+    assert_eq!(shared2, serial2, "warm-wave outputs diverged from serial");
+
+    // Only the 2 new suffix leaves were filled; the document was a cache
+    // hit, so it added neither a task nor a follower.
+    assert_eq!(e.metrics.shared_fill_nodes, 3 + 2);
+    assert_eq!(e.metrics.shared_fill_followers, 1);
+    assert_eq!(
+        e.metrics.shared_fill_invocations,
+        (3 + 2) * mi.n_layers
+    );
+    assert!(e.cache().stats.hit_tokens >= 2 * 32, "document must be a hit");
+}
+
+/// Shared fills under memory pressure: a tight page budget with a swap
+/// tier forces the retained document out between waves; the third wave's
+/// cohort must restore (or refill) it and still reproduce serial
+/// outputs, with the budget's high-water mark holding throughout.
+#[test]
+fn swap_pressure_preserves_outputs_and_budget() {
+    let mi = model(2);
+    let budget = 32;
+    let cache = CacheConfig {
+        page_budget: Some(budget),
+        swap_budget: Some(64),
+        ..Default::default()
+    };
+    let wave_a = shared_prompts(2, 64, 4);
+    // A different 128-token document (first token differs from wave A's,
+    // so the radix trees are disjoint); all ids stay under vocab = 256.
+    let wave_b: Vec<Vec<u32>> = {
+        let doc: Vec<u32> = (80..80 + 128).collect();
+        (0..2u32)
+            .map(|r| {
+                let mut p = doc.clone();
+                p.extend(220 + r * 8..220 + r * 8 + 4);
+                p
+            })
+            .collect()
+    };
+    let wave_c: Vec<Vec<u32>> = shared_prompts(4, 64, 4)[2..].to_vec();
+    let serial_c = serial_outputs(&mi, &wave_c, 4);
+
+    let mut e = engine(mi.clone(), 4, cache);
+    let mut base = 0u64;
+    for wave in [&wave_a, &wave_b] {
+        for (i, p) in wave.iter().enumerate() {
+            e.submit(Request::new(base + i as u64, p.clone(), 4));
+        }
+        let done = e.run_to_completion().expect("pressure wave");
+        assert_eq!(done.len(), 2);
+        base += 100;
+    }
+    // Wave B (128-token document) cannot coexist with wave A's retained
+    // 64-token document under 32 pages: something was demoted or evicted.
+    let s = &e.cache().stats;
+    assert!(
+        s.swap_outs + s.evictions > 0,
+        "no pressure: swap_outs={} evictions={}",
+        s.swap_outs,
+        s.evictions
+    );
+
+    for (i, p) in wave_c.iter().enumerate() {
+        e.submit(Request::new(base + i as u64, p.clone(), 4));
+    }
+    let mut out = e.run_to_completion().expect("restore wave");
+    out.sort_by_key(|(id, _)| *id);
+    let shared_c: Vec<Vec<u32>> = out.into_iter().map(|(_, t)| t).collect();
+    assert_eq!(shared_c, serial_c, "outputs diverged after swap pressure");
+    assert!(
+        e.cache().store().max_allocated_pages() <= budget,
+        "high-water {} exceeded budget {budget}",
+        e.cache().store().max_allocated_pages()
+    );
+}
+
+/// Preempting a follower after the shared fill must not disturb the
+/// survivors or the victim: the rerun re-matches the warm prefix and
+/// every request still decodes its serial tokens.
+#[test]
+fn preempted_follower_recovers_and_matches_serial() {
+    let mi = model(2);
+    let prompts = shared_prompts(3, 40, 4);
+    let serial = serial_outputs(&mi, &prompts, 8);
+
+    let mut e = engine(mi.clone(), 3, CacheConfig::default());
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(Request::new(i as u64, p.clone(), 8));
+    }
+    let mut done = e.step().expect("first step");
+    let victim = e.debug_preempt_youngest().expect("an active victim");
+    assert_eq!(victim, 2, "youngest admission is the last follower");
+    done.extend(e.run_to_completion().expect("drain"));
+    done.sort_by_key(|(id, _)| *id);
+    let shared: Vec<Vec<u32>> = done.into_iter().map(|(_, t)| t).collect();
+    assert_eq!(shared, serial, "preemption perturbed decode outputs");
+    assert!(e.cache().stats.preemptions >= 1);
+}
+
+/// Property test: the engine's incrementally-maintained `QueryBatch`
+/// (join / set_queries / swap-remove retire) is indistinguishable from a
+/// batch rebuilt from scratch after every operation.
+#[test]
+fn incremental_query_batch_matches_rebuilt() {
+    let (nq, nkv, d) = (4usize, 2usize, 8usize);
+    let mut rng = Rng::new(0xF111);
+    let mut randm = |rng: &mut Rng| {
+        let mut m = Mat::zeros(nq, d);
+        for x in m.data.iter_mut() {
+            *x = rng.next_f32();
+        }
+        m
+    };
+
+    let mut batch = QueryBatch::new(nq, nkv, d);
+    // The mirror model: plain (rid, queries) pairs with Vec::swap_remove
+    // mirroring QueryBatch::retire's swap-remove semantics.
+    let mut mirror: Vec<(u64, Mat)> = Vec::new();
+    let mut next_rid = 0u64;
+
+    for _ in 0..300 {
+        match rng.below(4) {
+            0 | 1 => {
+                let q = randm(&mut rng);
+                batch.join(next_rid, &q);
+                mirror.push((next_rid, q));
+                next_rid += 1;
+            }
+            2 if !mirror.is_empty() => {
+                let i = rng.below(mirror.len());
+                let q = randm(&mut rng);
+                batch.set_queries(mirror[i].0, &q);
+                mirror[i].1 = q;
+            }
+            3 if !mirror.is_empty() => {
+                let i = rng.below(mirror.len());
+                assert!(batch.retire(mirror[i].0));
+                mirror.swap_remove(i);
+            }
+            _ => {}
+        }
+
+        let rebuilt = QueryBatch::from_parts(
+            mirror.iter().map(|(r, _)| *r).collect(),
+            &mirror.iter().map(|(_, q)| q.clone()).collect::<Vec<_>>(),
+            nq,
+            nkv,
+            d,
+        );
+        assert_eq!(batch.rids(), rebuilt.rids());
+        assert_eq!(batch.len(), mirror.len());
+        for ri in 0..batch.len() {
+            assert_eq!(
+                batch.request_queries(ri).data,
+                rebuilt.request_queries(ri).data,
+                "row block {ri} diverged"
+            );
+            for kvh in 0..nkv {
+                let a = batch.group_rows(ri, kvh);
+                let b = rebuilt.group_rows(ri, kvh);
+                for j in 0..nq / nkv {
+                    assert_eq!(a.row(j), b.row(j));
+                }
+            }
+        }
+    }
+    // Retiring a rid twice reports absence instead of corrupting rows.
+    if let Some((rid, _)) = mirror.first() {
+        let rid = *rid;
+        assert!(batch.retire(rid));
+        assert!(!batch.retire(rid));
+    }
+}

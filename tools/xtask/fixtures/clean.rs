@@ -21,6 +21,11 @@ fn annotated_trace_emit(ring: &mut TraceRing, ev: TraceEvent) {
     ring.push_event(ev);
 }
 
+fn sanctioned_shared_fill_emission(eng: &mut Engine) {
+    eng.trace_span(EventKind::SharedFill, 0, 1, 5, 3);
+    eng.trace_event(EventKind::FillJoin, 2, 5, 120);
+}
+
 fn guard_scoped_before_send(m: &Mutex<u32>, tx: &Sender<u32>) {
     let v = {
         let guard = m.lock();

@@ -1,0 +1,7 @@
+// Seeded violation for the `shared-fill-gate` rule: engine-scope code
+// naming a shared-fill trace kind away from a trace_span/trace_event/
+// record emission site, forking the fill-dedup telemetry off the ring.
+
+fn stash_kind_for_later(slot: &mut Option<EventKind>) {
+    *slot = Some(EventKind::SharedFill);
+}

@@ -35,6 +35,12 @@
 //!   Those bypass the enabled-flag gate; serving code must go through
 //!   `TraceRing::record` / `record_span`, which are no-ops when tracing
 //!   is off — that is what keeps `--trace-out`-disabled runs free.
+//! * `shared-fill-gate` — in the serving path, the shared-fill trace
+//!   kinds (`SharedFill`, `FillJoin`) may only appear on a line that
+//!   actually emits them (`trace_span` / `trace_event` /
+//!   `record`). Naming the kind anywhere else (hand-rolled event
+//!   structs, ad-hoc logging) would fork the fill-dedup telemetry away
+//!   from the gated ring the CI smoke asserts on.
 //!
 //! Implementation note: this is a lexical scanner (comment/string-aware
 //! line scan with brace-depth and `#[cfg(test)]`-region tracking), not a
@@ -58,6 +64,7 @@ const RULE_UNWRAP: &str = "no-unwrap";
 const RULE_GUARD: &str = "guard-across-send";
 const RULE_RELAXED: &str = "relaxed-ordering";
 const RULE_TRACE: &str = "trace-gate";
+const RULE_FILLGATE: &str = "shared-fill-gate";
 /// Meta-rule: a `lint: allow` annotation that is malformed or carries an
 /// empty reason is itself a violation (otherwise the allowlist rots).
 const RULE_ANNOTATION: &str = "annotation";
@@ -86,6 +93,11 @@ const MUTATION_TOKENS: &[&str] = &[
 /// `TraceRing::record` / `record_span` are absent: they early-return on
 /// a disabled ring, so calling them is the sanctioned path.
 const TRACE_TOKENS: &[&str] = &[".push_event(", "TraceEvent {", "TraceEvent{"];
+
+/// The shared-fill trace kinds; see `shared-fill-gate`.
+const FILL_KIND_TOKENS: &[&str] = &["SharedFill", "FillJoin"];
+/// Emission sites that legitimately carry a shared-fill kind token.
+const FILL_EMIT_TOKENS: &[&str] = &["trace_span", "trace_event", "record"];
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Violation {
@@ -406,6 +418,21 @@ fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Violation> {
                     );
                 }
             }
+            if scope.trace_rule && !allowed.contains(RULE_FILLGATE) {
+                if let Some(tok) = FILL_KIND_TOKENS.iter().find(|t| code.contains(**t)) {
+                    if !FILL_EMIT_TOKENS.iter().any(|t| code.contains(*t)) {
+                        push(
+                            RULE_FILLGATE,
+                            format!(
+                                "`{tok}` used away from its emission site — the \
+                                 shared-fill kinds may only appear in a \
+                                 trace_span/trace_event/record call so the \
+                                 fill-dedup telemetry stays on the gated ring"
+                            ),
+                        );
+                    }
+                }
+            }
             if (code.contains(".send(") || code.contains(".recv("))
                 && !allowed.contains(RULE_GUARD)
             {
@@ -490,7 +517,7 @@ fn run_lint() -> ExitCode {
     if violations.is_empty() {
         println!(
             "xtask lint: {} files clean (rules: {RULE_FOREST}, {RULE_UNWRAP}, \
-             {RULE_GUARD}, {RULE_RELAXED}, {RULE_TRACE})",
+             {RULE_GUARD}, {RULE_RELAXED}, {RULE_TRACE}, {RULE_FILLGATE})",
             files.len()
         );
         ExitCode::SUCCESS
@@ -567,6 +594,11 @@ mod tests {
     #[test]
     fn fixture_trace_gate_fires() {
         assert_eq!(rules_fired("trace_gate.rs"), vec![RULE_TRACE]);
+    }
+
+    #[test]
+    fn fixture_shared_fill_gate_fires() {
+        assert_eq!(rules_fired("shared_fill_gate.rs"), vec![RULE_FILLGATE]);
     }
 
     #[test]
@@ -700,6 +732,23 @@ fn f() {
         assert!(lint_source("m.rs", src, manager).is_empty());
         let kvforest = scope_for("kvforest/forest.rs");
         assert!(lint_source("f.rs", src, kvforest).is_empty());
+    }
+
+    #[test]
+    fn shared_fill_kind_on_emission_line_is_clean() {
+        let src = "fn f(e: &mut Engine) { e.trace_span(EventKind::SharedFill, 0, 1, 5, 3); }\n";
+        assert!(lint(src).is_empty());
+        let src = "fn f(e: &mut Engine) { e.trace_event(EventKind::FillJoin, 2, 5, 9); }\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn shared_fill_kind_off_emission_line_fires() {
+        let src = "fn f() { let k = EventKind::FillJoin; stash(k); }\n";
+        assert_eq!(lint(src), vec![RULE_FILLGATE]);
+        // Out of serving scope (obs/) the rule does not apply.
+        let obs = scope_for("obs/trace.rs");
+        assert!(lint_source("t.rs", src, obs).is_empty());
     }
 
     #[test]
