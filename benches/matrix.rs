@@ -1,0 +1,21 @@
+//! Scenario-matrix bench: the workload zoo (rag-doc-qa,
+//! tree-of-thoughts, agentic-multiturn, mixed-interactive) at standard
+//! scale across the full serving-config grid — shards × cache budget ×
+//! routing policy. Every cell replays the same seeded trace open-loop
+//! and must reproduce the baseline cell's greedy outputs bit-identically;
+//! per-scenario sharing/traffic gates run inside [`run_matrix`], so this
+//! binary fails loudly on a regression that only one traffic shape
+//! exposes.
+//!
+//! Run: `cargo bench --bench matrix`. Writes
+//! `target/bench_results/BENCH_scenario_matrix.json` (same payload as
+//! `codec matrix`; CI's smoke job runs the `--quick` CLI variant).
+
+use codec::bench::{run_matrix, MatrixOptions};
+
+fn main() {
+    let rep = run_matrix(&MatrixOptions::default()).expect("scenario matrix must pass its gates");
+    rep.print();
+    rep.save();
+    println!("wrote target/bench_results/{}.json", rep.name);
+}

@@ -1,0 +1,478 @@
+//! The scenario-matrix harness: every zoo scenario crossed with a small
+//! serving-config grid (shards × cache budget × routing policy), each
+//! cell a full open-loop serve run.
+//!
+//! Every cell replays the *same* seeded trace, so greedy outputs must be
+//! bit-identical across the whole grid — the baseline cell (1 shard,
+//! unbounded cache, affinity routing) is the oracle every other cell is
+//! compared against, which is what lets one regression that only one
+//! traffic shape exposes fail loudly instead of averaging away. The
+//! emitted `BENCH_scenario_matrix.json` carries one row per cell with
+//! per-scenario SLO attainment / goodput / prefix hit-rate / memory- and
+//! prefill-access-reduction fields; CI's `scenario-matrix` job gates the
+//! schema (`codec matrix --quick`), and `cargo bench --bench matrix`
+//! runs the standard scale.
+
+use crate::bench::harness::{fmt_x, FigureReport};
+use crate::cache::CacheConfig;
+use crate::engine::{
+    AttentionBackend, EngineConfig, Metrics, RouterConfig, RoutingPolicy, Server, SloTargets,
+};
+use crate::model::Sampler;
+use crate::runtime::ModelInfo;
+use crate::util::json::Json;
+use crate::workload::zoo::{self, Scenario};
+use crate::workload::Trace;
+use anyhow::{ensure, Context, Result};
+
+/// Knobs for one matrix run (`codec matrix` and `benches/matrix.rs`
+/// both build one of these).
+#[derive(Debug, Clone)]
+pub struct MatrixOptions {
+    /// CI-smoke scale: quick zoo scenarios and a 3-cell grid instead of
+    /// the standard scenarios over the full 6-cell grid.
+    pub quick: bool,
+    /// Seed for every scenario's prompts and arrivals.
+    pub seed: u64,
+    /// Open-loop Poisson arrival rate each trace is re-timed to.
+    pub rate_rps: f64,
+    /// SLO targets the per-cell attainment/goodput is judged against.
+    pub slo: SloTargets,
+    /// Run a single named scenario instead of the whole registry.
+    pub scenario: Option<String>,
+}
+
+impl Default for MatrixOptions {
+    fn default() -> Self {
+        MatrixOptions {
+            quick: false,
+            seed: 1,
+            rate_rps: 400.0,
+            slo: SloTargets::default(),
+            scenario: None,
+        }
+    }
+}
+
+/// One cell of the config grid.
+#[derive(Debug, Clone, Copy)]
+struct CellSpec {
+    shards: usize,
+    routing: RoutingPolicy,
+    /// Re-run under a data-derived tight page budget with a swap tier,
+    /// so eviction/demotion pressure is part of the grid.
+    tight: bool,
+}
+
+/// The grid. The first cell is always the baseline oracle (1 shard,
+/// unbounded, affinity); tight cells come after the unbounded ones so
+/// their budget can be derived from the baseline's page high-water mark.
+fn cell_specs(quick: bool) -> Vec<CellSpec> {
+    use RoutingPolicy::{Affinity, RoundRobin};
+    let mut cells = vec![
+        CellSpec {
+            shards: 1,
+            routing: Affinity,
+            tight: false,
+        },
+        CellSpec {
+            shards: 2,
+            routing: Affinity,
+            tight: false,
+        },
+    ];
+    if !quick {
+        cells.push(CellSpec {
+            shards: 2,
+            routing: RoundRobin,
+            tight: false,
+        });
+        cells.push(CellSpec {
+            shards: 1,
+            routing: Affinity,
+            tight: true,
+        });
+    }
+    cells.push(CellSpec {
+        shards: 2,
+        routing: Affinity,
+        tight: true,
+    });
+    if !quick {
+        cells.push(CellSpec {
+            shards: 2,
+            routing: RoundRobin,
+            tight: true,
+        });
+    }
+    cells
+}
+
+/// Small-geometry model for matrix runs: tiny transformer dimensions
+/// (matrix wall time stays CI-friendly) but a full-size vocabulary, so
+/// the zoo's default 100..7100 token span embeds without rescaling.
+pub fn bench_model() -> ModelInfo {
+    ModelInfo {
+        name: "zoo-matrix".to_string(),
+        vocab: 8192,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn engine_cfg(page_budget: Option<usize>, swap_budget: Option<usize>) -> EngineConfig {
+    EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: bench_model(),
+        max_batch: 8,
+        sampler: Sampler::Greedy,
+        seed: 5,
+        workers: 2,
+        cache: CacheConfig {
+            page_budget,
+            swap_budget,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn routing_name(p: RoutingPolicy) -> &'static str {
+    match p {
+        RoutingPolicy::Affinity => "affinity",
+        RoutingPolicy::PowerOfTwo => "p2c",
+        RoutingPolicy::RoundRobin => "round-robin",
+    }
+}
+
+struct CellRun {
+    /// Greedy outputs in trace-entry order (replay preserves it: every
+    /// zoo trace has nondecreasing arrivals and the sort is stable).
+    outputs: Vec<Vec<u32>>,
+    metrics: Metrics,
+}
+
+fn run_cell(trace: &Trace, spec: CellSpec, budget: Option<(usize, usize)>) -> Result<CellRun> {
+    let (page, swap) = match budget {
+        Some((p, s)) => (Some(p), Some(s)),
+        None => (None, None),
+    };
+    let cfg = engine_cfg(page, swap);
+    let server = if spec.shards > 1 {
+        Server::start_sharded(
+            cfg,
+            spec.shards,
+            RouterConfig {
+                policy: spec.routing,
+                ..Default::default()
+            },
+        )?
+    } else {
+        Server::start(cfg)?
+    };
+    let handles = server.replay(trace);
+    let mut outputs = Vec::with_capacity(handles.len());
+    for h in handles {
+        let id = h.id;
+        outputs.push(h.wait().with_context(|| format!("request {id}"))?);
+    }
+    let report = server.shutdown_report();
+    ensure!(
+        report.failures.is_empty(),
+        "shard failures: {:?}",
+        report.failures
+    );
+    Ok(CellRun {
+        outputs,
+        metrics: report.metrics,
+    })
+}
+
+/// Data-derived tight budget for a pressure cell: 80% of the unbounded
+/// baseline's page high-water mark, floored so the largest single
+/// request (prompt + decode growth, all layers) always fits a shard
+/// with headroom — real eviction/demotion pressure, never an infeasible
+/// admission. The swap budget is the full baseline peak, so device
+/// pressure demotes to the host tier instead of destroying KV.
+fn tight_budget(trace: &Trace, baseline: &Metrics, shards: usize) -> (usize, usize) {
+    let page_tokens = EngineConfig::default().page_tokens.max(1);
+    let n_layers = bench_model().n_layers;
+    let max_req_tokens = trace
+        .entries
+        .iter()
+        .map(|e| e.prompt.len() + e.max_new_tokens)
+        .max()
+        .unwrap_or(1);
+    let per_req_pages = n_layers * max_req_tokens.div_ceil(page_tokens) + 2;
+    let peak = baseline.kv_max_allocated_pages.max(1);
+    let page = (peak * 4 / 5).max(shards * 2 * per_req_pages).max(shards);
+    (page, peak)
+}
+
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Tokens of each prompt already present in some earlier prompt (its
+/// longest common prefix over all earlier entries) — the structural
+/// sharing this trace *offers*, which the engine should convert into
+/// retained-cache hits or shared-fill dedup. Computed from the trace
+/// alone, so the per-scenario gate is seed-robust.
+fn structural_shared_tokens(trace: &Trace) -> usize {
+    let mut shared = 0;
+    for (i, e) in trace.entries.iter().enumerate() {
+        shared += trace.entries[..i]
+            .iter()
+            .map(|p| lcp(&p.prompt, &e.prompt))
+            .max()
+            .unwrap_or(0);
+    }
+    shared
+}
+
+/// Per-scenario assertion gates, applied to the baseline cell: the
+/// structural sharing the trace offers must actually be served shared,
+/// and the analytic traffic accounting must stay sane. A regression
+/// that only one traffic shape exposes fails here, named.
+fn gate_scenario(name: &str, m: &Metrics, structural: usize, logical: usize) -> Result<()> {
+    // CoDec must never read more decode bytes than the per-request
+    // FlashDecoding baseline would for the same plans.
+    if let Some(r) = m.memory_access_reduction() {
+        ensure!(
+            r >= 0.99,
+            "{name}: memory-access reduction {r:.3} < 1 — decode read more than the baseline"
+        );
+    }
+    // Sharing-conversion gate: when ≥ 15% of the trace's tokens are
+    // structurally shared, at least half of them must have been served
+    // from the retained cache or ridden a coalesced fill.
+    if logical > 0 && structural * 100 >= logical * 15 {
+        let measured = m.prefill_tokens_shared + m.shared_fill_dedup_tokens;
+        ensure!(
+            measured * 2 >= structural,
+            "{name}: trace offers {structural} structurally shared tokens but only \
+             {measured} were served shared — the prefix-sharing path regressed for \
+             this traffic shape"
+        );
+    }
+    Ok(())
+}
+
+/// Run the whole matrix and return the report; `report.metrics` holds
+/// the machine-readable `BENCH_scenario_matrix` payload (schema gated
+/// by CI). Every assertion gate runs inside, so both the bench binary
+/// and `codec matrix` fail loudly on a regression.
+pub fn run_matrix(opts: &MatrixOptions) -> Result<FigureReport> {
+    ensure!(
+        opts.rate_rps.is_finite() && opts.rate_rps > 0.0,
+        "arrival rate must be a positive finite req/s, got {}",
+        opts.rate_rps
+    );
+    let scenarios: Vec<Box<dyn Scenario>> = match &opts.scenario {
+        Some(name) => vec![zoo::get(name, opts.seed, opts.quick).with_context(|| {
+            format!(
+                "unknown scenario '{name}' (registered: {})",
+                zoo::SCENARIO_NAMES.join(", ")
+            )
+        })?],
+        None => zoo::all(opts.seed, opts.quick),
+    };
+    let specs = cell_specs(opts.quick);
+    let mut rep = FigureReport::new(
+        "BENCH_scenario_matrix",
+        "Per-scenario serving matrix: shards × cache budget × routing. Every cell \
+         replays the same seeded trace open-loop and must reproduce the baseline \
+         cell's greedy outputs bit-identically.",
+        &[
+            "scenario",
+            "shards",
+            "routing",
+            "budget",
+            "finished",
+            "SLO%",
+            "goodput r/s",
+            "hit%",
+            "mem x",
+            "fill x",
+        ],
+    );
+    let mut scen_json: Vec<Json> = Vec::new();
+    for s in &scenarios {
+        let trace = s.poisson_trace(opts.rate_rps);
+        let logical: usize = trace.entries.iter().map(|e| e.prompt.len()).sum();
+        let structural = structural_shared_tokens(&trace);
+        let mut baseline: Option<CellRun> = None;
+        let mut cells_json: Vec<Json> = Vec::new();
+        for spec in &specs {
+            let budget = spec.tight.then(|| {
+                let base = &baseline.as_ref().expect("baseline cell runs first").metrics;
+                tight_budget(&trace, base, spec.shards)
+            });
+            let run = run_cell(&trace, *spec, budget).with_context(|| {
+                format!(
+                    "{}: shards={} routing={} tight={}",
+                    s.name(),
+                    spec.shards,
+                    routing_name(spec.routing),
+                    spec.tight
+                )
+            })?;
+            ensure!(
+                run.outputs.len() == trace.entries.len(),
+                "{}: {} of {} requests finished",
+                s.name(),
+                run.outputs.len(),
+                trace.entries.len()
+            );
+            let matches = baseline
+                .as_ref()
+                .map(|b| b.outputs == run.outputs)
+                .unwrap_or(true);
+            ensure!(
+                matches,
+                "{}: shards={} routing={} tight={} diverged from the baseline cell's \
+                 greedy outputs",
+                s.name(),
+                spec.shards,
+                routing_name(spec.routing),
+                spec.tight
+            );
+            let m = &run.metrics;
+            let slo = m.slo_report(opts.slo);
+            rep.row(vec![
+                s.name().to_string(),
+                spec.shards.to_string(),
+                routing_name(spec.routing).to_string(),
+                budget
+                    .map(|(p, _)| p.to_string())
+                    .unwrap_or_else(|| "∞".to_string()),
+                format!("{}/{}", run.outputs.len(), trace.entries.len()),
+                slo.as_ref()
+                    .map(|r| format!("{:.0}", r.slo_attainment * 100.0))
+                    .unwrap_or_else(|| "—".to_string()),
+                slo.as_ref()
+                    .map(|r| format!("{:.1}", r.goodput_rps))
+                    .unwrap_or_else(|| "—".to_string()),
+                format!("{:.0}", m.prefill_share_rate() * 100.0),
+                m.memory_access_reduction()
+                    .map(fmt_x)
+                    .unwrap_or_else(|| "—".to_string()),
+                m.prefill_access_reduction()
+                    .map(fmt_x)
+                    .unwrap_or_else(|| "—".to_string()),
+            ]);
+            let summary = m.scenario_summary(opts.slo);
+            let Json::Obj(mut obj) = summary else {
+                unreachable!("scenario_summary returns an object")
+            };
+            obj.insert("shards".to_string(), Json::from(spec.shards));
+            obj.insert(
+                "routing".to_string(),
+                Json::from(routing_name(spec.routing)),
+            );
+            obj.insert("tight_budget".to_string(), Json::from(spec.tight));
+            obj.insert("outputs_match_baseline".to_string(), Json::from(matches));
+            cells_json.push(Json::Obj(obj));
+            if baseline.is_none() {
+                gate_scenario(s.name(), m, structural, logical)?;
+                baseline = Some(run);
+            }
+        }
+        scen_json.push(Json::from_pairs([
+            ("scenario", Json::from(s.name())),
+            ("description", Json::from(s.description())),
+            ("entries", Json::from(trace.entries.len())),
+            ("logical_tokens", Json::from(logical)),
+            ("structural_shared_tokens", Json::from(structural)),
+            ("cells", Json::Arr(cells_json)),
+        ]));
+    }
+    rep.note(format!(
+        "{} scenario(s) × {} cells, seed {}, open-loop {} req/s; every cell's \
+         outputs matched the baseline cell bit-identically",
+        scenarios.len(),
+        specs.len(),
+        opts.seed,
+        opts.rate_rps
+    ));
+    rep.metrics = Some(Json::from_pairs([
+        ("schema_version", Json::from(1usize)),
+        ("quick", Json::from(opts.quick)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("rate_rps", Json::Num(opts.rate_rps)),
+        (
+            "slo",
+            Json::from_pairs([
+                ("ttft_ms", Json::Num(opts.slo.ttft_ms)),
+                ("tpot_ms", Json::Num(opts.slo.tpot_ms)),
+            ]),
+        ),
+        ("scenarios", Json::Arr(scen_json)),
+    ]));
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceEntry;
+
+    fn entry(prompt: Vec<u32>) -> TraceEntry {
+        TraceEntry {
+            prompt,
+            max_new_tokens: 4,
+            at_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn structural_sharing_counts_best_earlier_prefix() {
+        let t = Trace {
+            entries: vec![
+                entry(vec![1, 2, 3, 4]),
+                entry(vec![1, 2, 3, 9]), // 3 shared with entry 0
+                entry(vec![1, 2, 8, 8]), // 2 shared
+                entry(vec![7, 7]),       // nothing shared
+            ],
+        };
+        assert_eq!(structural_shared_tokens(&t), 5);
+        assert_eq!(structural_shared_tokens(&Trace::default()), 0);
+    }
+
+    #[test]
+    fn grid_starts_with_the_baseline_oracle_cell() {
+        for quick in [false, true] {
+            let specs = cell_specs(quick);
+            assert!(specs.len() >= 3);
+            assert_eq!(specs[0].shards, 1);
+            assert!(!specs[0].tight);
+            assert!(matches!(specs[0].routing, RoutingPolicy::Affinity));
+            // Tight cells always follow an unbounded cell (their budget
+            // derives from the baseline run).
+            assert!(!specs.iter().take(2).any(|s| s.tight));
+            assert!(specs.iter().any(|s| s.tight));
+            assert!(specs.iter().any(|s| s.shards > 1));
+        }
+    }
+
+    #[test]
+    fn tight_budget_always_fits_the_largest_request() {
+        let t = Trace {
+            entries: vec![entry((0..640).collect())],
+        };
+        let m = Metrics::default(); // peak 0 → the floor dominates
+        let (page, _swap) = tight_budget(&t, &m, 2);
+        let per_req = 2 * (640 + 4usize).div_ceil(16) + 2;
+        assert!(page >= 2 * 2 * per_req);
+    }
+
+    #[test]
+    fn bench_model_embeds_the_default_token_span() {
+        let m = bench_model();
+        assert!(m.vocab > 100 + 7000, "zoo default tokens must embed");
+    }
+}

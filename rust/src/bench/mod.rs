@@ -8,5 +8,7 @@
 
 pub mod figures;
 pub mod harness;
+pub mod matrix;
 
 pub use harness::{time_it, BenchTimer, FigureReport};
+pub use matrix::{run_matrix, MatrixOptions};

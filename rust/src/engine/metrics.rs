@@ -803,6 +803,62 @@ impl Metrics {
         }
     }
 
+    /// The flat numeric core of one scenario-matrix cell: the subset of
+    /// [`Metrics::to_json`] the scenario matrix gates on, with the SLO
+    /// report pre-resolved against `targets` so every field is
+    /// addressable as a top-level key — by the per-scenario assertion
+    /// gates in `bench/matrix.rs` and by jq in CI's `scenario-matrix`
+    /// job. Ratios that are undefined before any traffic render as
+    /// `null`, never NaN.
+    pub fn scenario_summary(&self, targets: SloTargets) -> Json {
+        let finished = self
+            .requests
+            .values()
+            .filter(|r| r.finished.is_some())
+            .count();
+        let slo = self.slo_report(targets);
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let opt_pages = |v: Option<usize>| v.map(Json::from).unwrap_or(Json::Null);
+        Json::from_pairs([
+            ("requests", Json::from(self.requests.len())),
+            ("finished", Json::from(finished)),
+            ("tokens_generated", Json::from(self.tokens_generated)),
+            (
+                "slo_attainment",
+                opt_num(slo.as_ref().map(|r| r.slo_attainment)),
+            ),
+            ("goodput_rps", opt_num(slo.as_ref().map(|r| r.goodput_rps))),
+            (
+                "throughput_rps",
+                opt_num(slo.as_ref().map(|r| r.throughput_rps)),
+            ),
+            ("hit_rate", Json::Num(self.prefill_share_rate())),
+            (
+                "memory_access_reduction",
+                opt_num(self.memory_access_reduction()),
+            ),
+            (
+                "prefill_access_reduction",
+                opt_num(self.prefill_access_reduction()),
+            ),
+            (
+                "shared_fill_followers",
+                Json::from(self.shared_fill_followers),
+            ),
+            ("preemptions", Json::from(self.preemptions)),
+            ("cache_evictions", Json::from(self.cache_evictions)),
+            ("swap_outs", Json::from(self.swap_outs)),
+            ("swap_ins", Json::from(self.swap_ins)),
+            (
+                "kv_max_allocated_pages",
+                Json::from(self.kv_max_allocated_pages),
+            ),
+            ("kv_budget_pages", opt_pages(self.kv_budget_pages)),
+            ("kv_swap_budget_pages", opt_pages(self.kv_swap_budget_pages)),
+            ("shards", Json::from(self.shards)),
+        ])
+    }
+
     /// Machine-readable snapshot of every counter, gauge, timing
     /// summary, and traffic metric — the payload behind
     /// `codec serve --metrics-json` and the bench harness's
@@ -1045,6 +1101,33 @@ mod tests {
         let tpot = r.tpot().unwrap();
         assert!(tpot >= Duration::from_millis(2), "{tpot:?}");
         assert!(m.mean_tpot_ms().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scenario_summary_is_flat_and_nan_free() {
+        // Empty metrics: every undefined ratio must be null, not NaN.
+        let empty = Metrics::default().scenario_summary(SloTargets::default());
+        assert_eq!(empty.get("requests"), Some(&Json::Num(0.0)));
+        assert_eq!(empty.get("finished"), Some(&Json::Num(0.0)));
+        assert_eq!(empty.get("slo_attainment"), Some(&Json::Null));
+        assert_eq!(empty.get("memory_access_reduction"), Some(&Json::Null));
+        assert_eq!(empty.get("hit_rate"), Some(&Json::Num(0.0)));
+        assert_eq!(empty.get("kv_budget_pages"), Some(&Json::Null));
+
+        // A finished request resolves the SLO fields to numbers.
+        let mut m = Metrics::default();
+        m.on_submit(1);
+        m.on_token(1);
+        m.on_finish(1);
+        m.prefill_tokens = 3;
+        m.prefill_tokens_shared = 1;
+        m.kv_budget_pages = Some(64);
+        let s = m.scenario_summary(SloTargets::default());
+        assert_eq!(s.get("finished"), Some(&Json::Num(1.0)));
+        assert!(s.get("slo_attainment").unwrap().as_f64().is_some());
+        assert!(s.get("goodput_rps").unwrap().as_f64().is_some());
+        assert_eq!(s.get("hit_rate").unwrap().as_f64(), Some(0.25));
+        assert_eq!(s.get("kv_budget_pages"), Some(&Json::Num(64.0)));
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   serve        run the serving engine on a workload trace or synthetic
 //!                document-QA load and report TPOT/throughput
+//!   matrix       run the workload-zoo scenario matrix (every registered
+//!                scenario × shards × cache budget × routing) and emit
+//!                BENCH_scenario_matrix.json with per-scenario gates
 //!   bench-figN   regenerate one paper figure table (N ∈ 1,5,6,…,13)
 //!   bench-all    regenerate every figure/table
 //!   table2       print the cost-profile grid
@@ -70,6 +73,18 @@ commands:
                (codec|flash run hermetically; codec-pjrt needs a build
                 with --features pjrt plus AOT artifacts, and is
                 single-shard only)
+  matrix       [--quick]            (CI-smoke scale: smaller scenarios,
+                3-cell grid instead of 6)
+               [--seed N]           (scenario prompt/arrival seed)
+               [--rate RPS]         (open-loop Poisson arrival rate)
+               [--scenario NAME]    (one of rag-doc-qa, tree-of-thoughts,
+                agentic-multiturn, mixed-interactive; default = all)
+               [--slo-ttft MS] [--slo-tpot MS]
+               [--out FILE]         (also write the report JSON here, in
+                addition to target/bench_results/)
+               Every cell replays the same seeded trace and must match
+               the baseline cell's greedy outputs bit-identically;
+               per-scenario sharing/traffic gates fail the run loudly.
   bench-figN   N in {{1,5,6,7,8,9,10,11,12,13}}
   bench-all
   table2       [--profile FILE]
@@ -86,7 +101,7 @@ fn main() {
     let Some(cmd) = argv.first().cloned() else {
         usage()
     };
-    let args = match Args::parse(argv[1..].iter().cloned(), &["verbose", "audit"]) {
+    let args = match Args::parse(argv[1..].iter().cloned(), &["verbose", "audit", "quick"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -95,6 +110,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "matrix" => cmd_matrix(&args),
         "bench-all" => {
             for rep in figures::all_figures() {
                 rep.print();
@@ -126,6 +142,38 @@ fn main() {
 fn print_one(rep: codec::bench::FigureReport) -> anyhow::Result<()> {
     rep.print();
     rep.save();
+    Ok(())
+}
+
+/// `codec matrix`: the workload-zoo scenario matrix. One command runs
+/// every registered scenario across the serving-config grid, applies the
+/// per-scenario gates, prints the table, and persists
+/// `BENCH_scenario_matrix.json` (CI's `scenario-matrix` job runs this
+/// with `--quick` and asserts on the schema).
+fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
+    let slo_default = codec::engine::SloTargets::default();
+    let opts = codec::bench::MatrixOptions {
+        quick: args.flag("quick"),
+        seed: args.usize_or("seed", 1).map_err(anyhow::Error::msg)? as u64,
+        rate_rps: args.f64_or("rate", 400.0).map_err(anyhow::Error::msg)?,
+        slo: codec::engine::SloTargets {
+            ttft_ms: args
+                .f64_or("slo-ttft", slo_default.ttft_ms)
+                .map_err(anyhow::Error::msg)?,
+            tpot_ms: args
+                .f64_or("slo-tpot", slo_default.tpot_ms)
+                .map_err(anyhow::Error::msg)?,
+        },
+        scenario: args.get("scenario").map(str::to_string),
+    };
+    let rep = codec::bench::run_matrix(&opts)?;
+    rep.print();
+    rep.save();
+    if let Some(path) = args.get("out") {
+        let json = codec::util::json::emit(&rep.to_json());
+        std::fs::write(path, json).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("report json:        {path}");
+    }
     Ok(())
 }
 

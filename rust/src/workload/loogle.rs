@@ -9,6 +9,7 @@
 //! ids are synthetic; the prefix-sharing structure — the only thing the
 //! kernels see — matches the dataset's.
 
+use super::trace::{Trace, TraceEntry};
 use crate::kvforest::Forest;
 use crate::util::prng::Rng;
 
@@ -128,6 +129,29 @@ impl LoogleGen {
         prompts
     }
 
+    /// Compile to a replayable *serving* trace: the token-level prompts
+    /// of [`LoogleGen::build_prompts`] with finite arrival offsets
+    /// (`i · intra_gap_ms`), ready for `Server::replay` — the gpusim
+    /// figures keep using [`LoogleGen::build_forest`] from the same
+    /// generator state, so both paths see the same corpus shape.
+    pub fn build_trace(&self, scale_down: usize, max_new_tokens: usize, intra_gap_ms: f64) -> Trace {
+        assert!(
+            intra_gap_ms.is_finite() && intra_gap_ms >= 0.0,
+            "arrival gap must be finite nonnegative ms, got {intra_gap_ms}"
+        );
+        let entries = self
+            .build_prompts(scale_down)
+            .into_iter()
+            .enumerate()
+            .map(|(i, prompt)| TraceEntry {
+                prompt,
+                max_new_tokens,
+                at_ms: i as f64 * intra_gap_ms,
+            })
+            .collect();
+        Trace { entries }
+    }
+
     /// The dataset's sharing rate: 1 − deduplicated/logical tokens.
     pub fn sharing_rate(&self) -> f64 {
         let f = self.build_forest();
@@ -199,5 +223,28 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(g.build_prompts(100), g.build_prompts(100));
+    }
+
+    #[test]
+    fn trace_has_finite_offsets_and_matches_prompts() {
+        let g = LoogleGen {
+            num_docs: 2,
+            questions_per_doc: 3,
+            seed: 4,
+            ..Default::default()
+        };
+        let t = g.build_trace(100, 6, 2.5);
+        let prompts = g.build_prompts(100);
+        assert_eq!(t.entries.len(), prompts.len());
+        for (i, (e, p)) in t.entries.iter().zip(&prompts).enumerate() {
+            assert_eq!(&e.prompt, p);
+            assert_eq!(e.max_new_tokens, 6);
+            assert!(e.at_ms.is_finite());
+            assert_eq!(e.at_ms, i as f64 * 2.5);
+        }
+        // Round-trips through the JSON trace format (the serving path's
+        // boundary check accepts every emitted offset).
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
     }
 }

@@ -1,17 +1,23 @@
 //! Workload generators: the paper's synthetic prefix trees (§7.2), a
 //! LooGLE-like long-context document-QA generator (§7.1, Fig. 8), the
 //! multi-wave shared-prefix traces that exercise the retained prefix
-//! cache, and the Poisson open-loop arrival process for SLO-style load
-//! testing.
+//! cache, the Poisson open-loop arrival process for SLO-style load
+//! testing, and the scenario zoo — a registry of named, seeded traffic
+//! shapes that all compile to replayable serving [`Trace`]s.
 
 pub mod loogle;
 pub mod multiwave;
 pub mod poisson;
 pub mod trace;
 pub mod treegen;
+pub mod zoo;
 
 pub use loogle::{LoogleCategory, LoogleGen};
 pub use multiwave::MultiWaveGen;
 pub use poisson::PoissonProcess;
 pub use trace::{Trace, TraceEntry, TraceError};
-pub use treegen::{degenerate_tree, full_kary_tree, shared_ratio_tree, speculative_tree, two_level_tree};
+pub use treegen::{
+    degenerate_tree, full_kary_tree, shared_ratio_tree, speculative_tree, trace_from_topology,
+    two_level_tree, TopologyTraceCfg,
+};
+pub use zoo::{AgenticMultiturn, MixedInteractive, RagDocQa, Scenario, TreeOfThoughts};

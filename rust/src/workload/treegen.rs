@@ -4,8 +4,17 @@
 //! payloads) for the gpusim benches. Every generator mirrors one of the
 //! paper's workload axes: sequence length, batch size, tree depth,
 //! shared-prefix ratio, tree shape (k-ary / degenerate).
+//!
+//! [`trace_from_topology`] compiles any of these topologies into a
+//! token-level serving [`Trace`]: each node gets a deterministic token
+//! block keyed by its id, so a request's prompt is the concatenation of
+//! its path's blocks and the serving engine's radix insert rebuilds the
+//! same sharing structure the gpusim saw — the same generators now feed
+//! both the figures path and `Server::replay`.
 
+use super::trace::{Trace, TraceEntry};
 use crate::kvforest::{Forest, NodeId, VIRTUAL_ROOT};
+use crate::util::prng::Rng;
 
 /// The paper's default: a 2-level tree, one root chunk shared by all
 /// requests plus one private leaf per request.
@@ -107,6 +116,69 @@ pub fn speculative_tree(ctx: usize, draft_depth: usize, draft_width: usize) -> F
     f
 }
 
+/// How [`trace_from_topology`] turns node lengths into token blocks and
+/// requests into timed trace entries.
+#[derive(Debug, Clone)]
+pub struct TopologyTraceCfg {
+    /// Seed for the per-node token blocks.
+    pub seed: u64,
+    /// Token id floor.
+    pub token_base: u32,
+    /// Token id span (ids in `token_base..token_base+token_span`).
+    pub token_span: usize,
+    /// Decode length per request.
+    pub max_new_tokens: usize,
+    /// Fixed arrival gap between requests, milliseconds.
+    pub intra_gap_ms: f64,
+}
+
+impl Default for TopologyTraceCfg {
+    fn default() -> Self {
+        TopologyTraceCfg {
+            seed: 1,
+            token_base: 100,
+            token_span: 7000,
+            max_new_tokens: 8,
+            intra_gap_ms: 1.0,
+        }
+    }
+}
+
+/// Compile a forest *topology* into a replayable serving trace: every
+/// node is assigned a deterministic token block keyed by `(seed, node
+/// id)` of exactly its `len` tokens, and request `r`'s prompt is the
+/// concatenation of the blocks along its path — so requests sharing a
+/// node share those tokens exactly, and the engine's radix insert
+/// recovers the topology's sharing structure from tokens alone.
+/// Requests are emitted in ascending id order with finite
+/// `i · intra_gap_ms` arrival offsets.
+pub fn trace_from_topology(f: &Forest, cfg: &TopologyTraceCfg) -> Trace {
+    assert!(
+        cfg.intra_gap_ms.is_finite() && cfg.intra_gap_ms >= 0.0,
+        "arrival gap must be finite nonnegative ms, got {}",
+        cfg.intra_gap_ms
+    );
+    let mut rids: Vec<_> = f.requests().collect();
+    rids.sort_unstable();
+    let mut entries = Vec::with_capacity(rids.len());
+    for (i, rid) in rids.into_iter().enumerate() {
+        let path = f.path(rid).expect("rid came from f.requests()");
+        let mut prompt = Vec::new();
+        for &nid in path {
+            let mut rng = Rng::new(cfg.seed ^ (nid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let len = f.node(nid).len;
+            prompt
+                .extend((0..len).map(|_| cfg.token_base + rng.below(cfg.token_span.max(1)) as u32));
+        }
+        entries.push(TraceEntry {
+            prompt,
+            max_new_tokens: cfg.max_new_tokens,
+            at_ms: i as f64 * cfg.intra_gap_ms,
+        });
+    }
+    Trace { entries }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +235,49 @@ mod tests {
             .1
             .degree();
         assert_eq!(root_deg, 14);
+    }
+
+    #[test]
+    fn topology_trace_shares_exact_node_blocks() {
+        let f = two_level_tree(4, 64, 8);
+        let cfg = TopologyTraceCfg::default();
+        let t = trace_from_topology(&f, &cfg);
+        assert_eq!(t.entries.len(), 4);
+        for (i, e) in t.entries.iter().enumerate() {
+            assert_eq!(e.prompt.len(), 64 + 8, "path blocks must sum to 72 tokens");
+            assert!(e.at_ms.is_finite());
+            assert_eq!(e.at_ms, i as f64 * cfg.intra_gap_ms);
+            // All requests share the root node's 64 tokens exactly…
+            assert_eq!(e.prompt[..64], t.entries[0].prompt[..64]);
+        }
+        // …and private leaves diverge.
+        assert_ne!(t.entries[0].prompt[64..], t.entries[1].prompt[64..]);
+        // Deterministic per seed; a new seed changes the tokens.
+        assert_eq!(trace_from_topology(&f, &cfg), t);
+        let other = trace_from_topology(
+            &f,
+            &TopologyTraceCfg {
+                seed: 2,
+                ..TopologyTraceCfg::default()
+            },
+        );
+        assert_ne!(other, t);
+        // Round-trips through the JSON trace format.
+        assert_eq!(Trace::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
+    fn kary_topology_trace_matches_path_structure() {
+        let f = full_kary_tree(2, 2, 16);
+        let t = trace_from_topology(&f, &TopologyTraceCfg::default());
+        assert_eq!(t.entries.len(), 4);
+        for e in &t.entries {
+            assert_eq!(e.prompt.len(), 2 * 16, "depth × node_len");
+        }
+        // Sibling leaves (requests 0 and 1) share their level-1 parent.
+        assert_eq!(t.entries[0].prompt[..16], t.entries[1].prompt[..16]);
+        // Cousins diverge at the first level.
+        assert_ne!(t.entries[0].prompt[..16], t.entries[2].prompt[..16]);
     }
 
     #[test]

@@ -1,0 +1,683 @@
+//! Workload zoo: a registry of named, seeded scenarios.
+//!
+//! The serving-layer claims — shared-fill dedup, batched decode,
+//! prefix-affinity sharding, swap tiers — are only as credible as the
+//! diversity of traffic shapes they survive. DeFT and Hydragen both
+//! show that tree-search and shared-prefix batch workloads expose wins
+//! and regressions that flat traffic hides, so each scenario here
+//! mirrors one real serving shape and compiles to a replayable
+//! [`Trace`] (finite, nondecreasing arrival offsets), optionally
+//! re-timed as open-loop Poisson load:
+//!
+//! - [`RagDocQa`] — retrieval-augmented document QA: many question
+//!   suffixes over a small shared-document corpus, using the
+//!   LooGLE-statistics generator ([`LoogleGen`]) for document shapes.
+//! - [`TreeOfThoughts`] — k-ary thought expansion with seeded branch
+//!   retire/regrow: each round keeps a beam of survivors and fans each
+//!   out into `arity` children, so every request's prompt extends a
+//!   previous request's prompt (the DeFT-style shape where the divider
+//!   and shared-fill path should shine).
+//! - [`AgenticMultiturn`] — agent loops re-submitting a growing shared
+//!   history each turn: every agent's turn-`t+1` prompt strictly
+//!   extends its turn-`t` prompt, and all agents share one system
+//!   prefix (the retained-cache shape).
+//! - [`MixedInteractive`] — bimodal interactive traffic: long
+//!   document-grounded requests over a few shared documents
+//!   interleaved with unique short prompts (the interference shape).
+//!
+//! Every scenario is deterministic per seed: same seed ⇒ byte-identical
+//! trace JSON ⇒ (greedy sampling) bit-identical outputs, which is what
+//! lets `rust/tests/scenario_zoo.rs` hold output oracles per scenario
+//! and `bench/matrix.rs` compare cells of a config grid against each
+//! other.
+
+use super::loogle::{LoogleCategory, LoogleGen};
+use super::poisson::PoissonProcess;
+use super::trace::{Trace, TraceEntry};
+use crate::util::prng::Rng;
+
+/// A named, seeded workload scenario that compiles to a serving trace.
+pub trait Scenario {
+    /// Registry name (`rag-doc-qa`, `tree-of-thoughts`, …).
+    fn name(&self) -> &'static str;
+    /// One-line description for tables and `--help`-style listings.
+    fn description(&self) -> &'static str;
+    /// The seed all token and arrival randomness derives from.
+    fn seed(&self) -> u64;
+    /// Compile to a replayable serving trace. Arrival offsets are
+    /// finite, nonnegative and nondecreasing, so replay order equals
+    /// entry order and handle `i` corresponds to entry `i`.
+    fn build_trace(&self) -> Trace;
+
+    /// Same prompts under open-loop Poisson arrivals at `rate_rps`
+    /// (entry order preserved; only `at_ms` changes, so greedy outputs
+    /// are identical to [`Scenario::build_trace`]'s).
+    fn poisson_trace(&self, rate_rps: f64) -> Trace {
+        let mut t = self.build_trace();
+        PoissonProcess::new(rate_rps, self.seed()).retime(&mut t);
+        t
+    }
+}
+
+/// Deterministic token block for a (seed, tag) pair: the shared
+/// building block of every scenario's prompts. Equal (seed, tag) ⇒
+/// equal block, so sharing structure is exact, not approximate.
+fn block(seed: u64, tag: u64, base: u32, span: usize, len: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..len).map(|_| base + rng.below(span.max(1)) as u32).collect()
+}
+
+// ---------------------------------------------------------------------
+// rag-doc-qa
+// ---------------------------------------------------------------------
+
+/// Retrieval-augmented document QA: `questions_per_doc` short suffixes
+/// over each of a few shared documents, document shapes drawn from the
+/// LooGLE category statistics via [`LoogleGen`].
+#[derive(Debug, Clone)]
+pub struct RagDocQa {
+    /// The LooGLE-statistics generator (corpus shape + seed).
+    pub gen: LoogleGen,
+    /// Divide the dataset-scale token counts by this (the engine-scale
+    /// knob `LoogleGen::build_prompts` already takes).
+    pub scale_down: usize,
+    pub max_new_tokens: usize,
+    /// Fixed arrival gap between consecutive questions, milliseconds.
+    pub intra_gap_ms: f64,
+}
+
+impl RagDocQa {
+    pub fn standard(seed: u64) -> RagDocQa {
+        RagDocQa {
+            gen: LoogleGen {
+                category: LoogleCategory::Wiki,
+                num_docs: 4,
+                questions_per_doc: 6,
+                seed,
+                ..Default::default()
+            },
+            scale_down: 64,
+            max_new_tokens: 8,
+            intra_gap_ms: 2.0,
+        }
+    }
+
+    /// CI-smoke scale: 2 documents × 3 questions, ~80-token documents.
+    pub fn quick(seed: u64) -> RagDocQa {
+        RagDocQa {
+            gen: LoogleGen {
+                category: LoogleCategory::Wiki,
+                num_docs: 2,
+                questions_per_doc: 3,
+                seed,
+                ..Default::default()
+            },
+            scale_down: 256,
+            max_new_tokens: 4,
+            intra_gap_ms: 2.0,
+        }
+    }
+}
+
+impl Scenario for RagDocQa {
+    fn name(&self) -> &'static str {
+        "rag-doc-qa"
+    }
+    fn description(&self) -> &'static str {
+        "shared documents, many question suffixes (LooGLE statistics)"
+    }
+    fn seed(&self) -> u64 {
+        self.gen.seed
+    }
+    fn build_trace(&self) -> Trace {
+        self.gen
+            .build_trace(self.scale_down, self.max_new_tokens, self.intra_gap_ms)
+    }
+}
+
+// ---------------------------------------------------------------------
+// tree-of-thoughts
+// ---------------------------------------------------------------------
+
+/// k-ary thought expansion with branch retire/regrow: round `r` fans
+/// each surviving branch out into `arity` children (one request per
+/// child: parent path ++ fresh thought block), then a seeded shuffle
+/// retires all but `beam` children before the next round — so the tree
+/// keeps regrowing from a moving frontier instead of expanding
+/// exhaustively.
+#[derive(Debug, Clone)]
+pub struct TreeOfThoughts {
+    /// Shared root context tokens (the task statement).
+    pub root_tokens: usize,
+    /// Tokens per expanded thought.
+    pub thought_tokens: usize,
+    /// Children per surviving branch per round.
+    pub arity: usize,
+    /// Expansion rounds.
+    pub rounds: usize,
+    /// Survivors kept (regrown) after each round.
+    pub beam: usize,
+    pub max_new_tokens: usize,
+    /// Arrival gap between rounds, milliseconds.
+    pub round_gap_ms: f64,
+    /// Arrival gap between requests within a round, milliseconds.
+    pub intra_gap_ms: f64,
+    /// Token id floor for generated blocks.
+    pub token_base: u32,
+    /// Token id span for generated blocks (ids in
+    /// `token_base..token_base+token_span`).
+    pub token_span: usize,
+    pub seed: u64,
+}
+
+impl TreeOfThoughts {
+    pub fn standard(seed: u64) -> TreeOfThoughts {
+        TreeOfThoughts {
+            root_tokens: 96,
+            thought_tokens: 24,
+            arity: 3,
+            rounds: 3,
+            beam: 3,
+            max_new_tokens: 8,
+            round_gap_ms: 10.0,
+            intra_gap_ms: 1.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+
+    pub fn quick(seed: u64) -> TreeOfThoughts {
+        TreeOfThoughts {
+            root_tokens: 32,
+            thought_tokens: 8,
+            arity: 2,
+            rounds: 2,
+            beam: 2,
+            max_new_tokens: 4,
+            round_gap_ms: 6.0,
+            intra_gap_ms: 1.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+}
+
+impl Scenario for TreeOfThoughts {
+    fn name(&self) -> &'static str {
+        "tree-of-thoughts"
+    }
+    fn description(&self) -> &'static str {
+        "k-ary thought expansion with seeded branch retire/regrow"
+    }
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+    fn build_trace(&self) -> Trace {
+        let root = block(self.seed, 0x700F, self.token_base, self.token_span, self.root_tokens);
+        // One shuffle stream across rounds drives retire/regrow.
+        let mut beam_rng = Rng::new(self.seed ^ 0xB3A1);
+        let mut survivors: Vec<Vec<u32>> = vec![root];
+        let mut entries = Vec::new();
+        for round in 0..self.rounds {
+            let mut children: Vec<Vec<u32>> = Vec::new();
+            for (b, path) in survivors.iter().enumerate() {
+                for c in 0..self.arity {
+                    let tag = 0x7071_0000_0000
+                        | ((round as u64) << 24)
+                        | ((b as u64) << 12)
+                        | c as u64;
+                    let mut p = path.clone();
+                    p.extend(block(
+                        self.seed,
+                        tag,
+                        self.token_base,
+                        self.token_span,
+                        self.thought_tokens,
+                    ));
+                    entries.push(TraceEntry {
+                        prompt: p.clone(),
+                        max_new_tokens: self.max_new_tokens,
+                        at_ms: round as f64 * self.round_gap_ms
+                            + children.len() as f64 * self.intra_gap_ms,
+                    });
+                    children.push(p);
+                }
+            }
+            // Retire: a seeded shuffle picks which branches regrow.
+            beam_rng.shuffle(&mut children);
+            children.truncate(self.beam.max(1));
+            survivors = children;
+        }
+        Trace { entries }
+    }
+}
+
+// ---------------------------------------------------------------------
+// agentic-multiturn
+// ---------------------------------------------------------------------
+
+/// Agent loops with growing shared history: all agents share one
+/// system prefix; each turn appends a user block, submits the whole
+/// history, then appends a synthetic assistant block — so turn `t+1`'s
+/// prompt strictly extends turn `t`'s and the retained prefix cache
+/// (not re-prefill) should serve the history.
+#[derive(Debug, Clone)]
+pub struct AgenticMultiturn {
+    /// Concurrent agent loops.
+    pub num_agents: usize,
+    /// Turns per agent.
+    pub turns: usize,
+    /// Shared system-prompt tokens (common to all agents).
+    pub system_tokens: usize,
+    /// User-message tokens appended per turn.
+    pub user_tokens: usize,
+    /// Synthetic assistant-message tokens appended after each turn
+    /// (stands in for the reply the history would carry).
+    pub assistant_tokens: usize,
+    pub max_new_tokens: usize,
+    /// Arrival gap between turns, milliseconds.
+    pub turn_gap_ms: f64,
+    /// Arrival gap between agents within a turn, milliseconds.
+    pub intra_gap_ms: f64,
+    pub token_base: u32,
+    pub token_span: usize,
+    pub seed: u64,
+}
+
+impl AgenticMultiturn {
+    pub fn standard(seed: u64) -> AgenticMultiturn {
+        AgenticMultiturn {
+            num_agents: 4,
+            turns: 4,
+            system_tokens: 64,
+            user_tokens: 16,
+            assistant_tokens: 24,
+            max_new_tokens: 8,
+            turn_gap_ms: 10.0,
+            intra_gap_ms: 1.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+
+    pub fn quick(seed: u64) -> AgenticMultiturn {
+        AgenticMultiturn {
+            num_agents: 2,
+            turns: 2,
+            system_tokens: 24,
+            user_tokens: 6,
+            assistant_tokens: 8,
+            max_new_tokens: 4,
+            turn_gap_ms: 6.0,
+            intra_gap_ms: 1.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+}
+
+impl Scenario for AgenticMultiturn {
+    fn name(&self) -> &'static str {
+        "agentic-multiturn"
+    }
+    fn description(&self) -> &'static str {
+        "agent loops re-submitting a growing shared history each turn"
+    }
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+    fn build_trace(&self) -> Trace {
+        let system = block(self.seed, 0x575, self.token_base, self.token_span, self.system_tokens);
+        let mut histories: Vec<Vec<u32>> = vec![system; self.num_agents];
+        let mut entries = Vec::new();
+        for turn in 0..self.turns {
+            for (agent, history) in histories.iter_mut().enumerate() {
+                let tag = |kind: u64| {
+                    0xA6E1_0000_0000 | (kind << 28) | ((agent as u64) << 14) | turn as u64
+                };
+                history.extend(block(
+                    self.seed,
+                    tag(1),
+                    self.token_base,
+                    self.token_span,
+                    self.user_tokens,
+                ));
+                entries.push(TraceEntry {
+                    prompt: history.clone(),
+                    max_new_tokens: self.max_new_tokens,
+                    at_ms: turn as f64 * self.turn_gap_ms + agent as f64 * self.intra_gap_ms,
+                });
+                history.extend(block(
+                    self.seed,
+                    tag(2),
+                    self.token_base,
+                    self.token_span,
+                    self.assistant_tokens,
+                ));
+            }
+        }
+        Trace { entries }
+    }
+}
+
+// ---------------------------------------------------------------------
+// mixed-interactive
+// ---------------------------------------------------------------------
+
+/// Bimodal interactive traffic: a seeded coin decides per request
+/// between a long document-grounded prompt (shared document ++ unique
+/// suffix) and a unique short prompt, so latency-sensitive short
+/// requests contend with long shared-prefix work.
+#[derive(Debug, Clone)]
+pub struct MixedInteractive {
+    /// Total requests.
+    pub requests: usize,
+    /// Probability a request is the long, document-grounded kind.
+    pub long_fraction: f64,
+    /// Shared documents the long requests draw from.
+    pub num_docs: usize,
+    /// Tokens per shared document.
+    pub doc_tokens: usize,
+    /// Unique suffix tokens on a long request.
+    pub long_suffix_tokens: usize,
+    /// Tokens of a short request (fully unique).
+    pub short_tokens: usize,
+    pub max_new_long: usize,
+    pub max_new_short: usize,
+    /// Fixed arrival gap between requests, milliseconds.
+    pub gap_ms: f64,
+    pub token_base: u32,
+    pub token_span: usize,
+    pub seed: u64,
+}
+
+impl MixedInteractive {
+    pub fn standard(seed: u64) -> MixedInteractive {
+        MixedInteractive {
+            requests: 24,
+            long_fraction: 0.3,
+            num_docs: 2,
+            doc_tokens: 256,
+            long_suffix_tokens: 16,
+            short_tokens: 24,
+            max_new_long: 8,
+            max_new_short: 6,
+            gap_ms: 2.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+
+    pub fn quick(seed: u64) -> MixedInteractive {
+        MixedInteractive {
+            requests: 8,
+            long_fraction: 0.4,
+            num_docs: 2,
+            doc_tokens: 48,
+            long_suffix_tokens: 6,
+            short_tokens: 12,
+            max_new_long: 4,
+            max_new_short: 3,
+            gap_ms: 2.0,
+            token_base: 100,
+            token_span: 7000,
+            seed,
+        }
+    }
+}
+
+impl Scenario for MixedInteractive {
+    fn name(&self) -> &'static str {
+        "mixed-interactive"
+    }
+    fn description(&self) -> &'static str {
+        "bimodal long/short interactive traffic over shared documents"
+    }
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+    fn build_trace(&self) -> Trace {
+        let mut coin = Rng::new(self.seed ^ 0x312D);
+        let mut entries = Vec::new();
+        for i in 0..self.requests {
+            let long = coin.next_f64() < self.long_fraction;
+            let (prompt, max_new) = if long {
+                let doc = coin.below(self.num_docs.max(1)) as u64;
+                let mut p = block(
+                    self.seed,
+                    0xD0C_0000 | doc,
+                    self.token_base,
+                    self.token_span,
+                    self.doc_tokens,
+                );
+                p.extend(block(
+                    self.seed,
+                    0x10F6_0000_0000 | i as u64,
+                    self.token_base,
+                    self.token_span,
+                    self.long_suffix_tokens,
+                ));
+                (p, self.max_new_long)
+            } else {
+                (
+                    block(
+                        self.seed,
+                        0x5707_0000_0000 | i as u64,
+                        self.token_base,
+                        self.token_span,
+                        self.short_tokens.max(1),
+                    ),
+                    self.max_new_short,
+                )
+            };
+            entries.push(TraceEntry {
+                prompt,
+                max_new_tokens: max_new,
+                at_ms: i as f64 * self.gap_ms,
+            });
+        }
+        Trace { entries }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Every registered scenario name, in registry order.
+pub const SCENARIO_NAMES: &[&str] = &[
+    "rag-doc-qa",
+    "tree-of-thoughts",
+    "agentic-multiturn",
+    "mixed-interactive",
+];
+
+/// Look up one scenario by registry name at the given seed. `quick`
+/// selects the CI-smoke scale instead of the standard one.
+pub fn get(name: &str, seed: u64, quick: bool) -> Option<Box<dyn Scenario>> {
+    Some(match name {
+        "rag-doc-qa" => {
+            if quick {
+                Box::new(RagDocQa::quick(seed))
+            } else {
+                Box::new(RagDocQa::standard(seed))
+            }
+        }
+        "tree-of-thoughts" => {
+            if quick {
+                Box::new(TreeOfThoughts::quick(seed))
+            } else {
+                Box::new(TreeOfThoughts::standard(seed))
+            }
+        }
+        "agentic-multiturn" => {
+            if quick {
+                Box::new(AgenticMultiturn::quick(seed))
+            } else {
+                Box::new(AgenticMultiturn::standard(seed))
+            }
+        }
+        "mixed-interactive" => {
+            if quick {
+                Box::new(MixedInteractive::quick(seed))
+            } else {
+                Box::new(MixedInteractive::standard(seed))
+            }
+        }
+        _ => return None,
+    })
+}
+
+/// Every registered scenario at the given seed, in registry order.
+pub fn all(seed: u64, quick: bool) -> Vec<Box<dyn Scenario>> {
+    SCENARIO_NAMES
+        .iter()
+        .map(|n| get(n, seed, quick).expect("registered name"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn registry_covers_all_names() {
+        assert!(SCENARIO_NAMES.len() >= 4);
+        for &name in SCENARIO_NAMES {
+            for quick in [false, true] {
+                let s = get(name, 3, quick).expect("registered");
+                assert_eq!(s.name(), name);
+                assert!(!s.description().is_empty());
+                assert_eq!(s.seed(), 3);
+            }
+        }
+        assert!(get("no-such-scenario", 1, false).is_none());
+        assert_eq!(all(1, true).len(), SCENARIO_NAMES.len());
+    }
+
+    #[test]
+    fn traces_are_deterministic_finite_and_ordered() {
+        for s in all(11, true) {
+            let a = s.build_trace();
+            let b = s.build_trace();
+            assert_eq!(a, b, "{}: same seed must rebuild identically", s.name());
+            assert_eq!(
+                json::emit(&a.to_json()),
+                json::emit(&b.to_json()),
+                "{}: trace JSON must be byte-identical",
+                s.name()
+            );
+            assert!(!a.entries.is_empty(), "{}: empty trace", s.name());
+            let mut prev = 0.0f64;
+            for e in &a.entries {
+                assert!(e.at_ms.is_finite() && e.at_ms >= 0.0, "{}", s.name());
+                assert!(e.at_ms >= prev, "{}: arrivals must be nondecreasing", s.name());
+                assert!(!e.prompt.is_empty() && e.max_new_tokens > 0);
+                prev = e.at_ms;
+            }
+            // A different seed changes the prompts.
+            let other = get(s.name(), 12, true).expect("registered").build_trace();
+            assert_ne!(a, other, "{}: seed must matter", s.name());
+        }
+    }
+
+    #[test]
+    fn poisson_retime_keeps_prompts() {
+        for s in all(5, true) {
+            let fixed = s.build_trace();
+            let poisson = s.poisson_trace(300.0);
+            assert_eq!(fixed.entries.len(), poisson.entries.len());
+            for (f, p) in fixed.entries.iter().zip(&poisson.entries) {
+                assert_eq!(f.prompt, p.prompt);
+                assert_eq!(f.max_new_tokens, p.max_new_tokens);
+                assert!(p.at_ms.is_finite() && p.at_ms > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_of_thoughts_children_extend_earlier_prompts() {
+        let s = TreeOfThoughts::standard(7);
+        let t = s.build_trace();
+        assert_eq!(t.entries.len(), s.arity * (1 + (s.rounds - 1) * s.beam));
+        // Round 0 starts at the shared root.
+        let root_len = s.root_tokens;
+        for e in t.entries.iter().take(s.arity) {
+            assert_eq!(e.prompt[..root_len], t.entries[0].prompt[..root_len]);
+        }
+        // Every later-round request regrows a full earlier request.
+        for e in t.entries.iter().filter(|e| e.at_ms >= s.round_gap_ms) {
+            let extends = t
+                .entries
+                .iter()
+                .filter(|p| p.prompt.len() < e.prompt.len())
+                .any(|p| e.prompt[..p.prompt.len()] == p.prompt[..]);
+            assert!(extends, "child prompt must extend a retired/regrown branch");
+        }
+    }
+
+    #[test]
+    fn agentic_history_grows_and_shares_system_prefix() {
+        let s = AgenticMultiturn::standard(9);
+        let t = s.build_trace();
+        assert_eq!(t.entries.len(), s.num_agents * s.turns);
+        let entry = |turn: usize, agent: usize| &t.entries[turn * s.num_agents + agent];
+        for agent in 0..s.num_agents {
+            for turn in 1..s.turns {
+                let prev = entry(turn - 1, agent);
+                let cur = entry(turn, agent);
+                assert!(cur.prompt.len() > prev.prompt.len());
+                assert_eq!(
+                    cur.prompt[..prev.prompt.len()],
+                    prev.prompt[..],
+                    "turn {turn} must extend agent {agent}'s turn {}",
+                    turn - 1
+                );
+            }
+        }
+        // All agents share the system prefix, then diverge.
+        let sys = s.system_tokens;
+        assert_eq!(entry(0, 0).prompt[..sys], entry(0, 1).prompt[..sys]);
+        assert_ne!(entry(0, 0).prompt, entry(0, 1).prompt);
+    }
+
+    #[test]
+    fn mixed_interactive_is_bimodal_with_shared_documents() {
+        let s = MixedInteractive::standard(13);
+        let t = s.build_trace();
+        assert_eq!(t.entries.len(), s.requests);
+        let long: Vec<_> = t
+            .entries
+            .iter()
+            .filter(|e| e.prompt.len() >= s.doc_tokens)
+            .collect();
+        let short = t.entries.len() - long.len();
+        assert!(!long.is_empty(), "need long requests");
+        assert!(short > 0, "need short requests");
+        // At least two long requests land on the same document (share
+        // its full prefix) at the standard scale.
+        let shared_pair = long.iter().enumerate().any(|(i, a)| {
+            long.iter()
+                .skip(i + 1)
+                .any(|b| a.prompt[..s.doc_tokens] == b.prompt[..s.doc_tokens])
+        });
+        assert!(shared_pair, "long requests must share documents");
+    }
+
+    #[test]
+    fn rag_doc_qa_matches_loogle_statistics_prompts() {
+        let s = RagDocQa::standard(21);
+        let t = s.build_trace();
+        let prompts = s.gen.build_prompts(s.scale_down);
+        assert_eq!(t.entries.len(), prompts.len());
+        for (e, p) in t.entries.iter().zip(&prompts) {
+            assert_eq!(&e.prompt, p, "zoo must reuse the LooGLE generator");
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Per-scenario output oracles for the workload zoo.
+//!
+//! Every registered scenario must decode the *exact* greedy tokens of a
+//! serial, unshared, single-shard baseline — one fresh engine per
+//! prompt, same seed (⇒ same weights) — no matter how the serving path
+//! batches, coalesces fills, routes across shards, or evicts under
+//! pressure. Outputs are request-local, so any divergence is a real
+//! correctness bug in the sharing machinery, not a tolerance question.
+//!
+//! Alongside the oracles: a determinism test (same seed ⇒ byte-identical
+//! trace JSON and identical outputs across 1/2/4 shards and every
+//! routing policy), a randomized property test replaying fuzzed scenario
+//! parameters under `EngineConfig::audit` with tight page/swap budgets,
+//! and an end-to-end replay of a treegen topology compiled by
+//! `trace_from_topology`.
+//!
+//! Fully hermetic: native transformer backend, no artifacts.
+
+use codec::cache::CacheConfig;
+use codec::engine::{
+    AttentionBackend, Engine, EngineConfig, Request, RouterConfig, RoutingPolicy, Server,
+};
+use codec::model::Sampler;
+use codec::runtime::ModelInfo;
+use codec::util::json;
+use codec::util::prng::Rng;
+use codec::workload::zoo::{self, Scenario};
+use codec::workload::{
+    trace_from_topology, two_level_tree, AgenticMultiturn, MixedInteractive, RagDocQa,
+    TopologyTraceCfg, Trace, TreeOfThoughts,
+};
+
+/// Tiny transformer with a full-size vocabulary: the zoo's default token
+/// span is 100..7100, so vocab must exceed it (unlike the vocab-256
+/// models the other oracle suites use).
+fn model() -> ModelInfo {
+    ModelInfo {
+        name: "zoo-test".to_string(),
+        vocab: 8192,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 16,
+        d_ff: 64,
+        rope_theta: 10_000.0,
+    }
+}
+
+fn config(cache: CacheConfig, audit: bool) -> EngineConfig {
+    EngineConfig {
+        backend: AttentionBackend::CodecNative,
+        model: model(),
+        max_batch: 8,
+        sampler: Sampler::Greedy,
+        seed: 5,
+        workers: 2,
+        cache,
+        audit,
+        ..Default::default()
+    }
+}
+
+/// The serial oracle: each trace entry alone in a fresh engine (same
+/// seed ⇒ same weights), so nothing is batched, shared, or routed.
+fn serial_outputs(trace: &Trace) -> Vec<Vec<u32>> {
+    trace
+        .entries
+        .iter()
+        .map(|e| {
+            let mut eng = Engine::new(EngineConfig {
+                max_batch: 1,
+                ..config(CacheConfig::default(), false)
+            })
+            .expect("engine init");
+            eng.submit(Request::new(0, e.prompt.clone(), e.max_new_tokens));
+            let out = eng.run_to_completion().expect("serial run");
+            assert_eq!(out.len(), 1);
+            out.into_iter().next().map(|(_, t)| t).expect("one output")
+        })
+        .collect()
+}
+
+/// Replay the trace on a sharded server and return outputs in entry
+/// order (every zoo trace has nondecreasing arrivals and the replay
+/// sort is stable, so handle `i` is entry `i`).
+fn served_outputs(
+    trace: &Trace,
+    shards: usize,
+    policy: RoutingPolicy,
+    cfg: EngineConfig,
+) -> Vec<Vec<u32>> {
+    let server = Server::start_sharded(
+        cfg,
+        shards,
+        RouterConfig {
+            policy,
+            ..Default::default()
+        },
+    )
+    .expect("server start");
+    let outputs: Vec<Vec<u32>> = server
+        .replay(trace)
+        .into_iter()
+        .map(|h| h.wait().expect("request must complete"))
+        .collect();
+    let report = server.shutdown_report();
+    assert!(
+        report.failures.is_empty(),
+        "no shard may fail: {:?}",
+        report.failures
+    );
+    assert_eq!(report.metrics.requests.len(), trace.entries.len());
+    outputs
+}
+
+/// The headline oracle: every registered scenario, served on a 2-shard
+/// affinity-routed server with batching + shared fills + the retained
+/// cache all active, decodes bit-identically to the serial unshared
+/// single-shard baseline.
+#[test]
+fn every_scenario_matches_the_serial_oracle() {
+    for s in zoo::all(7, true) {
+        let trace = s.build_trace();
+        assert!(
+            trace.entries.len() >= 4,
+            "{}: quick scale too small to exercise sharing",
+            s.name()
+        );
+        let serial = serial_outputs(&trace);
+        let served = served_outputs(
+            &trace,
+            2,
+            RoutingPolicy::Affinity,
+            config(CacheConfig::default(), false),
+        );
+        assert_eq!(
+            served,
+            serial,
+            "{}: served outputs diverged from the serial oracle",
+            s.name()
+        );
+    }
+}
+
+/// Same seed ⇒ byte-identical trace JSON; and the same trace decodes
+/// identically across 1/2/4 shards and every routing policy (identical
+/// per-shard weights are what make outputs shard-count-invariant).
+#[test]
+fn scenarios_are_deterministic_across_shards_and_policies() {
+    for s in zoo::all(11, true) {
+        let a = json::emit(&s.build_trace().to_json());
+        let b = json::emit(&s.build_trace().to_json());
+        assert_eq!(a, b, "{}: trace JSON must be byte-identical", s.name());
+    }
+
+    let trace = TreeOfThoughts::quick(11).build_trace();
+    let base = served_outputs(
+        &trace,
+        1,
+        RoutingPolicy::Affinity,
+        config(CacheConfig::default(), false),
+    );
+    for (shards, policy) in [
+        (2, RoutingPolicy::Affinity),
+        (4, RoutingPolicy::Affinity),
+        (2, RoutingPolicy::PowerOfTwo),
+        (4, RoutingPolicy::RoundRobin),
+    ] {
+        let out = served_outputs(&trace, shards, policy, config(CacheConfig::default(), false));
+        assert_eq!(
+            out, base,
+            "outputs diverged at shards={shards} policy={policy:?}"
+        );
+    }
+}
+
+/// Largest page footprint any single request can need on this model
+/// geometry (prompt + decode growth, all layers), plus headroom — the
+/// floor that keeps a fuzzed tight budget feasible.
+fn per_request_pages(trace: &Trace) -> usize {
+    let page_tokens = EngineConfig::default().page_tokens.max(1);
+    let max_tokens = trace
+        .entries
+        .iter()
+        .map(|e| e.prompt.len() + e.max_new_tokens)
+        .max()
+        .unwrap_or(1);
+    model().n_layers * max_tokens.div_ceil(page_tokens) + 2
+}
+
+/// Randomized property test: fuzzed scenario parameters, replayed under
+/// the full invariant auditor with tight page + swap budgets. Every
+/// request must complete, no shard may fail, the auditor must actually
+/// run, and the page-accounting gauges must reconcile against their
+/// budgets on every shard.
+#[test]
+fn fuzzed_scenarios_survive_audit_with_tight_budgets() {
+    let mut rng = Rng::new(0xF00D);
+    for iter in 0..5u64 {
+        let seed = 20 + iter;
+        let scenario: Box<dyn Scenario> = match rng.below(4) {
+            0 => {
+                let mut s = RagDocQa::quick(seed);
+                s.gen.num_docs = 1 + rng.below(3);
+                s.gen.questions_per_doc = 1 + rng.below(4);
+                Box::new(s)
+            }
+            1 => {
+                let mut s = TreeOfThoughts::quick(seed);
+                s.arity = 1 + rng.below(3);
+                s.rounds = 1 + rng.below(3);
+                s.beam = 1 + rng.below(2);
+                s.root_tokens = 8 + rng.below(32);
+                s.thought_tokens = 4 + rng.below(8);
+                Box::new(s)
+            }
+            2 => {
+                let mut s = AgenticMultiturn::quick(seed);
+                s.num_agents = 1 + rng.below(3);
+                s.turns = 1 + rng.below(3);
+                s.system_tokens = 8 + rng.below(24);
+                s.user_tokens = 2 + rng.below(6);
+                s.assistant_tokens = 2 + rng.below(6);
+                Box::new(s)
+            }
+            _ => {
+                let mut s = MixedInteractive::quick(seed);
+                s.requests = 4 + rng.below(6);
+                s.long_fraction = 0.2 + rng.next_f64() * 0.6;
+                s.doc_tokens = 16 + rng.below(48);
+                Box::new(s)
+            }
+        };
+        let trace = scenario.build_trace();
+        let shards = 1 + (iter as usize % 2);
+        // Tight but feasible: twice the largest request per shard forces
+        // eviction/demotion churn without an infeasible admission.
+        let page_budget = shards * 2 * per_request_pages(&trace);
+        let cfg = config(
+            CacheConfig {
+                page_budget: Some(page_budget),
+                swap_budget: Some(page_budget),
+                ..Default::default()
+            },
+            true,
+        );
+        let server = Server::start_sharded(cfg, shards, RouterConfig::default())
+            .expect("server start");
+        for (h, e) in server.replay(&trace).into_iter().zip(&trace.entries) {
+            let out = h.wait().unwrap_or_else(|err| {
+                panic!(
+                    "iter {iter} ({}): request failed under audit: {err:#}",
+                    scenario.name()
+                )
+            });
+            assert!(
+                !out.is_empty() && out.len() <= e.max_new_tokens,
+                "iter {iter} ({}): {} tokens for max_new {}",
+                scenario.name(),
+                out.len(),
+                e.max_new_tokens
+            );
+        }
+        let report = server.shutdown_report();
+        assert!(
+            report.failures.is_empty(),
+            "iter {iter} ({}): shard failures: {:?}",
+            scenario.name(),
+            report.failures
+        );
+        for (sid, sm) in report.shard_metrics.iter().enumerate() {
+            let sm = sm.as_ref().expect("no shard panicked");
+            assert!(
+                sm.audit_checks > 0,
+                "iter {iter} shard {sid}: the auditor must have run"
+            );
+            let budget = sm.kv_budget_pages.expect("budgeted run records budget");
+            assert!(
+                sm.kv_max_allocated_pages <= budget,
+                "iter {iter} shard {sid}: page high-water {} exceeded budget {budget}",
+                sm.kv_max_allocated_pages
+            );
+            if let Some(swap_budget) = sm.kv_swap_budget_pages {
+                assert!(
+                    sm.kv_max_swapped_pages <= swap_budget,
+                    "iter {iter} shard {sid}: swap high-water {} exceeded budget {swap_budget}",
+                    sm.kv_max_swapped_pages
+                );
+            }
+            assert!(
+                sm.kv_allocated_pages <= sm.kv_max_allocated_pages,
+                "iter {iter} shard {sid}: resident gauge above its own high-water"
+            );
+        }
+    }
+}
+
+/// A treegen topology compiled by `trace_from_topology` replays
+/// end-to-end and matches the serial oracle — the gpusim generators and
+/// the serving engine now see the same workloads.
+#[test]
+fn topology_trace_replays_and_matches_serial() {
+    let forest = two_level_tree(3, 48, 6);
+    let trace = trace_from_topology(
+        &forest,
+        &TopologyTraceCfg {
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    );
+    assert_eq!(trace.entries.len(), 3);
+    let serial = serial_outputs(&trace);
+    let served = served_outputs(
+        &trace,
+        2,
+        RoutingPolicy::Affinity,
+        config(CacheConfig::default(), false),
+    );
+    assert_eq!(served, serial, "topology-trace outputs diverged from serial");
+}
